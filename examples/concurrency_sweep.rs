@@ -1,0 +1,43 @@
+//! Concurrency sweep: the "adding more agents reduces throughput" paradox.
+//!
+//! Sweeps the *offered* batch size under the uncontrolled baseline and
+//! under CONCUR on a fixed 2-GPU Qwen3-class replica.  The baseline's
+//! throughput collapses past the memory knee (the paper's §3 observation:
+//! during the middle phase, more concurrency = less throughput); CONCUR's
+//! stays flat because admission is decoupled from the offered load.
+//!
+//! ```sh
+//! cargo run --release --example concurrency_sweep
+//! ```
+
+use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
+use concur::driver::run_job;
+
+fn main() -> anyhow::Result<()> {
+    println!("offered-batch sweep on Qwen3-32B TP2 (tokens/s; higher is better)\n");
+    println!("{:>8}  {:>12}  {:>12}  {:>10}", "batch", "sglang", "concur", "ratio");
+    for batch in [16usize, 32, 64, 128, 256] {
+        let mut tput = Vec::new();
+        for sched in [
+            SchedulerKind::Uncontrolled,
+            SchedulerKind::Concur(AimdParams::default()),
+        ] {
+            let job = JobConfig {
+                cluster: presets::qwen3_cluster(2),
+                engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+                workload: presets::qwen3_workload(batch),
+                scheduler: sched,
+            };
+            let r = run_job(&job).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+            tput.push(r.throughput_tps);
+        }
+        println!(
+            "{:>8}  {:>12.0}  {:>12.0}  {:>9.2}x",
+            batch,
+            tput[0],
+            tput[1],
+            tput[1] / tput[0]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! Profiling probe: one Table-1-scale job (Qwen3-32B, batch 256, TP2)
+//! under `concur` (default) or `sglang` (argv[1]) — the workload used for
+//! the EXPERIMENTS.md §Perf iterations.
+//!
+//! ```sh
+//! perf record -F 999 ./target/release/examples/perf_probe concur
+//! perf report --stdio --no-children
+//! ```
+
+use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
+use concur::driver::run_job;
+fn main() {
+    let sched = match std::env::args().nth(1).as_deref() {
+        Some("sglang") => SchedulerKind::Uncontrolled,
+        _ => SchedulerKind::Concur(AimdParams::default()),
+    };
+    let job = JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+        workload: presets::qwen3_workload(256),
+        scheduler: sched,
+    };
+    let t = std::time::Instant::now();
+    let r = run_job(&job).unwrap();
+    println!("done: sim {} in wall {:?}, steps={}", r.total_time, t.elapsed(), r.engine_steps);
+}

@@ -1,0 +1,33 @@
+//! Quickstart: run one simulated agentic batch job under CONCUR and print
+//! what the controller did.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
+use concur::driver::run_job;
+
+fn main() -> anyhow::Result<()> {
+    // 64 ReAct agents against a Qwen3-32B-class replica on 2 GPUs — a
+    // memory-constrained setup where admission control matters.
+    let job = JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+        workload: presets::qwen3_workload(64),
+        scheduler: SchedulerKind::Concur(AimdParams::default()),
+    };
+
+    let r = run_job(&job).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+
+    println!("scheduler        : {}", r.scheduler);
+    println!("agents finished  : {}/{}", r.agents_finished, r.agents_total);
+    println!("batch latency    : {}", r.total_time);
+    println!("throughput       : {:.0} generated tokens/s", r.throughput_tps);
+    println!("cache hit rate   : {:.1}%", r.hit_rate * 100.0);
+    println!("pauses / resumes : {} / {}", r.pauses, r.resumes);
+    println!("\nwhere the time went:\n{}", r.breakdown.report());
+    println!("controller window over time:");
+    print!("{}", r.window_series.ascii_plot(64, 8));
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* for the rust runtime.
+
+Emits into ``artifacts/``:
+
+* ``decode_b{B}.hlo.txt``      — one-token decode step, batch B
+* ``extend_b{B}_c{C}.hlo.txt`` — C-token chunked extend (prefill / resume)
+* ``params.bin``               — flat f32 little-endian parameter vector
+* ``manifest.json``            — model geometry + artifact index consumed by
+                                 ``rust/src/runtime/artifacts.rs``
+* ``model.hlo.txt``            — alias of the default decode graph (Makefile
+                                 freshness stamp)
+
+HLO TEXT is the interchange format, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Python runs ONCE here (``make artifacts``); it is never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+
+# Batch variants compiled for the serving engine.  The rust batcher rounds
+# every scheduled batch up to the nearest compiled size (padding with inert
+# sequences), so this ladder is the engine's batch-size granularity.
+DECODE_BATCHES = (1, 2, 4, 8)
+EXTEND_VARIANTS = ((1, 128), (2, 128), (4, 128), (8, 128))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_decode(cfg: model_lib.ModelConfig, batch: int):
+    c = cfg
+    fn = functools.partial(model_lib.decode_step, c)
+    kv = jax.ShapeDtypeStruct(
+        (c.n_layers, batch, c.max_seq, c.n_heads, c.head_dim), jnp.float32
+    )
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((c.n_params(),), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        kv,
+        kv,
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+
+
+def lower_extend(cfg: model_lib.ModelConfig, batch: int, chunk: int):
+    c = cfg
+    fn = functools.partial(model_lib.extend_chunk, c)
+    kv = jax.ShapeDtypeStruct(
+        (c.n_layers, batch, c.max_seq, c.n_heads, c.head_dim), jnp.float32
+    )
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((c.n_params(),), jnp.float32),
+        jax.ShapeDtypeStruct((batch, chunk), jnp.int32),
+        kv,
+        kv,
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="stamp path; artifacts land in its directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out).parent
+    out_dir.mkdir(parents=True, exist_ok=True)
+    cfg = model_lib.ModelConfig()
+
+    params = model_lib.init_params(cfg, seed=args.seed)
+    (out_dir / "params.bin").write_bytes(params.astype("<f4").tobytes())
+    print(f"params.bin: {params.size} f32 ({params.nbytes / 1e6:.1f} MB)")
+
+    artifacts = []
+    for b in DECODE_BATCHES:
+        t0 = time.time()
+        text = to_hlo_text(lower_decode(cfg, b))
+        name = f"decode_b{b}.hlo.txt"
+        (out_dir / name).write_text(text)
+        artifacts.append({"kind": "decode", "batch": b, "chunk": 1, "file": name})
+        print(f"{name}: {len(text)} chars in {time.time() - t0:.1f}s")
+    for b, chunk in EXTEND_VARIANTS:
+        t0 = time.time()
+        text = to_hlo_text(lower_extend(cfg, b, chunk))
+        name = f"extend_b{b}_c{chunk}.hlo.txt"
+        (out_dir / name).write_text(text)
+        artifacts.append({"kind": "extend", "batch": b, "chunk": chunk, "file": name})
+        print(f"{name}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "n_params": cfg.n_params(),
+            "seed": args.seed,
+        },
+        "params_file": "params.bin",
+        # Input order shared by both graph kinds; decode drops chunk_lens.
+        "decode_inputs": ["params", "tokens", "k_cache", "v_cache", "cache_lens"],
+        "extend_inputs": [
+            "params", "tokens", "k_cache", "v_cache", "cache_lens", "chunk_lens",
+        ],
+        "outputs": ["logits", "k_cache", "v_cache", "cache_lens"],
+        "artifacts": artifacts,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+
+    # Makefile freshness stamp — alias of the smallest decode graph.
+    stamp = (out_dir / "decode_b1.hlo.txt").read_text()
+    pathlib.Path(args.out).write_text(stamp)
+    print(f"manifest + stamp written to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,291 @@
+"""L1 Pallas attention kernels (flash-style, length-masked, TPU-shaped).
+
+These are the compute hot-spots of the serving path: decode-step attention
+against a KV cache and causal prefill attention.  Both are written in the
+TPU Pallas model and validated under ``interpret=True`` (the CPU PJRT
+plugin cannot execute Mosaic custom-calls, see DESIGN.md §Hardware-Adaptation).
+
+Hardware adaptation of the paper's GPU framing:
+
+* A CUDA flash-attention kernel assigns one *threadblock* per (batch, head,
+  q-tile) and stages K/V tiles through shared memory.  Here the same
+  schedule is expressed with the Pallas ``grid`` (one program per
+  (batch, head[, q-tile])) and ``BlockSpec`` index maps describing which
+  HBM tile is staged into VMEM for each program.
+* Online-softmax accumulation keeps the working set at O(block) — no
+  [T, T] score matrix ever exists, which is exactly the property that makes
+  KV recompute (the paper's "retransmission") quadratic in *prefill* cost
+  but linear in kernel memory.
+* Contractions are shaped (q_block x D) @ (D x k_block) with D and blocks
+  multiples of the (8, 128) MXU tile where possible, f32 accumulation.
+
+VMEM footprint per program (see DESIGN.md §Perf):
+  decode : D + 2*K_BLOCK*D floats        (q row + one K and one V tile)
+  prefill: Q_BLOCK*D + 2*K_BLOCK*D + Q_BLOCK*K_BLOCK floats
+With the default blocks (Q_BLOCK=K_BLOCK=128, D<=128) both stay well under
+1 MiB — far below the ~16 MiB VMEM budget, leaving room for the compiler
+to double-buffer the K/V tile streams.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Default sequence tile staged HBM->VMEM per inner step. 128 matches the
+# MXU lane width; both kernels accept any T that is a multiple of the block.
+K_BLOCK = 128
+Q_BLOCK = 128
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, k_block: int):
+    """One program per (batch, head): q row vs the full cached sequence.
+
+    Refs (shapes are the per-program VMEM blocks; size-1 batch/head dims
+    are squeezed away by the ``None`` entries in the BlockSpecs):
+      len_ref: [1]      valid cache length for this sequence
+      q_ref:   [D]      query row
+      k_ref:   [T, D]   key cache for this (b, h)
+      v_ref:   [T, D]   value cache for this (b, h)
+      o_ref:   [D]      output row
+    """
+    T, D = k_ref.shape
+    length = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    q = q_ref[...] * scale  # [D]
+
+    nblocks = T // k_block
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_tile = k_ref[pl.ds(i * k_block, k_block), :]  # [KB, D]
+        v_tile = v_ref[pl.ds(i * k_block, k_block), :]  # [KB, D]
+        scores = k_tile @ q  # [KB]
+        pos = i * k_block + jax.lax.iota(jnp.int32, k_block)
+        scores = jnp.where(pos < length, scores, NEG_INF)
+        # online softmax update
+        m_new = jnp.maximum(m_prev, scores.max())
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)  # [KB]
+        l_new = l_prev * alpha + p.sum()
+        acc = acc * alpha + p @ v_tile  # [D]
+        return m_new, l_new, acc
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((D,), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nblocks, body, (m0, l0, acc0))
+    o_ref[...] = acc / l
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, k_block: int = K_BLOCK):
+    """Flash decode attention: one new query token per sequence.
+
+    Args:
+      q:        [B, H, D] float32
+      k_cache:  [B, T, H, D] float32, T a multiple of ``k_block``
+      v_cache:  [B, T, H, D] float32
+      lengths:  [B] int32, 1 <= lengths[b] <= T
+
+    Returns:
+      [B, H, D] float32
+    """
+    B, T, H, D = k_cache.shape
+    if T % k_block != 0:
+        raise ValueError(f"T={T} must be a multiple of k_block={k_block}")
+    kernel = functools.partial(_decode_kernel, k_block=k_block)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h: (b,)),  # lengths
+            pl.BlockSpec((None, None, D), lambda b, h: (b, h, 0)),  # q
+            pl.BlockSpec((None, T, None, D), lambda b, h: (b, 0, h, 0)),  # k
+            pl.BlockSpec((None, T, None, D), lambda b, h: (b, 0, h, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((None, None, D), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+        interpret=True,
+    )(lengths, q, k_cache, v_cache)
+
+
+def _prefill_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, *, q_block: int, k_block: int
+):
+    """One program per (batch, head, q-tile): causal flash attention.
+
+    Refs:
+      len_ref: [1]            valid prompt length for this sequence
+      q_ref:   [QB, D]        query tile
+      k_ref:   [T, D]         full key sequence for this (b, h)
+      v_ref:   [T, D]
+      o_ref:   [QB, D]
+    """
+    T, D = k_ref.shape
+    qi = pl.program_id(2)
+    length = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    q = q_ref[...] * scale  # [QB, D]
+    qpos = qi * q_block + jax.lax.iota(jnp.int32, q_block)  # [QB]
+    total_blocks = T // k_block
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_tile = k_ref[pl.ds(i * k_block, k_block), :]  # [KB, D]
+        v_tile = v_ref[pl.ds(i * k_block, k_block), :]
+        scores = q @ k_tile.T  # [QB, KB] — MXU-shaped contraction
+        kpos = i * k_block + jax.lax.iota(jnp.int32, k_block)  # [KB]
+        causal = kpos[None, :] <= qpos[:, None]
+        valid = kpos[None, :] < length
+        diag = kpos[None, :] == qpos[:, None]
+        mask = (causal & valid) | diag
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m_prev, scores.max(axis=1))  # [QB]
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[:, None])  # [QB, KB]
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return m_new, l_new, acc
+
+    m0 = jnp.full((q_block,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_block,), jnp.float32)
+    acc0 = jnp.zeros((q_block, D), jnp.float32)
+    # Only iterate over k-tiles that can be visible to this q-tile.
+    upper = jnp.minimum(qi + 1, total_blocks)
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, acc0))
+    o_ref[...] = acc / l[:, None]
+
+
+def prefill_attention(
+    q, k, v, lengths, *, q_block: int = Q_BLOCK, k_block: int = K_BLOCK
+):
+    """Causal flash prefill attention over padded prompt chunks.
+
+    Args:
+      q, k, v:  [B, T, H, D] float32, T a multiple of both blocks
+      lengths:  [B] int32 valid prompt lengths (padded rows attend to
+                themselves only; their output is masked downstream)
+
+    Returns:
+      [B, T, H, D] float32
+    """
+    B, T, H, D = q.shape
+    if T % q_block != 0 or T % k_block != 0:
+        raise ValueError(f"T={T} must be a multiple of q_block and k_block")
+    kernel = functools.partial(_prefill_kernel, q_block=q_block, k_block=k_block)
+    grid = (B, H, T // q_block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, qi: (b,)),
+            pl.BlockSpec((None, q_block, None, D), lambda b, h, qi: (b, qi, h, 0)),
+            pl.BlockSpec((None, T, None, D), lambda b, h, qi: (b, 0, h, 0)),
+            pl.BlockSpec((None, T, None, D), lambda b, h, qi: (b, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, q_block, None, D), lambda b, h, qi: (b, qi, h, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, D), jnp.float32),
+        interpret=True,
+    )(lengths, q, k, v)
+
+
+def _extend_kernel(
+    clen_ref, q_ref, k_ref, v_ref, o_ref, *, q_block: int, k_block: int
+):
+    """One program per (batch, head, q-tile) of an *extend* step.
+
+    The chunk's new K/V rows have already been written into the cache at
+    positions ``clen .. clen+C``; query row ``j`` of the chunk sits at
+    absolute position ``clen + j`` and attends to every cache position
+    ``<= clen + j``.  This generalizes prefill (clen=0) and decode (C=1)
+    and is what makes radix-cache hits cheap: only the uncached suffix is
+    ever run through this kernel.
+
+    Refs:
+      clen_ref: [1]     cached-prefix length for this sequence
+      q_ref:    [QB, D] query tile (chunk-local)
+      k_ref:    [T, D]  full key cache for this (b, h)
+      v_ref:    [T, D]
+      o_ref:    [QB, D]
+    """
+    T, D = k_ref.shape
+    qi = pl.program_id(2)
+    clen = clen_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    q = q_ref[...] * scale  # [QB, D]
+    # Absolute positions of this query tile.
+    qpos = clen + qi * q_block + jax.lax.iota(jnp.int32, q_block)  # [QB]
+    total_blocks = T // k_block
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_tile = k_ref[pl.ds(i * k_block, k_block), :]
+        v_tile = v_ref[pl.ds(i * k_block, k_block), :]
+        scores = q @ k_tile.T  # [QB, KB]
+        kpos = i * k_block + jax.lax.iota(jnp.int32, k_block)
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m_prev, scores.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return m_new, l_new, acc
+
+    m0 = jnp.full((q_block,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_block,), jnp.float32)
+    acc0 = jnp.zeros((q_block, D), jnp.float32)
+    # Only k-tiles up to the last visible position matter.
+    last_pos = clen + (qi + 1) * q_block  # exclusive
+    upper = jnp.minimum((last_pos + k_block - 1) // k_block, total_blocks)
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, acc0))
+    o_ref[...] = acc / l[:, None]
+
+
+def extend_attention(
+    q, k_cache, v_cache, cache_lens, *, q_block: int = Q_BLOCK, k_block: int = K_BLOCK
+):
+    """Chunked-extend flash attention against a KV cache with a cached prefix.
+
+    Args:
+      q:          [B, C, H, D] float32 queries for the new chunk
+                  (C a multiple of ``q_block``)
+      k_cache:    [B, T, H, D] float32 — new chunk K rows already written at
+                  ``cache_lens[b] .. cache_lens[b]+C``
+      v_cache:    [B, T, H, D] float32
+      cache_lens: [B] int32 cached-prefix length per sequence
+                  (``cache_lens[b] + C <= T``); padded chunk rows attend to
+                  stale cache garbage — mask their outputs downstream.
+
+    Returns:
+      [B, C, H, D] float32
+    """
+    B, C, H, D = q.shape
+    _, T, _, _ = k_cache.shape
+    if C % q_block != 0 or T % k_block != 0:
+        raise ValueError(f"C={C}/T={T} must be multiples of the blocks")
+    kernel = functools.partial(_extend_kernel, q_block=q_block, k_block=k_block)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, C // q_block),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, qi: (b,)),
+            pl.BlockSpec((None, q_block, None, D), lambda b, h, qi: (b, qi, h, 0)),
+            pl.BlockSpec((None, T, None, D), lambda b, h, qi: (b, 0, h, 0)),
+            pl.BlockSpec((None, T, None, D), lambda b, h, qi: (b, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, q_block, None, D), lambda b, h, qi: (b, qi, h, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, C, H, D), jnp.float32),
+        interpret=True,
+    )(cache_lens, q, k_cache, v_cache)

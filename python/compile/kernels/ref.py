@@ -1,0 +1,72 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground-truth implementations that the Pallas kernels in
+``attention.py`` are validated against (pytest + hypothesis in
+``python/tests/``).  They are deliberately written in the most obvious
+way — full score matrices, explicit masks — so that any cleverness in the
+kernels (online softmax, block tiling, length masking) is checked against
+un-clever math.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Single-token (decode-step) attention against a KV cache.
+
+    Args:
+      q:        [B, H, D]   query for the new token, one per sequence.
+      k_cache:  [B, T, H, D] key cache (only the first ``lengths[b]`` rows
+                of sequence ``b`` are valid).
+      v_cache:  [B, T, H, D] value cache.
+      lengths:  [B] int32   number of valid cache entries per sequence,
+                *including* the slot for the current token.
+
+    Returns:
+      [B, H, D] attention output.
+    """
+    B, T, H, D = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, dtype=q.dtype))
+    # scores: [B, H, T]
+    scores = jnp.einsum("bhd,bthd->bht", q, k_cache) * scale
+    pos = jnp.arange(T)[None, None, :]  # [1, 1, T]
+    mask = pos < lengths[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * mask
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bht,bthd->bhd", probs, v_cache)
+
+
+def prefill_attention_ref(q, k, v, lengths):
+    """Causal self-attention over a (possibly padded) prompt chunk.
+
+    Args:
+      q, k, v:  [B, T, H, D]
+      lengths:  [B] int32  valid prompt length per sequence; rows at or
+                beyond the length attend only to themselves (their output
+                is garbage and masked out downstream).
+
+    Returns:
+      [B, T, H, D]
+    """
+    B, T, H, D = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, dtype=q.dtype))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    qpos = jnp.arange(T)[None, None, :, None]
+    kpos = jnp.arange(T)[None, None, None, :]
+    causal = kpos <= qpos
+    valid = kpos < lengths[:, None, None, None]
+    mask = causal & valid
+    # Every query row always sees at least itself (kpos == qpos) so the
+    # softmax below is well defined even for padded rows.
+    mask = mask | (kpos == qpos)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * mask
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)

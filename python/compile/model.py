@@ -1,0 +1,241 @@
+"""L2: JAX transformer decoder used by the real-model serving path.
+
+A small byte-level decoder-only transformer whose attention runs through the
+L1 Pallas kernels (``kernels/attention.py``).  Two entry points are lowered
+AOT (``aot.py``) and executed from rust via PJRT:
+
+* ``decode_step``  — one token per sequence against the KV cache
+                     (uses the flash *decode* kernel, C=1, no q padding);
+* ``extend_chunk`` — append a chunk of C tokens per sequence (prefill and
+                     radix-cache-hit resume: only the uncached suffix is
+                     computed; uses the *extend* kernel).
+
+Parameters travel as ONE flat f32 vector input so the rust side only needs
+``artifacts/params.bin`` (+ shapes in ``manifest.json``); nothing is baked
+into the HLO text.  The KV cache is a pair of [L, B, T, H, D] arrays owned
+by rust between calls — graphs are pure functions cache -> cache'.
+
+Python never runs at serving time; this module exists only under
+``make artifacts`` and pytest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of the tiny served model (byte-level vocab)."""
+
+    vocab: int = 256
+    n_layers: int = 4
+    d_model: int = 128
+    n_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 512
+    max_seq: int = 256  # KV cache capacity per sequence (multiple of 128)
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def param_specs(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Ordered (name, shape) layout of the flat parameter vector."""
+        c = self
+        specs: list[tuple[str, tuple[int, ...]]] = [
+            ("embed", (c.vocab, c.d_model)),
+            ("pos_embed", (c.max_seq, c.d_model)),
+        ]
+        for i in range(c.n_layers):
+            specs += [
+                (f"l{i}.ln1", (c.d_model,)),
+                (f"l{i}.wq", (c.d_model, c.qkv_dim)),
+                (f"l{i}.wk", (c.d_model, c.qkv_dim)),
+                (f"l{i}.wv", (c.d_model, c.qkv_dim)),
+                (f"l{i}.wo", (c.qkv_dim, c.d_model)),
+                (f"l{i}.ln2", (c.d_model,)),
+                (f"l{i}.w1", (c.d_model, c.d_ff)),
+                (f"l{i}.w2", (c.d_ff, c.d_model)),
+            ]
+        specs.append(("ln_f", (c.d_model,)))
+        return specs
+
+    def n_params(self) -> int:
+        return sum(int(np.prod(s)) for _, s in self.param_specs())
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """Deterministic random init, returned as the flat f32 vector."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in cfg.param_specs():
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            chunks.append(np.ones(shape, np.float32).ravel())
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 0.5 / np.sqrt(fan_in)
+            chunks.append(
+                (rng.standard_normal(np.prod(shape)) * std).astype(np.float32)
+            )
+    return np.concatenate(chunks)
+
+
+def unflatten(cfg: ModelConfig, flat) -> dict[str, Any]:
+    """Slice the flat vector back into named tensors (jit-traceable)."""
+    params: dict[str, Any] = {}
+    off = 0
+    for name, shape in cfg.param_specs():
+        n = int(np.prod(shape))
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def _rmsnorm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def _write_cache(cache, new, start):
+    """Write ``new`` [B, C, H, D] into ``cache`` [B, T, H, D] at per-batch
+    offsets ``start`` [B] (int32)."""
+
+    def one(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (s, 0, 0))
+
+    return jax.vmap(one)(cache, new, start)
+
+
+def _layer_decode(cfg, params, i, x, k_cache, v_cache, cache_lens):
+    """One transformer layer of a single-token decode step.
+
+    x: [B, d]; k/v_cache: [B, T, H, D] (this layer's slice);
+    cache_lens: [B] lengths INCLUDING the new token's slot.
+    """
+    B = x.shape[0]
+    c = cfg
+    h = _rmsnorm(x, params[f"l{i}.ln1"])
+    q = (h @ params[f"l{i}.wq"]).reshape(B, c.n_heads, c.head_dim)
+    k = (h @ params[f"l{i}.wk"]).reshape(B, 1, c.n_heads, c.head_dim)
+    v = (h @ params[f"l{i}.wv"]).reshape(B, 1, c.n_heads, c.head_dim)
+    # The new token occupies slot cache_lens-1.
+    k_cache = _write_cache(k_cache, k, cache_lens - 1)
+    v_cache = _write_cache(v_cache, v, cache_lens - 1)
+    attn = attention.decode_attention(q, k_cache, v_cache, cache_lens)
+    x = x + attn.reshape(B, c.qkv_dim) @ params[f"l{i}.wo"]
+    h = _rmsnorm(x, params[f"l{i}.ln2"])
+    x = x + jax.nn.gelu(h @ params[f"l{i}.w1"]) @ params[f"l{i}.w2"]
+    return x, k_cache, v_cache
+
+
+def _layer_extend(cfg, params, i, x, k_cache, v_cache, cache_lens):
+    """One transformer layer of a C-token extend step.  x: [B, C, d]."""
+    B, C, _ = x.shape
+    c = cfg
+    h = _rmsnorm(x, params[f"l{i}.ln1"])
+    q = (h @ params[f"l{i}.wq"]).reshape(B, C, c.n_heads, c.head_dim)
+    k = (h @ params[f"l{i}.wk"]).reshape(B, C, c.n_heads, c.head_dim)
+    v = (h @ params[f"l{i}.wv"]).reshape(B, C, c.n_heads, c.head_dim)
+    k_cache = _write_cache(k_cache, k, cache_lens)
+    v_cache = _write_cache(v_cache, v, cache_lens)
+    attn = attention.extend_attention(
+        q, k_cache, v_cache, cache_lens, q_block=min(C, attention.Q_BLOCK)
+    )
+    x = x + attn.reshape(B, C, c.qkv_dim) @ params[f"l{i}.wo"]
+    h = _rmsnorm(x, params[f"l{i}.ln2"])
+    x = x + jax.nn.gelu(h @ params[f"l{i}.w1"]) @ params[f"l{i}.w2"]
+    return x, k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, flat_params, tokens, k_cache, v_cache, cache_lens):
+    """One greedy decode step for a fixed batch.
+
+    Args:
+      flat_params: [n_params] f32
+      tokens:      [B] int32 — the token generated at the previous step
+      k_cache:     [L, B, T, H, D] f32
+      v_cache:     [L, B, T, H, D] f32
+      cache_lens:  [B] int32 — valid cache length BEFORE this token
+
+    Returns (logits [B, vocab], k_cache', v_cache', cache_lens+1).
+    """
+    c = cfg
+    params = unflatten(c, flat_params)
+    new_lens = cache_lens + 1
+    pos = jnp.clip(cache_lens, 0, c.max_seq - 1)
+    x = params["embed"][tokens] + params["pos_embed"][pos]  # [B, d]
+    ks, vs = [], []
+    for i in range(c.n_layers):
+        x, kc, vc = _layer_decode(c, params, i, x, k_cache[i], v_cache[i], new_lens)
+        ks.append(kc)
+        vs.append(vc)
+    x = _rmsnorm(x, params["ln_f"])
+    logits = x @ params["embed"].T  # tied head
+    return logits, jnp.stack(ks), jnp.stack(vs), new_lens
+
+
+def extend_chunk(
+    cfg: ModelConfig, flat_params, tokens, k_cache, v_cache, cache_lens, chunk_lens
+):
+    """Append a C-token chunk per sequence (prefill / cache-hit resume).
+
+    Args:
+      tokens:     [B, C] int32, right-padded per ``chunk_lens``
+      cache_lens: [B] int32 cached-prefix length (radix-cache hit length)
+      chunk_lens: [B] int32 valid tokens in this chunk (1..C)
+
+    Returns (next_logits [B, vocab] — logits at each sequence's last valid
+    chunk position, k_cache', v_cache', cache_lens+chunk_lens).
+
+    Padded rows write garbage K/V beyond ``cache_lens+chunk_lens``; those
+    slots are overwritten before they ever become visible because
+    attention masks strictly by length.
+    """
+    c = cfg
+    B, C = tokens.shape
+    params = unflatten(c, flat_params)
+    pos = jnp.clip(cache_lens[:, None] + jnp.arange(C)[None, :], 0, c.max_seq - 1)
+    x = params["embed"][tokens] + params["pos_embed"][pos]  # [B, C, d]
+    ks, vs = [], []
+    for i in range(c.n_layers):
+        x, kc, vc = _layer_extend(c, params, i, x, k_cache[i], v_cache[i], cache_lens)
+        ks.append(kc)
+        vs.append(vc)
+    x = _rmsnorm(x, params["ln_f"])  # [B, C, d]
+    last = jnp.take_along_axis(
+        x, jnp.maximum(chunk_lens - 1, 0)[:, None, None], axis=1
+    )[:, 0, :]
+    logits = last @ params["embed"].T
+    return logits, jnp.stack(ks), jnp.stack(vs), cache_lens + chunk_lens
+
+
+def reference_forward(cfg: ModelConfig, flat_params, tokens):
+    """Oracle: full non-cached forward over a [B, T] prompt, pure jnp
+    attention (no Pallas, no cache).  Returns logits [B, T, vocab]."""
+    from .kernels import ref
+
+    c = cfg
+    B, T = tokens.shape
+    params = unflatten(c, flat_params)
+    pos = jnp.arange(T)
+    x = params["embed"][tokens] + params["pos_embed"][pos][None, :, :]
+    lens = jnp.full((B,), T, jnp.int32)
+    for i in range(c.n_layers):
+        h = _rmsnorm(x, params[f"l{i}.ln1"])
+        q = (h @ params[f"l{i}.wq"]).reshape(B, T, c.n_heads, c.head_dim)
+        k = (h @ params[f"l{i}.wk"]).reshape(B, T, c.n_heads, c.head_dim)
+        v = (h @ params[f"l{i}.wv"]).reshape(B, T, c.n_heads, c.head_dim)
+        attn = ref.prefill_attention_ref(q, k, v, lens)
+        x = x + attn.reshape(B, T, c.qkv_dim) @ params[f"l{i}.wo"]
+        h = _rmsnorm(x, params[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(h @ params[f"l{i}.w1"]) @ params[f"l{i}.w2"]
+    x = _rmsnorm(x, params["ln_f"])
+    return x @ params["embed"].T

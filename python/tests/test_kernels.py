@@ -1,0 +1,185 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core numeric signal for the whole stack — the rust runtime
+executes HLO lowered from exactly these kernels, so allclose here plus the
+HLO round-trip test in rust gives end-to-end numeric confidence.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ref
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "B,T,H,D,k_block",
+    [
+        (1, 128, 1, 64, 128),
+        (2, 256, 2, 64, 128),
+        (3, 256, 4, 32, 64),
+        (8, 256, 2, 64, 128),
+        (1, 512, 2, 128, 128),
+    ],
+)
+def test_decode_matches_ref(B, T, H, D, k_block):
+    rng = np.random.default_rng(42 + B + T)
+    q = _rand(rng, B, H, D)
+    k = _rand(rng, B, T, H, D)
+    v = _rand(rng, B, T, H, D)
+    lens = jnp.asarray(rng.integers(1, T + 1, B), jnp.int32)
+    out = attention.decode_attention(q, k, v, lens, k_block=k_block)
+    exp = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+
+def test_decode_length_one_attends_only_first_slot():
+    """With length 1, output must equal v[:, 0] exactly (softmax of 1)."""
+    rng = np.random.default_rng(0)
+    B, T, H, D = 2, 128, 2, 64
+    q = _rand(rng, B, H, D)
+    k = _rand(rng, B, T, H, D)
+    v = _rand(rng, B, T, H, D)
+    lens = jnp.ones((B,), jnp.int32)
+    out = attention.decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(out, v[:, 0], rtol=RTOL, atol=ATOL)
+
+
+def test_decode_ignores_garbage_beyond_length():
+    """Poisoning cache rows beyond the valid length must not change output."""
+    rng = np.random.default_rng(1)
+    B, T, H, D = 2, 256, 2, 64
+    q = _rand(rng, B, H, D)
+    k = _rand(rng, B, T, H, D)
+    v = _rand(rng, B, T, H, D)
+    lens = jnp.asarray([100, 37], jnp.int32)
+    base = attention.decode_attention(q, k, v, lens)
+    k2 = k.at[:, 150:].set(1e6)
+    v2 = v.at[:, 150:].set(-1e6)
+    poisoned = attention.decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(base, poisoned, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize(
+    "B,T,H,D,qb,kb",
+    [
+        (1, 128, 1, 64, 128, 128),
+        (2, 256, 2, 64, 128, 128),
+        (2, 256, 2, 64, 64, 64),
+        (4, 256, 1, 32, 128, 128),
+    ],
+)
+def test_prefill_matches_ref(B, T, H, D, qb, kb):
+    rng = np.random.default_rng(7 + B + T)
+    q = _rand(rng, B, T, H, D)
+    k = _rand(rng, B, T, H, D)
+    v = _rand(rng, B, T, H, D)
+    lens = jnp.asarray(rng.integers(1, T + 1, B), jnp.int32)
+    out = attention.prefill_attention(q, k, v, lens, q_block=qb, k_block=kb)
+    exp = ref.prefill_attention_ref(q, k, v, lens)
+    for b in range(B):
+        L = int(lens[b])
+        np.testing.assert_allclose(out[b, :L], exp[b, :L], rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_row_zero_is_v_zero():
+    """First prompt row attends only to itself."""
+    rng = np.random.default_rng(2)
+    B, T, H, D = 2, 128, 2, 64
+    q, k, v = (_rand(rng, B, T, H, D) for _ in range(3))
+    lens = jnp.full((B,), T, jnp.int32)
+    out = attention.prefill_attention(q, k, v, lens)
+    np.testing.assert_allclose(out[:, 0], v[:, 0], rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("clen", [0, 1, 100, 128])
+def test_extend_matches_ref_against_concat(clen):
+    """extend(q_chunk | cached prefix) == ref causal attention over the
+    concatenated sequence, restricted to the chunk's rows."""
+    rng = np.random.default_rng(3 + clen)
+    B, T, H, D, C = 2, 256, 2, 64, 128
+    # Build a full sequence, then split into cached prefix + chunk.
+    total = clen + C
+    q_full = _rand(rng, B, T, H, D)
+    k_full = _rand(rng, B, T, H, D)
+    v_full = _rand(rng, B, T, H, D)
+    lens_full = jnp.full((B,), total, jnp.int32)
+    exp = ref.prefill_attention_ref(q_full, k_full, v_full, lens_full)
+
+    q_chunk = q_full[:, clen : clen + C]
+    cache_lens = jnp.full((B,), clen, jnp.int32)
+    out = attention.extend_attention(q_chunk, k_full, v_full, cache_lens)
+    np.testing.assert_allclose(
+        out, exp[:, clen : clen + C], rtol=RTOL, atol=ATOL
+    )
+
+
+def test_extend_c1_equals_decode():
+    """extend with a single-token chunk must agree with the decode kernel."""
+    rng = np.random.default_rng(4)
+    B, T, H, D = 2, 256, 2, 64
+    k = _rand(rng, B, T, H, D)
+    v = _rand(rng, B, T, H, D)
+    q = _rand(rng, B, 1, H, D)
+    clens = jnp.asarray([10, 200], jnp.int32)
+    out_e = attention.extend_attention(q, k, v, clens, q_block=1)
+    out_d = attention.decode_attention(q[:, 0], k, v, clens + 1)
+    np.testing.assert_allclose(out_e[:, 0], out_d, rtol=RTOL, atol=ATOL)
+
+
+# --- hypothesis sweeps over shapes/lengths (interpret mode is slow: keep
+# --- the example budget small but the strategy space wide).
+@settings(max_examples=12, deadline=None)
+@given(
+    B=st.integers(1, 4),
+    H=st.sampled_from([1, 2, 4]),
+    D=st.sampled_from([32, 64]),
+    tblocks=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_decode_hypothesis(B, H, D, tblocks, seed, data):
+    T = 128 * tblocks
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, B, H, D)
+    k = _rand(rng, B, T, H, D)
+    v = _rand(rng, B, T, H, D)
+    lens = jnp.asarray(
+        [data.draw(st.integers(1, T), label=f"len{b}") for b in range(B)],
+        jnp.int32,
+    )
+    out = attention.decode_attention(q, k, v, lens)
+    exp = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    B=st.integers(1, 2),
+    H=st.sampled_from([1, 2]),
+    D=st.sampled_from([32, 64]),
+    clen=st.integers(0, 128),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_extend_hypothesis(B, H, D, clen, seed):
+    T, C = 256, 128
+    rng = np.random.default_rng(seed)
+    q_full = _rand(rng, B, T, H, D)
+    k_full = _rand(rng, B, T, H, D)
+    v_full = _rand(rng, B, T, H, D)
+    exp = ref.prefill_attention_ref(
+        q_full, k_full, v_full, jnp.full((B,), clen + C, jnp.int32)
+    )
+    out = attention.extend_attention(
+        q_full[:, clen : clen + C], k_full, v_full,
+        jnp.full((B,), clen, jnp.int32),
+    )
+    np.testing.assert_allclose(out, exp[:, clen : clen + C], rtol=1e-4, atol=1e-4)

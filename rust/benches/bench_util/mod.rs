@@ -1,0 +1,39 @@
+//! Minimal timing harness shared by the bench targets.
+//!
+//! (criterion is not in the vendored crate set; this provides the same
+//! warmup + multi-sample + median reporting for our purposes.)
+
+use std::time::{Duration, Instant};
+
+/// Run `f` with warmup and return (median, min, max) over `samples` runs.
+pub fn time_it<F: FnMut()>(samples: usize, mut f: F) -> (Duration, Duration, Duration) {
+    f(); // warmup
+    let mut times: Vec<Duration> = (0..samples.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed()
+        })
+        .collect();
+    times.sort();
+    (times[times.len() / 2], times[0], times[times.len() - 1])
+}
+
+pub fn report(name: &str, samples: usize, f: impl FnMut()) {
+    let (med, min, max) = time_it(samples, f);
+    println!(
+        "{name:<52} median {:>12.3?}  (min {:>12.3?}, max {:>12.3?})",
+        med, min, max
+    );
+}
+
+/// Report with a custom per-iteration unit count (e.g. ops per call).
+#[allow(dead_code)]
+pub fn report_per(name: &str, samples: usize, units: u64, f: impl FnMut()) {
+    let (med, _, _) = time_it(samples, f);
+    let per = med.as_nanos() as f64 / units.max(1) as f64;
+    println!(
+        "{name:<52} median {:>12.3?}  ({per:>10.1} ns/op over {units} ops)",
+        med
+    );
+}

@@ -1,0 +1,123 @@
+//! Hot-path microbenchmarks for the L3 coordinator + engine substrate.
+//!
+//! `cargo bench --bench hotpath`.  These are the §Perf targets from
+//! DESIGN.md: radix match/insert at serving prompt lengths, LRU eviction,
+//! the AIMD decision, one engine iteration at paper-scale batch, and a
+//! full end-to-end Table-1-scale run.
+
+mod bench_util;
+use bench_util::{report, report_per};
+
+use concur::config::{presets, AimdParams, EngineConfig, SchedulerKind};
+use concur::coordinator::{AimdController, ControlInputs, Controller};
+use concur::core::{Micros, Rng, Token};
+use concur::costmodel::CostModel;
+use concur::driver::run_job;
+use concur::engine::{EngineSignals, EvictPolicy, RadixTree};
+
+fn agent_prompt(agent: u32, steps: u32, per_step: u32) -> Vec<Token> {
+    // shared 512-token system prefix + per-agent unique growth
+    let mut p: Vec<Token> = (0..512).collect();
+    for s in 0..steps {
+        let base = 1 << 24 | agent << 12 | s << 4;
+        p.extend((0..per_step).map(|i| base + i));
+    }
+    p
+}
+
+fn main() {
+    // --- radix tree -------------------------------------------------------
+    let prompts: Vec<Vec<Token>> =
+        (0..64).map(|a| agent_prompt(a, 16, 512)).collect();
+
+    report("radix: insert 64 x 8.7k-token prompts", 20, || {
+        let mut t = RadixTree::new();
+        for (i, p) in prompts.iter().enumerate() {
+            t.insert(p, Micros(i as u64));
+        }
+    });
+
+    let mut warm = RadixTree::new();
+    for (i, p) in prompts.iter().enumerate() {
+        warm.insert(p, Micros(i as u64));
+    }
+    let mut stamp = 1_000_000u64;
+    report_per("radix: match_prefix 8.7k tokens (warm)", 200, 8704, || {
+        stamp += 1;
+        let m = warm.match_prefix(&prompts[13], Micros(stamp));
+        assert!(m.gpu_tokens > 0);
+    });
+
+    report("radix: evict half the tree (64 x 8.7k)", 20, || {
+        let mut t = RadixTree::new();
+        for (i, p) in prompts.iter().enumerate() {
+            t.insert(p, Micros(i as u64));
+        }
+        let ev = t.evict(t.gpu_tokens() / 2, EvictPolicy::Discard);
+        assert!(ev.freed_gpu_tokens > 0);
+    });
+
+    report("radix: evictable_gpu_tokens (U_t signal scan)", 200, || {
+        let e = warm.evictable_gpu_tokens();
+        assert!(e > 0);
+    });
+
+    // --- controller -------------------------------------------------------
+    let inputs = ControlInputs {
+        engine: EngineSignals {
+            kv_usage: 0.4,
+            pool_usage: 0.9,
+            hit_rate: 0.8,
+            running: 32,
+            waiting: 4,
+        },
+        active_agents: 32,
+        active_footprint: 120_000,
+        capacity: 300_000,
+    };
+    let mut ctl = AimdController::new(AimdParams { control_interval: 1, ..Default::default() });
+    report_per("aimd: 10k control decisions", 50, 10_000, || {
+        for _ in 0..10_000 {
+            ctl.on_signals(&inputs);
+        }
+    });
+
+    // --- engine iteration at paper scale -----------------------------------
+    report("engine: one iteration, 256 running decode seqs", 50, || {
+        let cost = CostModel::new(presets::qwen3_cluster(8));
+        let mut engine = concur::engine::SimEngine::new(
+            EngineConfig::default(),
+            cost,
+        );
+        let mut rng = Rng::new(1);
+        for a in 0..256u64 {
+            let base = (a as u32 + 1) << 14;
+            engine.submit(concur::engine::Request {
+                id: concur::core::RequestId(a),
+                agent: concur::core::AgentId(a),
+                prompt: (base..base + 1024).collect(),
+                gen: (0..64).map(|i| 900_000_000 + a as u32 * 100 + i).collect(),
+                prev_ctx: 0,
+                submitted_at: Micros::ZERO,
+            });
+        }
+        let mut now = Micros::ZERO;
+        for _ in 0..20 {
+            let out = engine.step(now);
+            now = now + out.duration + Micros(1);
+        }
+        let _ = rng.next_u64();
+    });
+
+    // --- end-to-end simulation ---------------------------------------------
+    report("driver: full job, 64 agents, Qwen3 TP2, CONCUR", 5, || {
+        let job = concur::config::JobConfig {
+            cluster: presets::qwen3_cluster(2),
+            engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+            workload: presets::qwen3_workload(64),
+            scheduler: SchedulerKind::Concur(AimdParams::default()),
+        };
+        let r = run_job(&job).unwrap();
+        assert_eq!(r.agents_finished, 64);
+    });
+}

@@ -1,0 +1,24 @@
+//! Bench target regenerating the paper's FIGURES end-to-end.
+//!
+//! `cargo bench --bench paper_figures` prints fig1(a/b/c), fig3, fig5 and
+//! fig6 with wall-time per harness.
+
+mod bench_util;
+
+fn main() {
+    for name in ["fig1", "fig3", "fig5", "fig6"] {
+        let t0 = std::time::Instant::now();
+        match concur::repro::run(name) {
+            Ok(outputs) => {
+                for o in &outputs {
+                    println!("{}", o.render());
+                }
+                println!("[{name} regenerated in {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                eprintln!("{name} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

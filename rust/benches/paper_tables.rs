@@ -1,0 +1,24 @@
+//! Bench target regenerating the paper's TABLES end-to-end.
+//!
+//! `cargo bench --bench paper_tables` prints every table with wall-time
+//! per harness.  (Tables are deterministic; timing shows simulation cost.)
+
+mod bench_util;
+
+fn main() {
+    for name in ["table1", "table2", "table3"] {
+        let t0 = std::time::Instant::now();
+        match concur::repro::run(name) {
+            Ok(outputs) => {
+                for o in &outputs {
+                    println!("{}", o.render());
+                }
+                println!("[{name} regenerated in {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                eprintln!("{name} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

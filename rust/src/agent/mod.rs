@@ -1,0 +1,220 @@
+//! ReAct agent execution layer.
+//!
+//! Agents follow the ReAct loop (reason → act → observe): each step issues
+//! a generation request over the *full accumulated context*, appends the
+//! generated tokens, then "calls a tool" (a latency + observation tokens)
+//! before the next step.  Context therefore grows monotonically (Fig. 1a)
+//! and agents progress asynchronously — the two ingredients of middle-phase
+//! thrashing.
+//!
+//! Trajectories are fully predetermined by the workload generator (token
+//! content, step count, tool latencies) so that every scheduler is compared
+//! on bit-identical work.
+
+pub mod trace;
+pub mod workload;
+
+pub use workload::{WorkloadGenerator, WorkloadStats};
+
+use crate::core::{AgentId, Micros, RequestId, Token};
+use crate::engine::Request;
+
+/// Where an agent is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AgentPhase {
+    /// Ready to issue its next generation step (awaiting admission).
+    Ready,
+    /// A generation request is in flight in the engine.
+    Generating,
+    /// Waiting on an external tool.
+    ToolWait,
+    /// Trajectory complete.
+    Done,
+}
+
+/// One predetermined ReAct step.
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    /// Tokens the model will generate this step.
+    pub gen: Vec<Token>,
+    /// Tool observation appended to the context afterwards (empty on the
+    /// final step).
+    pub tool_tokens: Vec<Token>,
+    /// Tool execution latency.
+    pub tool_latency: Micros,
+}
+
+/// A long-horizon agent with a predetermined trajectory.
+#[derive(Debug, Clone)]
+pub struct Agent {
+    pub id: AgentId,
+    pub phase: AgentPhase,
+    /// Full accumulated context (system prompt + task + history).
+    history: Vec<Token>,
+    plan: Vec<StepPlan>,
+    step: usize,
+    /// Context length after the previous generation step (recompute
+    /// boundary — see `engine::Request::prev_ctx`).
+    prev_ctx: u64,
+    /// Completion time (set when Done).
+    pub finished_at: Option<Micros>,
+    /// First submission time (for end-to-end agent latency).
+    pub started_at: Option<Micros>,
+}
+
+impl Agent {
+    pub fn new(id: AgentId, initial_context: Vec<Token>, plan: Vec<StepPlan>) -> Agent {
+        assert!(!plan.is_empty(), "agent needs at least one step");
+        Agent {
+            id,
+            phase: AgentPhase::Ready,
+            history: initial_context,
+            plan,
+            step: 0,
+            prev_ctx: 0,
+            finished_at: None,
+            started_at: None,
+        }
+    }
+
+    pub fn context_len(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn steps_total(&self) -> usize {
+        self.plan.len()
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+
+    /// Build the generation request for the current step.
+    pub fn make_request(&mut self, id: RequestId, now: Micros) -> Request {
+        assert_eq!(self.phase, AgentPhase::Ready, "agent {} not ready", self.id);
+        if self.started_at.is_none() {
+            self.started_at = Some(now);
+        }
+        self.phase = AgentPhase::Generating;
+        Request {
+            id,
+            agent: self.id,
+            prompt: self.history.clone(),
+            gen: self.plan[self.step].gen.clone(),
+            prev_ctx: self.prev_ctx,
+            submitted_at: now,
+        }
+    }
+
+    /// The engine finished this agent's current step.  Returns the tool
+    /// latency to wait before the agent is ready again, or `None` when the
+    /// trajectory is complete.
+    pub fn on_step_finished(&mut self, output: &[Token], now: Micros) -> Option<Micros> {
+        assert_eq!(self.phase, AgentPhase::Generating);
+        debug_assert_eq!(output, &self.plan[self.step].gen[..]);
+        self.history.extend_from_slice(output);
+        self.prev_ctx = self.history.len() as u64;
+        let plan = &self.plan[self.step];
+        let latency = plan.tool_latency;
+        let tool_tokens = plan.tool_tokens.clone();
+        self.step += 1;
+        if self.step >= self.plan.len() {
+            self.phase = AgentPhase::Done;
+            self.finished_at = Some(now);
+            None
+        } else {
+            self.history.extend_from_slice(&tool_tokens);
+            self.phase = AgentPhase::ToolWait;
+            Some(latency)
+        }
+    }
+
+    /// Tool finished; agent may request its next step.
+    pub fn on_tool_done(&mut self) {
+        assert_eq!(self.phase, AgentPhase::ToolWait);
+        self.phase = AgentPhase::Ready;
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == AgentPhase::Done
+    }
+
+    /// Total tokens this agent will ever generate (for progress metrics).
+    pub fn total_gen_tokens(&self) -> u64 {
+        self.plan.iter().map(|s| s.gen.len() as u64).sum()
+    }
+
+    /// Read-only view of the accumulated context (tests/tracing only).
+    pub fn history_for_tests(&self) -> &[Token] {
+        &self.history
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(steps: usize) -> Vec<StepPlan> {
+        (0..steps)
+            .map(|k| StepPlan {
+                gen: (0..10).map(|i| 1000 * (k as u32 + 1) + i).collect(),
+                tool_tokens: (0..5).map(|i| 9000 * (k as u32 + 1) + i).collect(),
+                tool_latency: Micros(1_000_000),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lifecycle_follows_react_loop() {
+        let mut a = Agent::new(AgentId(1), vec![1, 2, 3], plan(2));
+        assert_eq!(a.phase, AgentPhase::Ready);
+        let req = a.make_request(RequestId(1), Micros(5));
+        assert_eq!(req.prompt, vec![1, 2, 3]);
+        assert_eq!(req.prev_ctx, 0);
+        assert_eq!(a.phase, AgentPhase::Generating);
+
+        let gen = req.gen.clone();
+        let lat = a.on_step_finished(&gen, Micros(10));
+        assert_eq!(lat, Some(Micros(1_000_000)));
+        assert_eq!(a.phase, AgentPhase::ToolWait);
+        // History = initial + gen + tool tokens.
+        assert_eq!(a.context_len(), 3 + 10 + 5);
+        // Recompute boundary excludes the tool tokens.
+        assert_eq!(a.prev_ctx, 13);
+
+        a.on_tool_done();
+        let req2 = a.make_request(RequestId(2), Micros(20));
+        assert_eq!(req2.prompt.len(), 18);
+        assert_eq!(req2.prev_ctx, 13);
+        let gen2 = req2.gen.clone();
+        let lat2 = a.on_step_finished(&gen2, Micros(30));
+        assert_eq!(lat2, None);
+        assert!(a.is_done());
+        assert_eq!(a.finished_at, Some(Micros(30)));
+    }
+
+    #[test]
+    fn context_grows_monotonically() {
+        let mut a = Agent::new(AgentId(1), vec![0; 100], plan(5));
+        let mut prev = a.context_len();
+        for i in 0..5 {
+            let req = a.make_request(RequestId(i), Micros(i));
+            let gen = req.gen.clone();
+            a.on_step_finished(&gen, Micros(i));
+            assert!(a.context_len() > prev);
+            prev = a.context_len();
+            if !a.is_done() {
+                a.on_tool_done();
+            }
+        }
+        assert!(a.is_done());
+    }
+
+    #[test]
+    #[should_panic(expected = "not ready")]
+    fn cannot_request_while_generating() {
+        let mut a = Agent::new(AgentId(1), vec![1], plan(2));
+        a.make_request(RequestId(1), Micros::ZERO);
+        a.make_request(RequestId(2), Micros::ZERO);
+    }
+}

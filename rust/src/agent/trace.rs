@@ -1,0 +1,112 @@
+//! Trace export/import for agent trajectories (JSON lines).
+//!
+//! `concur trace --out f.jsonl` dumps the deterministic workload so runs
+//! can be inspected, diffed across schedulers, or replayed elsewhere.
+
+use std::io::Write as _;
+
+use crate::core::json::Value;
+use crate::core::{ConcurError, Micros, Result};
+use crate::json_obj;
+
+use super::Agent;
+
+/// One line per agent: ids, step shape and latencies (token *contents* are
+/// reproducible from the seed, so only lengths are recorded).
+pub fn agent_to_json(a: &Agent) -> Value {
+    let steps: Vec<Value> = a
+        .plan_for_stats()
+        .iter()
+        .map(|s| {
+            json_obj! {
+                "gen_tokens" => s.gen.len(),
+                "tool_tokens" => s.tool_tokens.len(),
+                "tool_latency_s" => s.tool_latency.as_secs_f64(),
+            }
+        })
+        .collect();
+    json_obj! {
+        "agent" => a.id.0,
+        "initial_context" => a.context_len(),
+        "steps" => Value::Array(steps),
+    }
+}
+
+/// Write a fleet as JSON-lines.
+pub fn write_trace(path: &std::path::Path, agents: &[Agent]) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    for a in agents {
+        writeln!(f, "{}", agent_to_json(a).to_string_compact())?;
+    }
+    Ok(())
+}
+
+/// Summary of a parsed trace (validation / analysis).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceSummary {
+    pub n_agents: usize,
+    pub total_steps: usize,
+    pub total_gen_tokens: u64,
+    pub mean_tool_latency: Micros,
+}
+
+/// Parse a JSON-lines trace back into a summary.
+pub fn read_trace_summary(path: &std::path::Path) -> Result<TraceSummary> {
+    let text = std::fs::read_to_string(path)?;
+    summarize_trace_text(&text)
+}
+
+pub fn summarize_trace_text(text: &str) -> Result<TraceSummary> {
+    let mut s = TraceSummary::default();
+    let mut lat_sum = 0f64;
+    let mut lat_n = 0u64;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let v = Value::parse(line)?;
+        s.n_agents += 1;
+        let steps = v
+            .get("steps")
+            .as_array()
+            .ok_or_else(|| ConcurError::config("trace line missing steps"))?;
+        s.total_steps += steps.len();
+        for st in steps {
+            s.total_gen_tokens += st.get("gen_tokens").as_u64().unwrap_or(0);
+            lat_sum += st.get("tool_latency_s").as_f64().unwrap_or(0.0);
+            lat_n += 1;
+        }
+    }
+    if lat_n > 0 {
+        s.mean_tool_latency = Micros::from_secs_f64(lat_sum / lat_n as f64);
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::WorkloadGenerator;
+    use crate::config::WorkloadConfig;
+
+    #[test]
+    fn trace_roundtrip() {
+        let cfg = WorkloadConfig { n_agents: 6, ..Default::default() };
+        let agents = WorkloadGenerator::new(cfg).generate();
+        let dir = std::env::temp_dir().join("concur_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fleet.jsonl");
+        write_trace(&path, &agents).unwrap();
+        let s = read_trace_summary(&path).unwrap();
+        assert_eq!(s.n_agents, 6);
+        assert_eq!(
+            s.total_gen_tokens,
+            agents.iter().map(|a| a.total_gen_tokens()).sum::<u64>()
+        );
+        assert!(s.mean_tool_latency.0 > 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn malformed_trace_rejected() {
+        assert!(summarize_trace_text("{not json}").is_err());
+        assert!(summarize_trace_text(r#"{"agent": 1}"#).is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Synthetic ReAct workload generator.
+//!
+//! Reproduces the statistical shape of the paper's real-world agent traces:
+//!
+//! * a shared *system prompt* per task family → the warmup-phase prefix
+//!   overlap that yields ~90% hit rates (Fig. 3a, yellow region);
+//! * monotone context growth of roughly 1.2k → 10-12k tokens over ~10
+//!   ReAct steps (Fig. 1a);
+//! * lognormal tool latencies → asynchronous agent progress, the trigger
+//!   for recency inversion under LRU;
+//! * token *content* is unique per (agent, step) except for shared
+//!   prefixes, so radix-tree reuse is exactly agent-history reuse.
+//!
+//! Generation is seeded and deterministic: the same `WorkloadConfig`
+//! produces bit-identical trajectories for every scheduler under test.
+
+use crate::config::WorkloadConfig;
+use crate::core::{AgentId, Micros, Rng, Token};
+
+use super::{Agent, StepPlan};
+
+/// Token-id allocator: unique content lives above this base so family
+/// system prompts (low ids) never collide with generated/tool tokens.
+const UNIQUE_BASE: Token = 1 << 24;
+
+/// Builds deterministic agent fleets from a [`WorkloadConfig`].
+pub struct WorkloadGenerator {
+    cfg: WorkloadConfig,
+    rng: Rng,
+    next_unique: Token,
+}
+
+/// Aggregate shape statistics (used by the Fig. 1 harness and tests).
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadStats {
+    pub n_agents: usize,
+    /// Mean context length (tokens) at the *start* of each step index,
+    /// over agents that reach that step.
+    pub ctx_at_step: Vec<f64>,
+    pub total_gen_tokens: u64,
+    pub total_prompt_tokens: u64,
+    pub mean_steps: f64,
+}
+
+impl WorkloadGenerator {
+    pub fn new(cfg: WorkloadConfig) -> WorkloadGenerator {
+        let rng = Rng::new(cfg.seed);
+        WorkloadGenerator { cfg, rng, next_unique: UNIQUE_BASE }
+    }
+
+    fn unique_run(&mut self, n: u32) -> Vec<Token> {
+        let start = self.next_unique;
+        self.next_unique += n;
+        (start..start + n).collect()
+    }
+
+    fn range_sample(&mut self, lo: u32, hi: u32) -> u32 {
+        if lo >= hi {
+            lo
+        } else {
+            self.rng.gen_range(lo as u64, hi as u64 + 1) as u32
+        }
+    }
+
+    /// Generate the agent fleet.
+    pub fn generate(&mut self) -> Vec<Agent> {
+        let cfg = self.cfg.clone();
+        // Family system prompts: shared low-id runs.
+        let families: Vec<Vec<Token>> = (0..cfg.task_families)
+            .map(|f| {
+                let base = f * cfg.system_prompt_tokens;
+                (base..base + cfg.system_prompt_tokens).collect()
+            })
+            .collect();
+
+        (0..cfg.n_agents)
+            .map(|i| {
+                let family = &families[i % families.len()];
+                let mut ctx = family.clone();
+                let init = self.range_sample(cfg.initial_prompt_min, cfg.initial_prompt_max);
+                ctx.extend(self.unique_run(init));
+
+                let steps = self.range_sample(cfg.steps_min, cfg.steps_max);
+                let plan: Vec<StepPlan> = (0..steps)
+                    .map(|k| {
+                        let gen_n =
+                            self.range_sample(cfg.gen_tokens_min, cfg.gen_tokens_max);
+                        let tool_n =
+                            self.range_sample(cfg.tool_tokens_min, cfg.tool_tokens_max);
+                        let last = k + 1 == steps;
+                        let lat = self
+                            .rng
+                            .lognormal(cfg.tool_latency_mu, cfg.tool_latency_sigma);
+                        StepPlan {
+                            gen: self.unique_run(gen_n),
+                            tool_tokens: if last {
+                                Vec::new()
+                            } else {
+                                self.unique_run(tool_n)
+                            },
+                            tool_latency: Micros::from_secs_f64(lat),
+                        }
+                    })
+                    .collect();
+                Agent::new(AgentId(i as u64), ctx, plan)
+            })
+            .collect()
+    }
+
+    /// Shape statistics for a fleet (simulating context growth without
+    /// running an engine).
+    pub fn stats(agents: &[Agent]) -> WorkloadStats {
+        let mut stats = WorkloadStats {
+            n_agents: agents.len(),
+            ..WorkloadStats::default()
+        };
+        let max_steps = agents.iter().map(|a| a.steps_total()).max().unwrap_or(0);
+        let mut sums = vec![0f64; max_steps];
+        let mut counts = vec![0u64; max_steps];
+        for a in agents {
+            // Replay context growth from the plan.
+            let mut ctx = a.context_len() as u64;
+            stats.total_gen_tokens += a.total_gen_tokens();
+            for (k, step) in a.plan_for_stats().iter().enumerate() {
+                sums[k] += ctx as f64;
+                counts[k] += 1;
+                stats.total_prompt_tokens += ctx;
+                ctx += step.gen.len() as u64 + step.tool_tokens.len() as u64;
+            }
+            stats.mean_steps += a.steps_total() as f64;
+        }
+        stats.mean_steps /= agents.len().max(1) as f64;
+        stats.ctx_at_step = (0..max_steps)
+            .filter(|&k| counts[k] > 0)
+            .map(|k| sums[k] / counts[k] as f64)
+            .collect();
+        stats
+    }
+}
+
+impl Agent {
+    /// Read-only view of the plan (stats/tracing only).
+    pub fn plan_for_stats(&self) -> &[StepPlan] {
+        &self.plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    fn gen(cfg: WorkloadConfig) -> Vec<Agent> {
+        WorkloadGenerator::new(cfg).generate()
+    }
+
+    #[test]
+    fn deterministic_across_invocations() {
+        let a = gen(WorkloadConfig::default());
+        let b = gen(WorkloadConfig::default());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context_len(), y.context_len());
+            assert_eq!(x.steps_total(), y.steps_total());
+            assert_eq!(x.total_gen_tokens(), y.total_gen_tokens());
+        }
+    }
+
+    #[test]
+    fn different_seed_different_fleet() {
+        let a = gen(WorkloadConfig::default());
+        let b = gen(WorkloadConfig { seed: 99, ..WorkloadConfig::default() });
+        let ta: u64 = a.iter().map(|x| x.total_gen_tokens()).sum();
+        let tb: u64 = b.iter().map(|x| x.total_gen_tokens()).sum();
+        assert_ne!(ta, tb);
+    }
+
+    #[test]
+    fn agents_share_family_prefix() {
+        let cfg = WorkloadConfig { n_agents: 8, task_families: 2, ..Default::default() };
+        let agents = gen(cfg.clone());
+        // Agents 0 and 2 are family 0; their first `system_prompt_tokens`
+        // match; agent 1 (family 1) differs.
+        let sys = cfg.system_prompt_tokens as usize;
+        let h0 = agents[0].history_for_tests();
+        let h2 = agents[2].history_for_tests();
+        let h1 = agents[1].history_for_tests();
+        assert_eq!(h0[..sys], h2[..sys]);
+        assert_ne!(h0[..sys], h1[..sys]);
+        // Beyond the system prompt, content is unique.
+        assert_ne!(h0[sys..sys + 10], h2[sys..sys + 10]);
+    }
+
+    #[test]
+    fn context_growth_matches_fig1a_shape() {
+        // Defaults are calibrated to reach ~10k tokens by step 10.
+        let agents = gen(WorkloadConfig { n_agents: 64, ..Default::default() });
+        let stats = WorkloadGenerator::stats(&agents);
+        assert!(stats.ctx_at_step.len() >= 8);
+        let first = stats.ctx_at_step[0];
+        let at10 = stats.ctx_at_step[9.min(stats.ctx_at_step.len() - 1)];
+        assert!((800.0..2000.0).contains(&first), "start={first}");
+        assert!((8_000.0..14_000.0).contains(&at10), "step10={at10}");
+        // Strictly increasing.
+        for w in stats.ctx_at_step.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn unique_tokens_never_collide_with_system_prompts() {
+        let agents = gen(WorkloadConfig::default());
+        for a in &agents {
+            for step in a.plan_for_stats() {
+                for &t in &step.gen {
+                    assert!(t >= UNIQUE_BASE);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tool_latencies_are_positive_and_varied() {
+        let agents = gen(WorkloadConfig::default());
+        let lats: Vec<u64> = agents
+            .iter()
+            .flat_map(|a| a.plan_for_stats().iter().map(|s| s.tool_latency.0))
+            .collect();
+        assert!(lats.iter().all(|&l| l > 0));
+        let uniq: std::collections::HashSet<_> = lats.iter().collect();
+        assert!(uniq.len() > lats.len() / 2);
+    }
+}

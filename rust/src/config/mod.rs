@@ -1,0 +1,418 @@
+//! Configuration system: typed configs with builders, JSON file loading and
+//! the paper's experiment presets.
+//!
+//! Every experiment in `repro/` is expressed as a [`JobConfig`]; users can
+//! also write a JSON config file and run it with `concur sim --config f.json`.
+
+pub mod presets;
+
+use crate::core::json::Value;
+use crate::core::{ConcurError, Result};
+use crate::costmodel::{ClusterSpec, GpuSpec, ModelSpec};
+
+/// Which admission scheduler fronts the engine (§6 of DESIGN.md).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedulerKind {
+    /// SGLang-like: admit everything, rely on LRU eviction.
+    Uncontrolled,
+    /// Fixed cap on in-flight *requests* (no agent affinity).
+    RequestCap(usize),
+    /// Fixed cap on concurrently *active agents*.
+    AgentCap(usize),
+    /// The paper's contribution: AIMD cache-aware agent admission.
+    Concur(AimdParams),
+}
+
+impl SchedulerKind {
+    pub fn name(&self) -> String {
+        match self {
+            SchedulerKind::Uncontrolled => "sglang".into(),
+            SchedulerKind::RequestCap(n) => format!("request-cap({n})"),
+            SchedulerKind::AgentCap(n) => format!("agent-cap({n})"),
+            SchedulerKind::Concur(_) => "concur".into(),
+        }
+    }
+}
+
+/// AIMD control-law parameters (paper §4.3, defaults §5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AimdParams {
+    /// Additive increase per control interval when `U_t < u_low`.
+    pub alpha: f64,
+    /// Multiplicative decrease when `U_t > u_high && H_t < h_thresh`.
+    pub beta: f64,
+    pub u_low: f64,
+    pub u_high: f64,
+    pub h_thresh: f64,
+    /// Initial window (active-agent budget).
+    pub w_init: f64,
+    /// Window floor (never pause the whole fleet).
+    pub w_min: f64,
+    /// Window ceiling (engine/queue capacity).
+    pub w_max: f64,
+    /// Apply the control law every this many engine steps.
+    pub control_interval: u32,
+    /// After a multiplicative cut, suppress further cuts for this many
+    /// control intervals while the hit-rate window refreshes (one cut per
+    /// congestion epoch, as in TCP fast recovery).
+    pub cut_cooldown: u32,
+    /// Slow additive probe inside the [u_low, u_high] hold band: every
+    /// `band_probe_every`-th control interval, if the window is saturated,
+    /// the hit rate is at least `h_healthy` and no cut fired recently,
+    /// probe +α.  This is congestion avoidance proper — without it the
+    /// window can only ratchet downward after warmup and strands capacity
+    /// when the post-cut equilibrium sits below the true fit.
+    /// 0 disables band probing.
+    pub band_probe_every: u32,
+    /// Hit rate considered "healthy" for band probing.
+    pub h_healthy: f64,
+}
+
+impl Default for AimdParams {
+    fn default() -> AimdParams {
+        AimdParams {
+            alpha: 2.0,
+            beta: 0.5,
+            u_low: 0.2,
+            u_high: 0.5,
+            h_thresh: 0.2,
+            w_init: 8.0,
+            w_min: 1.0,
+            w_max: 4096.0,
+            control_interval: 4,
+            cut_cooldown: 16,
+            band_probe_every: 8,
+            h_healthy: 0.8,
+        }
+    }
+}
+
+impl AimdParams {
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0 < self.beta && self.beta < 1.0) {
+            return Err(ConcurError::config("beta must be in (0,1)"));
+        }
+        if self.alpha <= 0.0 {
+            return Err(ConcurError::config("alpha must be positive"));
+        }
+        if !(0.0 <= self.u_low && self.u_low < self.u_high && self.u_high <= 1.0) {
+            return Err(ConcurError::config("need 0 <= u_low < u_high <= 1"));
+        }
+        if !(0.0..=1.0).contains(&self.h_thresh) {
+            return Err(ConcurError::config("h_thresh must be in [0,1]"));
+        }
+        if !(0.0..=1.0).contains(&self.h_healthy) {
+            return Err(ConcurError::config("h_healthy must be in [0,1]"));
+        }
+        if self.w_min < 1.0 || self.w_init < self.w_min || self.w_max < self.w_init {
+            return Err(ConcurError::config("need 1 <= w_min <= w_init <= w_max"));
+        }
+        Ok(())
+    }
+}
+
+/// How evicted KV is handled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionMode {
+    /// Discard and recompute on next use (vanilla SGLang).
+    Discard,
+    /// Offload to CPU memory, reload over the host link (HiCache).
+    Offload,
+}
+
+/// Serving-engine substrate parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Radix-tree / allocator page size in tokens (SGLang uses 16..64).
+    pub page_size: u32,
+    /// Max prompt tokens prefilled per sequence per iteration.
+    pub prefill_chunk: u32,
+    /// Engine-internal cap on concurrently running sequences (its batch
+    /// capacity); admission control sits *in front* of this.
+    pub max_running: usize,
+    /// Hit-rate observation window (requests) for telemetry + `H_t`.
+    pub hit_window: usize,
+    pub eviction: EvictionMode,
+    /// Fraction of the pool decode steps must keep free to allocate new
+    /// tokens (headroom before forced eviction).
+    pub decode_headroom: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig {
+            page_size: 16,
+            prefill_chunk: 4096,
+            max_running: 1024,
+            hit_window: 64,
+            eviction: EvictionMode::Discard,
+            decode_headroom: 0.02,
+        }
+    }
+}
+
+/// ReAct workload shape (calibrated to Fig. 1a growth curves).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub n_agents: usize,
+    /// ReAct steps per agent: uniform in [min, max].
+    pub steps_min: u32,
+    pub steps_max: u32,
+    /// Shared system-prompt tokens (common radix prefix across agents of
+    /// the same family).
+    pub system_prompt_tokens: u32,
+    /// Number of distinct task families (distinct system prompts).
+    pub task_families: u32,
+    /// Initial user-prompt tokens: uniform in [min, max].
+    pub initial_prompt_min: u32,
+    pub initial_prompt_max: u32,
+    /// Generated tokens per ReAct step: lognormal-ish via uniform [min,max].
+    pub gen_tokens_min: u32,
+    pub gen_tokens_max: u32,
+    /// Tool-observation tokens appended per step: uniform [min, max].
+    pub tool_tokens_min: u32,
+    pub tool_tokens_max: u32,
+    /// Tool latency: lognormal(mu, sigma) seconds.
+    pub tool_latency_mu: f64,
+    pub tool_latency_sigma: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> WorkloadConfig {
+        // Calibrated so context grows from ~1.2k to ~10-12k tokens over
+        // 10 steps, matching Fig. 1a.
+        WorkloadConfig {
+            n_agents: 64,
+            steps_min: 8,
+            steps_max: 12,
+            system_prompt_tokens: 512,
+            task_families: 4,
+            initial_prompt_min: 400,
+            initial_prompt_max: 900,
+            gen_tokens_min: 300,
+            gen_tokens_max: 700,
+            tool_tokens_min: 200,
+            tool_tokens_max: 600,
+            tool_latency_mu: 0.3,  // e^0.3 ≈ 1.35 s median
+            tool_latency_sigma: 0.8,
+            seed: 7,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.n_agents == 0 {
+            return Err(ConcurError::config("n_agents must be > 0"));
+        }
+        if self.steps_min == 0 || self.steps_min > self.steps_max {
+            return Err(ConcurError::config("need 1 <= steps_min <= steps_max"));
+        }
+        if self.initial_prompt_min > self.initial_prompt_max
+            || self.gen_tokens_min > self.gen_tokens_max
+            || self.tool_tokens_min > self.tool_tokens_max
+        {
+            return Err(ConcurError::config("min must be <= max for token ranges"));
+        }
+        if self.gen_tokens_min == 0 {
+            return Err(ConcurError::config("gen_tokens_min must be > 0"));
+        }
+        if self.task_families == 0 {
+            return Err(ConcurError::config("task_families must be > 0"));
+        }
+        Ok(())
+    }
+}
+
+/// A complete simulated batch-inference job.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    pub cluster: ClusterSpec,
+    pub engine: EngineConfig,
+    pub workload: WorkloadConfig,
+    pub scheduler: SchedulerKind,
+}
+
+impl JobConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.workload.validate()?;
+        if let SchedulerKind::Concur(p) = &self.scheduler {
+            p.validate()?;
+        }
+        if self.engine.page_size == 0 {
+            return Err(ConcurError::config("page_size must be > 0"));
+        }
+        if self.cluster.kv_pool_tokens() == 0 {
+            return Err(ConcurError::config(
+                "cluster has no KV pool (weights exceed usable HBM)",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse from a JSON config document (see `examples/configs/*.json`).
+    pub fn from_json(v: &Value) -> Result<JobConfig> {
+        let model = match v.get("model").as_str().unwrap_or("qwen3-32b") {
+            "qwen3-32b" => ModelSpec::qwen3_32b(),
+            "deepseek-v3" => ModelSpec::deepseek_v3(),
+            "tiny" => ModelSpec::tiny(),
+            other => {
+                return Err(ConcurError::config(format!("unknown model '{other}'")))
+            }
+        };
+        let tp = v.get("tp").as_u64().unwrap_or(8) as u32;
+        let n_gpus = v.get("n_gpus").as_u64().unwrap_or(tp as u64) as u32;
+        let cluster = ClusterSpec::new(GpuSpec::h100(), model, tp, n_gpus);
+
+        let mut workload = WorkloadConfig::default();
+        let w = v.get("workload");
+        if let Some(n) = w.get("n_agents").as_usize() {
+            workload.n_agents = n;
+        }
+        if let Some(s) = w.get("seed").as_u64() {
+            workload.seed = s;
+        }
+        if let Some(s) = w.get("steps_min").as_u64() {
+            workload.steps_min = s as u32;
+        }
+        if let Some(s) = w.get("steps_max").as_u64() {
+            workload.steps_max = s as u32;
+        }
+
+        let mut engine = EngineConfig::default();
+        let e = v.get("engine");
+        if let Some(p) = e.get("page_size").as_u64() {
+            engine.page_size = p as u32;
+        }
+        if e.get("eviction").as_str() == Some("offload") {
+            engine.eviction = EvictionMode::Offload;
+        }
+
+        let scheduler = match v.get("scheduler").as_str().unwrap_or("concur") {
+            "sglang" | "uncontrolled" => SchedulerKind::Uncontrolled,
+            "request-cap" => SchedulerKind::RequestCap(
+                v.get("cap").as_usize().unwrap_or(64),
+            ),
+            "agent-cap" => {
+                SchedulerKind::AgentCap(v.get("cap").as_usize().unwrap_or(64))
+            }
+            "concur" => {
+                let mut p = AimdParams::default();
+                let a = v.get("aimd");
+                if let Some(x) = a.get("alpha").as_f64() {
+                    p.alpha = x;
+                }
+                if let Some(x) = a.get("beta").as_f64() {
+                    p.beta = x;
+                }
+                if let Some(x) = a.get("u_low").as_f64() {
+                    p.u_low = x;
+                }
+                if let Some(x) = a.get("u_high").as_f64() {
+                    p.u_high = x;
+                }
+                if let Some(x) = a.get("h_thresh").as_f64() {
+                    p.h_thresh = x;
+                }
+                SchedulerKind::Concur(p)
+            }
+            other => {
+                return Err(ConcurError::config(format!(
+                    "unknown scheduler '{other}'"
+                )))
+            }
+        };
+
+        let job = JobConfig { cluster, engine, workload, scheduler };
+        job.validate()?;
+        Ok(job)
+    }
+
+    pub fn from_json_file(path: &std::path::Path) -> Result<JobConfig> {
+        let text = std::fs::read_to_string(path)?;
+        JobConfig::from_json(&Value::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_aimd_matches_paper() {
+        let p = AimdParams::default();
+        assert_eq!(p.alpha, 2.0);
+        assert_eq!(p.beta, 0.5);
+        assert_eq!(p.u_low, 0.2);
+        assert_eq!(p.u_high, 0.5);
+        assert_eq!(p.h_thresh, 0.2);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn aimd_validation_rejects_bad_params() {
+        let mut p = AimdParams::default();
+        p.beta = 1.5;
+        assert!(p.validate().is_err());
+        let mut p = AimdParams::default();
+        p.u_low = 0.7; // > u_high
+        assert!(p.validate().is_err());
+        let mut p = AimdParams::default();
+        p.w_init = 0.5;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn workload_validation() {
+        let mut w = WorkloadConfig::default();
+        w.validate().unwrap();
+        w.n_agents = 0;
+        assert!(w.validate().is_err());
+        let mut w = WorkloadConfig::default();
+        w.steps_min = 20;
+        w.steps_max = 10;
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn json_config_roundtrip() {
+        let text = r#"{
+            "model": "qwen3-32b", "tp": 2, "n_gpus": 2,
+            "scheduler": "concur",
+            "aimd": {"alpha": 4, "u_high": 0.6},
+            "workload": {"n_agents": 128, "seed": 3},
+            "engine": {"page_size": 32, "eviction": "offload"}
+        }"#;
+        let v = Value::parse(text).unwrap();
+        let job = JobConfig::from_json(&v).unwrap();
+        assert_eq!(job.cluster.tp, 2);
+        assert_eq!(job.workload.n_agents, 128);
+        assert_eq!(job.engine.page_size, 32);
+        assert_eq!(job.engine.eviction, EvictionMode::Offload);
+        match job.scheduler {
+            SchedulerKind::Concur(p) => {
+                assert_eq!(p.alpha, 4.0);
+                assert_eq!(p.u_high, 0.6);
+                assert_eq!(p.beta, 0.5); // default preserved
+            }
+            _ => panic!("wrong scheduler"),
+        }
+    }
+
+    #[test]
+    fn json_config_rejects_unknown_model() {
+        let v = Value::parse(r#"{"model": "gpt-oss"}"#).unwrap();
+        assert!(JobConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn scheduler_names() {
+        assert_eq!(SchedulerKind::Uncontrolled.name(), "sglang");
+        assert_eq!(SchedulerKind::RequestCap(64).name(), "request-cap(64)");
+        assert_eq!(
+            SchedulerKind::Concur(AimdParams::default()).name(),
+            "concur"
+        );
+    }
+}

@@ -1,0 +1,330 @@
+//! The CONCUR cache-aware AIMD control law (paper Eq. 1).
+//!
+//! ```text
+//! W_{t+1} = W_t + α     if U_t < U_low                      (probe)
+//!         = W_t × β     if U_t > U_high ∧ H_t < H_thresh    (cut)
+//!         = W_t         otherwise                            (hold)
+//! ```
+//!
+//! * **Linear exploration (α)** probes the unknown effective capacity
+//!   without the overshoot risk of exponential growth.
+//! * **Multiplicative cut (β)** exits the quadratic-penalty regime (O(L²)
+//!   recompute) exponentially fast.
+//! * The `[U_low, U_high]` gap is an allocation buffer absorbing the
+//!   discrete memory spikes of admitting long-context agents, and the
+//!   `H_t < H_thresh` conjunct lets the system *sustain* saturation while
+//!   the cache is still effective (throughput over preemptive throttling).
+
+use crate::config::AimdParams;
+
+use super::{ControlInputs, Controller};
+
+/// CONCUR's adaptive admission controller.
+#[derive(Debug, Clone)]
+pub struct AimdController {
+    p: AimdParams,
+    w: f64,
+    steps_seen: u64,
+    /// Control intervals remaining before another cut is allowed.
+    cut_timer: u32,
+    /// Control intervals seen since the last cut (gates band probing).
+    since_cut: u64,
+    /// Control intervals seen (for the band-probe cadence).
+    intervals: u64,
+    history: Vec<(u64, f64)>,
+    /// Counters for tests / reports.
+    pub increases: u64,
+    pub cuts: u64,
+    pub holds: u64,
+}
+
+impl AimdController {
+    pub fn new(p: AimdParams) -> AimdController {
+        p.validate().expect("invalid AIMD parameters");
+        AimdController {
+            w: p.w_init,
+            p,
+            steps_seen: 0,
+            cut_timer: 0,
+            since_cut: u64::MAX / 2,
+            intervals: 0,
+            history: Vec::new(),
+            increases: 0,
+            cuts: 0,
+            holds: 0,
+        }
+    }
+
+    pub fn params(&self) -> &AimdParams {
+        &self.p
+    }
+
+    pub fn window_f(&self) -> f64 {
+        self.w
+    }
+
+    /// Apply one control decision for signals (U_t, H_t).
+    ///
+    /// The additive increase is gated on window *saturation* (active agents
+    /// actually reaching the window) — the congestion-window-validation
+    /// rule (cf. RFC 7661): an app-limited sender must not inflate its
+    /// window, or a burst of agents returning from tool calls would be
+    /// admitted against a stale, meaninglessly large W.
+    fn control(&mut self, u: f64, h: f64, active: usize) {
+        let saturated = active >= self.w.floor() as usize;
+        if self.cut_timer > 0 {
+            self.cut_timer -= 1;
+        }
+        self.intervals += 1;
+        self.since_cut = self.since_cut.saturating_add(1);
+        // Congestion avoidance inside the hold band: slow additive probe
+        // while the cache is demonstrably healthy (see AimdParams docs).
+        let band_probe = self.p.band_probe_every > 0
+            && saturated
+            && u < self.p.u_high
+            && h >= self.p.h_healthy
+            && self.since_cut > (4 * self.p.cut_cooldown) as u64
+            && self.intervals % self.p.band_probe_every as u64 == 0;
+        if (u < self.p.u_low && saturated) || band_probe {
+            self.w += self.p.alpha;
+            self.increases += 1;
+        } else if u > self.p.u_high && h < self.p.h_thresh {
+            // One cut per congestion epoch (TCP fast recovery): a second
+            // cut is only meaningful once the previous one has taken
+            // effect — the active population has drained to the window and
+            // the hit window has had time to refresh.  Cascading cuts on a
+            // stale signal would crash W and serialize the batch.
+            let previous_cut_effective = active <= self.w.floor() as usize;
+            if self.cut_timer == 0 && previous_cut_effective {
+                self.w *= self.p.beta;
+                self.cuts += 1;
+                self.cut_timer = self.p.cut_cooldown;
+                self.since_cut = 0;
+            } else {
+                self.holds += 1;
+            }
+        } else {
+            self.holds += 1;
+        }
+        self.w = self.w.clamp(self.p.w_min, self.p.w_max);
+        self.history.push((self.steps_seen, self.w));
+    }
+}
+
+impl Controller for AimdController {
+    fn name(&self) -> String {
+        "concur".into()
+    }
+
+    fn on_signals(&mut self, inputs: &ControlInputs) {
+        self.steps_seen += 1;
+        if self.steps_seen % self.p.control_interval as u64 == 0 {
+            self.control(
+                inputs.usage(),
+                inputs.engine.hit_rate,
+                inputs.active_agents,
+            );
+        }
+    }
+
+    fn window(&self) -> usize {
+        self.w.floor() as usize
+    }
+
+    fn window_history(&self) -> &[(u64, f64)] {
+        &self.history
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::engine::EngineSignals;
+
+    fn sig_active(u: f64, h: f64, active: usize) -> ControlInputs {
+        ControlInputs {
+            engine: EngineSignals {
+                kv_usage: u,
+                pool_usage: u,
+                hit_rate: h,
+                running: 0,
+                waiting: 0,
+            },
+            active_agents: active,
+            active_footprint: (u * 1_000_000.0) as u64,
+            capacity: 1_000_000,
+        }
+    }
+
+    /// Signals with the active population exactly at the window: satisfies
+    /// both the growth-saturation gate and the cut-drained gate, isolating
+    /// the control law itself.
+    fn step(c: &mut AimdController, u: f64, h: f64) {
+        let active = c.window();
+        c.on_signals(&sig_active(u, h, active));
+    }
+
+    fn ctrl() -> AimdController {
+        let p = AimdParams {
+            control_interval: 1,
+            cut_cooldown: 0,
+            band_probe_every: 0,
+            ..AimdParams::default()
+        };
+        AimdController::new(p)
+    }
+
+    #[test]
+    fn additive_increase_when_underutilized() {
+        let mut c = ctrl();
+        let w0 = c.window_f();
+        for _ in 0..5 {
+            step(&mut c, 0.1, 0.9);
+        }
+        assert_eq!(c.window_f(), w0 + 5.0 * 2.0);
+        assert_eq!(c.increases, 5);
+    }
+
+    #[test]
+    fn multiplicative_cut_on_thrash() {
+        let mut c = ctrl();
+        // Grow first.
+        for _ in 0..16 {
+            step(&mut c, 0.1, 0.9);
+        }
+        let grown = c.window_f();
+        // Saturated AND hit rate collapsed → cut by β each step.
+        step(&mut c, 0.9, 0.1);
+        assert_eq!(c.window_f(), grown * 0.5);
+        step(&mut c, 0.9, 0.1);
+        assert_eq!(c.window_f(), grown * 0.25);
+        assert_eq!(c.cuts, 2);
+    }
+
+    #[test]
+    fn holds_in_the_buffer_zone() {
+        let mut c = ctrl();
+        let w0 = c.window_f();
+        // Usage between thresholds → hold regardless of hit rate.
+        step(&mut c, 0.35, 0.05);
+        assert_eq!(c.window_f(), w0);
+        // Saturated but hit rate healthy → also hold (throughput over
+        // preemptive throttling).
+        step(&mut c, 0.95, 0.8);
+        assert_eq!(c.window_f(), w0);
+        assert_eq!(c.holds, 2);
+    }
+
+    #[test]
+    fn window_respects_floor_and_ceiling() {
+        let p = AimdParams {
+            control_interval: 1,
+            cut_cooldown: 0,
+            band_probe_every: 0,
+            w_init: 2.0,
+            w_min: 1.0,
+            w_max: 10.0,
+            ..AimdParams::default()
+        };
+        let mut c = AimdController::new(p);
+        for _ in 0..50 {
+            step(&mut c, 0.9, 0.0); // cut forever
+        }
+        assert_eq!(c.window_f(), 1.0);
+        assert!(c.window() >= 1);
+        for _ in 0..50 {
+            step(&mut c, 0.05, 1.0); // grow forever
+        }
+        assert_eq!(c.window_f(), 10.0);
+    }
+
+    #[test]
+    fn control_interval_batches_decisions() {
+        let p = AimdParams {
+            control_interval: 4,
+            cut_cooldown: 0,
+            band_probe_every: 0,
+            ..AimdParams::default()
+        };
+        let mut c = AimdController::new(p);
+        let w0 = c.window_f();
+        for _ in 0..3 {
+            step(&mut c, 0.1, 0.9);
+        }
+        assert_eq!(c.window_f(), w0); // not yet
+        step(&mut c, 0.1, 0.9);
+        assert_eq!(c.window_f(), w0 + 2.0); // fires on the 4th
+    }
+
+    #[test]
+    fn cut_cooldown_limits_to_one_cut_per_epoch() {
+        let p = AimdParams {
+            control_interval: 1,
+            cut_cooldown: 4,
+            band_probe_every: 0,
+            ..AimdParams::default()
+        };
+        let mut c = AimdController::new(p);
+        for _ in 0..16 {
+            step(&mut c, 0.1, 0.9);
+        }
+        let grown = c.window_f();
+        // Five consecutive congested intervals → exactly one cut.
+        for _ in 0..4 {
+            step(&mut c, 0.9, 0.05);
+        }
+        assert_eq!(c.cuts, 1);
+        assert_eq!(c.window_f(), grown * 0.5);
+        // After the cooldown expires, the next congested interval cuts again.
+        step(&mut c, 0.9, 0.05);
+        assert_eq!(c.cuts, 2);
+    }
+
+    #[test]
+    fn band_probe_creeps_upward_when_healthy() {
+        let p = AimdParams {
+            control_interval: 1,
+            cut_cooldown: 1,
+            band_probe_every: 2,
+            ..AimdParams::default()
+        };
+        let mut c = AimdController::new(p);
+        let w0 = c.window_f();
+        // In the hold band (u between thresholds) with a healthy cache the
+        // window creeps upward every 2nd interval.
+        for _ in 0..8 {
+            step(&mut c, 0.35, 0.95);
+        }
+        assert_eq!(c.window_f(), w0 + 4.0 * 2.0);
+        // With a mediocre hit rate it holds instead.
+        let w1 = c.window_f();
+        for _ in 0..8 {
+            step(&mut c, 0.35, 0.5);
+        }
+        assert_eq!(c.window_f(), w1);
+    }
+
+    #[test]
+    fn aimd_converges_in_sawtooth_under_oscillating_load() {
+        // Classic AIMD: alternating congestion produces a bounded sawtooth,
+        // not divergence.
+        let mut c = ctrl();
+        let mut ws = Vec::new();
+        for i in 0..200 {
+            let congested = i % 10 == 9;
+            if congested {
+                step(&mut c, 0.9, 0.05);
+            } else {
+                step(&mut c, 0.1, 0.9);
+            }
+            ws.push(c.window_f());
+        }
+        let late = &ws[100..];
+        let max = late.iter().cloned().fold(f64::MIN, f64::max);
+        let min = late.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max < 64.0, "sawtooth escaped: max={max}");
+        assert!(min >= 1.0);
+        assert!(c.window_history().len() == 200);
+    }
+}

@@ -1,0 +1,187 @@
+//! Agent-level admission control — the paper's system contribution.
+//!
+//! The coordinator sits *between* the agent execution layer and the serving
+//! engine.  It observes the engine's runtime signals (`U_t` KV usage, `H_t`
+//! windowed hit rate) after every iteration and regulates how many agents
+//! may hold an *admission slot* at once.  Slots are the paper's three
+//! primitives:
+//!
+//! * **admit**  — grant a slot; the agent's generation steps flow to the
+//!   engine without further gating (execution continuity);
+//! * **pause**  — at a step boundary (tool return), revoke the slot when
+//!   the window has shrunk below the active population;
+//! * **resume** — re-grant a slot when capacity returns, preferring
+//!   recently-paused agents (their cache is warmest).
+//!
+//! [`AimdController`] implements the paper's cache-aware control law
+//! (Eq. 1); the other [`Controller`]s are the evaluated baselines.
+
+pub mod aimd;
+pub mod slots;
+
+pub use aimd::AimdController;
+pub use slots::SlotManager;
+
+use crate::config::{AimdParams, SchedulerKind};
+use crate::engine::EngineSignals;
+
+/// Everything a controller observes per engine iteration.
+///
+/// `U_t` for CONCUR is the *agent-level* footprint: the aggregate context
+/// of agents currently holding admission slots over pool capacity (paper
+/// §4.2 — "the aggregate working set of concurrently active agents"), not
+/// the engine's transient pinned slots.  Tool-waiting agents count: their
+/// KV is exactly what admission control exists to protect.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlInputs {
+    pub engine: EngineSignals,
+    /// Agents currently holding admission slots.
+    pub active_agents: usize,
+    /// Σ context length (tokens) over slot-holding agents.
+    pub active_footprint: u64,
+    /// KV pool capacity in tokens.
+    pub capacity: u64,
+}
+
+impl ControlInputs {
+    /// The controller's congestion signal `U_t`.
+    pub fn usage(&self) -> f64 {
+        if self.capacity == 0 {
+            1.0
+        } else {
+            self.active_footprint as f64 / self.capacity as f64
+        }
+    }
+}
+
+/// An admission controller: decides the active-agent budget over time.
+pub trait Controller {
+    fn name(&self) -> String;
+
+    /// Observe the per-iteration control inputs.
+    fn on_signals(&mut self, inputs: &ControlInputs);
+
+    /// Current window: how many agents may hold admission slots.
+    /// `usize::MAX` means unbounded.
+    fn window(&self) -> usize;
+
+    /// Engine-internal running-request cap, if this scheduler regulates at
+    /// request granularity instead (the RequestCap baseline).
+    fn engine_request_cap(&self) -> Option<usize> {
+        None
+    }
+
+    /// Window trajectory for Fig. 5-style plots: (step, window).
+    fn window_history(&self) -> &[(u64, f64)] {
+        &[]
+    }
+}
+
+/// SGLang baseline: no admission control at all.
+pub struct Uncontrolled;
+
+impl Controller for Uncontrolled {
+    fn name(&self) -> String {
+        "sglang".into()
+    }
+    fn on_signals(&mut self, _inputs: &ControlInputs) {}
+    fn window(&self) -> usize {
+        usize::MAX
+    }
+}
+
+/// Fixed cap on in-flight *requests* inside the engine.  Unlike agent-level
+/// control, a paused agent's next request queues behind strangers while its
+/// cached prefix decays — the paper's explanation for why this baseline can
+/// be *worse* than no control.
+pub struct RequestCap(pub usize);
+
+impl Controller for RequestCap {
+    fn name(&self) -> String {
+        format!("request-cap({})", self.0)
+    }
+    fn on_signals(&mut self, _inputs: &ControlInputs) {}
+    fn window(&self) -> usize {
+        usize::MAX
+    }
+    fn engine_request_cap(&self) -> Option<usize> {
+        Some(self.0)
+    }
+}
+
+/// Fixed cap on concurrently active *agents* (Fig. 6 baselines).
+pub struct AgentCap(pub usize);
+
+impl Controller for AgentCap {
+    fn name(&self) -> String {
+        format!("agent-cap({})", self.0)
+    }
+    fn on_signals(&mut self, _inputs: &ControlInputs) {}
+    fn window(&self) -> usize {
+        self.0
+    }
+}
+
+/// Instantiate a controller from configuration.
+pub fn make_controller(kind: &SchedulerKind) -> Box<dyn Controller> {
+    match kind {
+        SchedulerKind::Uncontrolled => Box::new(Uncontrolled),
+        SchedulerKind::RequestCap(n) => Box::new(RequestCap(*n)),
+        SchedulerKind::AgentCap(n) => Box::new(AgentCap(*n)),
+        SchedulerKind::Concur(p) => Box::new(AimdController::new(*p)),
+    }
+}
+
+/// Convenience: CONCUR with paper defaults.
+pub fn concur_default() -> Box<dyn Controller> {
+    Box::new(AimdController::new(AimdParams::default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(u: f64, h: f64) -> ControlInputs {
+        ControlInputs {
+            engine: EngineSignals {
+                kv_usage: u,
+                pool_usage: u,
+                hit_rate: h,
+                running: 0,
+                waiting: 0,
+            },
+            active_agents: 1,
+            active_footprint: (u * 1000.0) as u64,
+            capacity: 1000,
+        }
+    }
+
+    #[test]
+    fn baselines_hold_constant_windows() {
+        let mut u = Uncontrolled;
+        let mut r = RequestCap(64);
+        let mut a = AgentCap(32);
+        for _ in 0..10 {
+            u.on_signals(&sig(0.99, 0.0));
+            r.on_signals(&sig(0.99, 0.0));
+            a.on_signals(&sig(0.99, 0.0));
+        }
+        assert_eq!(u.window(), usize::MAX);
+        assert_eq!(r.window(), usize::MAX);
+        assert_eq!(r.engine_request_cap(), Some(64));
+        assert_eq!(a.window(), 32);
+    }
+
+    #[test]
+    fn factory_dispatches() {
+        assert_eq!(make_controller(&SchedulerKind::Uncontrolled).name(), "sglang");
+        assert_eq!(
+            make_controller(&SchedulerKind::AgentCap(8)).name(),
+            "agent-cap(8)"
+        );
+        assert_eq!(
+            make_controller(&SchedulerKind::Concur(AimdParams::default())).name(),
+            "concur"
+        );
+    }
+}

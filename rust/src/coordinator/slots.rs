@@ -1,0 +1,177 @@
+//! Admission-slot bookkeeping: the admit / pause / resume primitives.
+//!
+//! A slot represents the right of one agent to issue generation steps.
+//! Agents keep their slot across tool waits (execution continuity); slots
+//! are only revoked at step boundaries when the controller's window has
+//! shrunk.  Resumption prefers the most recently paused agent — its cached
+//! prefix is the warmest — before admitting never-run agents FIFO.
+
+use std::collections::{HashSet, VecDeque};
+
+use crate::core::AgentId;
+
+/// Decision for an agent arriving at a step boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoundaryDecision {
+    /// Keep the slot; submit the next step immediately.
+    Continue,
+    /// Slot revoked; the agent waits in the paused pool.
+    Paused,
+}
+
+/// Tracks which agents hold admission slots.
+#[derive(Debug, Default)]
+pub struct SlotManager {
+    active: HashSet<AgentId>,
+    /// Recently paused agents, most recent last (LIFO resume).
+    paused: Vec<AgentId>,
+    /// Never-admitted agents, FIFO.
+    fresh: VecDeque<AgentId>,
+    pub admissions: u64,
+    pub pauses: u64,
+    pub resumes: u64,
+}
+
+impl SlotManager {
+    pub fn new() -> SlotManager {
+        SlotManager::default()
+    }
+
+    /// Register a new agent awaiting first admission.
+    pub fn register(&mut self, agent: AgentId) {
+        self.fresh.push_back(agent);
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.paused.len() + self.fresh.len()
+    }
+
+    pub fn is_active(&self, agent: AgentId) -> bool {
+        self.active.contains(&agent)
+    }
+
+    /// Iterate over slot-holding agents (order unspecified).
+    pub fn active_ids(&self) -> impl Iterator<Item = AgentId> + '_ {
+        self.active.iter().copied()
+    }
+
+    /// An active agent reached a step boundary (tool returned).  If the
+    /// window has shrunk below the active population, revoke its slot.
+    pub fn on_step_boundary(&mut self, agent: AgentId, window: usize) -> BoundaryDecision {
+        debug_assert!(self.active.contains(&agent), "agent without slot at boundary");
+        if self.active.len() > window {
+            self.active.remove(&agent);
+            self.paused.push(agent);
+            self.pauses += 1;
+            BoundaryDecision::Paused
+        } else {
+            BoundaryDecision::Continue
+        }
+    }
+
+    /// Agent finished its trajectory: release the slot.
+    pub fn release(&mut self, agent: AgentId) {
+        let had = self.active.remove(&agent);
+        debug_assert!(had, "release of agent without slot");
+    }
+
+    /// Grant slots up to `window`, returning agents to (re)start, paused
+    /// agents first (LIFO), then fresh agents (FIFO).
+    pub fn grant_up_to(&mut self, window: usize) -> Vec<AgentId> {
+        let mut granted = Vec::new();
+        while self.active.len() < window {
+            let next = if let Some(a) = self.paused.pop() {
+                self.resumes += 1;
+                Some(a)
+            } else if let Some(a) = self.fresh.pop_front() {
+                self.admissions += 1;
+                Some(a)
+            } else {
+                None
+            };
+            let Some(a) = next else { break };
+            self.active.insert(a);
+            granted.push(a);
+        }
+        granted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(v: &[u64]) -> Vec<AgentId> {
+        v.iter().map(|&i| AgentId(i)).collect()
+    }
+
+    #[test]
+    fn fresh_admission_is_fifo() {
+        let mut s = SlotManager::new();
+        for i in 0..5 {
+            s.register(AgentId(i));
+        }
+        assert_eq!(s.grant_up_to(3), ids(&[0, 1, 2]));
+        assert_eq!(s.active_count(), 3);
+        assert_eq!(s.pending_count(), 2);
+    }
+
+    #[test]
+    fn window_shrink_pauses_at_boundary() {
+        let mut s = SlotManager::new();
+        for i in 0..4 {
+            s.register(AgentId(i));
+        }
+        s.grant_up_to(4);
+        // Window shrinks to 2: the first two agents reaching a boundary
+        // get paused.
+        assert_eq!(s.on_step_boundary(AgentId(0), 2), BoundaryDecision::Paused);
+        assert_eq!(s.on_step_boundary(AgentId(1), 2), BoundaryDecision::Paused);
+        assert_eq!(s.on_step_boundary(AgentId(2), 2), BoundaryDecision::Continue);
+        assert_eq!(s.active_count(), 2);
+        assert_eq!(s.pauses, 2);
+    }
+
+    #[test]
+    fn resume_prefers_recently_paused_lifo() {
+        let mut s = SlotManager::new();
+        for i in 0..4 {
+            s.register(AgentId(i));
+        }
+        s.grant_up_to(3); // 0,1,2 active; 3 fresh
+        s.on_step_boundary(AgentId(0), 1); // paused: [0]
+        s.on_step_boundary(AgentId(1), 1); // paused: [0, 1]
+        // Window back to 3: grant 2 slots → most-recent paused (1) first,
+        // then 0; fresh 3 stays queued.
+        assert_eq!(s.grant_up_to(3), ids(&[1, 0]));
+        assert_eq!(s.resumes, 2);
+        assert_eq!(s.grant_up_to(4), ids(&[3]));
+        assert_eq!(s.admissions, 4);
+    }
+
+    #[test]
+    fn release_frees_capacity() {
+        let mut s = SlotManager::new();
+        for i in 0..3 {
+            s.register(AgentId(i));
+        }
+        s.grant_up_to(2);
+        s.release(AgentId(0));
+        assert_eq!(s.active_count(), 1);
+        assert_eq!(s.grant_up_to(2), ids(&[2]));
+    }
+
+    #[test]
+    fn unbounded_window_admits_everyone() {
+        let mut s = SlotManager::new();
+        for i in 0..100 {
+            s.register(AgentId(i));
+        }
+        assert_eq!(s.grant_up_to(usize::MAX).len(), 100);
+        assert_eq!(s.pending_count(), 0);
+    }
+}

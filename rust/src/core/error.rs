@@ -1,0 +1,70 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every layer of the stack.
+#[derive(Debug, Error)]
+pub enum ConcurError {
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    #[error("json parse error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    #[error("workload error: {0}")]
+    Workload(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for ConcurError {
+    fn from(e: xla::Error) -> Self {
+        ConcurError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, ConcurError>;
+
+impl ConcurError {
+    pub fn config(msg: impl Into<String>) -> Self {
+        ConcurError::Config(msg.into())
+    }
+
+    pub fn engine(msg: impl Into<String>) -> Self {
+        ConcurError::Engine(msg.into())
+    }
+
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        ConcurError::Artifact(msg.into())
+    }
+
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        ConcurError::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = ConcurError::config("bad batch");
+        assert_eq!(e.to_string(), "configuration error: bad batch");
+        let e = ConcurError::Json { offset: 12, message: "expected ','".into() };
+        assert!(e.to_string().contains("byte 12"));
+    }
+}

@@ -1,0 +1,172 @@
+//! Foundational types shared across the whole stack: identifiers, simulated
+//! time, deterministic RNG, a minimal JSON codec and the crate error type.
+
+pub mod error;
+pub mod json;
+pub mod rng;
+
+pub use error::{ConcurError, Result};
+pub use rng::Rng;
+
+/// Token identifier (byte-level vocab on the real-model path; synthetic ids
+/// on the simulator path — the radix tree only needs equality).
+pub type Token = u32;
+
+/// Monotone agent identifier, unique within one run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AgentId(pub u64);
+
+/// Monotone request identifier (one ReAct generation step of one agent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+impl std::fmt::Display for AgentId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "agent-{}", self.0)
+    }
+}
+
+impl std::fmt::Display for RequestId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "req-{}", self.0)
+    }
+}
+
+/// Simulated time in microseconds.  All DES arithmetic is integral to keep
+/// runs bit-reproducible across platforms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct Micros(pub u64);
+
+impl Micros {
+    pub const ZERO: Micros = Micros(0);
+
+    pub fn from_secs_f64(s: f64) -> Micros {
+        Micros((s * 1e6).round().max(0.0) as u64)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+
+    pub fn saturating_sub(self, rhs: Micros) -> Micros {
+        Micros(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl std::ops::Add for Micros {
+    type Output = Micros;
+    fn add(self, rhs: Micros) -> Micros {
+        Micros(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for Micros {
+    fn add_assign(&mut self, rhs: Micros) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::ops::Sub for Micros {
+    type Output = Micros;
+    fn sub(self, rhs: Micros) -> Micros {
+        Micros(self.0 - rhs.0)
+    }
+}
+
+impl std::fmt::Display for Micros {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0 >= 1_000_000 {
+            write!(f, "{:.3}s", self.as_secs_f64())
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.3}ms", self.as_millis_f64())
+        } else {
+            write!(f, "{}us", self.0)
+        }
+    }
+}
+
+/// Bytes, with human-readable display.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct Bytes(pub u64);
+
+impl Bytes {
+    pub const ZERO: Bytes = Bytes(0);
+
+    pub fn from_gb(gb: f64) -> Bytes {
+        Bytes((gb * 1e9) as u64)
+    }
+
+    pub fn as_gb(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+}
+
+impl std::ops::Add for Bytes {
+    type Output = Bytes;
+    fn add(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::Mul<u64> for Bytes {
+    type Output = Bytes;
+    fn mul(self, rhs: u64) -> Bytes {
+        Bytes(self.0 * rhs)
+    }
+}
+
+impl std::fmt::Display for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let b = self.0 as f64;
+        if b >= 1e9 {
+            write!(f, "{:.2}GB", b / 1e9)
+        } else if b >= 1e6 {
+            write!(f, "{:.2}MB", b / 1e6)
+        } else if b >= 1e3 {
+            write!(f, "{:.2}KB", b / 1e3)
+        } else {
+            write!(f, "{}B", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micros_arithmetic_and_display() {
+        let a = Micros(1_500_000);
+        let b = Micros(500_000);
+        assert_eq!(a + b, Micros(2_000_000));
+        assert_eq!(a - b, Micros(1_000_000));
+        assert_eq!(format!("{a}"), "1.500s");
+        assert_eq!(format!("{}", Micros(1500)), "1.500ms");
+        assert_eq!(format!("{}", Micros(42)), "42us");
+        assert_eq!(Micros::from_secs_f64(1.5), a);
+    }
+
+    #[test]
+    fn micros_saturating_sub() {
+        assert_eq!(Micros(5).saturating_sub(Micros(10)), Micros(0));
+        assert_eq!(Micros(10).saturating_sub(Micros(5)), Micros(5));
+    }
+
+    #[test]
+    fn bytes_conversions() {
+        let b = Bytes::from_gb(6.67);
+        assert!((b.as_gb() - 6.67).abs() < 1e-9);
+        assert_eq!(format!("{}", Bytes(2_500_000_000)), "2.50GB");
+        assert_eq!(format!("{}", Bytes(1_500)), "1.50KB");
+    }
+
+    #[test]
+    fn id_display() {
+        assert_eq!(AgentId(3).to_string(), "agent-3");
+        assert_eq!(RequestId(9).to_string(), "req-9");
+    }
+}

@@ -1,0 +1,176 @@
+//! Analytical cost model for the serving-engine substrate.
+//!
+//! The simulator implements the *real* memory-management data structures
+//! (radix tree, paged pool, LRU) — only step *time* is modeled, with a
+//! standard roofline: each engine iteration is
+//! `max(compute_time, memory_time) + fixed overhead`.
+//!
+//! * prefill tokens pay `2·N_active` dense FLOPs plus the O(L²) attention
+//!   term — this is what makes eviction-induced *recompute* ("retransmission"
+//!   in the paper's congestion-control analogy) quadratically expensive;
+//! * decode tokens are memory-bound: the weights are streamed once per
+//!   iteration and each running sequence streams its KV context;
+//! * KV offload/reload traffic goes over a contended host link (see
+//!   [`pcie`]), reproducing Fig. 1c's crossover.
+
+pub mod pcie;
+pub mod specs;
+
+pub use pcie::PcieLink;
+pub use specs::{ClusterSpec, GpuSpec, KvLayout, ModelSpec};
+
+use crate::core::Micros;
+
+/// Work submitted to one engine iteration.
+#[derive(Debug, Clone, Default)]
+pub struct StepWork {
+    /// New prompt tokens prefilled this step (cache misses only).
+    pub prefill_tokens: u64,
+    /// Σ over prefilled tokens of their context length (for the O(L²) term).
+    pub prefill_ctx_tokens: u64,
+    /// Number of sequences doing a decode step.
+    pub decode_seqs: u64,
+    /// Σ context length over decoding sequences (KV bytes streamed).
+    pub decode_ctx_tokens: u64,
+}
+
+impl StepWork {
+    pub fn is_empty(&self) -> bool {
+        self.prefill_tokens == 0 && self.decode_seqs == 0
+    }
+}
+
+/// Roofline step-time model for one TP-sharded replica.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub cluster: ClusterSpec,
+    /// Fixed per-iteration overhead (scheduler, kernel launches, TP sync).
+    pub step_overhead: Micros,
+}
+
+impl CostModel {
+    pub fn new(cluster: ClusterSpec) -> CostModel {
+        CostModel { cluster, step_overhead: Micros(2_000) }
+    }
+
+    /// Time for one engine iteration executing `work`.
+    ///
+    /// Serving engines run an iteration as *prefill chunk, then decode
+    /// batch* (SGLang's scheduler), so the two phases add rather than
+    /// overlap; the weights are streamed from HBM once per iteration
+    /// regardless of phase (for MoE models prefill touches every expert).
+    /// This additive structure is what makes eviction-induced recompute
+    /// directly inflate decode latency — the thrashing tax.
+    pub fn step_time(&self, work: &StepWork) -> Micros {
+        if work.is_empty() {
+            return Micros::ZERO;
+        }
+        let m = &self.cluster.model;
+        let tflops = self.cluster.agg_tflops() * 1e12;
+        let bw = self.cluster.agg_hbm_bw() * 1e9;
+
+        // Weights stream once per iteration.
+        let t_weights = m.weights.0 as f64 / bw;
+
+        // Prefill: dense FLOPs + quadratic attention term (compute-bound).
+        let prefill_flops = work.prefill_tokens as f64 * m.flops_per_token()
+            + work.prefill_ctx_tokens as f64 * m.attn_flops_per_ctx_token();
+        let t_prefill = prefill_flops / (tflops * m.prefill_efficiency);
+
+        // Decode: bandwidth-bound KV streaming + (small) dense FLOPs.
+        let decode_bytes =
+            work.decode_ctx_tokens as f64 * m.kv_bytes_per_token() as f64;
+        let decode_flops = work.decode_seqs as f64 * m.flops_per_token();
+        let t_decode = (decode_bytes / bw).max(decode_flops / tflops);
+
+        self.step_overhead
+            + Micros::from_secs_f64(t_weights + t_prefill + t_decode)
+    }
+
+    /// Time to prefill `tokens` of context from scratch (the recompute
+    /// penalty paid when an evicted prefix must be rebuilt): used both by
+    /// the engine accounting and the Fig. 1c harness.
+    pub fn recompute_time(&self, tokens: u64) -> Micros {
+        let work = StepWork {
+            prefill_tokens: tokens,
+            // context grows 0..tokens → sum ≈ tokens²/2
+            prefill_ctx_tokens: tokens * tokens / 2,
+            ..Default::default()
+        };
+        self.step_time(&work)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qwen3_tp8() -> CostModel {
+        CostModel::new(ClusterSpec::new(
+            GpuSpec::h100(),
+            ModelSpec::qwen3_32b(),
+            8,
+            8,
+        ))
+    }
+
+    #[test]
+    fn empty_step_is_free() {
+        assert_eq!(qwen3_tp8().step_time(&StepWork::default()), Micros::ZERO);
+    }
+
+    #[test]
+    fn decode_step_is_memory_bound() {
+        let cm = qwen3_tp8();
+        // 64 sequences decoding at 4k context: weights (65.6GB) dominate.
+        let work = StepWork {
+            decode_seqs: 64,
+            decode_ctx_tokens: 64 * 4096,
+            ..Default::default()
+        };
+        let t = cm.step_time(&work);
+        // weights / (8 * 3.35 TB/s) ≈ 2.45 ms plus KV ≈ 2.6 ms + overhead.
+        assert!(t > Micros(3_000) && t < Micros(12_000), "t={t}");
+    }
+
+    #[test]
+    fn prefill_scales_quadratically_with_context() {
+        let cm = qwen3_tp8();
+        let t1 = cm.recompute_time(2_000);
+        let t2 = cm.recompute_time(8_000);
+        // 4x tokens with an O(L²) term → much more than 4x the time once
+        // the quadratic term matters, but bounded by 16x.
+        let ratio = t2.0 as f64 / t1.0 as f64;
+        assert!(ratio > 4.0 && ratio <= 16.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn recompute_grows_with_tokens() {
+        let cm = qwen3_tp8();
+        let mut prev = Micros::ZERO;
+        for tokens in [512, 1024, 2048, 4096, 8192] {
+            let t = cm.recompute_time(tokens);
+            assert!(t > prev, "recompute must be monotone: {t} after {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn fewer_gpus_is_slower() {
+        let mk = |tp| {
+            CostModel::new(ClusterSpec::new(
+                GpuSpec::h100(),
+                ModelSpec::qwen3_32b(),
+                tp,
+                tp,
+            ))
+        };
+        let work = StepWork {
+            prefill_tokens: 4096,
+            prefill_ctx_tokens: 4096 * 2048,
+            decode_seqs: 32,
+            decode_ctx_tokens: 32 * 4096,
+        };
+        assert!(mk(2).step_time(&work) > mk(8).step_time(&work));
+    }
+}

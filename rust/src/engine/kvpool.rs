@@ -1,0 +1,131 @@
+//! Paged KV-slot accounting.
+//!
+//! The simulator tracks KV memory at token granularity (one slot = the KV
+//! bytes of one context token; pages group slots for allocator realism).
+//! Actual cache *content* identity lives in the radix tree — this type is
+//! pure capacity bookkeeping, with invariants checked on every transition.
+
+use crate::core::{ConcurError, Result};
+
+/// Token-slot pool shared by every sequence on one serving replica.
+#[derive(Debug, Clone)]
+pub struct KvPool {
+    capacity: u64,
+    used: u64,
+    page_size: u32,
+    /// Peak usage high-water mark (telemetry).
+    pub peak: u64,
+}
+
+impl KvPool {
+    pub fn new(capacity_tokens: u64, page_size: u32) -> KvPool {
+        assert!(page_size > 0, "page_size must be positive");
+        KvPool { capacity: capacity_tokens, used: 0, page_size, peak: 0 }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    /// Pool utilization in [0,1] — the controller's `U_t` signal.
+    pub fn usage(&self) -> f64 {
+        if self.capacity == 0 {
+            1.0
+        } else {
+            self.used as f64 / self.capacity as f64
+        }
+    }
+
+    /// Tokens rounded up to whole pages (allocation granularity).
+    pub fn round_to_pages(&self, tokens: u64) -> u64 {
+        let ps = self.page_size as u64;
+        tokens.div_ceil(ps) * ps
+    }
+
+    /// Whether `tokens` could be allocated right now without eviction.
+    pub fn can_alloc(&self, tokens: u64) -> bool {
+        self.used + tokens <= self.capacity
+    }
+
+    /// Allocate exactly `tokens` slots (caller rounds to pages if desired).
+    pub fn alloc(&mut self, tokens: u64) -> Result<()> {
+        if !self.can_alloc(tokens) {
+            return Err(ConcurError::engine(format!(
+                "kv pool exhausted: want {tokens}, free {}",
+                self.free()
+            )));
+        }
+        self.used += tokens;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    /// Release `tokens` slots.
+    pub fn release(&mut self, tokens: u64) {
+        assert!(
+            tokens <= self.used,
+            "kv pool underflow: release {tokens} > used {}",
+            self.used
+        );
+        self.used -= tokens;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut p = KvPool::new(1000, 16);
+        p.alloc(600).unwrap();
+        assert_eq!(p.used(), 600);
+        assert_eq!(p.free(), 400);
+        assert!((p.usage() - 0.6).abs() < 1e-12);
+        p.release(600);
+        assert_eq!(p.used(), 0);
+        assert_eq!(p.peak, 600);
+    }
+
+    #[test]
+    fn alloc_fails_beyond_capacity() {
+        let mut p = KvPool::new(100, 16);
+        p.alloc(90).unwrap();
+        assert!(p.alloc(11).is_err());
+        assert!(p.can_alloc(10));
+        p.alloc(10).unwrap();
+        assert_eq!(p.free(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn release_more_than_used_panics() {
+        let mut p = KvPool::new(100, 16);
+        p.alloc(10).unwrap();
+        p.release(11);
+    }
+
+    #[test]
+    fn page_rounding() {
+        let p = KvPool::new(1000, 16);
+        assert_eq!(p.round_to_pages(1), 16);
+        assert_eq!(p.round_to_pages(16), 16);
+        assert_eq!(p.round_to_pages(17), 32);
+        assert_eq!(p.round_to_pages(0), 0);
+    }
+
+    #[test]
+    fn empty_pool_is_saturated() {
+        let p = KvPool::new(0, 16);
+        assert_eq!(p.usage(), 1.0);
+        assert!(!p.can_alloc(1));
+    }
+}

@@ -1,0 +1,709 @@
+//! SGLang-like serving-engine substrate.
+//!
+//! Implements the mechanisms the paper's pathology lives in: a paged KV
+//! pool, a radix-tree prefix cache with LRU eviction (optionally demoting
+//! to a CPU tier — HiCache), continuous batching with chunked prefill, and
+//! vLLM-style preemption when decode cannot allocate.
+//!
+//! The engine is *iteration-driven*: [`SimEngine::step`] performs one
+//! continuous-batching iteration (admission → prefill chunks → decode one
+//! token per running sequence) and returns the simulated duration from the
+//! [`CostModel`] roofline plus what finished.  The driver owns the clock.
+
+pub mod kvpool;
+pub mod radix;
+pub mod request;
+
+pub use kvpool::KvPool;
+pub use radix::{EvictPolicy, MatchResult, RadixTree};
+pub use request::{Request, RunningSeq, SeqPhase};
+
+use std::collections::VecDeque;
+
+use crate::config::{EngineConfig, EvictionMode};
+use crate::core::{AgentId, Bytes, Micros, RequestId, Token};
+use crate::costmodel::{CostModel, PcieLink, StepWork};
+use crate::metrics::{Breakdown, LifetimeRatio, Phase, WindowedRatio};
+
+/// A request that completed this step.
+#[derive(Debug, Clone)]
+pub struct FinishedReq {
+    pub id: RequestId,
+    pub agent: AgentId,
+    pub output: Vec<Token>,
+    pub context_len: u64,
+    pub admitted_at: Micros,
+    pub submitted_at: Micros,
+}
+
+/// What one engine iteration did.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    pub duration: Micros,
+    pub finished: Vec<FinishedReq>,
+    pub work: StepWork,
+    pub admitted: usize,
+    pub preempted: usize,
+    /// Tokens prefilled this step that are recomputation of previously
+    /// computed (then evicted) context.
+    pub recompute_tokens: u64,
+    /// Host-link reload time folded into this step (HiCache).
+    pub reload_time: Micros,
+}
+
+/// Cumulative engine counters (telemetry / tables).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineCounters {
+    pub admitted: u64,
+    pub finished: u64,
+    pub preemptions: u64,
+    pub evictions: u64,
+    pub evicted_tokens: u64,
+    pub offloaded_tokens: u64,
+    pub reloaded_tokens: u64,
+    pub recompute_tokens: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub stalled_decode_steps: u64,
+}
+
+/// Signals exposed to admission controllers after every step — `U_t` and
+/// `H_t` in the paper's control law, plus queue depths.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineSignals {
+    /// Working-set usage (the controller's congestion signal).
+    pub kv_usage: f64,
+    /// Raw pool usage including reclaimable cache (telemetry series).
+    pub pool_usage: f64,
+    pub hit_rate: f64,
+    pub running: usize,
+    pub waiting: usize,
+}
+
+/// The simulated serving engine for one TP replica.
+pub struct SimEngine {
+    pub cfg: EngineConfig,
+    pub cost: CostModel,
+    pool: KvPool,
+    tree: RadixTree,
+    pcie: PcieLink,
+    cpu_tier_limit: u64,
+    running: Vec<RunningSeq>,
+    waiting: VecDeque<Request>,
+    hit_window: WindowedRatio,
+    pub lifetime_hits: LifetimeRatio,
+    pub breakdown: Breakdown,
+    pub counters: EngineCounters,
+    policy: EvictPolicy,
+    /// Set when the over-admission deadlock breaker fires; suppresses new
+    /// admissions until a sequence completes (drain-to-fit).
+    congested: bool,
+}
+
+impl SimEngine {
+    pub fn new(cfg: EngineConfig, cost: CostModel) -> SimEngine {
+        let capacity = cost.cluster.kv_pool_tokens();
+        let policy = match cfg.eviction {
+            EvictionMode::Discard => EvictPolicy::Discard,
+            EvictionMode::Offload => EvictPolicy::OffloadToCpu,
+        };
+        let pcie = PcieLink::new(cost.cluster.agg_pcie_bw());
+        SimEngine {
+            pool: KvPool::new(capacity, cfg.page_size),
+            tree: RadixTree::new(),
+            pcie,
+            // CPU tier sized by host RAM (2 TB/node).
+            cpu_tier_limit: cost.cluster.cpu_tier_tokens(),
+            running: Vec::new(),
+            waiting: VecDeque::new(),
+            hit_window: WindowedRatio::new(cfg.hit_window),
+            lifetime_hits: LifetimeRatio::default(),
+            breakdown: Breakdown::new(),
+            counters: EngineCounters::default(),
+            policy,
+            congested: false,
+            cfg,
+            cost,
+        }
+    }
+
+    // -- introspection ----------------------------------------------------
+
+    /// `U_t`: working-set KV usage.  Like SGLang's `token_usage`, evictable
+    /// cache does not count as "in use" — only slots pinned by running
+    /// requests (their matched prefixes + private allocations).  Old agents'
+    /// idle caches are reclaimable, so they are congestion *victims*, not
+    /// congestion.
+    pub fn kv_usage(&self) -> f64 {
+        if self.pool.capacity() == 0 {
+            return 1.0;
+        }
+        let evictable = self.tree.evictable_gpu_tokens();
+        let pinned = self.pool.used().saturating_sub(evictable);
+        pinned as f64 / self.pool.capacity() as f64
+    }
+
+    /// Raw pool usage (cache included) — the Fig. 3a / Fig. 5 "KV cache
+    /// usage" series, which *does* saturate during the middle phase.
+    pub fn pool_usage(&self) -> f64 {
+        self.pool.usage()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        // Optimistic default before observations: the controller should
+        // probe upward during warmup, not cut.
+        self.hit_window.ratio_or(1.0)
+    }
+
+    pub fn signals(&self) -> EngineSignals {
+        EngineSignals {
+            kv_usage: self.kv_usage(),
+            pool_usage: self.pool_usage(),
+            hit_rate: self.hit_rate(),
+            running: self.running.len(),
+            waiting: self.waiting.len(),
+        }
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.running.is_empty() || !self.waiting.is_empty()
+    }
+
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    pub fn tree(&self) -> &RadixTree {
+        &self.tree
+    }
+
+    /// Debug invariant: pool usage equals tree-resident plus per-request
+    /// private tokens.
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        self.tree.check_invariants()?;
+        let private: u64 = self.running.iter().map(|s| s.private_tokens).sum();
+        let expect = self.tree.gpu_tokens() + private;
+        if expect != self.pool.used() {
+            return Err(format!(
+                "pool used {} != tree {} + private {private}",
+                self.pool.used(),
+                self.tree.gpu_tokens()
+            ));
+        }
+        Ok(())
+    }
+
+    // -- submission ---------------------------------------------------------
+
+    /// Queue a generation request (the admission controller has already
+    /// decided this agent may proceed).
+    pub fn submit(&mut self, req: Request) {
+        self.waiting.push_back(req);
+    }
+
+    /// Override the KV pool capacity (unit studies and demos that need a
+    /// pool much smaller than any real cluster preset).  Must be called
+    /// before any work is submitted.
+    pub fn shrink_pool_for_tests(&mut self, capacity_tokens: u64) {
+        assert!(
+            self.pool.used() == 0 && self.running.is_empty(),
+            "shrink_pool_for_tests must precede submissions"
+        );
+        self.pool = KvPool::new(capacity_tokens, self.cfg.page_size);
+        self.cpu_tier_limit = capacity_tokens * 4;
+    }
+
+    // -- memory helpers ------------------------------------------------------
+
+    /// Make room for `tokens`; evicts LRU cache entries if needed.
+    /// Returns true when the allocation can now succeed.
+    fn ensure_free(&mut self, tokens: u64, now: Micros) -> bool {
+        if self.pool.can_alloc(tokens) {
+            return true;
+        }
+        let deficit = tokens - self.pool.free();
+        let ev = self.tree.evict(deficit, self.policy);
+        if ev.freed_gpu_tokens > 0 {
+            self.pool.release(ev.freed_gpu_tokens);
+            self.counters.evictions += ev.nodes as u64;
+            self.counters.evicted_tokens += ev.freed_gpu_tokens;
+            if ev.offloaded_tokens > 0 {
+                self.counters.offloaded_tokens += ev.offloaded_tokens;
+                // Write-behind offload occupies the host link, delaying
+                // future reloads (the Fig. 1c contention effect).
+                let bytes = self.kv_bytes(ev.offloaded_tokens);
+                self.pcie.transfer(now, bytes);
+                self.tree.trim_cpu(self.cpu_tier_limit);
+            }
+        }
+        self.pool.can_alloc(tokens)
+    }
+
+    fn kv_bytes(&self, tokens: u64) -> Bytes {
+        Bytes(tokens * self.cost.cluster.model.kv_bytes_per_token())
+    }
+
+    // -- the iteration ---------------------------------------------------------
+
+    /// One continuous-batching iteration at simulated time `now`.
+    pub fn step(&mut self, now: Micros) -> StepOutcome {
+        let mut out = StepOutcome::default();
+
+        out.reload_time = self.admit(now, &mut out);
+        self.run_prefill(&mut out, now);
+        self.run_decode(&mut out, now);
+
+        // Deadlock breaker: concurrent prefills can collectively over-commit
+        // the pool (each admission looked safe against caches that later got
+        // locked by peers).  If nothing at all progressed, preempt youngest
+        // sequences until the oldest's remaining work fits, and suppress new
+        // admissions until something completes — guaranteed progress, paid
+        // as recompute churn exactly like real engines under over-admission.
+        if out.work.is_empty() && self.running.len() > 1 {
+            self.congested = true;
+            let oldest_need = {
+                let s0 = &self.running[0];
+                s0.prefill_remaining() + s0.req.gen.len() as u64
+            };
+            while self.running.len() > 1
+                && self.pool.free() + self.tree.evictable_gpu_tokens() < oldest_need
+            {
+                if self.preempt_youngest_prefill(0, &mut out).is_none() {
+                    break;
+                }
+            }
+        }
+
+        let finished = self.collect_finished(now);
+
+        // Roofline timing, with the prefill/decode split needed for the
+        // Fig. 3b breakdown: time each side alone, then scale both so they
+        // sum to the rooflined total (they overlap on real hardware).
+        let total = self.cost.step_time(&out.work);
+        let prefill_only = StepWork {
+            prefill_tokens: out.work.prefill_tokens,
+            prefill_ctx_tokens: out.work.prefill_ctx_tokens,
+            ..Default::default()
+        };
+        let decode_only = StepWork {
+            decode_seqs: out.work.decode_seqs,
+            decode_ctx_tokens: out.work.decode_ctx_tokens,
+            ..Default::default()
+        };
+        let tp = self.cost.step_time(&prefill_only).0 as f64;
+        let td = self.cost.step_time(&decode_only).0 as f64;
+        let scale = if tp + td > 0.0 { total.0 as f64 / (tp + td) } else { 0.0 };
+        let prefill_time = Micros((tp * scale) as u64);
+        let decode_time = Micros((td * scale) as u64);
+        if out.work.prefill_tokens > 0 {
+            let rec_frac = out.recompute_tokens as f64 / out.work.prefill_tokens as f64;
+            let rec = Micros((prefill_time.0 as f64 * rec_frac) as u64);
+            self.breakdown.add(Phase::Recompute, rec);
+            self.breakdown.add(Phase::Prefill, prefill_time.saturating_sub(rec));
+        }
+        self.breakdown.add(Phase::Decode, decode_time);
+
+        // Host-link reloads overlap compute; only the excess extends the step.
+        let mut duration = total;
+        if out.reload_time > duration {
+            self.breakdown
+                .add(Phase::Offload, out.reload_time.saturating_sub(duration));
+            duration = out.reload_time;
+        }
+        out.duration = duration;
+        out.finished = finished;
+        self.counters.recompute_tokens += out.recompute_tokens;
+        out
+    }
+
+    /// FIFO admission from the waiting queue into the running batch.
+    /// Returns accumulated host-link reload latency for this step.
+    fn admit(&mut self, now: Micros, out: &mut StepOutcome) -> Micros {
+        let mut reload_time = Micros::ZERO;
+        while self.running.len() < self.cfg.max_running && !self.congested {
+            let Some(req) = self.waiting.pop_front() else { break };
+
+            let m = self.tree.match_prefix(&req.prompt, now);
+            let prompt_len = req.prompt.len() as u64;
+            let gen_len = req.gen.len() as u64;
+            let uncached = prompt_len - m.total();
+            // Admission needs room for the uncached prompt, the upcoming
+            // generation, any CPU-tier reload, and the configured headroom.
+            let headroom =
+                (self.pool.capacity() as f64 * self.cfg.decode_headroom) as u64;
+            let needed = uncached + gen_len + m.cpu_tokens + headroom;
+            let evictable = self.tree.evictable_gpu_tokens();
+            if self.pool.free() + evictable < needed {
+                // FIFO head-of-line: wait for memory.
+                self.waiting.push_front(req);
+                break;
+            }
+
+            // Reload the CPU-tier prefix over the contended host link.
+            let mut cached = m.gpu_tokens;
+            let mut reloaded = 0u64;
+            if m.cpu_tokens > 0 && self.ensure_free(m.cpu_tokens, now) {
+                self.pool
+                    .alloc(m.cpu_tokens)
+                    .expect("ensure_free guaranteed space");
+                let promoted = self.tree.reload_path(&m.path, now);
+                debug_assert_eq!(promoted, m.cpu_tokens);
+                reloaded = promoted;
+                cached += promoted;
+                self.counters.reloaded_tokens += promoted;
+                let done = self.pcie.transfer(now, self.kv_bytes(promoted));
+                let lat = done.saturating_sub(now);
+                if lat > reload_time {
+                    reload_time = lat;
+                }
+            }
+
+            // Hit accounting: GPU hits always count; CPU-tier hits count as
+            // hits only under HiCache (the data *is* retained, it just has
+            // to cross PCIe — exactly the paper's Table 2 vs Table 1 split).
+            let hits = match self.policy {
+                EvictPolicy::Discard => m.gpu_tokens,
+                EvictPolicy::OffloadToCpu => m.gpu_tokens + reloaded,
+            };
+            self.hit_window.record(hits, prompt_len.max(1));
+            self.lifetime_hits.record(hits, prompt_len.max(1));
+
+            let _ = gen_len;
+            self.tree.lock_path(&m.path);
+            self.running.push(RunningSeq::new(req, cached, m.path, now));
+            self.counters.admitted += 1;
+            out.admitted += 1;
+        }
+        reload_time
+    }
+
+    /// Chunked prefill under a global per-step token budget, FIFO order.
+    fn run_prefill(&mut self, out: &mut StepOutcome, now: Micros) {
+        let mut budget = self.cfg.prefill_chunk as u64;
+        for i in 0..self.running.len() {
+            if budget == 0 {
+                break;
+            }
+            if self.running[i].phase != SeqPhase::Prefill {
+                continue;
+            }
+            let remaining = self.running[i].prefill_remaining();
+            let mut chunk = remaining.min(budget);
+            if !self.ensure_free(chunk, now) {
+                // Partial chunk with whatever fits.
+                chunk = chunk.min(self.pool.free());
+                if chunk == 0 {
+                    continue;
+                }
+            }
+            self.pool.alloc(chunk).expect("checked");
+            let seq = &mut self.running[i];
+            seq.private_tokens += chunk;
+            let start = seq.context_len();
+            out.recompute_tokens += seq.recompute_in_next(chunk);
+            out.work.prefill_tokens += chunk;
+            // Σ context over the chunk ≈ mean(start, start+chunk) * chunk.
+            out.work.prefill_ctx_tokens += (start + start + chunk) * chunk / 2;
+            seq.prefilled += chunk;
+            budget -= chunk;
+            self.counters.prefill_tokens += chunk;
+            if seq.prefill_remaining() == 0 {
+                seq.phase = SeqPhase::Decode;
+            }
+        }
+    }
+
+    /// One decode token per running sequence; preempts the youngest
+    /// prefilling sequence if decode cannot allocate (vLLM-style).
+    fn run_decode(&mut self, out: &mut StepOutcome, now: Micros) {
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].phase != SeqPhase::Decode {
+                i += 1;
+                continue;
+            }
+            let mut ok = self.ensure_free(1, now);
+            while !ok {
+                match self.preempt_youngest_prefill(i, out) {
+                    Some(j) => {
+                        if j < i {
+                            i -= 1; // current sequence shifted left
+                        }
+                        ok = self.ensure_free(1, now);
+                    }
+                    None => break,
+                }
+            }
+            if !ok {
+                self.counters.stalled_decode_steps += 1;
+                i += 1;
+                continue; // sequence stalls this iteration
+            }
+            self.pool.alloc(1).expect("checked");
+            let seq = &mut self.running[i];
+            seq.private_tokens += 1;
+            let tok = seq.next_gen_token();
+            seq.output.push(tok);
+            seq.generated += 1;
+            out.work.decode_seqs += 1;
+            out.work.decode_ctx_tokens += seq.context_len();
+            self.counters.decode_tokens += 1;
+            if seq.decode_done() {
+                seq.phase = SeqPhase::Finished;
+            }
+            i += 1;
+        }
+    }
+
+    /// Preempt the most recently admitted sequence other than `keep`,
+    /// preferring prefilling victims (cheapest to redo), else the youngest
+    /// decoding sequence (vLLM recompute-preemption).  The victim's request
+    /// returns to the waiting queue; its private slots are freed and that
+    /// work will be redone — this is precisely the eviction/recompute churn
+    /// the paper's controller exists to avoid.
+    /// Returns the removed index so callers can fix up loop cursors.
+    fn preempt_youngest_prefill(&mut self, keep: usize, out: &mut StepOutcome) -> Option<usize> {
+        let find = |phase: SeqPhase| {
+            self.running
+                .iter()
+                .enumerate()
+                .rev()
+                .find(|(j, s)| *j != keep && s.phase == phase)
+                .map(|(j, _)| j)
+        };
+        let victim = find(SeqPhase::Prefill).or_else(|| find(SeqPhase::Decode))?;
+        let j = victim;
+        let seq = self.running.remove(j);
+        self.tree.unlock_path(&seq.locked_path);
+        self.pool.release(seq.private_tokens);
+        self.waiting.push_front(seq.req);
+        self.counters.preemptions += 1;
+        out.preempted += 1;
+        Some(j)
+    }
+
+    /// Extract finished sequences, folding their KV into the radix cache.
+    fn collect_finished(&mut self, now: Micros) -> Vec<FinishedReq> {
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].phase != SeqPhase::Finished {
+                i += 1;
+                continue;
+            }
+            let seq = self.running.remove(i);
+            self.congested = false; // capacity released: admissions may resume
+            self.tree.unlock_path(&seq.locked_path);
+            // Full sequence (prompt + output) becomes reusable prefix state.
+            let mut full = seq.req.prompt.clone();
+            full.extend_from_slice(&seq.output);
+            let ins = self.tree.insert(&full, now);
+            // The tree took ownership of `new_gpu_tokens` of this request's
+            // private slots; anything beyond that duplicates existing cache
+            // (another agent inserted the same prefix meanwhile) — free it.
+            debug_assert!(ins.new_gpu_tokens <= seq.private_tokens);
+            self.pool
+                .release(seq.private_tokens - ins.new_gpu_tokens.min(seq.private_tokens));
+            self.counters.finished += 1;
+            finished.push(FinishedReq {
+                id: seq.req.id,
+                agent: seq.req.agent,
+                context_len: seq.context_len(),
+                output: seq.output,
+                admitted_at: seq.admitted_at,
+                submitted_at: seq.req.submitted_at,
+            });
+        }
+        finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{ClusterSpec, GpuSpec, ModelSpec};
+
+    fn tiny_engine(capacity_tokens: u64) -> SimEngine {
+        // Use the qwen3 cost model but shrink the pool via a fake cluster:
+        // easiest is to construct and then overwrite the pool.
+        let cost = CostModel::new(ClusterSpec::new(
+            GpuSpec::h100(),
+            ModelSpec::qwen3_32b(),
+            8,
+            8,
+        ));
+        let cfg = EngineConfig { prefill_chunk: 8192, ..EngineConfig::default() };
+        let mut e = SimEngine::new(cfg, cost);
+        e.shrink_pool_for_tests(capacity_tokens);
+        e
+    }
+
+    fn mk_req(id: u64, agent: u64, prompt: Vec<Token>, gen: usize, prev_ctx: u64) -> Request {
+        Request {
+            id: RequestId(id),
+            agent: AgentId(agent),
+            prompt,
+            gen: (0..gen as u32).map(|k| 500_000 + id as u32 * 1000 + k).collect(),
+            prev_ctx,
+            submitted_at: Micros::ZERO,
+        }
+    }
+
+    fn drive(e: &mut SimEngine, max_steps: usize) -> Vec<FinishedReq> {
+        let mut now = Micros::ZERO;
+        let mut done = Vec::new();
+        for _ in 0..max_steps {
+            if !e.has_work() {
+                break;
+            }
+            let out = e.step(now);
+            now += out.duration + Micros(1);
+            done.extend(out.finished);
+            e.check_invariants().unwrap();
+        }
+        done
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut e = tiny_engine(100_000);
+        e.submit(mk_req(1, 1, (0..1000).collect(), 50, 0));
+        let done = drive(&mut e, 100);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].output.len(), 50);
+        assert_eq!(done[0].context_len, 1050);
+        // Its KV is now cached.
+        assert_eq!(e.tree().gpu_tokens(), 1050);
+    }
+
+    #[test]
+    fn agent_resubmission_hits_cache() {
+        let mut e = tiny_engine(100_000);
+        let prompt: Vec<Token> = (0..1000).collect();
+        e.submit(mk_req(1, 1, prompt.clone(), 50, 0));
+        let done = drive(&mut e, 100);
+        // Next step: history + tool tokens.
+        let mut next = prompt;
+        next.extend(done[0].output.iter());
+        let prev_ctx = next.len() as u64;
+        next.extend(2_000_000..2_000_200u32);
+        e.submit(mk_req(2, 1, next, 50, prev_ctx));
+        drive(&mut e, 100);
+        // 1050 of 1250 prompt tokens were cached.
+        let hr = e.lifetime_hits;
+        assert_eq!(hr.num, 1050);
+        assert_eq!(hr.den, 1000 + 1250);
+        assert_eq!(e.counters.recompute_tokens, 0);
+    }
+
+    #[test]
+    fn eviction_causes_recompute_on_resume() {
+        // Pool fits ~one agent; a second agent's activity evicts the
+        // first's cache, so its resumption recomputes.
+        let mut e = tiny_engine(3_000);
+        e.submit(mk_req(1, 1, (0..1000).collect(), 20, 0));
+        let d1 = drive(&mut e, 200);
+        assert_eq!(d1.len(), 1);
+        // Agent 2 floods the pool.
+        e.submit(mk_req(2, 2, (100_000..102_500).collect(), 20, 0));
+        drive(&mut e, 200);
+        // Agent 1 resumes; its prefix was evicted.
+        let mut next: Vec<Token> = (0..1000).collect();
+        next.extend(d1[0].output.iter());
+        let prev = next.len() as u64;
+        next.extend(3_000_000..3_000_100u32);
+        e.submit(mk_req(3, 1, next, 20, prev));
+        drive(&mut e, 200);
+        assert!(
+            e.counters.recompute_tokens > 500,
+            "expected heavy recompute, got {}",
+            e.counters.recompute_tokens
+        );
+        assert!(e.counters.evicted_tokens > 0);
+    }
+
+    #[test]
+    fn offload_mode_retains_hits_but_pays_reload() {
+        let mut e = tiny_engine(3_000);
+        e.cfg.eviction = EvictionMode::Offload;
+        e.policy = EvictPolicy::OffloadToCpu;
+        e.submit(mk_req(1, 1, (0..1000).collect(), 20, 0));
+        let d1 = drive(&mut e, 200);
+        e.submit(mk_req(2, 2, (100_000..102_500).collect(), 20, 0));
+        drive(&mut e, 200);
+        let mut next: Vec<Token> = (0..1000).collect();
+        next.extend(d1[0].output.iter());
+        let prev = next.len() as u64;
+        next.extend(3_000_000..3_000_100u32);
+        e.submit(mk_req(3, 1, next, 20, prev));
+        drive(&mut e, 300);
+        // HiCache: the prefix survived in the CPU tier → counted as hits,
+        // recompute stays near zero, but reload traffic happened.
+        assert_eq!(e.counters.recompute_tokens, 0);
+        assert!(e.counters.reloaded_tokens >= 1000);
+        assert!(e.counters.offloaded_tokens >= 1000);
+    }
+
+    #[test]
+    fn concurrent_shared_prefix_is_counted_once() {
+        let mut e = tiny_engine(100_000);
+        let sys: Vec<Token> = (0..512).collect();
+        for a in 0..4u64 {
+            let mut p = sys.clone();
+            p.extend(10_000 * (a as u32 + 1)..10_000 * (a as u32 + 1) + 500);
+            e.submit(mk_req(a + 1, a + 1, p, 30, 0));
+        }
+        drive(&mut e, 300);
+        // Tree stores the shared 512-token system prompt once.
+        assert_eq!(
+            e.tree().gpu_tokens(),
+            512 + 4 * (500 + 30),
+        );
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn request_cap_via_max_running() {
+        let mut e = tiny_engine(100_000);
+        e.cfg.max_running = 2;
+        for a in 0..6u64 {
+            e.submit(mk_req(a + 1, a + 1, ((a as u32) * 50_000..(a as u32) * 50_000 + 800).collect(), 20, 0));
+        }
+        let out = e.step(Micros::ZERO);
+        assert_eq!(out.admitted, 2);
+        assert_eq!(e.running_len(), 2);
+        assert_eq!(e.waiting_len(), 4);
+    }
+
+    #[test]
+    fn usage_signal_tracks_pool() {
+        let mut e = tiny_engine(10_000);
+        assert_eq!(e.kv_usage(), 0.0);
+        e.submit(mk_req(1, 1, (0..5000).collect(), 10, 0));
+        drive(&mut e, 100);
+        // All requests done: the cache is reclaimable, so the working-set
+        // signal returns to ~0 while raw pool usage stays high.
+        assert!(e.pool_usage() > 0.45, "pool={}", e.pool_usage());
+        assert!(e.kv_usage() < 0.05, "working={}", e.kv_usage());
+    }
+
+    #[test]
+    fn breakdown_accumulates_all_time() {
+        let mut e = tiny_engine(50_000);
+        for a in 0..3u64 {
+            e.submit(mk_req(a + 1, a + 1, ((a as u32) * 50_000..(a as u32) * 50_000 + 1500).collect(), 25, 0));
+        }
+        drive(&mut e, 300);
+        assert!(e.breakdown.total().0 > 0);
+        assert!(e.breakdown.fraction(Phase::Decode) > 0.0);
+        assert!(e.breakdown.fraction(Phase::Prefill) > 0.0);
+    }
+}

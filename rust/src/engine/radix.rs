@@ -1,0 +1,735 @@
+//! Radix-tree prefix cache with LRU eviction (SGLang-style).
+//!
+//! Cached token sequences are stored in a compressed trie: each node holds a
+//! token-run edge label and the KV slots for those tokens.  A new request
+//! matches its prompt from the root; matched prefixes reuse cached KV and
+//! only the divergent suffix is prefetched.  Under memory pressure, LRU
+//! *leaves* with no active references are evicted — either discarded
+//! (vanilla) or demoted to a CPU tier (HiCache) that can be matched but must
+//! be reloaded over the host link before use.
+//!
+//! This is exactly the structure whose recency-based eviction produces
+//! middle-phase thrashing (paper §3): a paused agent's path loses recency
+//! while it waits on a tool, gets evicted, and must be recomputed on resume.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::core::{Micros, Token};
+
+pub type NodeId = usize;
+
+const ROOT: NodeId = 0;
+
+/// Where a node's KV currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    Gpu,
+    Cpu,
+}
+
+#[derive(Debug)]
+struct Node {
+    key: Vec<Token>,
+    children: HashMap<Token, NodeId>,
+    parent: NodeId,
+    ref_count: u32,
+    /// Number of locked nodes in this node's subtree (including itself).
+    /// A node with `pin_count > 0` lies on a root→locked path and cannot
+    /// be reclaimed; maintained incrementally by lock/unlock walks.
+    pin_count: u32,
+    last_access: Micros,
+    residency: Residency,
+    alive: bool,
+    /// Bumped on every access; stale LRU heap entries are skipped.
+    version: u64,
+}
+
+impl Node {
+    fn tokens(&self) -> u64 {
+        self.key.len() as u64
+    }
+}
+
+/// Result of matching a prompt against the tree.
+#[derive(Debug, Clone, Default)]
+pub struct MatchResult {
+    /// Node path (root excluded) covering the matched prefix, in order.
+    pub path: Vec<NodeId>,
+    /// Matched tokens resident on GPU.
+    pub gpu_tokens: u64,
+    /// Matched tokens resident in the CPU tier (must be reloaded).
+    pub cpu_tokens: u64,
+}
+
+impl MatchResult {
+    pub fn total(&self) -> u64 {
+        self.gpu_tokens + self.cpu_tokens
+    }
+}
+
+/// Result of inserting a sequence.
+#[derive(Debug, Clone, Default)]
+pub struct InsertResult {
+    /// Full node path (root excluded) covering the sequence.
+    pub path: Vec<NodeId>,
+    /// Tokens newly added to the GPU tier by this insert.
+    pub new_gpu_tokens: u64,
+    /// Matched CPU-tier tokens along the path (caller decides reload).
+    pub cpu_tokens: u64,
+}
+
+/// Outcome of an eviction request.
+#[derive(Debug, Clone, Default)]
+pub struct EvictResult {
+    /// GPU token slots freed.
+    pub freed_gpu_tokens: u64,
+    /// Tokens demoted to the CPU tier (Offload mode only).
+    pub offloaded_tokens: u64,
+    /// Tokens dropped entirely.
+    pub discarded_tokens: u64,
+    /// Number of nodes touched.
+    pub nodes: usize,
+}
+
+/// Eviction behaviour (mirrors `config::EvictionMode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictPolicy {
+    Discard,
+    OffloadToCpu,
+}
+
+/// The prefix cache.
+pub struct RadixTree {
+    nodes: Vec<Node>,
+    free_slots: Vec<NodeId>,
+    gpu_tokens: u64,
+    cpu_tokens: u64,
+    /// GPU tokens pinned by locked paths (incremental; see `pin_count`).
+    pinned_gpu_tokens: u64,
+    /// Lazy min-heap of eviction candidates: (last_access, version, id).
+    lru: BinaryHeap<Reverse<(Micros, u64, NodeId)>>,
+}
+
+impl RadixTree {
+    pub fn new() -> RadixTree {
+        let root = Node {
+            key: Vec::new(),
+            children: HashMap::new(),
+            parent: ROOT,
+            ref_count: 1, // the root is never evictable
+            pin_count: 0,
+            last_access: Micros::ZERO,
+            residency: Residency::Gpu,
+            alive: true,
+            version: 0,
+        };
+        RadixTree {
+            nodes: vec![root],
+            free_slots: Vec::new(),
+            gpu_tokens: 0,
+            cpu_tokens: 0,
+            pinned_gpu_tokens: 0,
+            lru: BinaryHeap::new(),
+        }
+    }
+
+    /// Tokens currently resident on GPU (must equal the pool's `used` minus
+    /// per-request transient allocations).
+    pub fn gpu_tokens(&self) -> u64 {
+        self.gpu_tokens
+    }
+
+    /// Tokens parked in the CPU tier.
+    pub fn cpu_tokens(&self) -> u64 {
+        self.cpu_tokens
+    }
+
+    /// Number of live nodes (excluding the root).
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.alive).count() - 1
+    }
+
+    // -- allocation ---------------------------------------------------------
+
+    fn alloc_node(&mut self, node: Node) -> NodeId {
+        if let Some(id) = self.free_slots.pop() {
+            self.nodes[id] = node;
+            id
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    fn touch(&mut self, id: NodeId, now: Micros) {
+        let node = &mut self.nodes[id];
+        node.last_access = now;
+        node.version += 1;
+    }
+
+    /// True when `id` has no GPU-resident children.  In Offload mode a
+    /// node's children may be demoted to the CPU tier without being
+    /// removed; the node is then a *GPU leaf* and must stay evictable or
+    /// GPU inner nodes leak unreclaimably.
+    fn is_gpu_leaf(&self, id: NodeId) -> bool {
+        self.nodes[id]
+            .children
+            .values()
+            .all(|&c| self.nodes[c].residency == Residency::Cpu)
+    }
+
+    /// Register `id` as a potential LRU candidate with its current stamp.
+    fn push_candidate(&mut self, id: NodeId) {
+        if id == ROOT {
+            return;
+        }
+        let n = &self.nodes[id];
+        if n.alive
+            && n.ref_count == 0
+            && n.residency == Residency::Gpu
+            && self.is_gpu_leaf(id)
+        {
+            self.lru.push(Reverse((n.last_access, n.version, id)));
+        }
+    }
+
+    /// Split `id`'s edge so its first `at` tokens become a new parent node.
+    /// Returns the new parent's id.
+    fn split(&mut self, id: NodeId, at: usize) -> NodeId {
+        debug_assert!(at > 0 && at < self.nodes[id].key.len());
+        let (upper_key, parent, last_access, residency) = {
+            let n = &mut self.nodes[id];
+            let upper_key: Vec<Token> = n.key[..at].to_vec();
+            let rest: Vec<Token> = n.key[at..].to_vec();
+            n.key = rest;
+            (upper_key, n.parent, n.last_access, n.residency)
+        };
+        let first_upper = upper_key[0];
+        // Locks live on the *deepest* node of a request's path only (see
+        // `lock_path`), so the new upper node starts unreferenced: the
+        // still-locked lower half protects it transitively via the child
+        // link.  Copying the ref here would leak it when the locker later
+        // unlocks the lower node.
+        let lower_pins = self.nodes[id].pin_count;
+        let upper = self.alloc_node(Node {
+            key: upper_key,
+            children: HashMap::new(),
+            parent,
+            ref_count: 0,
+            // The upper half sits on every root→locked path the lower half
+            // is on; pinned-token totals are unchanged by the split.
+            pin_count: lower_pins,
+            last_access,
+            residency,
+            alive: true,
+            version: 0,
+        });
+        let first_lower = self.nodes[id].key[0];
+        self.nodes[upper].children.insert(first_lower, id);
+        self.nodes[id].parent = upper;
+        self.nodes[parent].children.insert(first_upper, upper);
+        upper
+    }
+
+    // -- match / insert -------------------------------------------------------
+
+    /// Match `tokens` against the tree, splitting edges so the matched
+    /// prefix is covered by whole nodes.  Updates recency on the path.
+    pub fn match_prefix(&mut self, tokens: &[Token], now: Micros) -> MatchResult {
+        let mut result = MatchResult::default();
+        let mut cur = ROOT;
+        let mut pos = 0usize;
+        while pos < tokens.len() {
+            let Some(&child) = self.nodes[cur].children.get(&tokens[pos]) else {
+                break;
+            };
+            let klen = self.nodes[child].key.len();
+            let maxcmp = klen.min(tokens.len() - pos);
+            let same = {
+                let key = &self.nodes[child].key;
+                // Fast path: whole-window slice equality compiles to memcmp
+                // (full-edge matches dominate agent-history reuse).
+                if key[..maxcmp] == tokens[pos..pos + maxcmp] {
+                    maxcmp
+                } else {
+                    key[..maxcmp]
+                        .iter()
+                        .zip(&tokens[pos..pos + maxcmp])
+                        .take_while(|(a, b)| a == b)
+                        .count()
+                }
+            };
+            if same == 0 {
+                break;
+            }
+            let matched_node = if same < klen {
+                // Partial edge: split so the matched half is its own node.
+                self.split(child, same)
+            } else {
+                child
+            };
+            self.touch(matched_node, now);
+            match self.nodes[matched_node].residency {
+                Residency::Gpu => result.gpu_tokens += same as u64,
+                Residency::Cpu => result.cpu_tokens += same as u64,
+            }
+            result.path.push(matched_node);
+            pos += same;
+            cur = matched_node;
+            if same < klen {
+                break; // diverged inside the edge
+            }
+        }
+        result
+    }
+
+    /// Insert `tokens`, reusing any matched prefix.  New tokens land on GPU.
+    pub fn insert(&mut self, tokens: &[Token], now: Micros) -> InsertResult {
+        let m = self.match_prefix(tokens, now);
+        let matched = m.total() as usize;
+        let mut path = m.path;
+        let cur = path.last().copied().unwrap_or(ROOT);
+        let mut new_gpu = 0u64;
+        if matched < tokens.len() {
+            let rest: Vec<Token> = tokens[matched..].to_vec();
+            new_gpu = rest.len() as u64;
+            let first = rest[0];
+            let leaf = self.alloc_node(Node {
+                key: rest,
+                children: HashMap::new(),
+                parent: cur,
+                ref_count: 0,
+                pin_count: 0,
+                last_access: now,
+                residency: Residency::Gpu,
+                alive: true,
+                version: 0,
+            });
+            self.nodes[cur].children.insert(first, leaf);
+            self.gpu_tokens += new_gpu;
+            path.push(leaf);
+            self.push_candidate(leaf);
+        }
+        InsertResult { path, new_gpu_tokens: new_gpu, cpu_tokens: m.cpu_tokens }
+    }
+
+    // -- locking ---------------------------------------------------------------
+
+    /// Prevent every node on `path` from being evicted.
+    ///
+    /// Only the deepest node carries the reference: ancestors are protected
+    /// transitively because eviction only ever removes childless nodes.
+    /// This keeps locks stable across later edge splits.
+    pub fn lock_path(&mut self, path: &[NodeId]) {
+        if let Some(&last) = path.last() {
+            debug_assert!(self.nodes[last].alive);
+            self.nodes[last].ref_count += 1;
+            // Pin the root→last chain (O(depth), keeps the evictable
+            // counter O(1) to read — the controller samples it every step).
+            let mut id = last;
+            while id != ROOT {
+                let n = &mut self.nodes[id];
+                n.pin_count += 1;
+                if n.pin_count == 1 && n.residency == Residency::Gpu {
+                    self.pinned_gpu_tokens += n.key.len() as u64;
+                }
+                id = n.parent;
+            }
+        }
+    }
+
+    /// Release a previous `lock_path`; nodes become eviction candidates.
+    pub fn unlock_path(&mut self, path: &[NodeId]) {
+        if let Some(&last) = path.last() {
+            debug_assert!(self.nodes[last].ref_count > 0, "unlock of unlocked node");
+            self.nodes[last].ref_count -= 1;
+            let mut id = last;
+            while id != ROOT {
+                let n = &mut self.nodes[id];
+                debug_assert!(n.pin_count > 0);
+                n.pin_count -= 1;
+                if n.pin_count == 0 && n.residency == Residency::Gpu {
+                    self.pinned_gpu_tokens -= n.key.len() as u64;
+                }
+                id = n.parent;
+            }
+            self.push_candidate(last);
+        }
+    }
+
+    // -- eviction ---------------------------------------------------------------
+
+    /// GPU tokens that could be freed right now (unlocked subtrees).
+    /// O(1): `gpu_tokens - pinned_gpu_tokens`, maintained incrementally.
+    pub fn evictable_gpu_tokens(&self) -> u64 {
+        self.gpu_tokens - self.pinned_gpu_tokens
+    }
+
+    /// Reference implementation of [`evictable_gpu_tokens`] — O(n) subtree
+    /// walk, used by `check_invariants` and tests.
+    pub fn evictable_gpu_tokens_slow(&self) -> u64 {
+        // A node is evictable iff it and all its descendants are unlocked.
+        // Compute by propagating "subtree locked" from leaves up; simpler:
+        // sum over nodes that are unlocked and whose entire subtree is
+        // unlocked.  We do a post-order accumulation.
+        let mut locked_subtree = vec![false; self.nodes.len()];
+        // Iterative post-order: process children before parents using a
+        // stack of (node, visited) pairs.
+        let mut stack = vec![(ROOT, false)];
+        let mut total = 0u64;
+        while let Some((id, visited)) = stack.pop() {
+            if visited {
+                let n = &self.nodes[id];
+                let mut locked = n.ref_count > 0 && id != ROOT || id == ROOT;
+                for (&_, &c) in &n.children {
+                    locked |= locked_subtree[c];
+                }
+                locked_subtree[id] = locked;
+                if id != ROOT && !locked && n.residency == Residency::Gpu {
+                    total += n.tokens();
+                }
+            } else {
+                stack.push((id, true));
+                for (&_, &c) in &self.nodes[id].children {
+                    if self.nodes[c].alive {
+                        stack.push((c, false));
+                    }
+                }
+            }
+        }
+        total
+    }
+
+    /// Evict LRU leaves until `want` GPU tokens are freed or nothing is
+    /// evictable.  In `OffloadToCpu` mode evicted nodes stay matchable in
+    /// the CPU tier.
+    pub fn evict(&mut self, want: u64, policy: EvictPolicy) -> EvictResult {
+        let mut out = EvictResult::default();
+        while out.freed_gpu_tokens < want {
+            let Some(Reverse((stamp, version, id))) = self.lru.pop() else {
+                break;
+            };
+            // Lazy validation: skip stale heap entries.
+            let valid = {
+                let n = &self.nodes[id];
+                n.alive
+                    && n.ref_count == 0
+                    && n.residency == Residency::Gpu
+                    && n.version == version
+                    && n.last_access == stamp
+            } && self.is_gpu_leaf(id);
+            if !valid {
+                continue;
+            }
+            // Discard may only remove fully childless nodes; a GPU node
+            // whose children live in the CPU tier (possible when policies
+            // are mixed across calls) must stay to anchor them.
+            if policy == EvictPolicy::Discard && !self.nodes[id].children.is_empty() {
+                continue;
+            }
+            let tokens = self.nodes[id].tokens();
+            out.freed_gpu_tokens += tokens;
+            out.nodes += 1;
+            self.gpu_tokens -= tokens;
+            match policy {
+                EvictPolicy::Discard => {
+                    out.discarded_tokens += tokens;
+                    self.remove_leaf(id);
+                }
+                EvictPolicy::OffloadToCpu => {
+                    out.offloaded_tokens += tokens;
+                    self.cpu_tokens += tokens;
+                    let n = &mut self.nodes[id];
+                    if n.pin_count > 0 {
+                        // Pinned via a locked CPU descendant: it leaves the
+                        // GPU tier, so it leaves the pinned-GPU total too.
+                        self.pinned_gpu_tokens -= tokens;
+                    }
+                    let n = &mut self.nodes[id];
+                    n.residency = Residency::Cpu;
+                    n.version += 1;
+                    // A CPU parent whose children are gone stays in the
+                    // tree; GPU ancestors may now be leaves.
+                    let parent = self.nodes[id].parent;
+                    self.push_candidate(parent);
+                }
+            }
+        }
+        out
+    }
+
+    fn remove_leaf(&mut self, id: NodeId) {
+        debug_assert!(self.nodes[id].children.is_empty());
+        let parent = self.nodes[id].parent;
+        let first = self.nodes[id].key[0];
+        self.nodes[parent].children.remove(&first);
+        self.nodes[id].alive = false;
+        self.nodes[id].key = Vec::new();
+        self.free_slots.push(id);
+        // The parent may have become an eviction candidate.
+        self.push_candidate(parent);
+    }
+
+    /// Drop LRU CPU-tier nodes until at most `limit` CPU tokens remain.
+    /// Only childless CPU nodes can be dropped (structure preserved).
+    pub fn trim_cpu(&mut self, limit: u64) -> u64 {
+        if self.cpu_tokens <= limit {
+            return 0;
+        }
+        let mut dropped = 0u64;
+        // CPU nodes are not in the GPU LRU heap; scan (rare path).
+        let mut cpu_leaves: Vec<(Micros, NodeId)> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(id, n)| {
+                *id != ROOT
+                    && n.alive
+                    && n.residency == Residency::Cpu
+                    && n.children.is_empty()
+                    && n.ref_count == 0
+            })
+            .map(|(id, n)| (n.last_access, id))
+            .collect();
+        cpu_leaves.sort_unstable();
+        for (_, id) in cpu_leaves {
+            if self.cpu_tokens <= limit {
+                break;
+            }
+            let tokens = self.nodes[id].tokens();
+            self.cpu_tokens -= tokens;
+            dropped += tokens;
+            self.remove_leaf(id);
+        }
+        dropped
+    }
+
+    /// Promote every CPU-resident node on `path` back to GPU (the engine
+    /// charges the PCIe reload and pool allocation).  Returns promoted
+    /// token count.
+    pub fn reload_path(&mut self, path: &[NodeId], now: Micros) -> u64 {
+        let mut promoted = 0u64;
+        for &id in path {
+            let n = &mut self.nodes[id];
+            if n.alive && n.residency == Residency::Cpu {
+                n.residency = Residency::Gpu;
+                n.last_access = now;
+                n.version += 1;
+                promoted += n.key.len() as u64;
+                if n.pin_count > 0 {
+                    self.pinned_gpu_tokens += n.key.len() as u64;
+                }
+            }
+        }
+        self.cpu_tokens -= promoted;
+        self.gpu_tokens += promoted;
+        promoted
+    }
+
+    /// Debug invariant: recomputed token counters match node contents.
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        let mut gpu = 0u64;
+        let mut cpu = 0u64;
+        for (id, n) in self.nodes.iter().enumerate() {
+            if !n.alive || id == ROOT {
+                continue;
+            }
+            match n.residency {
+                Residency::Gpu => gpu += n.tokens(),
+                Residency::Cpu => cpu += n.tokens(),
+            }
+            if !n.alive {
+                continue;
+            }
+            let parent = &self.nodes[n.parent];
+            if !parent.alive {
+                return Err(format!("node {id} has dead parent {}", n.parent));
+            }
+            if parent.children.get(&n.key[0]) != Some(&id) {
+                return Err(format!("node {id} not linked from parent"));
+            }
+        }
+        if gpu != self.gpu_tokens {
+            return Err(format!("gpu tokens {gpu} != counter {}", self.gpu_tokens));
+        }
+        if cpu != self.cpu_tokens {
+            return Err(format!("cpu tokens {cpu} != counter {}", self.cpu_tokens));
+        }
+        let fast = self.evictable_gpu_tokens();
+        let slow = self.evictable_gpu_tokens_slow();
+        if fast != slow {
+            return Err(format!(
+                "evictable fast {fast} != slow {slow} (pinned={})",
+                self.pinned_gpu_tokens
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for RadixTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(range: std::ops::Range<u32>) -> Vec<Token> {
+        range.collect()
+    }
+
+    #[test]
+    fn insert_then_full_match() {
+        let mut t = RadixTree::new();
+        let seq = toks(0..100);
+        let ins = t.insert(&seq, Micros(1));
+        assert_eq!(ins.new_gpu_tokens, 100);
+        assert_eq!(t.gpu_tokens(), 100);
+        let m = t.match_prefix(&seq, Micros(2));
+        assert_eq!(m.gpu_tokens, 100);
+        assert_eq!(m.cpu_tokens, 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_is_deduplicated() {
+        let mut t = RadixTree::new();
+        let a: Vec<Token> = (0..50).chain(100..150).collect();
+        let b: Vec<Token> = (0..50).chain(200..250).collect();
+        assert_eq!(t.insert(&a, Micros(1)).new_gpu_tokens, 100);
+        // Second insert shares the first 50 tokens.
+        assert_eq!(t.insert(&b, Micros(2)).new_gpu_tokens, 50);
+        assert_eq!(t.gpu_tokens(), 150);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn partial_edge_match_splits() {
+        let mut t = RadixTree::new();
+        t.insert(&toks(0..100), Micros(1));
+        let m = t.match_prefix(&toks(0..30), Micros(2));
+        assert_eq!(m.gpu_tokens, 30);
+        assert_eq!(m.path.len(), 1);
+        // The 100-token edge is now split 30 + 70.
+        assert_eq!(t.node_count(), 2);
+        assert_eq!(t.gpu_tokens(), 100);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_frees_lru_first() {
+        let mut t = RadixTree::new();
+        let a = toks(0..100);
+        let b = toks(1000..1100);
+        t.insert(&a, Micros(1));
+        t.insert(&b, Micros(2));
+        // Touch `a` so `b` is LRU.
+        t.match_prefix(&a, Micros(3));
+        let ev = t.evict(50, EvictPolicy::Discard);
+        assert_eq!(ev.freed_gpu_tokens, 100); // whole-leaf granularity
+        assert_eq!(t.gpu_tokens(), 100);
+        // `a` must still fully match; `b` is gone.
+        assert_eq!(t.match_prefix(&a, Micros(4)).gpu_tokens, 100);
+        assert_eq!(t.match_prefix(&b, Micros(5)).gpu_tokens, 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn locked_paths_survive_eviction() {
+        let mut t = RadixTree::new();
+        let a = toks(0..100);
+        let b = toks(1000..1100);
+        let ins = t.insert(&a, Micros(1));
+        t.insert(&b, Micros(2));
+        t.lock_path(&ins.path);
+        let ev = t.evict(u64::MAX, EvictPolicy::Discard);
+        assert_eq!(ev.freed_gpu_tokens, 100); // only b evicted
+        assert_eq!(t.match_prefix(&a, Micros(3)).gpu_tokens, 100);
+        t.unlock_path(&ins.path);
+        let ev = t.evict(u64::MAX, EvictPolicy::Discard);
+        assert_eq!(ev.freed_gpu_tokens, 100);
+        assert_eq!(t.gpu_tokens(), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn offload_then_reload_roundtrip() {
+        let mut t = RadixTree::new();
+        let a = toks(0..100);
+        t.insert(&a, Micros(1));
+        let ev = t.evict(u64::MAX, EvictPolicy::OffloadToCpu);
+        assert_eq!(ev.offloaded_tokens, 100);
+        assert_eq!(t.gpu_tokens(), 0);
+        assert_eq!(t.cpu_tokens(), 100);
+        // Still matchable, but in the CPU tier.
+        let m = t.match_prefix(&a, Micros(2));
+        assert_eq!(m.cpu_tokens, 100);
+        assert_eq!(m.gpu_tokens, 0);
+        let reloaded = t.reload_path(&m.path, Micros(3));
+        assert_eq!(reloaded, 100);
+        assert_eq!(t.gpu_tokens(), 100);
+        assert_eq!(t.cpu_tokens(), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn inner_nodes_evicted_after_children() {
+        let mut t = RadixTree::new();
+        let a: Vec<Token> = (0..50).chain(100..150).collect();
+        let b: Vec<Token> = (0..50).chain(200..250).collect();
+        t.insert(&a, Micros(1));
+        t.insert(&b, Micros(2));
+        // Evict everything: should take both leaves AND then the shared
+        // 50-token parent.
+        let ev = t.evict(u64::MAX, EvictPolicy::Discard);
+        assert_eq!(ev.freed_gpu_tokens, 150);
+        assert_eq!(t.gpu_tokens(), 0);
+        assert_eq!(t.node_count(), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evictable_accounting() {
+        let mut t = RadixTree::new();
+        let a = toks(0..100);
+        let ins = t.insert(&a, Micros(1));
+        assert_eq!(t.evictable_gpu_tokens(), 100);
+        t.lock_path(&ins.path);
+        assert_eq!(t.evictable_gpu_tokens(), 0);
+        t.unlock_path(&ins.path);
+        assert_eq!(t.evictable_gpu_tokens(), 100);
+    }
+
+    #[test]
+    fn trim_cpu_caps_the_tier() {
+        let mut t = RadixTree::new();
+        t.insert(&toks(0..100), Micros(1));
+        t.insert(&toks(1000..1200), Micros(2));
+        t.evict(u64::MAX, EvictPolicy::OffloadToCpu);
+        assert_eq!(t.cpu_tokens(), 300);
+        let dropped = t.trim_cpu(150);
+        assert!(dropped >= 100);
+        assert!(t.cpu_tokens() <= 200);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn agentic_growth_pattern_reuses_own_history() {
+        // An agent's request k+1 extends request k's sequence: the whole
+        // previous context should hit.
+        let mut t = RadixTree::new();
+        let mut history = toks(0..500);
+        t.insert(&history, Micros(1));
+        for step in 0..5u32 {
+            history.extend((step + 1) * 10_000..(step + 1) * 10_000 + 300);
+            let m = t.match_prefix(&history, Micros(2 + step as u64));
+            assert_eq!(m.total(), history.len() as u64 - 300);
+            t.insert(&history, Micros(3 + step as u64));
+        }
+        t.check_invariants().unwrap();
+    }
+}

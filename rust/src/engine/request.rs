@@ -1,0 +1,174 @@
+//! Per-request (one ReAct generation step) state inside the engine.
+
+use crate::core::{AgentId, Micros, RequestId, Token};
+
+use super::radix::NodeId;
+
+/// Execution phase of a sequence in the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Prefilling the uncached prompt suffix; `done` tokens processed so far
+    /// (relative to the uncached part).
+    Prefill,
+    /// Generating tokens one per engine iteration.
+    Decode,
+    /// Completed (terminal).
+    Finished,
+}
+
+/// A generation request: one agent's next ReAct step.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub agent: AgentId,
+    /// Full accumulated context (system prompt + history + tool outputs).
+    pub prompt: Vec<Token>,
+    /// Predetermined tokens this step will generate (the workload fixes
+    /// trajectories up front so runs are bit-reproducible across schedulers).
+    pub gen: Vec<Token>,
+    /// The agent's context length after its *previous* step — any prefilled
+    /// position below this is recomputation of previously-computed state
+    /// (the thrashing penalty); positions at/above it are genuinely new.
+    pub prev_ctx: u64,
+    /// Submission time (for queueing-latency accounting).
+    pub submitted_at: Micros,
+}
+
+/// Engine-internal bookkeeping for a running request.
+#[derive(Debug)]
+pub struct RunningSeq {
+    pub req: Request,
+    pub phase: SeqPhase,
+    /// Prompt tokens covered by the radix cache at admission (GPU-resident
+    /// or reloaded); prefill starts after them.
+    pub cached_len: u64,
+    /// Prompt tokens prefilled so far (beyond `cached_len`).
+    pub prefilled: u64,
+    /// Tokens generated so far.
+    pub generated: u64,
+    /// Generated token values (synthetic stream, fed back into history).
+    pub output: Vec<Token>,
+    /// Radix path locked at admission (unlocked at finish/preemption).
+    pub locked_path: Vec<NodeId>,
+    /// Pool slots allocated directly to this request (uncached prompt
+    /// suffix + generated tokens); handed to the tree at finish.
+    pub private_tokens: u64,
+    /// When the request was admitted into the running batch.
+    pub admitted_at: Micros,
+}
+
+impl RunningSeq {
+    pub fn new(req: Request, cached_len: u64, locked_path: Vec<NodeId>, now: Micros) -> RunningSeq {
+        let phase = if cached_len >= req.prompt.len() as u64 {
+            SeqPhase::Decode
+        } else {
+            SeqPhase::Prefill
+        };
+        RunningSeq {
+            req,
+            phase,
+            cached_len,
+            prefilled: 0,
+            generated: 0,
+            output: Vec::new(),
+            locked_path,
+            private_tokens: 0,
+            admitted_at: now,
+        }
+    }
+
+    pub fn prompt_len(&self) -> u64 {
+        self.req.prompt.len() as u64
+    }
+
+    /// Prompt tokens still to prefill.
+    pub fn prefill_remaining(&self) -> u64 {
+        self.prompt_len() - self.cached_len - self.prefilled
+    }
+
+    /// Current total context length (cached + prefilled + generated).
+    pub fn context_len(&self) -> u64 {
+        self.cached_len + self.prefilled + self.generated
+    }
+
+    /// Of the next `chunk` prefill tokens, how many are *recompute* (were
+    /// part of the agent's context before this step but missed cache)?
+    pub fn recompute_in_next(&self, chunk: u64) -> u64 {
+        let start = self.cached_len + self.prefilled; // absolute position
+        let end = start + chunk;
+        let boundary = self.req.prev_ctx;
+        if end <= boundary {
+            chunk
+        } else if start >= boundary {
+            0
+        } else {
+            boundary - start
+        }
+    }
+
+    pub fn decode_done(&self) -> bool {
+        self.generated >= self.req.gen.len() as u64
+    }
+
+    /// The token produced by the next decode step.
+    pub fn next_gen_token(&self) -> Token {
+        self.req.gen[self.generated as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt_len: usize, prev_ctx: u64) -> Request {
+        Request {
+            id: RequestId(1),
+            agent: AgentId(1),
+            prompt: (0..prompt_len as u32).collect(),
+            gen: (90_000..90_010).collect(),
+            prev_ctx,
+            submitted_at: Micros::ZERO,
+        }
+    }
+
+    #[test]
+    fn fresh_cache_hit_goes_straight_to_decode() {
+        let r = RunningSeq::new(req(100, 0), 100, vec![], Micros::ZERO);
+        assert_eq!(r.phase, SeqPhase::Decode);
+        assert_eq!(r.prefill_remaining(), 0);
+    }
+
+    #[test]
+    fn recompute_accounting_splits_at_prev_ctx() {
+        // Prompt 1000 tokens, agent had 800 before this step, cache
+        // matched only 100 → positions 100..800 are recompute, 800..1000
+        // are new.
+        let mut r = RunningSeq::new(req(1000, 800), 100, vec![], Micros::ZERO);
+        assert_eq!(r.prefill_remaining(), 900);
+        // First chunk of 500: all below 800 → 100% recompute? positions
+        // 100..600, all < 800 → yes.
+        assert_eq!(r.recompute_in_next(500), 500);
+        r.prefilled += 500;
+        // Next chunk 400 covers 600..1000: 200 recompute + 200 new.
+        assert_eq!(r.recompute_in_next(400), 200);
+        r.prefilled += 400;
+        assert_eq!(r.prefill_remaining(), 0);
+    }
+
+    #[test]
+    fn no_recompute_when_cache_covers_history() {
+        // Cache matched the whole previous context: everything prefilled
+        // is genuinely new.
+        let r = RunningSeq::new(req(1000, 800), 800, vec![], Micros::ZERO);
+        assert_eq!(r.recompute_in_next(200), 0);
+    }
+
+    #[test]
+    fn context_len_tracks_progress() {
+        let mut r = RunningSeq::new(req(100, 0), 40, vec![], Micros::ZERO);
+        assert_eq!(r.context_len(), 40);
+        r.prefilled = 60;
+        r.generated = 5;
+        assert_eq!(r.context_len(), 105);
+    }
+}

@@ -1,0 +1,46 @@
+//! # CONCUR — congestion-based agent-level admission control
+//!
+//! Reproduction of *"CONCUR: High-Throughput Agentic Batch Inference of LLM
+//! via Congestion-Based Concurrency Control"* (CS.DC 2026).
+//!
+//! The paper's contribution is a lightweight **agent-level controller**
+//! interposed between an agent execution framework and an LLM serving
+//! engine.  It regulates how many agents may issue generation steps
+//! concurrently via an AIMD control law driven by KV-cache usage `U_t` and
+//! prefix-cache hit-rate `H_t` signals, preventing *middle-phase thrashing*.
+//!
+//! ## Crate layout (three-layer architecture, see DESIGN.md)
+//!
+//! * [`core`]        — ids, deterministic RNG, minimal JSON codec, errors.
+//! * [`config`]      — experiment/system configuration and presets.
+//! * [`costmodel`]   — H100 roofline + KV geometry + PCIe contention model.
+//! * [`sim`]         — discrete-event simulation clock and event queue.
+//! * [`metrics`]     — time series, histograms, latency breakdowns, tables.
+//! * [`engine`]      — SGLang-like serving-engine substrate: paged KV pool,
+//!                     radix-tree prefix cache with LRU eviction, HiCache
+//!                     offload tier, continuous batcher.
+//! * [`agent`]       — ReAct agent state machine + workload generator.
+//! * [`coordinator`] — the paper's system contribution: CONCUR AIMD
+//!                     admission control plus all evaluated baselines.
+//! * [`driver`]      — glue that runs a full agentic batch job end-to-end.
+//! * [`runtime`]     — PJRT bridge: loads `artifacts/*.hlo.txt` (lowered
+//!                     from the L2 JAX model + L1 Pallas kernels) and
+//!                     executes them from the request path.
+//! * [`server`]      — real-model serving path on top of [`runtime`].
+//! * [`repro`]       — one harness per paper table/figure.
+//!
+//! Python (JAX + Pallas) exists only on the compile path (`make artifacts`);
+//! the request path is pure rust.
+
+pub mod agent;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod costmodel;
+pub mod driver;
+pub mod engine;
+pub mod metrics;
+pub mod repro;
+pub mod runtime;
+pub mod server;
+pub mod sim;

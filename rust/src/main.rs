@@ -1,0 +1,218 @@
+//! `concur` — CLI for the CONCUR reproduction.
+//!
+//! ```text
+//! concur repro <exp|all> [--csv DIR]     regenerate paper tables/figures
+//! concur sim --config FILE               run a custom simulated job
+//! concur serve [--batch N] [--prompt S] [--max-new N] [--requests N]
+//!                                        serve the real tiny model (PJRT)
+//! concur trace --out FILE [--agents N] [--seed S]
+//!                                        dump a deterministic workload trace
+//! concur info                            print presets + pool arithmetic
+//! ```
+//!
+//! (The vendored crate set has no clap; this is a small hand-rolled parser.)
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use concur::agent::{trace, WorkloadGenerator};
+use concur::config::{presets, JobConfig, WorkloadConfig};
+use concur::coordinator::concur_default;
+use concur::core::Result;
+use concur::driver::run_job;
+use concur::repro;
+use concur::runtime::ModelRuntime;
+use concur::server::{RealServer, Sampling, ServeRequest};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Pull `--flag value` out of the arg list.
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("repro") => cmd_repro(&args[1..]),
+        Some("sim") => cmd_sim(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("--help" | "-h" | "help") | None => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+        Some(other) => {
+            eprint!("unknown command '{other}'\n\n{}", USAGE);
+            Err(concur::core::ConcurError::config("unknown command"))
+        }
+    }
+}
+
+const USAGE: &str = "\
+concur — congestion-based agent-level admission control (paper reproduction)
+
+USAGE:
+  concur repro <fig1|fig3|table1|table2|fig5|fig6|table3|all> [--csv DIR]
+  concur sim --config FILE
+  concur serve [--batch N] [--requests N] [--max-new N] [--prompt TEXT]
+               [--artifacts DIR] [--temperature T]
+  concur trace --out FILE [--agents N] [--seed S]
+  concur info
+";
+
+fn cmd_repro(args: &[String]) -> Result<()> {
+    let name = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let outputs = repro::run(&name)?;
+    let csv_dir = flag(args, "--csv").map(PathBuf::from);
+    for o in &outputs {
+        println!("{}", o.render());
+        if let Some(dir) = &csv_dir {
+            let p = o.write_csv(dir)?;
+            println!("(csv written to {})\n", p.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &[String]) -> Result<()> {
+    let path = flag(args, "--config").ok_or_else(|| {
+        concur::core::ConcurError::config("sim requires --config FILE")
+    })?;
+    let job = JobConfig::from_json_file(std::path::Path::new(&path))?;
+    let r = run_job(&job)?;
+    println!("{}", r.summary());
+    println!("\nbreakdown:\n{}", r.breakdown.report());
+    println!("agent latency: {}", r.agent_latency.summary());
+    println!(
+        "engine: steps={} preemptions={} evictions={} (evicted {} tokens)",
+        r.engine_steps,
+        r.counters.preemptions,
+        r.counters.evictions,
+        r.counters.evicted_tokens
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let dir = flag(args, "--artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(concur::runtime::artifacts::default_dir);
+    let batch: usize = flag(args, "--batch")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let n_requests: usize = flag(args, "--requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let max_new: usize = flag(args, "--max-new")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+    let sampling = match flag(args, "--temperature").and_then(|s| s.parse::<f64>().ok())
+    {
+        Some(t) if t > 0.0 => Sampling::Temperature(t),
+        _ => Sampling::Greedy,
+    };
+
+    eprintln!("loading artifacts from {} ...", dir.display());
+    let rt = ModelRuntime::load(&dir)?;
+    eprintln!(
+        "model: {} params, vocab {}, max_seq {}",
+        rt.geometry().n_params,
+        rt.geometry().vocab,
+        rt.geometry().max_seq
+    );
+    let mut server = RealServer::new(rt, batch, concur_default())?;
+
+    let prompts: Vec<String> = if let Some(p) = flag(args, "--prompt") {
+        vec![p]
+    } else {
+        (0..n_requests)
+            .map(|i| format!("Agent {i} reporting observations: step"))
+            .collect()
+    };
+    for (i, p) in prompts.iter().enumerate() {
+        server.submit(ServeRequest {
+            id: i as u64,
+            prompt: p.clone(),
+            max_new,
+            sampling,
+        });
+    }
+    let (results, stats) = server.run_to_completion()?;
+    for r in &results {
+        println!(
+            "[req {}] {} prompt tokens -> {} generated, ttft {:.1} ms, e2e {:.1} ms",
+            r.id,
+            r.prompt_tokens,
+            r.gen_tokens,
+            r.ttft.as_secs_f64() * 1e3,
+            r.e2e.as_secs_f64() * 1e3
+        );
+    }
+    println!(
+        "\ncompleted {} requests in {:.2}s — {:.1} tok/s, {} decode steps, {} extend calls",
+        stats.completed,
+        stats.wall.as_secs_f64(),
+        stats.tokens_per_sec,
+        stats.decode_steps,
+        stats.extend_calls
+    );
+    println!("{}", stats.ttft.summary());
+    println!("{}", stats.e2e.summary());
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let out = flag(args, "--out").ok_or_else(|| {
+        concur::core::ConcurError::config("trace requires --out FILE")
+    })?;
+    let mut wl = WorkloadConfig::default();
+    if let Some(n) = flag(args, "--agents").and_then(|s| s.parse().ok()) {
+        wl.n_agents = n;
+    }
+    if let Some(s) = flag(args, "--seed").and_then(|s| s.parse().ok()) {
+        wl.seed = s;
+    }
+    let agents = WorkloadGenerator::new(wl).generate();
+    trace::write_trace(std::path::Path::new(&out), &agents)?;
+    let summary = trace::read_trace_summary(std::path::Path::new(&out))?;
+    println!(
+        "wrote {} agents / {} steps / {} gen tokens to {out}",
+        summary.n_agents, summary.total_steps, summary.total_gen_tokens
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("cluster presets (H100-80GB, usable 90%):\n");
+    for (label, cluster) in [
+        ("Qwen3-32B TP8", presets::qwen3_cluster(8)),
+        ("Qwen3-32B TP4", presets::qwen3_cluster(4)),
+        ("Qwen3-32B TP2", presets::qwen3_cluster(2)),
+        ("DeepSeek-V3 TP16", presets::dsv3_cluster(16)),
+    ] {
+        println!(
+            "  {label:<18} kv/token={:>8}B  pool={:>8.1}GB = {:>9} token slots",
+            cluster.model.kv_bytes_per_token(),
+            cluster.kv_pool_bytes().as_gb(),
+            cluster.kv_pool_tokens()
+        );
+    }
+    println!("\nAIMD defaults (paper §5): alpha=2 beta=0.5 U=[0.2,0.5] H=0.2");
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! End-to-end latency breakdown (Fig. 3b): where did the time go?
+//!
+//! The paper's key empirical claim is that during middle-phase thrashing
+//! the *recompute* share (prefill work redone because the prefix had been
+//! evicted) reaches ~49% of end-to-end latency.  The engine tags every
+//! microsecond of simulated step time with one of these categories.
+
+use crate::core::Micros;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Prefill of genuinely new tokens (first time they are seen).
+    Prefill,
+    /// Prefill of tokens that *had* been cached and were evicted — the
+    /// thrashing penalty ("retransmission").
+    Recompute,
+    /// Decode (token generation).
+    Decode,
+    /// KV reload over the host link (HiCache tier).
+    Offload,
+    /// Engine idle while every running agent waits on tools.
+    ToolWait,
+}
+
+pub const ALL_PHASES: [Phase; 5] = [
+    Phase::Prefill,
+    Phase::Recompute,
+    Phase::Decode,
+    Phase::Offload,
+    Phase::ToolWait,
+];
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Recompute => "recompute",
+            Phase::Decode => "decode",
+            Phase::Offload => "offload",
+            Phase::ToolWait => "tool_wait",
+        }
+    }
+}
+
+/// Accumulated time per phase.
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    prefill: u64,
+    recompute: u64,
+    decode: u64,
+    offload: u64,
+    tool_wait: u64,
+}
+
+impl Breakdown {
+    pub fn new() -> Breakdown {
+        Breakdown::default()
+    }
+
+    pub fn add(&mut self, phase: Phase, t: Micros) {
+        match phase {
+            Phase::Prefill => self.prefill += t.0,
+            Phase::Recompute => self.recompute += t.0,
+            Phase::Decode => self.decode += t.0,
+            Phase::Offload => self.offload += t.0,
+            Phase::ToolWait => self.tool_wait += t.0,
+        }
+    }
+
+    pub fn get(&self, phase: Phase) -> Micros {
+        Micros(match phase {
+            Phase::Prefill => self.prefill,
+            Phase::Recompute => self.recompute,
+            Phase::Decode => self.decode,
+            Phase::Offload => self.offload,
+            Phase::ToolWait => self.tool_wait,
+        })
+    }
+
+    pub fn total(&self) -> Micros {
+        Micros(self.prefill + self.recompute + self.decode + self.offload + self.tool_wait)
+    }
+
+    /// Fraction of total time in `phase` (0 when empty).
+    pub fn fraction(&self, phase: Phase) -> f64 {
+        let total = self.total().0;
+        if total == 0 {
+            0.0
+        } else {
+            self.get(phase).0 as f64 / total as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for p in ALL_PHASES {
+            s.push_str(&format!(
+                "  {:<10} {:>12}  {:>5.1}%\n",
+                p.name(),
+                self.get(p).to_string(),
+                self.fraction(p) * 100.0
+            ));
+        }
+        s.push_str(&format!("  {:<10} {:>12}\n", "total", self.total().to_string()));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut b = Breakdown::new();
+        b.add(Phase::Prefill, Micros(100));
+        b.add(Phase::Recompute, Micros(300));
+        b.add(Phase::Decode, Micros(500));
+        b.add(Phase::ToolWait, Micros(100));
+        let sum: f64 = ALL_PHASES.iter().map(|&p| b.fraction(p)).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert_eq!(b.total(), Micros(1000));
+        assert_eq!(b.fraction(Phase::Recompute), 0.3);
+    }
+
+    #[test]
+    fn empty_breakdown() {
+        let b = Breakdown::new();
+        assert_eq!(b.total(), Micros::ZERO);
+        assert_eq!(b.fraction(Phase::Decode), 0.0);
+    }
+
+    #[test]
+    fn report_contains_all_phases() {
+        let mut b = Breakdown::new();
+        b.add(Phase::Offload, Micros(42));
+        let r = b.report();
+        for p in ALL_PHASES {
+            assert!(r.contains(p.name()), "missing {}", p.name());
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Latency histogram with percentile queries (log-bucketed, HdrHistogram
+//! style but minimal).
+
+use crate::core::Micros;
+
+/// Log-bucketed histogram over microsecond latencies, 5% bucket growth.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub name: String,
+    buckets: Vec<u64>,
+    bounds: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+    min: u64,
+}
+
+impl Histogram {
+    pub fn new(name: impl Into<String>) -> Histogram {
+        // Bounds from 1us to ~2h growing 8% per bucket (~220 buckets).
+        let mut bounds = Vec::new();
+        let mut b = 1.0f64;
+        while b < 8.0e9 {
+            bounds.push(b as u64);
+            b *= 1.08;
+        }
+        Histogram {
+            name: name.into(),
+            buckets: vec![0; bounds.len() + 1],
+            bounds,
+            count: 0,
+            sum: 0,
+            max: 0,
+            min: u64::MAX,
+        }
+    }
+
+    pub fn record(&mut self, v: Micros) {
+        let idx = self.bounds.partition_point(|&b| b <= v.0);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += v.0;
+        self.max = self.max.max(v.0);
+        self.min = self.min.min(v.0);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Micros {
+        if self.count == 0 {
+            Micros::ZERO
+        } else {
+            Micros(self.sum / self.count)
+        }
+    }
+
+    pub fn max(&self) -> Micros {
+        Micros(if self.count == 0 { 0 } else { self.max })
+    }
+
+    pub fn min(&self) -> Micros {
+        Micros(if self.count == 0 { 0 } else { self.min })
+    }
+
+    /// Approximate percentile (upper bound of the containing bucket).
+    pub fn percentile(&self, p: f64) -> Micros {
+        if self.count == 0 {
+            return Micros::ZERO;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let bound = if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max
+                };
+                return Micros(bound.min(self.max));
+            }
+        }
+        Micros(self.max)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: n={} mean={} p50={} p95={} p99={} max={}",
+            self.name,
+            self.count,
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let h = Histogram::new("x");
+        assert_eq!(h.mean(), Micros::ZERO);
+        assert_eq!(h.percentile(99.0), Micros::ZERO);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = Histogram::new("lat");
+        for i in 1..=1000u64 {
+            h.record(Micros(i * 100));
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= h.max());
+        // p50 of uniform 100..100_000 ≈ 50_000 (log buckets → ~8% error).
+        assert!((40_000..60_000).contains(&p50.0), "p50={p50}");
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new("m");
+        h.record(Micros(100));
+        h.record(Micros(300));
+        assert_eq!(h.mean(), Micros(200));
+        assert_eq!(h.min(), Micros(100));
+        assert_eq!(h.max(), Micros(300));
+    }
+
+    #[test]
+    fn huge_values_clamp_to_last_bucket() {
+        let mut h = Histogram::new("h");
+        h.record(Micros(u64::MAX / 2));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(100.0), h.max());
+    }
+}

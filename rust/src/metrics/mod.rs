@@ -1,0 +1,123 @@
+//! Metrics: time series, histograms, latency breakdowns and table output.
+//!
+//! Every repro harness reports through these types so the paper's tables
+//! and figures can be regenerated as text (`concur repro ...`) and CSV.
+
+pub mod breakdown;
+pub mod histogram;
+pub mod table;
+pub mod timeseries;
+
+pub use breakdown::{Breakdown, Phase, ALL_PHASES};
+pub use histogram::Histogram;
+pub use table::Table;
+pub use timeseries::TimeSeries;
+
+/// Windowed ratio counter (e.g. prefix-cache hit rate over the last N
+/// requests).  This is the `H_t` signal the CONCUR controller consumes.
+#[derive(Debug, Clone)]
+pub struct WindowedRatio {
+    window: usize,
+    entries: std::collections::VecDeque<(u64, u64)>, // (num, den)
+    total_num: u64,
+    total_den: u64,
+}
+
+impl WindowedRatio {
+    pub fn new(window: usize) -> WindowedRatio {
+        WindowedRatio {
+            window: window.max(1),
+            entries: std::collections::VecDeque::new(),
+            total_num: 0,
+            total_den: 0,
+        }
+    }
+
+    /// Record one observation (e.g. matched tokens / prompt tokens).
+    pub fn record(&mut self, num: u64, den: u64) {
+        self.entries.push_back((num, den));
+        self.total_num += num;
+        self.total_den += den;
+        if self.entries.len() > self.window {
+            let (n, d) = self.entries.pop_front().unwrap();
+            self.total_num -= n;
+            self.total_den -= d;
+        }
+    }
+
+    /// Current windowed ratio; `default` when no denominator yet.
+    pub fn ratio_or(&self, default: f64) -> f64 {
+        if self.total_den == 0 {
+            default
+        } else {
+            self.total_num as f64 / self.total_den as f64
+        }
+    }
+
+    pub fn observations(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// Lifetime (unwindowed) ratio, for end-of-run table cells.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LifetimeRatio {
+    pub num: u64,
+    pub den: u64,
+}
+
+impl LifetimeRatio {
+    pub fn record(&mut self, num: u64, den: u64) {
+        self.num += num;
+        self.den += den;
+    }
+
+    pub fn ratio(&self) -> f64 {
+        if self.den == 0 {
+            0.0
+        } else {
+            self.num as f64 / self.den as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windowed_ratio_evicts_old_entries() {
+        let mut w = WindowedRatio::new(2);
+        w.record(1, 1); // hit
+        w.record(1, 1); // hit
+        assert_eq!(w.ratio_or(0.0), 1.0);
+        w.record(0, 1); // miss, evicts first hit
+        assert_eq!(w.ratio_or(0.0), 0.5);
+        w.record(0, 1);
+        assert_eq!(w.ratio_or(0.0), 0.0);
+    }
+
+    #[test]
+    fn windowed_ratio_default_when_empty() {
+        let w = WindowedRatio::new(4);
+        assert_eq!(w.ratio_or(0.9), 0.9);
+    }
+
+    #[test]
+    fn windowed_ratio_token_weighted() {
+        let mut w = WindowedRatio::new(10);
+        w.record(90, 100);
+        w.record(0, 900);
+        // 90 / 1000, not mean(0.9, 0.0).
+        assert!((w.ratio_or(0.0) - 0.09).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lifetime_ratio() {
+        let mut r = LifetimeRatio::default();
+        assert_eq!(r.ratio(), 0.0);
+        r.record(3, 4);
+        r.record(1, 4);
+        assert_eq!(r.ratio(), 0.5);
+    }
+}

@@ -1,0 +1,178 @@
+//! Time-series collection for the Fig. 3 / Fig. 5 style traces.
+
+use crate::core::Micros;
+
+/// A (time, value) series with optional down-sampling into fixed buckets.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub name: String,
+    points: Vec<(Micros, f64)>,
+}
+
+impl TimeSeries {
+    pub fn new(name: impl Into<String>) -> TimeSeries {
+        TimeSeries { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn record(&mut self, at: Micros, value: f64) {
+        self.points.push((at, value));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn points(&self) -> &[(Micros, f64)] {
+        &self.points
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|p| p.1).sum::<f64>() / self.points.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.points.iter().map(|p| p.1).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Mean restricted to a time window (for phase analysis).
+    pub fn mean_in(&self, from: Micros, to: Micros) -> f64 {
+        let vals: Vec<f64> = self
+            .points
+            .iter()
+            .filter(|(t, _)| *t >= from && *t < to)
+            .map(|(_, v)| *v)
+            .collect();
+        if vals.is_empty() {
+            0.0
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    /// Downsample into `n` equal time buckets (bucket mean); used when
+    /// printing figure series at terminal width.
+    pub fn resample(&self, n: usize) -> Vec<(Micros, f64)> {
+        if self.points.is_empty() || n == 0 {
+            return Vec::new();
+        }
+        let t0 = self.points.first().unwrap().0 .0;
+        let t1 = self.points.last().unwrap().0 .0.max(t0 + 1);
+        let width = ((t1 - t0) as f64 / n as f64).max(1.0);
+        let mut sums = vec![0.0; n];
+        let mut counts = vec![0u64; n];
+        for (t, v) in &self.points {
+            let idx = (((t.0 - t0) as f64 / width) as usize).min(n - 1);
+            sums[idx] += v;
+            counts[idx] += 1;
+        }
+        (0..n)
+            .filter(|&i| counts[i] > 0)
+            .map(|i| {
+                let mid = t0 as f64 + (i as f64 + 0.5) * width;
+                (Micros(mid as u64), sums[i] / counts[i] as f64)
+            })
+            .collect()
+    }
+
+    /// Render as an ASCII sparkline-with-axis block (for figure harnesses).
+    pub fn ascii_plot(&self, width: usize, height: usize) -> String {
+        let pts = self.resample(width);
+        if pts.is_empty() {
+            return format!("{}: (no data)\n", self.name);
+        }
+        let lo = pts.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+        let hi = pts.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-12);
+        let mut grid = vec![vec![' '; width]; height];
+        for (i, (_, v)) in pts.iter().enumerate() {
+            let row = ((v - lo) / span * (height - 1) as f64).round() as usize;
+            grid[height - 1 - row][i.min(width - 1)] = '*';
+        }
+        let mut out = format!("{}  [min={lo:.3} max={hi:.3}]\n", self.name);
+        for row in grid {
+            out.push('|');
+            out.extend(row);
+            out.push('\n');
+        }
+        out.push('+');
+        out.extend(std::iter::repeat('-').take(width));
+        out.push('\n');
+        out
+    }
+
+    /// CSV dump: `time_s,value`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("time_s,value\n");
+        for (t, v) in &self.points {
+            s.push_str(&format!("{:.6},{v}\n", t.as_secs_f64()));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(vals: &[(u64, f64)]) -> TimeSeries {
+        let mut ts = TimeSeries::new("t");
+        for (t, v) in vals {
+            ts.record(Micros(*t), *v);
+        }
+        ts
+    }
+
+    #[test]
+    fn stats() {
+        let ts = series(&[(0, 1.0), (10, 3.0), (20, 5.0)]);
+        assert_eq!(ts.mean(), 3.0);
+        assert_eq!(ts.min(), 1.0);
+        assert_eq!(ts.max(), 5.0);
+        assert_eq!(ts.last(), Some(5.0));
+    }
+
+    #[test]
+    fn windowed_mean() {
+        let ts = series(&[(0, 1.0), (10, 3.0), (20, 5.0), (30, 7.0)]);
+        assert_eq!(ts.mean_in(Micros(10), Micros(30)), 4.0);
+        assert_eq!(ts.mean_in(Micros(100), Micros(200)), 0.0);
+    }
+
+    #[test]
+    fn resample_buckets() {
+        let ts = series(&[(0, 0.0), (25, 1.0), (50, 2.0), (75, 3.0), (100, 4.0)]);
+        let r = ts.resample(2);
+        assert_eq!(r.len(), 2);
+        assert!(r[0].1 < r[1].1);
+    }
+
+    #[test]
+    fn ascii_plot_has_expected_rows() {
+        let ts = series(&[(0, 0.0), (50, 1.0), (100, 0.5)]);
+        let plot = ts.ascii_plot(20, 5);
+        assert_eq!(plot.lines().count(), 7); // header + 5 rows + axis
+        assert!(plot.contains('*'));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let ts = series(&[(1_000_000, 2.5)]);
+        let csv = ts.to_csv();
+        assert!(csv.contains("1.000000,2.5"));
+    }
+}

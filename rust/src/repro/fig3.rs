@@ -1,0 +1,115 @@
+//! Figure 3: the middle-phase-thrashing trace — three-phase KV usage /
+//! hit-rate evolution (a) and the end-to-end latency breakdown (b).
+//!
+//! Reproduced on the configuration where the pathology is strongest in
+//! Table 1: DeepSeek-V3, batch 40, TP16, uncontrolled (SGLang-like).
+
+use crate::config::presets;
+use crate::config::{EvictionMode, SchedulerKind};
+use crate::core::{Micros, Result};
+use crate::metrics::{Phase, Table, ALL_PHASES};
+
+use super::{run_system, ExpOutput};
+
+pub fn run() -> Result<ExpOutput> {
+    let r = run_system(
+        presets::dsv3_cluster(16),
+        presets::dsv3_workload(40),
+        SchedulerKind::Uncontrolled,
+        EvictionMode::Discard,
+    )?;
+
+    // Phase detection on the usage trace: warmup ends when pool usage
+    // first exceeds 80%; cooldown begins when the hit rate has recovered
+    // above 60% while usage is saturated near the end of the run.
+    let total = r.total_time;
+    let warmup_end = r
+        .usage_series
+        .points()
+        .iter()
+        .find(|(_, u)| *u > 0.8)
+        .map(|(t, _)| *t)
+        .unwrap_or(total);
+    // Cooldown: last crossing from low (<0.5) to sustained-high hit rate.
+    let mut cooldown_start = total;
+    let pts = r.hit_series.points();
+    for w in pts.windows(2).rev() {
+        if w[0].1 < 0.5 && w[1].1 >= 0.5 {
+            cooldown_start = w[1].0;
+            break;
+        }
+    }
+    if cooldown_start <= warmup_end {
+        cooldown_start = total;
+    }
+    let middle = cooldown_start.saturating_sub(warmup_end);
+    let frac = |t: Micros| t.0 as f64 / total.0.max(1) as f64 * 100.0;
+
+    let mut table = Table::new("Fig 3a: three-phase execution pattern").header(&[
+        "Phase",
+        "Interval (s)",
+        "Share of run",
+        "Mean KV usage",
+        "Mean hit rate",
+    ]);
+    let phases = [
+        ("Warmup", Micros::ZERO, warmup_end),
+        ("Middle (thrashing)", warmup_end, cooldown_start),
+        ("Cooldown", cooldown_start, total),
+    ];
+    for (name, from, to) in phases {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.0} - {:.0}", from.as_secs_f64(), to.as_secs_f64()),
+            format!("{:.1}%", frac(to.saturating_sub(from))),
+            format!("{:.2}", r.usage_series.mean_in(from, to)),
+            format!("{:.2}", r.hit_series.mean_in(from, to)),
+        ]);
+    }
+
+    let mut bd = Table::new("Fig 3b: end-to-end latency breakdown").header(&[
+        "Component",
+        "Time",
+        "Share",
+    ]);
+    for p in ALL_PHASES {
+        bd.row(vec![
+            p.name().to_string(),
+            r.breakdown.get(p).to_string(),
+            format!("{:.1}%", r.breakdown.fraction(p) * 100.0),
+        ]);
+    }
+    let usage_plot = r.usage_series.ascii_plot(72, 8);
+    let hit_plot = r.hit_series.ascii_plot(72, 8);
+
+    let recompute_share = r.breakdown.fraction(Phase::Recompute) * 100.0;
+    let combined = table;
+    for row in bd.render().lines() {
+        let _ = row; // breakdown rendered via figures below
+    }
+
+    Ok(ExpOutput {
+        name: "fig3",
+        title: "Middle-phase thrashing in agentic batch inference (DSV3, batch 40)"
+            .into(),
+        table: combined,
+        figures: vec![
+            usage_plot,
+            hit_plot,
+            bd.render(),
+        ],
+        notes: vec![
+            format!(
+                "middle phase dominates the run ({:.0}% of wall time; paper: >90%)",
+                frac(middle)
+            ),
+            format!(
+                "recomputation consumes {recompute_share:.1}% of end-to-end latency \
+                 (paper: 49.1%)"
+            ),
+            "usage saturates while the hit rate collapses — memory is busy, not \
+             useful (the thrashing signature)"
+                .into(),
+        ],
+    })
+}

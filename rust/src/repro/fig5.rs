@@ -1,0 +1,92 @@
+//! Figure 5: temporal dynamics of the KV cache during large-batch offline
+//! agentic inference — hit rate (top) and usage (bottom), CONCUR vs the
+//! SGLang baseline.  Qwen3-32B, batch 256, TP2 (constrained resources).
+
+use crate::config::presets;
+use crate::config::{AimdParams, EvictionMode, SchedulerKind};
+use crate::core::Result;
+use crate::metrics::Table;
+
+use super::{run_system, ExpOutput};
+
+pub fn run() -> Result<ExpOutput> {
+    let cluster = presets::qwen3_cluster(2);
+    let workload = presets::qwen3_workload(256);
+
+    let base = run_system(
+        cluster.clone(),
+        workload.clone(),
+        SchedulerKind::Uncontrolled,
+        EvictionMode::Discard,
+    )?;
+    let conc = run_system(
+        cluster,
+        workload,
+        SchedulerKind::Concur(AimdParams::default()),
+        EvictionMode::Discard,
+    )?;
+
+    // Resampled series side by side (normalized to each run's duration).
+    let n = 24;
+    let mut table = Table::new(
+        "Fig 5: KV hit rate and usage over normalized run time (24 buckets)",
+    )
+    .header(&[
+        "Progress",
+        "SGLang hit",
+        "CONCUR hit",
+        "SGLang usage",
+        "CONCUR usage",
+        "CONCUR window",
+    ]);
+    let bh = base.hit_series.resample(n);
+    let ch = conc.hit_series.resample(n);
+    let bu = base.usage_series.resample(n);
+    let cu = conc.usage_series.resample(n);
+    let cw = conc.window_series.resample(n);
+    let rows = bh.len().min(ch.len()).min(bu.len()).min(cu.len()).min(cw.len());
+    for i in 0..rows {
+        table.row(vec![
+            format!("{:.0}%", (i as f64 + 0.5) / n as f64 * 100.0),
+            format!("{:.2}", bh[i].1),
+            format!("{:.2}", ch[i].1),
+            format!("{:.2}", bu[i].1),
+            format!("{:.2}", cu[i].1),
+            format!("{:.0}", cw[i].1),
+        ]);
+    }
+
+    // Mid-phase comparison (middle half of each run).
+    let mid = |r: &crate::driver::RunResult, s: &crate::metrics::TimeSeries| {
+        let t = r.total_time;
+        s.mean_in(crate::core::Micros(t.0 / 4), crate::core::Micros(3 * t.0 / 4))
+    };
+    let base_mid_hit = mid(&base, &base.hit_series);
+    let conc_mid_hit = mid(&conc, &conc.hit_series);
+
+    Ok(ExpOutput {
+        name: "fig5",
+        title: "Temporal KV dynamics, Qwen3-32B batch 256 TP2".into(),
+        table,
+        figures: vec![
+            base.hit_series.ascii_plot(72, 6),
+            conc.hit_series.ascii_plot(72, 6),
+        ],
+        notes: vec![
+            format!(
+                "mid-phase hit rate: SGLang {:.0}% vs CONCUR {:.0}% (paper: baseline \
+                 collapses while CONCUR stays high)",
+                base_mid_hit * 100.0,
+                conc_mid_hit * 100.0
+            ),
+            format!(
+                "end-to-end: SGLang {:.0}s vs CONCUR {:.0}s ({:.2}x)",
+                base.total_time.as_secs_f64(),
+                conc.total_time.as_secs_f64(),
+                base.total_time.as_secs_f64() / conc.total_time.as_secs_f64()
+            ),
+            "usage saturates (~80-100%) in both systems; only CONCUR keeps it useful"
+                .into(),
+        ],
+    })
+}

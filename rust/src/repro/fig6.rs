@@ -1,0 +1,94 @@
+//! Figure 6: fixed-size vs cache-aware adaptive admission control.
+//! Qwen3-32B, batch 256, TP2.
+
+use crate::config::presets;
+use crate::config::{AimdParams, EvictionMode, SchedulerKind};
+use crate::core::Result;
+use crate::metrics::Table;
+
+use super::{cell_latency, run_system, ExpOutput};
+
+pub fn run() -> Result<ExpOutput> {
+    let cluster = presets::qwen3_cluster(2);
+    let workload = presets::qwen3_workload(256);
+
+    let base = run_system(
+        cluster.clone(),
+        workload.clone(),
+        SchedulerKind::Uncontrolled,
+        EvictionMode::Discard,
+    )?;
+    let b = base.total_time.as_secs_f64();
+
+    let mut table = Table::new(
+        "Fig 6: end-to-end latency, fixed admission levels vs CONCUR",
+    )
+    .header(&["Policy", "Latency (s)", "Hit rate", "Recompute share"]);
+    table.row(vec![
+        "uncontrolled".into(),
+        cell_latency(b, b),
+        format!("{:.1}%", base.hit_rate * 100.0),
+        format!(
+            "{:.1}%",
+            base.breakdown.fraction(crate::metrics::Phase::Recompute) * 100.0
+        ),
+    ]);
+
+    let mut best_fixed = f64::INFINITY;
+    for level in presets::FIG6_FIXED_LEVELS {
+        let r = run_system(
+            cluster.clone(),
+            workload.clone(),
+            SchedulerKind::AgentCap(level),
+            EvictionMode::Discard,
+        )?;
+        let lat = r.total_time.as_secs_f64();
+        best_fixed = best_fixed.min(lat);
+        table.row(vec![
+            format!("fixed {level}"),
+            cell_latency(lat, b),
+            format!("{:.1}%", r.hit_rate * 100.0),
+            format!(
+                "{:.1}%",
+                r.breakdown.fraction(crate::metrics::Phase::Recompute) * 100.0
+            ),
+        ]);
+    }
+
+    let conc = run_system(
+        cluster,
+        workload,
+        SchedulerKind::Concur(AimdParams::default()),
+        EvictionMode::Discard,
+    )?;
+    let clat = conc.total_time.as_secs_f64();
+    table.row(vec![
+        "CONCUR (adaptive)".into(),
+        cell_latency(clat, b),
+        format!("{:.1}%", conc.hit_rate * 100.0),
+        format!(
+            "{:.1}%",
+            conc.breakdown.fraction(crate::metrics::Phase::Recompute) * 100.0
+        ),
+    ]);
+
+    Ok(ExpOutput {
+        name: "fig6",
+        title: "Static vs cache-aware admission control (Qwen3 batch 256 TP2)".into(),
+        table,
+        figures: vec![],
+        notes: vec![
+            format!(
+                "CONCUR {:.0}s vs best fixed {:.0}s ({:.2}x better; paper: 1.5-2.9x \
+                 over the best fixed level) and {:.2}x over uncontrolled (paper 2.99x)",
+                clat,
+                best_fixed,
+                best_fixed / clat,
+                b / clat
+            ),
+            "small fixed levels underutilize; large ones thrash — the fixed-cap \
+             U-shape brackets CONCUR from both sides"
+                .into(),
+        ],
+    })
+}

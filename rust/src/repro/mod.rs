@@ -1,0 +1,122 @@
+//! Paper reproduction harnesses: one module per table/figure.
+//!
+//! Each harness regenerates the corresponding artifact of the paper's
+//! evaluation — same rows/series, measured on this crate's serving-engine
+//! substrate + cost model (see DESIGN.md §2 for the substitutions and §5
+//! for the experiment index).  Absolute numbers differ from the paper's
+//! H100 testbed; the *shape* (who wins, by roughly what factor, where
+//! crossovers fall) is the reproduction target.
+//!
+//! Run via `concur repro <table1|table2|table3|fig1|fig3|fig5|fig6|all>`
+//! or `cargo bench --bench paper_tables` / `paper_figures`.
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use crate::config::{EngineConfig, EvictionMode, JobConfig, SchedulerKind, WorkloadConfig};
+use crate::core::Result;
+use crate::costmodel::ClusterSpec;
+use crate::driver::{run_job, RunResult};
+use crate::metrics::Table;
+
+/// Output of one experiment harness.
+pub struct ExpOutput {
+    pub name: &'static str,
+    pub title: String,
+    pub table: Table,
+    /// ASCII-rendered figure panels (empty for pure tables).
+    pub figures: Vec<String>,
+    /// Shape expectations vs the paper (printed as a footer).
+    pub notes: Vec<String>,
+}
+
+impl ExpOutput {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("== {} — {}\n\n", self.name, self.title));
+        for f in &self.figures {
+            s.push_str(f);
+            s.push('\n');
+        }
+        s.push_str(&self.table.render());
+        if !self.notes.is_empty() {
+            s.push_str("\nShape vs paper:\n");
+            for n in &self.notes {
+                s.push_str(&format!("  - {n}\n"));
+            }
+        }
+        s
+    }
+
+    /// Write the table as CSV under `results/`.
+    pub fn write_csv(&self, dir: &std::path::Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        std::fs::write(&path, self.table.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Run one job for a (cluster, workload, scheduler, eviction) tuple with
+/// the repro-standard engine settings.
+pub fn run_system(
+    cluster: ClusterSpec,
+    workload: WorkloadConfig,
+    scheduler: SchedulerKind,
+    eviction: EvictionMode,
+) -> Result<RunResult> {
+    let engine = EngineConfig {
+        eviction,
+        // H_t responsiveness matters for the control loop (see DESIGN.md
+        // §CONCUR-implementation-notes).
+        hit_window: 8,
+        ..EngineConfig::default()
+    };
+    let job = JobConfig { cluster, engine, workload, scheduler };
+    run_job(&job)
+}
+
+/// All known experiments in paper order.
+pub const ALL: [&str; 7] =
+    ["fig1", "fig3", "table1", "table2", "fig5", "fig6", "table3"];
+
+/// Dispatch by name ("all" runs everything).
+pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
+    let names: Vec<&str> = if name == "all" { ALL.to_vec() } else { vec![name] };
+    let mut out = Vec::new();
+    for n in names {
+        match n {
+            "fig1" => out.extend(fig1::run()?),
+            "fig3" => out.push(fig3::run()?),
+            "fig5" => out.push(fig5::run()?),
+            "fig6" => out.push(fig6::run()?),
+            "table1" => out.push(table1::run()?),
+            "table2" => out.push(table2::run()?),
+            "table3" => out.push(table3::run()?),
+            other => {
+                return Err(crate::core::ConcurError::config(format!(
+                    "unknown experiment '{other}' (known: {ALL:?} or 'all')"
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Format seconds with a speedup annotation, Table-1 style.
+pub(crate) fn cell_latency(seconds: f64, baseline: f64) -> String {
+    format!("{:.0} ({:.2}x)", seconds, baseline / seconds)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_experiment_is_an_error() {
+        assert!(super::run("fig99").is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Table 3 (Appendix A.1): sensitivity of end-to-end latency to the
+//! utilization thresholds (U_low, U_high), Qwen3-32B, TP {8,4,2}.
+
+use crate::config::presets;
+use crate::config::{AimdParams, EvictionMode, SchedulerKind};
+use crate::core::Result;
+use crate::metrics::Table;
+
+use super::{run_system, ExpOutput};
+
+/// Paper's sweep: vary U_high at U_low=0.2, then vary U_low at U_high=0.5.
+pub const U_HIGH_SWEEP: [f64; 4] = [0.4, 0.5, 0.6, 0.8];
+pub const U_LOW_SWEEP: [f64; 4] = [0.1, 0.2, 0.3, 0.5];
+pub const TPS: [u32; 3] = [8, 4, 2];
+
+fn latency(u_low: f64, u_high: f64, tp: u32) -> Result<f64> {
+    // Sensitivity of the *paper's control law* (Eq. 1): the band-probe
+    // congestion-avoidance extension is disabled here, otherwise it masks
+    // the U_low starvation the paper reports (see EXPERIMENTS.md).
+    let p = AimdParams {
+        u_low,
+        u_high,
+        band_probe_every: 0,
+        ..AimdParams::default()
+    };
+    let r = run_system(
+        presets::qwen3_cluster(tp),
+        presets::qwen3_workload(256),
+        SchedulerKind::Concur(p),
+        EvictionMode::Discard,
+    )?;
+    Ok(r.total_time.as_secs_f64())
+}
+
+pub fn run() -> Result<ExpOutput> {
+    let mut table = Table::new(
+        "Table 3: sensitivity of latency (s) to utilization thresholds, Qwen3-32B",
+    )
+    .header(&["U_low", "U_high", "TP8 (s)", "TP4 (s)", "TP2 (s)"]);
+
+    let mut rows: Vec<(f64, f64, Vec<f64>)> = Vec::new();
+    for &u_high in &U_HIGH_SWEEP {
+        let mut lats = Vec::new();
+        for &tp in &TPS {
+            lats.push(latency(0.2, u_high, tp)?);
+        }
+        rows.push((0.2, u_high, lats));
+    }
+    for &u_low in &U_LOW_SWEEP {
+        if u_low == 0.2 {
+            continue; // (0.2, 0.5) already measured above
+        }
+        // u_low = 0.5 with u_high = 0.5 is invalid (must be strictly
+        // ordered); the paper's row is u_low just below; use 0.49.
+        let ul = if u_low >= 0.5 { 0.49 } else { u_low };
+        let mut lats = Vec::new();
+        for &tp in &TPS {
+            lats.push(latency(ul, 0.5, tp)?);
+        }
+        rows.push((u_low, 0.5, lats));
+    }
+
+    // Identify the default row for the "optimal is (0.2, 0.5)" note.
+    let default_lats = rows
+        .iter()
+        .find(|(l, h, _)| *l == 0.2 && *h == 0.5)
+        .map(|(_, _, v)| v.clone())
+        .unwrap_or_default();
+    for (u_low, u_high, lats) in &rows {
+        let mark = if *u_low == 0.2 && *u_high == 0.5 { " *" } else { "" };
+        table.row(vec![
+            format!("{u_low}{mark}"),
+            format!("{u_high}"),
+            format!("{:.0}", lats[0]),
+            format!("{:.0}", lats[1]),
+            format!("{:.0}", lats[2]),
+        ]);
+    }
+
+    // Quantify the paper's two qualitative claims.
+    let u_high_spread: f64 = rows
+        .iter()
+        .filter(|(l, h, _)| *l == 0.2 && (*h == 0.5 || *h == 0.6))
+        .map(|(_, _, v)| v.iter().sum::<f64>())
+        .fold(f64::NAN, |a, b| if a.is_nan() { b } else { (a - b).abs() / a });
+    let _ = u_high_spread;
+
+    Ok(ExpOutput {
+        name: "table3",
+        title: "Sensitivity analysis of utilization thresholds (Appendix A.1)".into(),
+        table,
+        figures: vec![],
+        notes: vec![
+            format!(
+                "default (0.2, 0.5) latencies: TP8={:.0}s TP4={:.0}s TP2={:.0}s (marked *)",
+                default_lats.first().copied().unwrap_or(f64::NAN),
+                default_lats.get(1).copied().unwrap_or(f64::NAN),
+                default_lats.get(2).copied().unwrap_or(f64::NAN),
+            ),
+            "paper: U_high is robust in 0.5-0.6, degrades at 0.8 (late cuts) and 0.4 \
+             (premature throttling)".into(),
+            "paper: U_low is the sensitive knob — 0.1 starves growth, 0.3-0.5 over-admit"
+                .into(),
+        ],
+    })
+}

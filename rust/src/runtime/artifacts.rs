@@ -1,0 +1,177 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::core::json::Value;
+use crate::core::{ConcurError, Result};
+
+/// Geometry of the compiled tiny model (mirrors `model.ModelConfig`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelGeometry {
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub n_params: usize,
+}
+
+/// One compiled HLO graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub kind: ArtifactKind,
+    pub batch: usize,
+    pub chunk: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Decode,
+    Extend,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelGeometry,
+    pub params_file: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            ConcurError::artifact(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let v = Value::parse(&text)?;
+        let m = v.get("model");
+        let model = ModelGeometry {
+            vocab: m.req_u64("vocab")? as usize,
+            n_layers: m.req_u64("n_layers")? as usize,
+            d_model: m.req_u64("d_model")? as usize,
+            n_heads: m.req_u64("n_heads")? as usize,
+            head_dim: m.req_u64("head_dim")? as usize,
+            d_ff: m.req_u64("d_ff")? as usize,
+            max_seq: m.req_u64("max_seq")? as usize,
+            n_params: m.req_u64("n_params")? as usize,
+        };
+        let params_file = dir.join(v.req_str("params_file")?);
+        let mut artifacts = Vec::new();
+        for a in v
+            .get("artifacts")
+            .as_array()
+            .ok_or_else(|| ConcurError::artifact("manifest missing artifacts"))?
+        {
+            let kind = match a.req_str("kind")? {
+                "decode" => ArtifactKind::Decode,
+                "extend" => ArtifactKind::Extend,
+                other => {
+                    return Err(ConcurError::artifact(format!(
+                        "unknown artifact kind '{other}'"
+                    )))
+                }
+            };
+            artifacts.push(ArtifactEntry {
+                kind,
+                batch: a.req_u64("batch")? as usize,
+                chunk: a.req_u64("chunk")? as usize,
+                file: a.req_str("file")?.to_string(),
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(ConcurError::artifact("manifest lists no artifacts"));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), model, params_file, artifacts })
+    }
+
+    /// Load the flat f32 parameter vector.
+    pub fn load_params(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&self.params_file)?;
+        if bytes.len() != self.model.n_params * 4 {
+            return Err(ConcurError::artifact(format!(
+                "params.bin has {} bytes, expected {} ({} f32)",
+                bytes.len(),
+                self.model.n_params * 4,
+                self.model.n_params
+            )));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Available batch sizes for a graph kind, ascending.
+    pub fn batches(&self, kind: ArtifactKind) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .map(|a| a.batch)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+
+    pub fn entry(&self, kind: ArtifactKind, batch: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.batch == batch)
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+/// Default artifacts directory: `$CONCUR_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("CONCUR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = repo_artifacts();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.vocab, 256);
+        assert!(m.model.max_seq % 128 == 0);
+        assert!(!m.batches(ArtifactKind::Decode).is_empty());
+        assert!(!m.batches(ArtifactKind::Extend).is_empty());
+        for a in &m.artifacts {
+            assert!(m.hlo_path(a).exists(), "missing {}", a.file);
+        }
+        let params = m.load_params().unwrap();
+        assert_eq!(params.len(), m.model.n_params);
+        // Deterministic seed: params are not all zeros and finite.
+        assert!(params.iter().all(|x| x.is_finite()));
+        assert!(params.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let err = Manifest::load(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

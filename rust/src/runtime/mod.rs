@@ -1,0 +1,219 @@
+//! PJRT runtime bridge: loads the AOT-compiled HLO graphs (lowered once by
+//! `python/compile/aot.py` from the L2 JAX model + L1 Pallas kernels) and
+//! executes them on the request path.  Python is never involved here.
+//!
+//! HLO **text** is the interchange format — jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and aot.py).
+//!
+//! Model parameters are uploaded to the device once at load time and reused
+//! across every call; KV caches round-trip as literals per step (CPU PJRT —
+//! host copies are memcpy-cheap at tiny-model scale).
+
+pub mod artifacts;
+
+pub use artifacts::{ArtifactKind, Manifest, ModelGeometry};
+
+use std::collections::HashMap;
+
+use crate::core::{ConcurError, Result};
+
+/// KV cache state for one compiled batch variant, owned by the caller
+/// between steps.  Shapes: `[L, B, T, H, D]` f32.
+pub struct KvState {
+    pub k: xla::Literal,
+    pub v: xla::Literal,
+    pub lens: Vec<i32>,
+    pub batch: usize,
+}
+
+/// Output of one graph invocation.
+pub struct StepOutput {
+    /// `[B, vocab]` next-token logits (row-major).
+    pub logits: Vec<f32>,
+    pub vocab: usize,
+}
+
+impl StepOutput {
+    /// Greedy argmax for row `b`.
+    pub fn argmax(&self, b: usize) -> u32 {
+        let row = self.row(b);
+        let mut best = 0usize;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = i;
+            }
+        }
+        best as u32
+    }
+
+    pub fn row(&self, b: usize) -> &[f32] {
+        &self.logits[b * self.vocab..(b + 1) * self.vocab]
+    }
+}
+
+/// The loaded model: PJRT client + compiled executables + device params.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    params: xla::PjRtBuffer,
+    exes: HashMap<(ArtifactKind, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl ModelRuntime {
+    /// Load every artifact in `dir`, compile, and upload parameters.
+    pub fn load(dir: &std::path::Path) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let params_host = manifest.load_params()?;
+        let params_lit = xla::Literal::vec1(&params_host);
+        let params = client.buffer_from_host_literal(None, &params_lit)?;
+
+        let mut exes = HashMap::new();
+        for entry in manifest.artifacts.clone() {
+            let path = manifest.hlo_path(&entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            exes.insert((entry.kind, entry.batch), exe);
+        }
+        Ok(ModelRuntime { manifest, client, params, exes })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<ModelRuntime> {
+        ModelRuntime::load(&artifacts::default_dir())
+    }
+
+    pub fn geometry(&self) -> &ModelGeometry {
+        &self.manifest.model
+    }
+
+    /// Fresh zeroed KV state for a batch variant.
+    pub fn new_state(&self, batch: usize) -> Result<KvState> {
+        let g = &self.manifest.model;
+        let n = g.n_layers * batch * g.max_seq * g.n_heads * g.head_dim;
+        let dims: Vec<i64> = vec![
+            g.n_layers as i64,
+            batch as i64,
+            g.max_seq as i64,
+            g.n_heads as i64,
+            g.head_dim as i64,
+        ];
+        let zeros = vec![0f32; n];
+        let k = xla::Literal::vec1(&zeros).reshape(&dims)?;
+        let v = xla::Literal::vec1(&zeros).reshape(&dims)?;
+        Ok(KvState { k, v, lens: vec![0; batch], batch })
+    }
+
+    fn exe(&self, kind: ArtifactKind, batch: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes.get(&(kind, batch)).ok_or_else(|| {
+            ConcurError::runtime(format!(
+                "no compiled {kind:?} graph for batch {batch} \
+                 (available: {:?})",
+                self.manifest.batches(kind)
+            ))
+        })
+    }
+
+    fn run(
+        &self,
+        kind: ArtifactKind,
+        state: &mut KvState,
+        tokens: xla::Literal,
+        chunk_lens: Option<xla::Literal>,
+    ) -> Result<StepOutput> {
+        let g = &self.manifest.model;
+        let exe = self.exe(kind, state.batch)?;
+
+        // Input order (manifest): params, tokens, k, v, cache_lens[, chunk_lens].
+        // The params buffer is device-resident and reused across calls; the
+        // rest are uploaded per step (CPU PJRT: memcpy).
+        let lens_lit = xla::Literal::vec1(&state.lens);
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(5);
+        owned.push(self.client.buffer_from_host_literal(None, &tokens)?);
+        owned.push(self.client.buffer_from_host_literal(None, &state.k)?);
+        owned.push(self.client.buffer_from_host_literal(None, &state.v)?);
+        owned.push(self.client.buffer_from_host_literal(None, &lens_lit)?);
+        if let Some(cl) = &chunk_lens {
+            owned.push(self.client.buffer_from_host_literal(None, cl)?);
+        }
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(6);
+        bufs.push(&self.params);
+        bufs.extend(owned.iter());
+
+        let result = exe.execute_b(&bufs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let mut parts = tuple.to_tuple()?;
+        if parts.len() != 4 {
+            return Err(ConcurError::runtime(format!(
+                "expected 4 outputs, got {}",
+                parts.len()
+            )));
+        }
+        let lens_out = parts.pop().unwrap();
+        let v_out = parts.pop().unwrap();
+        let k_out = parts.pop().unwrap();
+        let logits = parts.pop().unwrap();
+        state.k = k_out;
+        state.v = v_out;
+        state.lens = lens_out.to_vec::<i32>()?;
+        Ok(StepOutput { logits: logits.to_vec::<f32>()?, vocab: g.vocab })
+    }
+
+    /// One decode step: `tokens[b]` is the previous token of sequence `b`.
+    pub fn decode_step(&self, state: &mut KvState, tokens: &[u32]) -> Result<StepOutput> {
+        if tokens.len() != state.batch {
+            return Err(ConcurError::runtime("tokens length != batch"));
+        }
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tok_lit = xla::Literal::vec1(&toks);
+        self.run(ArtifactKind::Decode, state, tok_lit, None)
+    }
+
+    /// One extend (chunked prefill) step.  `tokens` is `[B, C]` row-major,
+    /// right-padded; `chunk_lens[b]` is the number of valid tokens (0 for
+    /// idle batch rows — they write garbage beyond their valid length,
+    /// which attention masking keeps invisible).
+    pub fn extend_chunk(
+        &self,
+        state: &mut KvState,
+        tokens: &[u32],
+        chunk_lens: &[i32],
+    ) -> Result<StepOutput> {
+        let chunk = self.extend_chunk_size(state.batch)?;
+        if tokens.len() != state.batch * chunk {
+            return Err(ConcurError::runtime(format!(
+                "tokens must be B*C = {}, got {}",
+                state.batch * chunk,
+                tokens.len()
+            )));
+        }
+        if chunk_lens.len() != state.batch {
+            return Err(ConcurError::runtime("chunk_lens length != batch"));
+        }
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tok_lit =
+            xla::Literal::vec1(&toks).reshape(&[state.batch as i64, chunk as i64])?;
+        let chunk_lit = xla::Literal::vec1(chunk_lens);
+        self.run(ArtifactKind::Extend, state, tok_lit, Some(chunk_lit))
+    }
+
+    /// Chunk size of the extend graph for a batch.
+    pub fn extend_chunk_size(&self, batch: usize) -> Result<usize> {
+        self.manifest
+            .entry(ArtifactKind::Extend, batch)
+            .map(|e| e.chunk)
+            .ok_or_else(|| ConcurError::runtime("no extend graph for batch"))
+    }
+
+    /// Smallest compiled batch >= `n`, or the largest available.
+    pub fn pick_batch(&self, n: usize) -> usize {
+        let batches = self.manifest.batches(ArtifactKind::Decode);
+        batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| batches.last().copied().unwrap_or(1))
+    }
+}

@@ -1,0 +1,278 @@
+//! Real-model serving path: batched continuous serving of the AOT-compiled
+//! tiny transformer through PJRT, fronted by the same agent-level admission
+//! controller as the simulator.
+//!
+//! This is the end-to-end proof that all three layers compose: L1 Pallas
+//! attention kernels → L2 JAX graphs → HLO text → PJRT executables → this
+//! rust loop, with CONCUR regulating slot admission.  Prefix-cache
+//! *economics* (radix tree, eviction) are studied in the simulator — the
+//! dense `[L, B, T, H, D]` cache layout here has one KV region per batch
+//! row, so the controller's capacity signal is slot occupancy-weighted
+//! context, not a shared pool (see DESIGN.md §2).
+
+pub mod sampler;
+pub mod tokenizer;
+
+pub use sampler::{sample, Sampling};
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{ControlInputs, Controller};
+use crate::core::{ConcurError, Result, Rng, Token};
+use crate::engine::EngineSignals;
+use crate::metrics::Histogram;
+use crate::runtime::{KvState, ModelRuntime};
+
+/// One generation request against the real model.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new: usize,
+    pub sampling: Sampling,
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct ServeResult {
+    pub id: u64,
+    pub text: String,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+    /// Queue + prefill latency until the first generated token.
+    pub ttft: Duration,
+    pub e2e: Duration,
+}
+
+/// Aggregate statistics over one batch run.
+pub struct ServeStats {
+    pub wall: Duration,
+    pub completed: usize,
+    pub total_gen_tokens: usize,
+    pub decode_steps: usize,
+    pub extend_calls: usize,
+    pub tokens_per_sec: f64,
+    pub ttft: Histogram,
+    pub e2e: Histogram,
+}
+
+struct SlotRun {
+    req: ServeRequest,
+    prompt: Vec<Token>,
+    prefilled: usize,
+    produced: Vec<Token>,
+    next_token: Option<Token>,
+    submitted: Instant,
+    first_token: Option<Instant>,
+}
+
+/// Synchronous batched server over one compiled batch variant.
+pub struct RealServer {
+    rt: ModelRuntime,
+    batch: usize,
+    state: KvState,
+    slots: Vec<Option<SlotRun>>,
+    queue: VecDeque<ServeRequest>,
+    controller: Box<dyn Controller>,
+    rng: Rng,
+    steps_done: usize,
+    extends_done: usize,
+}
+
+impl RealServer {
+    pub fn new(
+        rt: ModelRuntime,
+        batch: usize,
+        controller: Box<dyn Controller>,
+    ) -> Result<RealServer> {
+        let state = rt.new_state(batch)?;
+        Ok(RealServer {
+            rt,
+            batch,
+            state,
+            slots: (0..batch).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            controller,
+            rng: Rng::new(0xC0C0),
+            steps_done: 0,
+            extends_done: 0,
+        })
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.rt
+    }
+
+    pub fn submit(&mut self, req: ServeRequest) {
+        self.queue.push_back(req);
+    }
+
+    fn busy_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Drive everything to completion; returns results in completion order.
+    pub fn run_to_completion(&mut self) -> Result<(Vec<ServeResult>, ServeStats)> {
+        let start = Instant::now();
+        let mut results = Vec::new();
+        let mut ttft_h = Histogram::new("ttft");
+        let mut e2e_h = Histogram::new("e2e");
+        let max_seq = self.rt.geometry().max_seq;
+
+        while !self.queue.is_empty() || self.busy_slots() > 0 {
+            // 1. Admission under the controller's window.
+            let window = self.controller.window().min(self.batch);
+            while self.busy_slots() < window && !self.queue.is_empty() {
+                let req = self.queue.pop_front().unwrap();
+                let prompt = tokenizer::encode(&req.prompt);
+                if prompt.is_empty() || prompt.len() + req.max_new >= max_seq {
+                    return Err(ConcurError::runtime(format!(
+                        "request {} needs {} tokens; model max_seq is {max_seq}",
+                        req.id,
+                        prompt.len() + req.max_new
+                    )));
+                }
+                let row = self.slots.iter().position(|s| s.is_none()).unwrap();
+                self.state.lens[row] = 0; // reclaim the parked row
+                self.slots[row] = Some(SlotRun {
+                    prompt,
+                    req,
+                    prefilled: 0,
+                    produced: Vec::new(),
+                    next_token: None,
+                    submitted: Instant::now(),
+                    first_token: None,
+                });
+            }
+
+            // 2. Prefill pass: one extend call covering every slot that
+            //    still has prompt left (idle rows ride along with chunk 0).
+            let chunk = self.rt.extend_chunk_size(self.batch)?;
+            let needs_prefill = self
+                .slots
+                .iter()
+                .any(|s| s.as_ref().is_some_and(|r| r.prefilled < r.prompt.len()));
+            if needs_prefill {
+                let mut toks = vec![0u32; self.batch * chunk];
+                let mut chunk_lens = vec![0i32; self.batch];
+                for (b, slot) in self.slots.iter().enumerate() {
+                    if let Some(r) = slot {
+                        let rest = &r.prompt[r.prefilled..];
+                        let n = rest.len().min(chunk);
+                        toks[b * chunk..b * chunk + n].copy_from_slice(&rest[..n]);
+                        chunk_lens[b] = n as i32;
+                    }
+                }
+                let out = self.rt.extend_chunk(&mut self.state, &toks, &chunk_lens)?;
+                self.extends_done += 1;
+                for (b, slot) in self.slots.iter_mut().enumerate() {
+                    if let Some(r) = slot {
+                        let n = chunk_lens[b] as usize;
+                        if n > 0 {
+                            r.prefilled += n;
+                            if r.prefilled == r.prompt.len() {
+                                // Prompt complete: the extend output at this
+                                // row is the first next-token distribution.
+                                let tok =
+                                    sample(out.row(b), r.req.sampling, &mut self.rng);
+                                r.next_token = Some(tok);
+                            }
+                        }
+                    }
+                }
+                self.observe();
+                continue;
+            }
+
+            // 3. Decode pass: all rows step together (idle rows are parked
+            //    on token 0 — masked garbage).
+            if self.busy_slots() > 0 {
+                let mut toks = vec![0u32; self.batch];
+                for (b, slot) in self.slots.iter().enumerate() {
+                    if let Some(r) = slot {
+                        toks[b] = r.next_token.expect("decode without pending token");
+                    }
+                }
+                let out = self.rt.decode_step(&mut self.state, &toks)?;
+                self.steps_done += 1;
+                for (b, slot) in self.slots.iter_mut().enumerate() {
+                    let Some(r) = slot else { continue };
+                    // The token we just fed is now part of the context;
+                    // record it as produced output (prompt tokens were fed
+                    // via extend, so next_token is always generated).
+                    let produced_tok = toks[b];
+                    r.produced.push(produced_tok);
+                    if r.first_token.is_none() {
+                        r.first_token = Some(Instant::now());
+                    }
+                    if r.produced.len() >= r.req.max_new {
+                        let now = Instant::now();
+                        let res = ServeResult {
+                            id: r.req.id,
+                            text: tokenizer::decode(&r.produced),
+                            prompt_tokens: r.prompt.len(),
+                            gen_tokens: r.produced.len(),
+                            ttft: r
+                                .first_token
+                                .map(|t| t - r.submitted)
+                                .unwrap_or_default(),
+                            e2e: now - r.submitted,
+                        };
+                        ttft_h.record(crate::core::Micros(
+                            res.ttft.as_micros() as u64
+                        ));
+                        e2e_h.record(crate::core::Micros(res.e2e.as_micros() as u64));
+                        results.push(res);
+                        *slot = None;
+                    } else {
+                        let tok = sample(out.row(b), r.req.sampling, &mut self.rng);
+                        r.next_token = Some(tok);
+                    }
+                }
+                self.observe();
+            }
+        }
+
+        let wall = start.elapsed();
+        let total_gen: usize = results.iter().map(|r| r.gen_tokens).sum();
+        let stats = ServeStats {
+            wall,
+            completed: results.len(),
+            total_gen_tokens: total_gen,
+            decode_steps: self.steps_done,
+            extend_calls: self.extends_done,
+            tokens_per_sec: total_gen as f64 / wall.as_secs_f64().max(1e-9),
+            ttft: ttft_h,
+            e2e: e2e_h,
+        };
+        Ok((results, stats))
+    }
+
+    /// Feed the controller the real engine's occupancy signals.
+    fn observe(&mut self) {
+        let max_seq = self.rt.geometry().max_seq;
+        let footprint: u64 = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .map(|(b, _)| self.state.lens[b].max(0) as u64)
+            .sum();
+        let capacity = (self.batch * max_seq) as u64;
+        let busy = self.busy_slots();
+        let inputs = ControlInputs {
+            engine: EngineSignals {
+                kv_usage: footprint as f64 / capacity as f64,
+                pool_usage: footprint as f64 / capacity as f64,
+                hit_rate: 1.0, // dense per-slot cache: no prefix sharing here
+                running: busy,
+                waiting: self.queue.len(),
+            },
+            active_agents: busy,
+            active_footprint: footprint,
+            capacity,
+        };
+        self.controller.on_signals(&inputs);
+    }
+}

@@ -1,0 +1,36 @@
+//! Byte-level tokenizer for the tiny served model (vocab = 256).
+
+use crate::core::Token;
+
+/// Encode UTF-8 text as byte tokens.
+pub fn encode(text: &str) -> Vec<Token> {
+    text.bytes().map(|b| b as Token).collect()
+}
+
+/// Decode byte tokens back to text (lossy on invalid UTF-8).
+pub fn decode(tokens: &[Token]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "Hello, CONCUR!";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo ☂";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_fit_vocab() {
+        assert!(encode("any text at all").iter().all(|&t| t < 256));
+    }
+}

@@ -1,0 +1,55 @@
+//! Discrete-event simulation substrate.
+//!
+//! The driver advances simulated time two ways: engine iterations consume
+//! `CostModel::step_time`, and external events (tool completions, request
+//! arrivals) are drawn from this queue.  Everything is integral-time and
+//! tie-broken by insertion order, so runs are bit-reproducible.
+
+pub mod queue;
+
+pub use queue::EventQueue;
+
+use crate::core::Micros;
+
+/// Simulated wall clock.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now: Micros,
+}
+
+impl SimClock {
+    pub fn new() -> SimClock {
+        SimClock { now: Micros::ZERO }
+    }
+
+    pub fn now(&self) -> Micros {
+        self.now
+    }
+
+    /// Advance by a duration (engine step, stall, ...).
+    pub fn advance(&mut self, dt: Micros) {
+        self.now += dt;
+    }
+
+    /// Jump directly to an absolute time; must be monotone.
+    pub fn advance_to(&mut self, t: Micros) {
+        debug_assert!(t >= self.now, "clock must be monotone: {t} < {}", self.now);
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_monotone() {
+        let mut c = SimClock::new();
+        c.advance(Micros(10));
+        c.advance_to(Micros(50));
+        c.advance_to(Micros(50)); // same time is fine
+        assert_eq!(c.now(), Micros(50));
+    }
+}

@@ -1,0 +1,124 @@
+//! Deterministic time-ordered event queue.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::core::Micros;
+
+struct Entry<E> {
+    at: Micros,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first, then FIFO
+        // within equal timestamps so the simulation is deterministic.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of timestamped events with FIFO tie-breaking.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, at: Micros, event: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at, seq, event });
+    }
+
+    /// Timestamp of the next event, if any.
+    pub fn peek_time(&self) -> Option<Micros> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    /// Pop the next event regardless of time.
+    pub fn pop(&mut self) -> Option<(Micros, E)> {
+        self.heap.pop().map(|e| (e.at, e.event))
+    }
+
+    /// Pop the next event only if it is due at or before `now`.
+    pub fn pop_due(&mut self, now: Micros) -> Option<(Micros, E)> {
+        if self.peek_time()? <= now {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(Micros(30), "c");
+        q.push(Micros(10), "a");
+        q.push(Micros(20), "b");
+        assert_eq!(q.pop(), Some((Micros(10), "a")));
+        assert_eq!(q.pop(), Some((Micros(20), "b")));
+        assert_eq!(q.pop(), Some((Micros(30), "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_within_same_timestamp() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(Micros(5), i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((Micros(5), i)));
+        }
+    }
+
+    #[test]
+    fn pop_due_respects_now() {
+        let mut q = EventQueue::new();
+        q.push(Micros(10), "a");
+        q.push(Micros(20), "b");
+        assert_eq!(q.pop_due(Micros(5)), None);
+        assert_eq!(q.pop_due(Micros(10)), Some((Micros(10), "a")));
+        assert_eq!(q.pop_due(Micros(15)), None);
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,125 @@
+//! Coordinator-level integration: the AIMD controller + slot manager
+//! driving a live engine, exercising the paper's control-law claims.
+
+use concur::config::AimdParams;
+use concur::coordinator::{AimdController, ControlInputs, Controller, SlotManager};
+use concur::core::AgentId;
+use concur::engine::EngineSignals;
+
+fn inputs(u: f64, h: f64, active: usize) -> ControlInputs {
+    ControlInputs {
+        engine: EngineSignals {
+            kv_usage: u,
+            pool_usage: u,
+            hit_rate: h,
+            running: active,
+            waiting: 0,
+        },
+        active_agents: active,
+        active_footprint: (u * 1_000_000.0) as u64,
+        capacity: 1_000_000,
+    }
+}
+
+#[test]
+fn full_congestion_episode() {
+    // warmup growth → saturation hold → hit collapse → single cut →
+    // drain → recovery hold — the paper's Figure 5 arc in miniature.
+    let p = AimdParams {
+        control_interval: 1,
+        cut_cooldown: 4,
+        band_probe_every: 0,
+        ..AimdParams::default()
+    };
+    let mut c = AimdController::new(p);
+
+    // Warmup: underutilized & saturated → grows.
+    for _ in 0..10 {
+        let w = c.window();
+        c.on_signals(&inputs(0.1, 0.95, w));
+    }
+    let peak = c.window_f();
+    assert!(peak > p.w_init);
+
+    // Saturation with healthy hit rate → holds.
+    for _ in 0..10 {
+        let w = c.window();
+        c.on_signals(&inputs(0.9, 0.8, w));
+    }
+    assert_eq!(c.window_f(), peak);
+
+    // Hit collapse at saturation → exactly one cut (β), then gated while
+    // the active population is still above the window.
+    let over = c.window() + 10;
+    for _ in 0..5 {
+        c.on_signals(&inputs(0.95, 0.05, over));
+    }
+    assert_eq!(c.window_f(), peak); // not drained yet → no cut
+    c.on_signals(&inputs(0.95, 0.05, c.window()));
+    assert_eq!(c.window_f(), peak * 0.5);
+    assert_eq!(c.cuts, 1);
+}
+
+#[test]
+fn slots_and_controller_cooperate_on_window_shrink() {
+    let mut slots = SlotManager::new();
+    for i in 0..10 {
+        slots.register(AgentId(i));
+    }
+    let granted = slots.grant_up_to(10);
+    assert_eq!(granted.len(), 10);
+
+    // Window shrinks to 4: the next six step-boundaries pause.
+    let mut paused = 0;
+    for i in 0..10 {
+        if slots.on_step_boundary(AgentId(i), 4)
+            == concur::coordinator::slots::BoundaryDecision::Paused
+        {
+            paused += 1;
+        }
+    }
+    assert_eq!(paused, 6);
+    assert_eq!(slots.active_count(), 4);
+
+    // Window recovers to 7: exactly three resume, LIFO.
+    let resumed = slots.grant_up_to(7);
+    assert_eq!(resumed.len(), 3);
+    assert_eq!(slots.active_count(), 7);
+    assert_eq!(slots.resumes, 3);
+}
+
+#[test]
+fn aimd_window_bounded_under_adversarial_signals() {
+    // Whatever the signal sequence, the window stays within [w_min, w_max].
+    let p = AimdParams {
+        control_interval: 1,
+        cut_cooldown: 0,
+        w_min: 2.0,
+        w_init: 4.0,
+        w_max: 64.0,
+        ..AimdParams::default()
+    };
+    let mut c = AimdController::new(p);
+    let mut rng = concur::core::Rng::new(99);
+    for _ in 0..5_000 {
+        let u = rng.next_f64() * 1.5; // can exceed 1.0 (footprint > pool)
+        let h = rng.next_f64();
+        let w = c.window();
+        let active = (rng.next_u64() % 128) as usize;
+        c.on_signals(&inputs(u, h, if rng.chance(0.5) { w } else { active }));
+        let wf = c.window_f();
+        assert!((2.0..=64.0).contains(&wf), "window escaped: {wf}");
+    }
+}
+
+#[test]
+fn window_history_is_recorded_for_fig5() {
+    let p = AimdParams { control_interval: 2, ..AimdParams::default() };
+    let mut c = AimdController::new(p);
+    for _ in 0..20 {
+        let w = c.window();
+        c.on_signals(&inputs(0.1, 0.9, w));
+    }
+    // 20 signals / interval 2 = 10 control decisions recorded.
+    assert_eq!(c.window_history().len(), 10);
+}

@@ -1,0 +1,160 @@
+//! Engine-level integration: the SGLang-like substrate under multi-agent
+//! workload patterns, checked against its own accounting invariants.
+
+use concur::config::{EngineConfig, EvictionMode};
+use concur::core::{AgentId, Micros, RequestId, Token};
+use concur::costmodel::{ClusterSpec, CostModel, GpuSpec, ModelSpec};
+use concur::engine::{Request, SimEngine};
+
+fn engine(pool_tokens: u64, eviction: EvictionMode) -> SimEngine {
+    let cluster = ClusterSpec::new(GpuSpec::h100(), ModelSpec::qwen3_32b(), 8, 8);
+    let cfg = EngineConfig { eviction, hit_window: 8, ..EngineConfig::default() };
+    let mut e = SimEngine::new(cfg, CostModel::new(cluster));
+    e.shrink_pool_for_tests(pool_tokens);
+    e
+}
+
+fn req(id: u64, agent: u64, prompt: Vec<Token>, gen: u32, prev_ctx: u64) -> Request {
+    Request {
+        id: RequestId(id),
+        agent: AgentId(agent),
+        prompt,
+        gen: (0..gen).map(|k| 0x3000_0000 + id as u32 * 4096 + k).collect(),
+        prev_ctx,
+        submitted_at: Micros::ZERO,
+    }
+}
+
+fn drain(e: &mut SimEngine, cap: usize) -> Vec<concur::engine::FinishedReq> {
+    let mut now = Micros::ZERO;
+    let mut out = Vec::new();
+    for _ in 0..cap {
+        if !e.has_work() {
+            break;
+        }
+        let step = e.step(now);
+        now += step.duration + Micros(1);
+        out.extend(step.finished);
+        e.check_invariants().unwrap();
+    }
+    assert!(!e.has_work(), "engine failed to drain in {cap} steps");
+    out
+}
+
+#[test]
+fn sixteen_agents_multi_step_with_shared_prefix() {
+    let mut e = engine(400_000, EvictionMode::Discard);
+    let sys: Vec<Token> = (0..512).collect();
+    let mut histories: Vec<Vec<Token>> = (0..16)
+        .map(|a| {
+            let mut p = sys.clone();
+            p.extend((0..600).map(|i| 0x0100_0000 + a as u32 * 65536 + i));
+            p
+        })
+        .collect();
+
+    let mut rid = 0u64;
+    let mut prev_ctx = vec![0u64; 16];
+    for step in 0..4 {
+        for a in 0..16usize {
+            let r = req(rid, a as u64, histories[a].clone(), 40, prev_ctx[a]);
+            rid += 1;
+            e.submit(r);
+        }
+        let done = drain(&mut e, 10_000);
+        assert_eq!(done.len(), 16);
+        for f in done {
+            let a = f.agent.0 as usize;
+            histories[a].extend(f.output);
+            // Recompute boundary: everything the model has computed so far
+            // (prompt + generation), NOT the upcoming tool observation.
+            prev_ctx[a] = histories[a].len() as u64;
+            histories[a].extend(
+                (0..150).map(|i| 0x0200_0000 + a as u32 * 65536 + step as u32 * 256 + i),
+            );
+        }
+    }
+    // Ample pool: the shared system prompt and each agent's own history
+    // are fully reused; recompute never happens.
+    assert_eq!(e.counters.recompute_tokens, 0);
+    assert!(e.lifetime_hits.ratio() > 0.5, "hit={}", e.lifetime_hits.ratio());
+}
+
+#[test]
+fn thrash_regime_shows_recompute_and_preserves_invariants() {
+    // Pool fits ~4 of 12 growing agents: heavy eviction, but accounting
+    // must stay exact through every step.
+    let mut e = engine(12_000, EvictionMode::Discard);
+    let mut histories: Vec<Vec<Token>> = (0..12)
+        .map(|a| ((a as u32 * 0x0010_0000)..(a as u32 * 0x0010_0000) + 800).collect())
+        .collect();
+    let mut rid = 0;
+    let mut prev_ctx = vec![0u64; 12];
+    for step in 0..3 {
+        for a in 0..12usize {
+            e.submit(req(rid, a as u64, histories[a].clone(), 30, prev_ctx[a]));
+            rid += 1;
+        }
+        let done = drain(&mut e, 200_000);
+        for f in done {
+            let a = f.agent.0 as usize;
+            histories[a].extend(f.output);
+            prev_ctx[a] = histories[a].len() as u64;
+            histories[a]
+                .extend((0..200).map(|i| 0x0300_0000 + rid as u32 * 512 + a as u32 + i * 7));
+        }
+    }
+    assert!(e.counters.evicted_tokens > 0);
+    assert!(e.counters.recompute_tokens > 0);
+    assert!(e.lifetime_hits.ratio() < 0.9);
+}
+
+#[test]
+fn offload_mode_preserves_invariants_under_pressure() {
+    let mut e = engine(10_000, EvictionMode::Offload);
+    let mut rid = 0;
+    for wave in 0..3 {
+        for a in 0..8usize {
+            let base = 0x0400_0000 + a as u32 * 0x0008_0000 + wave as u32 * 97;
+            e.submit(req(rid, a as u64, (base..base + 2_000).collect(), 25, 0));
+            rid += 1;
+        }
+        drain(&mut e, 50_000);
+    }
+    assert!(e.counters.offloaded_tokens > 0);
+    assert!(e.tree().cpu_tokens() > 0 || e.counters.reloaded_tokens > 0);
+}
+
+#[test]
+fn preemption_restores_exact_accounting() {
+    // Tiny pool forces decode to preempt prefilling victims repeatedly.
+    let mut e = engine(6_000, EvictionMode::Discard);
+    for a in 0..6u64 {
+        let base = 0x0500_0000 + a as u32 * 0x0010_0000;
+        e.submit(req(a, a, (base..base + 1_800).collect(), 60, 0));
+    }
+    let done = drain(&mut e, 100_000);
+    assert_eq!(done.len(), 6);
+    assert!(e.counters.preemptions > 0, "expected preemption churn");
+    e.check_invariants().unwrap();
+}
+
+#[test]
+fn hit_rate_window_reflects_recent_traffic_only() {
+    let mut e = engine(100_000, EvictionMode::Discard);
+    // First wave: all misses.
+    for a in 0..8u64 {
+        let base = 0x0600_0000 + a as u32 * 0x0010_0000;
+        e.submit(req(a, a, (base..base + 1_000).collect(), 10, 0));
+    }
+    drain(&mut e, 10_000);
+    let early = e.hit_rate();
+    // Second wave: identical prompts -> pure hits.
+    for a in 0..8u64 {
+        let base = 0x0600_0000 + a as u32 * 0x0010_0000;
+        e.submit(req(100 + a, a, (base..base + 1_000).collect(), 10, 1_010));
+    }
+    drain(&mut e, 10_000);
+    assert!(e.hit_rate() > early);
+    assert!(e.hit_rate() > 0.9, "window hit={}", e.hit_rate());
+}

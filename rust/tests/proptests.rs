@@ -1,0 +1,300 @@
+//! Property-based tests on the crate's core invariants.
+//!
+//! The vendored crate set has no proptest, so properties are checked with
+//! seeded random-case sweeps (hundreds of cases per property, bit-stable
+//! across runs).  Each property states the invariant it defends.
+
+use concur::core::{Micros, Rng, Token};
+use concur::engine::{EvictPolicy, RadixTree};
+
+/// Random token sequence with a shared low-id prefix pool so sequences
+/// overlap in interesting ways.
+fn random_seq(rng: &mut Rng, max_len: usize) -> Vec<Token> {
+    let len = rng.gen_range(1, max_len as u64 + 1) as usize;
+    let share_prefix = rng.chance(0.6);
+    let mut seq = Vec::with_capacity(len);
+    if share_prefix {
+        let plen = rng.gen_range(1, 64).min(len as u64) as usize;
+        let family = rng.gen_range(0, 4) as u32;
+        seq.extend((0..plen as u32).map(|i| family * 1000 + i));
+    }
+    while seq.len() < len {
+        seq.push(rng.gen_range(1 << 20, 1 << 21) as u32);
+    }
+    seq
+}
+
+/// PROPERTY: after any interleaving of insert / match / lock / unlock /
+/// evict / reload, the radix tree's token counters equal the sum over live
+/// nodes, parent-child links are consistent, and a locked path's deepest
+/// node is never evicted.
+#[test]
+fn radix_invariants_under_random_ops() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let mut tree = RadixTree::new();
+        let mut locked: Vec<(Vec<usize>, Vec<Token>)> = Vec::new();
+        let mut clockv = 0u64;
+        for _op in 0..200 {
+            clockv += 1;
+            let now = Micros(clockv);
+            match rng.gen_range(0, 10) {
+                0..=3 => {
+                    let seq = random_seq(&mut rng, 300);
+                    let ins = tree.insert(&seq, now);
+                    if rng.chance(0.4) && !ins.path.is_empty() {
+                        tree.lock_path(&ins.path);
+                        locked.push((ins.path.clone(), seq));
+                    }
+                }
+                4..=5 => {
+                    let seq = random_seq(&mut rng, 300);
+                    let m = tree.match_prefix(&seq, now);
+                    assert!(m.total() <= seq.len() as u64);
+                }
+                6 => {
+                    if let Some((path, _)) = locked.pop() {
+                        tree.unlock_path(&path);
+                    }
+                }
+                7..=8 => {
+                    let want = rng.gen_range(1, 2_000);
+                    let policy = if rng.chance(0.5) {
+                        EvictPolicy::Discard
+                    } else {
+                        EvictPolicy::OffloadToCpu
+                    };
+                    tree.evict(want, policy);
+                }
+                _ => {
+                    let seq = random_seq(&mut rng, 300);
+                    let m = tree.match_prefix(&seq, now);
+                    if m.cpu_tokens > 0 {
+                        tree.reload_path(&m.path, now);
+                    }
+                }
+            }
+            tree.check_invariants().unwrap_or_else(|e| {
+                panic!("seed {seed}: invariant violated: {e}")
+            });
+            // Locked sequences must still fully match (their KV is pinned
+            // on GPU or CPU, never dropped).
+            for (_, seq) in &locked {
+                let m = tree.match_prefix(seq, Micros(clockv));
+                assert_eq!(
+                    m.total(),
+                    seq.len() as u64,
+                    "seed {seed}: locked sequence lost cache"
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: matched prefix length is exactly the longest common prefix
+/// with some previously inserted sequence.
+#[test]
+fn radix_match_equals_longest_common_prefix() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let mut tree = RadixTree::new();
+        let mut corpus: Vec<Vec<Token>> = Vec::new();
+        for i in 0..30 {
+            let seq = random_seq(&mut rng, 200);
+            tree.insert(&seq, Micros(i));
+            corpus.push(seq);
+        }
+        for _ in 0..30 {
+            let probe = random_seq(&mut rng, 200);
+            let expected = corpus
+                .iter()
+                .map(|s| {
+                    s.iter()
+                        .zip(&probe)
+                        .take_while(|(a, b)| a == b)
+                        .count() as u64
+                })
+                .max()
+                .unwrap_or(0);
+            let m = tree.match_prefix(&probe, Micros(999_999));
+            assert_eq!(m.total(), expected, "seed {seed}");
+        }
+    }
+}
+
+/// PROPERTY: eviction frees exactly what the counters say and never makes
+/// the tree unusable; fully unlocked trees evict to zero.
+#[test]
+fn eviction_is_complete_and_exact() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(2000 + seed);
+        let mut tree = RadixTree::new();
+        for i in 0..20 {
+            tree.insert(&random_seq(&mut rng, 400), Micros(i));
+        }
+        let before = tree.gpu_tokens();
+        let ev = tree.evict(u64::MAX, EvictPolicy::Discard);
+        assert_eq!(ev.freed_gpu_tokens, before, "seed {seed}");
+        assert_eq!(tree.gpu_tokens(), 0);
+        assert_eq!(tree.node_count(), 0);
+        tree.check_invariants().unwrap();
+        // Tree remains usable after total eviction.
+        let seq = random_seq(&mut rng, 100);
+        tree.insert(&seq, Micros(10_000));
+        assert_eq!(tree.match_prefix(&seq, Micros(10_001)).total(), seq.len() as u64);
+    }
+}
+
+/// PROPERTY: the engine's pool/tree/private accounting stays exact under
+/// random multi-agent request streams with random pool sizes.
+#[test]
+fn engine_accounting_under_random_workloads() {
+    use concur::config::{EngineConfig, EvictionMode};
+    use concur::core::{AgentId, RequestId};
+    use concur::costmodel::{ClusterSpec, CostModel, GpuSpec, ModelSpec};
+    use concur::engine::{Request, SimEngine};
+
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(3000 + seed);
+        let pool = rng.gen_range(4_000, 60_000);
+        let eviction = if rng.chance(0.5) {
+            EvictionMode::Discard
+        } else {
+            EvictionMode::Offload
+        };
+        let cluster = ClusterSpec::new(GpuSpec::h100(), ModelSpec::qwen3_32b(), 4, 4);
+        let mut engine = SimEngine::new(
+            EngineConfig { eviction, hit_window: 8, ..EngineConfig::default() },
+            CostModel::new(cluster),
+        );
+        engine.shrink_pool_for_tests(pool);
+
+        let mut rid = 0u64;
+        let mut now = Micros::ZERO;
+        for _round in 0..4 {
+            let n = rng.gen_range(1, 10) as usize;
+            for _ in 0..n {
+                let plen = rng.gen_range(16, 2_000);
+                let glen = rng.gen_range(1, 120) as u32;
+                let base = rng.gen_range(1 << 22, 1 << 24) as u32;
+                engine.submit(Request {
+                    id: RequestId(rid),
+                    agent: AgentId(rid % 7),
+                    prompt: (base..base + plen as u32).collect(),
+                    gen: (0..glen).map(|k| (1 << 25) + rid as u32 * 256 + k).collect(),
+                    prev_ctx: 0,
+                    submitted_at: now,
+                });
+                rid += 1;
+            }
+            for _ in 0..20_000 {
+                if !engine.has_work() {
+                    break;
+                }
+                let out = engine.step(now);
+                now += out.duration + Micros(1);
+                engine.check_invariants().unwrap_or_else(|e| {
+                    panic!("seed {seed} pool {pool}: {e}")
+                });
+            }
+            assert!(!engine.has_work(), "seed {seed}: engine stuck");
+        }
+    }
+}
+
+/// PROPERTY: the slot manager conserves agents — every registered agent is
+/// at all times in exactly one of {active, paused, fresh, released}.
+#[test]
+fn slot_manager_conserves_agents() {
+    use concur::coordinator::slots::BoundaryDecision;
+    use concur::coordinator::SlotManager;
+    use concur::core::AgentId;
+    use std::collections::HashSet;
+
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(4000 + seed);
+        let n = rng.gen_range(2, 40) as u64;
+        let mut slots = SlotManager::new();
+        let mut released: HashSet<AgentId> = HashSet::new();
+        let mut active: HashSet<AgentId> = HashSet::new();
+        for i in 0..n {
+            slots.register(AgentId(i));
+        }
+        for _ in 0..200 {
+            let window = rng.gen_range(1, n + 2) as usize;
+            for a in slots.grant_up_to(window) {
+                assert!(active.insert(a), "double-granted {a}");
+            }
+            // Random boundary events for active agents.
+            let snapshot: Vec<AgentId> = active.iter().copied().collect();
+            for a in snapshot {
+                if released.contains(&a) {
+                    continue;
+                }
+                match rng.gen_range(0, 4) {
+                    0 => {
+                        if slots.on_step_boundary(a, window) == BoundaryDecision::Paused
+                        {
+                            active.remove(&a);
+                        }
+                    }
+                    1 => {
+                        slots.release(a);
+                        active.remove(&a);
+                        released.insert(a);
+                    }
+                    _ => {}
+                }
+            }
+            assert_eq!(slots.active_count(), active.len(), "seed {seed}");
+            assert_eq!(
+                slots.active_count() + slots.pending_count() + released.len(),
+                n as usize,
+                "seed {seed}: agents leaked"
+            );
+        }
+    }
+}
+
+/// PROPERTY: JSON round-trips arbitrary generated values exactly.
+#[test]
+fn json_roundtrip_random_documents() {
+    use concur::core::json::Value;
+    use std::collections::BTreeMap;
+
+    fn gen_value(rng: &mut Rng, depth: u32) -> Value {
+        match if depth == 0 { rng.gen_range(0, 4) } else { rng.gen_range(0, 6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::Number((rng.gen_range(0, 1 << 40) as f64) / 8.0),
+            3 => Value::String(
+                (0..rng.gen_range(0, 12))
+                    .map(|_| {
+                        char::from_u32(rng.gen_range(32, 1024) as u32).unwrap_or('x')
+                    })
+                    .collect(),
+            ),
+            4 => Value::Array(
+                (0..rng.gen_range(0, 5))
+                    .map(|_| gen_value(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut m = BTreeMap::new();
+                for i in 0..rng.gen_range(0, 5) {
+                    m.insert(format!("k{i}"), gen_value(rng, depth - 1));
+                }
+                Value::Object(m)
+            }
+        }
+    }
+
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(5000 + seed);
+        let v = gen_value(&mut rng, 3);
+        let compact = v.to_string_compact();
+        let pretty = v.to_string_pretty();
+        assert_eq!(Value::parse(&compact).unwrap(), v, "seed {seed}");
+        assert_eq!(Value::parse(&pretty).unwrap(), v, "seed {seed}");
+    }
+}
