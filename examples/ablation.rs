@@ -9,14 +9,17 @@
 //! * -cooldown   — cuts may fire every control interval
 //! * slow-H      — coarse hit-rate window (64 requests instead of 8)
 //!
+//! The variants are independent, so they fan out across cores via
+//! `run_jobs_parallel` (bit-identical results to a serial run).
+//!
 //! ```sh
 //! cargo run --release --example ablation
 //! ```
 
 use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
-use concur::driver::run_job;
+use concur::driver::run_jobs_parallel;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> concur::core::Result<()> {
     let variants: Vec<(&str, AimdParams, usize)> = vec![
         ("full", AimdParams::default(), 8),
         (
@@ -32,20 +35,26 @@ fn main() -> anyhow::Result<()> {
         ("slow-H (window 64)", AimdParams::default(), 64),
     ];
 
+    let jobs: Vec<JobConfig> = variants
+        .iter()
+        .map(|(_, params, hit_window)| JobConfig {
+            cluster: presets::qwen3_cluster(2),
+            engine: EngineConfig { hit_window: *hit_window, ..EngineConfig::default() },
+            workload: presets::qwen3_workload(256),
+            scheduler: SchedulerKind::Concur(*params),
+        })
+        .collect();
+    let results = run_jobs_parallel(&jobs)
+        .into_iter()
+        .collect::<concur::core::Result<Vec<_>>>()?;
+
     println!("ablation on Qwen3-32B, batch 256, TP2 (lower latency is better)\n");
     println!(
         "{:<22} {:>12} {:>8} {:>11} {:>8}",
         "variant", "latency (s)", "hit", "recompute", "pauses"
     );
     let mut base = None;
-    for (name, params, hit_window) in variants {
-        let job = JobConfig {
-            cluster: presets::qwen3_cluster(2),
-            engine: EngineConfig { hit_window, ..EngineConfig::default() },
-            workload: presets::qwen3_workload(256),
-            scheduler: SchedulerKind::Concur(params),
-        };
-        let r = run_job(&job).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    for ((name, _, _), r) in variants.iter().zip(&results) {
         let lat = r.total_time.as_secs_f64();
         let delta = base
             .map(|b: f64| format!(" ({:+.0}%)", (lat / b - 1.0) * 100.0))

@@ -16,6 +16,7 @@
 use std::time::Instant;
 
 use concur::coordinator::concur_default;
+use concur::core::ConcurError;
 use concur::runtime::ModelRuntime;
 use concur::server::{RealServer, Sampling, ServeRequest, tokenizer};
 
@@ -24,10 +25,10 @@ const STEPS: usize = 3;
 const GEN_PER_STEP: usize = 24;
 const BATCH: usize = 4;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> concur::core::Result<()> {
     let t0 = Instant::now();
     let rt = ModelRuntime::load_default()
-        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+        .map_err(|e| ConcurError::runtime(format!("{e}\nhint: run `make artifacts` first")))?;
     let g = rt.geometry().clone();
     println!(
         "loaded {} compiled graphs in {:.1}s ({} params, vocab {}, max_seq {})",
@@ -44,8 +45,7 @@ fn main() -> anyhow::Result<()> {
         .map(|i| format!("agent {i} plan: explore, observe, act. state:"))
         .collect();
 
-    let mut server = RealServer::new(rt, BATCH, concur_default())
-        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let mut server = RealServer::new(rt, BATCH, concur_default())?;
     let mut total_gen = 0usize;
     let mut total_wall = 0.0f64;
     let serve_start = Instant::now();
@@ -61,9 +61,7 @@ fn main() -> anyhow::Result<()> {
                 sampling: Sampling::Temperature(0.9),
             });
         }
-        let (results, stats) = server
-            .run_to_completion()
-            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let (results, stats) = server.run_to_completion()?;
         total_gen += stats.total_gen_tokens;
         total_wall += stats.wall.as_secs_f64();
         println!(

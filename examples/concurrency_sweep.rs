@@ -6,38 +6,58 @@
 //! during the middle phase, more concurrency = less throughput); CONCUR's
 //! stays flat because admission is decoupled from the offered load.
 //!
+//! All (batch × scheduler) cells are independent simulations, so the whole
+//! sweep fans out across cores via `run_jobs_parallel` — results are
+//! bit-identical to running the cells one by one.
+//!
 //! ```sh
 //! cargo run --release --example concurrency_sweep
 //! ```
 
 use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
-use concur::driver::run_job;
+use concur::driver::run_jobs_parallel;
 
-fn main() -> anyhow::Result<()> {
-    println!("offered-batch sweep on Qwen3-32B TP2 (tokens/s; higher is better)\n");
-    println!("{:>8}  {:>12}  {:>12}  {:>10}", "batch", "sglang", "concur", "ratio");
-    for batch in [16usize, 32, 64, 128, 256] {
-        let mut tput = Vec::new();
-        for sched in [
-            SchedulerKind::Uncontrolled,
-            SchedulerKind::Concur(AimdParams::default()),
-        ] {
-            let job = JobConfig {
+const BATCHES: [usize; 5] = [16, 32, 64, 128, 256];
+
+fn main() -> concur::core::Result<()> {
+    let jobs: Vec<JobConfig> = BATCHES
+        .iter()
+        .flat_map(|&batch| {
+            [
+                SchedulerKind::Uncontrolled,
+                SchedulerKind::Concur(AimdParams::default()),
+            ]
+            .into_iter()
+            .map(move |sched| JobConfig {
                 cluster: presets::qwen3_cluster(2),
                 engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
                 workload: presets::qwen3_workload(batch),
                 scheduler: sched,
-            };
-            let r = run_job(&job).map_err(|e| anyhow::anyhow!(e.to_string()))?;
-            tput.push(r.throughput_tps);
-        }
+            })
+        })
+        .collect();
+
+    let wall = std::time::Instant::now();
+    let results = run_jobs_parallel(&jobs)
+        .into_iter()
+        .collect::<concur::core::Result<Vec<_>>>()?;
+
+    println!("offered-batch sweep on Qwen3-32B TP2 (tokens/s; higher is better)\n");
+    println!("{:>8}  {:>12}  {:>12}  {:>10}", "batch", "sglang", "concur", "ratio");
+    for (pair, batch) in results.chunks(2).zip(BATCHES) {
+        let (sglang, concur) = (pair[0].throughput_tps, pair[1].throughput_tps);
         println!(
             "{:>8}  {:>12.0}  {:>12.0}  {:>9.2}x",
             batch,
-            tput[0],
-            tput[1],
-            tput[1] / tput[0]
+            sglang,
+            concur,
+            concur / sglang
         );
     }
+    println!(
+        "\n({} simulations in {:.1}s wall time, parallel across cores)",
+        results.len(),
+        wall.elapsed().as_secs_f64()
+    );
     Ok(())
 }

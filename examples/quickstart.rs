@@ -8,7 +8,7 @@
 use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
 use concur::driver::run_job;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> concur::core::Result<()> {
     // 64 ReAct agents against a Qwen3-32B-class replica on 2 GPUs — a
     // memory-constrained setup where admission control matters.
     let job = JobConfig {
@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
         scheduler: SchedulerKind::Concur(AimdParams::default()),
     };
 
-    let r = run_job(&job).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let r = run_job(&job)?;
 
     println!("scheduler        : {}", r.scheduler);
     println!("agents finished  : {}/{}", r.agents_finished, r.agents_total);

@@ -52,12 +52,11 @@ fn tiny_engine() -> SimEngine {
     engine
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> concur::core::Result<()> {
     println!("Fig 2 demo: 6 agents, KV pool sized for 3\n");
     for scheduler in [SchedulerKind::Uncontrolled, SchedulerKind::AgentCap(3)] {
         let mut engine = tiny_engine();
-        let r = run_with(&mut engine, fleet(), make_controller(&scheduler))
-            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let r = run_with(&mut engine, fleet(), make_controller(&scheduler))?;
         println!("--- {}", r.scheduler);
         println!("  batch latency    : {}", r.total_time);
         println!("  cache hit rate   : {:.1}%", r.hit_rate * 100.0);

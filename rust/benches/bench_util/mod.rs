@@ -1,7 +1,9 @@
 //! Minimal timing harness shared by the bench targets.
 //!
 //! (criterion is not in the vendored crate set; this provides the same
-//! warmup + multi-sample + median reporting for our purposes.)
+//! warmup + multi-sample + median reporting for our purposes, plus a
+//! machine-readable JSON dump so the perf trajectory is tracked across
+//! PRs — see DESIGN.md §Perf.)
 
 use std::time::{Duration, Instant};
 
@@ -19,21 +21,49 @@ pub fn time_it<F: FnMut()>(samples: usize, mut f: F) -> (Duration, Duration, Dur
     (times[times.len() / 2], times[0], times[times.len() - 1])
 }
 
-pub fn report(name: &str, samples: usize, f: impl FnMut()) {
-    let (med, min, max) = time_it(samples, f);
-    println!(
-        "{name:<52} median {:>12.3?}  (min {:>12.3?}, max {:>12.3?})",
-        med, min, max
-    );
+/// Collects every measurement of a bench run and can dump them as
+/// `{"bench name": ns_per_op, ...}` JSON next to the human-readable report.
+pub struct Recorder {
+    /// (name, median ns per unit op).
+    entries: Vec<(String, f64)>,
 }
 
-/// Report with a custom per-iteration unit count (e.g. ops per call).
-#[allow(dead_code)]
-pub fn report_per(name: &str, samples: usize, units: u64, f: impl FnMut()) {
-    let (med, _, _) = time_it(samples, f);
-    let per = med.as_nanos() as f64 / units.max(1) as f64;
-    println!(
-        "{name:<52} median {:>12.3?}  ({per:>10.1} ns/op over {units} ops)",
-        med
-    );
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder { entries: Vec::new() }
+    }
+
+    /// Time `f`, print the human-readable line, record median ns/op
+    /// (units = 1, i.e. per call).
+    pub fn report(&mut self, name: &str, samples: usize, f: impl FnMut()) {
+        let (med, min, max) = time_it(samples, f);
+        println!(
+            "{name:<52} median {:>12.3?}  (min {:>12.3?}, max {:>12.3?})",
+            med, min, max
+        );
+        self.entries.push((name.to_string(), med.as_nanos() as f64));
+    }
+
+    /// Like [`Recorder::report`], with `units` inner operations per call.
+    pub fn report_per(&mut self, name: &str, samples: usize, units: u64, f: impl FnMut()) {
+        let (med, _, _) = time_it(samples, f);
+        let per = med.as_nanos() as f64 / units.max(1) as f64;
+        println!(
+            "{name:<52} median {:>12.3?}  ({per:>10.1} ns/op over {units} ops)",
+            med
+        );
+        self.entries.push((name.to_string(), per));
+    }
+
+    /// Write `{name -> ns_per_op}` through the crate's own JSON codec.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use concur::core::json::Value;
+        use std::collections::BTreeMap;
+
+        let mut map: BTreeMap<String, Value> = BTreeMap::new();
+        for (name, per) in &self.entries {
+            map.insert(name.clone(), Value::Number(*per));
+        }
+        std::fs::write(path, format!("{}\n", Value::Object(map).to_string_pretty()))
+    }
 }

@@ -3,16 +3,18 @@
 //! `cargo bench --bench hotpath`.  These are the §Perf targets from
 //! DESIGN.md: radix match/insert at serving prompt lengths, LRU eviction,
 //! the AIMD decision, one engine iteration at paper-scale batch, and a
-//! full end-to-end Table-1-scale run.
+//! full end-to-end Table-1-scale run.  Alongside the human-readable report
+//! it writes `BENCH_hotpath.json` (name → ns/op; override the path with
+//! `BENCH_JSON_PATH`) so the perf trajectory is tracked across PRs.
 
 mod bench_util;
-use bench_util::{report, report_per};
+use bench_util::Recorder;
 
-use concur::config::{presets, AimdParams, EngineConfig, SchedulerKind};
+use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
 use concur::coordinator::{AimdController, ControlInputs, Controller};
 use concur::core::{Micros, Rng, Token};
 use concur::costmodel::CostModel;
-use concur::driver::run_job;
+use concur::driver::{run_job, run_jobs_parallel};
 use concur::engine::{EngineSignals, EvictPolicy, RadixTree};
 
 fn agent_prompt(agent: u32, steps: u32, per_step: u32) -> Vec<Token> {
@@ -26,14 +28,45 @@ fn agent_prompt(agent: u32, steps: u32, per_step: u32) -> Vec<Token> {
 }
 
 fn main() {
+    let mut rec = Recorder::new();
+
     // --- radix tree -------------------------------------------------------
     let prompts: Vec<Vec<Token>> =
         (0..64).map(|a| agent_prompt(a, 16, 512)).collect();
 
-    report("radix: insert 64 x 8.7k-token prompts", 20, || {
+    rec.report("radix: insert 64 x 8.7k-token prompts", 20, || {
         let mut t = RadixTree::new();
         for (i, p) in prompts.iter().enumerate() {
             t.insert(p, Micros(i as u64));
+        }
+    });
+
+    // Finished-request fold: insert prompt+output without concatenation.
+    let outputs: Vec<Vec<Token>> = (0..64)
+        .map(|a| ((2 << 24 | a << 8)..(2 << 24 | a << 8) + 512).collect())
+        .collect();
+    rec.report("radix: insert_parts 64 x (8.7k prompt + 512 out)", 20, || {
+        let mut t = RadixTree::new();
+        for (i, p) in prompts.iter().enumerate() {
+            t.insert(p, Micros(i as u64));
+        }
+        for (i, (p, o)) in prompts.iter().zip(&outputs).enumerate() {
+            t.insert_parts(p, o, Micros(100 + i as u64));
+        }
+    });
+
+    // Split churn: probes that always diverge mid-edge (arena split is two
+    // range adjustments; the old tree copied both halves).
+    rec.report("radix: 1k mid-edge splits (partial matches)", 20, || {
+        let mut t = RadixTree::new();
+        for (i, p) in prompts.iter().enumerate() {
+            t.insert(p, Micros(i as u64));
+        }
+        let mut stamp = 500u64;
+        for k in 0..1_000usize {
+            let p = &prompts[k % 64];
+            stamp += 1;
+            t.match_prefix(&p[..512 + (k % 8_000)], Micros(stamp));
         }
     });
 
@@ -42,13 +75,13 @@ fn main() {
         warm.insert(p, Micros(i as u64));
     }
     let mut stamp = 1_000_000u64;
-    report_per("radix: match_prefix 8.7k tokens (warm)", 200, 8704, || {
+    rec.report_per("radix: match_prefix 8.7k tokens (warm)", 200, 8704, || {
         stamp += 1;
         let m = warm.match_prefix(&prompts[13], Micros(stamp));
         assert!(m.gpu_tokens > 0);
     });
 
-    report("radix: evict half the tree (64 x 8.7k)", 20, || {
+    rec.report("radix: evict half the tree (64 x 8.7k)", 20, || {
         let mut t = RadixTree::new();
         for (i, p) in prompts.iter().enumerate() {
             t.insert(p, Micros(i as u64));
@@ -57,7 +90,7 @@ fn main() {
         assert!(ev.freed_gpu_tokens > 0);
     });
 
-    report("radix: evictable_gpu_tokens (U_t signal scan)", 200, || {
+    rec.report("radix: evictable_gpu_tokens (U_t signal scan)", 200, || {
         let e = warm.evictable_gpu_tokens();
         assert!(e > 0);
     });
@@ -76,14 +109,14 @@ fn main() {
         capacity: 300_000,
     };
     let mut ctl = AimdController::new(AimdParams { control_interval: 1, ..Default::default() });
-    report_per("aimd: 10k control decisions", 50, 10_000, || {
+    rec.report_per("aimd: 10k control decisions", 50, 10_000, || {
         for _ in 0..10_000 {
             ctl.on_signals(&inputs);
         }
     });
 
     // --- engine iteration at paper scale -----------------------------------
-    report("engine: one iteration, 256 running decode seqs", 50, || {
+    rec.report("engine: one iteration, 256 running decode seqs", 50, || {
         let cost = CostModel::new(presets::qwen3_cluster(8));
         let mut engine = concur::engine::SimEngine::new(
             EngineConfig::default(),
@@ -110,14 +143,34 @@ fn main() {
     });
 
     // --- end-to-end simulation ---------------------------------------------
-    report("driver: full job, 64 agents, Qwen3 TP2, CONCUR", 5, || {
-        let job = concur::config::JobConfig {
-            cluster: presets::qwen3_cluster(2),
-            engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
-            workload: presets::qwen3_workload(64),
-            scheduler: SchedulerKind::Concur(AimdParams::default()),
-        };
-        let r = run_job(&job).unwrap();
+    let table1_job = || JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+        workload: presets::qwen3_workload(64),
+        scheduler: SchedulerKind::Concur(AimdParams::default()),
+    };
+    rec.report("driver: full job, 64 agents, Qwen3 TP2, CONCUR", 5, || {
+        let r = run_job(&table1_job()).unwrap();
         assert_eq!(r.agents_finished, 64);
     });
+
+    // Parallel sweep harness: 8 independent jobs across all cores (the
+    // repro-harness fan-out pattern).
+    let sweep: Vec<JobConfig> = (0..8)
+        .map(|i| {
+            let mut j = table1_job();
+            j.workload.seed = 7 + i as u64;
+            j
+        })
+        .collect();
+    rec.report("driver: 8-job sweep via run_jobs_parallel", 3, || {
+        let rs = run_jobs_parallel(&sweep);
+        assert!(rs.iter().all(|r| r.is_ok()));
+    });
+
+    let json_path = std::env::var("BENCH_JSON_PATH")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    let json_path = std::path::PathBuf::from(json_path);
+    rec.write_json(&json_path).expect("write bench json");
+    println!("\n(machine-readable results written to {})", json_path.display());
 }

@@ -3,8 +3,6 @@
 //! `cargo bench --bench paper_figures` prints fig1(a/b/c), fig3, fig5 and
 //! fig6 with wall-time per harness.
 
-mod bench_util;
-
 fn main() {
     for name in ["fig1", "fig3", "fig5", "fig6"] {
         let t0 = std::time::Instant::now();

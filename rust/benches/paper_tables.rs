@@ -3,8 +3,6 @@
 //! `cargo bench --bench paper_tables` prints every table with wall-time
 //! per harness.  (Tables are deterministic; timing shows simulation cost.)
 
-mod bench_util;
-
 fn main() {
     for name in ["table1", "table2", "table3"] {
         let t0 = std::time::Instant::now();

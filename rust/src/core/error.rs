@@ -1,33 +1,52 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled Display/Error impls — the offline build has no `thiserror`.
 
-use thiserror::Error;
+use crate::xla_stub as xla;
 
 /// Unified error for every layer of the stack.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ConcurError {
-    #[error("configuration error: {0}")]
     Config(String),
-
-    #[error("json parse error at byte {offset}: {message}")]
     Json { offset: usize, message: String },
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("engine error: {0}")]
     Engine(String),
-
-    #[error("workload error: {0}")]
     Workload(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
     Xla(String),
+}
+
+impl std::fmt::Display for ConcurError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConcurError::Config(m) => write!(f, "configuration error: {m}"),
+            ConcurError::Json { offset, message } => {
+                write!(f, "json parse error at byte {offset}: {message}")
+            }
+            ConcurError::Artifact(m) => write!(f, "artifact error: {m}"),
+            ConcurError::Runtime(m) => write!(f, "runtime error: {m}"),
+            ConcurError::Engine(m) => write!(f, "engine error: {m}"),
+            ConcurError::Workload(m) => write!(f, "workload error: {m}"),
+            ConcurError::Io(e) => write!(f, "io error: {e}"),
+            ConcurError::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ConcurError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConcurError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConcurError {
+    fn from(e: std::io::Error) -> Self {
+        ConcurError::Io(e)
+    }
 }
 
 impl From<xla::Error> for ConcurError {
@@ -66,5 +85,14 @@ mod tests {
         assert_eq!(e.to_string(), "configuration error: bad batch");
         let e = ConcurError::Json { offset: 12, message: "expected ','".into() };
         assert!(e.to_string().contains("byte 12"));
+    }
+
+    #[test]
+    fn io_errors_chain_as_source() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = ConcurError::from(io);
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(e.source().is_some());
     }
 }

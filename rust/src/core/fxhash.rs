@@ -1,0 +1,93 @@
+//! Fast deterministic hashing for hot-path maps.
+//!
+//! `std::collections::HashMap`'s default `RandomState` (SipHash-1-3) costs
+//! tens of nanoseconds per lookup and seeds itself randomly per process.
+//! The radix tree does one child lookup per matched node per request, so
+//! the hash is squarely on the serving hot path — and determinism across
+//! processes is a crate-wide invariant.  This is the well-known FxHash
+//! multiply-rotate construction (rustc's internal hasher): not DoS-hardened,
+//! which is fine for token-id keys we generate ourselves.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// FxHash: one multiply + rotate per word, deterministic, zero state.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// Drop-in `HashMap` with the fast deterministic hasher.
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a: FxHashMap<u32, u32> = FxHashMap::default();
+        let mut b: FxHashMap<u32, u32> = FxHashMap::default();
+        for i in 0..100u32 {
+            a.insert(i * 7, i);
+            b.insert(i * 7, i);
+        }
+        assert_eq!(a.get(&21), Some(&3));
+        assert_eq!(b.get(&21), Some(&3));
+        // Same build hasher => identical hashes for identical keys.
+        use std::hash::{BuildHasher, Hash};
+        let bh = FxBuildHasher::default();
+        let h = |k: u32| {
+            let mut s = bh.build_hasher();
+            k.hash(&mut s);
+            s.finish()
+        };
+        assert_eq!(h(42), h(42));
+        assert_ne!(h(42), h(43));
+    }
+}

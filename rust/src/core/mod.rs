@@ -2,10 +2,12 @@
 //! time, deterministic RNG, a minimal JSON codec and the crate error type.
 
 pub mod error;
+pub mod fxhash;
 pub mod json;
 pub mod rng;
 
 pub use error::{ConcurError, Result};
+pub use fxhash::FxHashMap;
 pub use rng::Rng;
 
 /// Token identifier (byte-level vocab on the real-model path; synthetic ids

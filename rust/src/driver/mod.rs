@@ -67,6 +67,70 @@ pub fn run_job(job: &JobConfig) -> Result<RunResult> {
     run_with(&mut engine, agents, controller)
 }
 
+/// Run every job serially, in order.  Reference implementation for
+/// [`run_jobs_parallel`]; results are positionally aligned with `jobs`.
+pub fn run_jobs(jobs: &[JobConfig]) -> Vec<Result<RunResult>> {
+    jobs.iter().map(run_job).collect()
+}
+
+/// Fan a batch of independent jobs out across CPU cores.
+///
+/// Jobs are deterministic functions of their config (every RNG is seeded),
+/// so results are **bit-identical** to [`run_jobs`] regardless of thread
+/// count or scheduling: workers pull indices from a shared counter and
+/// results are scattered back by index.  This is what lets a full paper
+/// reproduction (tables × figures × sweeps) saturate a box instead of
+/// running one simulation at a time.
+pub fn run_jobs_parallel(jobs: &[JobConfig]) -> Vec<Result<RunResult>> {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    run_jobs_parallel_with(jobs, threads)
+}
+
+/// [`run_jobs_parallel`] with an explicit worker count (`0`/`1` ⇒ serial).
+pub fn run_jobs_parallel_with(
+    jobs: &[JobConfig],
+    threads: usize,
+) -> Vec<Result<RunResult>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let threads = threads.min(jobs.len());
+    if threads <= 1 {
+        return run_jobs(jobs);
+    }
+    let next = AtomicUsize::new(0);
+    let per_worker: Vec<Vec<(usize, Result<RunResult>)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut done = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        done.push((i, run_job(&jobs[i])));
+                    }
+                    done
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+    let mut results: Vec<Option<Result<RunResult>>> =
+        (0..jobs.len()).map(|_| None).collect();
+    for (i, r) in per_worker.into_iter().flatten() {
+        debug_assert!(results[i].is_none(), "job {i} ran twice");
+        results[i] = Some(r);
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("every job produces exactly one result"))
+        .collect()
+}
+
 /// Run with explicit parts (used by repro harnesses that customize the
 /// engine, e.g. shrunken pools for unit-scale studies).
 pub fn run_with(
@@ -313,5 +377,43 @@ mod tests {
     fn request_cap_sets_engine_cap() {
         let r = run_job(&small_job(SchedulerKind::RequestCap(2))).unwrap();
         assert_eq!(r.agents_finished, 8);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_bitwise() {
+        let jobs: Vec<JobConfig> = vec![
+            small_job(SchedulerKind::Uncontrolled),
+            small_job(SchedulerKind::Concur(AimdParams::default())),
+            small_job(SchedulerKind::AgentCap(2)),
+            small_job(SchedulerKind::RequestCap(2)),
+        ];
+        let serial = run_jobs(&jobs);
+        let parallel = run_jobs_parallel_with(&jobs, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            let (s, p) = (s.as_ref().unwrap(), p.as_ref().unwrap());
+            assert_eq!(s.total_time, p.total_time);
+            assert_eq!(s.hit_rate, p.hit_rate);
+            assert_eq!(s.counters.decode_tokens, p.counters.decode_tokens);
+            assert_eq!(s.counters.evicted_tokens, p.counters.evicted_tokens);
+            assert_eq!(s.engine_steps, p.engine_steps);
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_preserves_job_order_and_errors() {
+        let mut bad = small_job(SchedulerKind::Uncontrolled);
+        bad.workload.n_agents = 0; // fails validation
+        let jobs = vec![
+            small_job(SchedulerKind::Uncontrolled),
+            bad,
+            small_job(SchedulerKind::AgentCap(2)),
+        ];
+        let results = run_jobs_parallel_with(&jobs, 2);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        assert!(results[2].is_ok());
+        assert_eq!(results[0].as_ref().unwrap().scheduler, "sglang");
+        assert_eq!(results[2].as_ref().unwrap().scheduler, "agent-cap(2)");
     }
 }

@@ -80,6 +80,21 @@ pub struct EngineSignals {
     pub waiting: usize,
 }
 
+/// Snapshot of everything that decided a failed head-of-line admission.
+/// While none of it moves, re-matching the head every step is pure waste
+/// (the verdict cannot change), so `admit` skips it and only replays the
+/// re-match's one side effect — refreshing the matched path's recency.
+#[derive(Debug, Clone)]
+struct AdmitBlock {
+    req: RequestId,
+    tree_epoch: u64,
+    pool_free: u64,
+    evictable: u64,
+    /// Matched path at the failed attempt; re-touched on skipped steps so
+    /// LRU recency evolves exactly as if the full re-match had run.
+    path: Vec<radix::NodeId>,
+}
+
 /// The simulated serving engine for one TP replica.
 pub struct SimEngine {
     pub cfg: EngineConfig,
@@ -98,6 +113,8 @@ pub struct SimEngine {
     /// Set when the over-admission deadlock breaker fires; suppresses new
     /// admissions until a sequence completes (drain-to-fit).
     congested: bool,
+    /// Last failed head-of-line admission attempt (see [`AdmitBlock`]).
+    admit_block: Option<AdmitBlock>,
 }
 
 impl SimEngine {
@@ -122,6 +139,7 @@ impl SimEngine {
             counters: EngineCounters::default(),
             policy,
             congested: false,
+            admit_block: None,
             cfg,
             cost,
         }
@@ -329,6 +347,25 @@ impl SimEngine {
     fn admit(&mut self, now: Micros, out: &mut StepOutcome) -> Micros {
         let mut reload_time = Micros::ZERO;
         while self.running.len() < self.cfg.max_running && !self.congested {
+            // Head-of-line fast path: the head failed to fit before, and
+            // neither the tree epoch nor the free/evictable balance moved
+            // since — the full re-match would reach the same verdict, so
+            // skip it.  (Every structural or content mutation — insert,
+            // split, evict, reload, trim — bumps the epoch, so an
+            // unchanged epoch guarantees the same totals over the same
+            // node path.)  The re-match's only side effect — touching the
+            // matched path's recency — is replayed from the cached path,
+            // so LRU aging is indistinguishable from the full re-match.
+            if let Some(block) = &self.admit_block {
+                if self.waiting.front().is_some_and(|head| head.id == block.req)
+                    && block.tree_epoch == self.tree.epoch()
+                    && block.pool_free == self.pool.free()
+                    && block.evictable == self.tree.evictable_gpu_tokens()
+                {
+                    self.tree.touch_path(&block.path, now);
+                    break;
+                }
+            }
             let Some(req) = self.waiting.pop_front() else { break };
 
             let m = self.tree.match_prefix(&req.prompt, now);
@@ -343,9 +380,17 @@ impl SimEngine {
             let evictable = self.tree.evictable_gpu_tokens();
             if self.pool.free() + evictable < needed {
                 // FIFO head-of-line: wait for memory.
+                self.admit_block = Some(AdmitBlock {
+                    req: req.id,
+                    tree_epoch: self.tree.epoch(),
+                    pool_free: self.pool.free(),
+                    evictable,
+                    path: m.path,
+                });
                 self.waiting.push_front(req);
                 break;
             }
+            self.admit_block = None;
 
             // Reload the CPU-tier prefix over the contended host link.
             let mut cached = m.gpu_tokens;
@@ -392,7 +437,7 @@ impl SimEngine {
             if budget == 0 {
                 break;
             }
-            if self.running[i].phase != SeqPhase::Prefill {
+            if !self.running[i].is_prefill() {
                 continue;
             }
             let remaining = self.running[i].prefill_remaining();
@@ -424,6 +469,33 @@ impl SimEngine {
     /// One decode token per running sequence; preempts the youngest
     /// prefilling sequence if decode cannot allocate (vLLM-style).
     fn run_decode(&mut self, out: &mut StepOutcome, now: Micros) {
+        let n_decode = self.running.iter().filter(|s| s.is_decode()).count() as u64;
+        if n_decode == 0 {
+            return;
+        }
+        // Batched fast path: one pool reservation for the whole decode
+        // batch instead of one ensure_free per sequence.  In Discard mode
+        // a batched eviction pops exactly the LRU prefix the per-sequence
+        // calls would have popped, so outcomes are identical; in Offload
+        // mode batching would merge per-call host-link transfers (changing
+        // PCIe timing), so it is taken only when no eviction is needed.
+        let batched = match self.policy {
+            EvictPolicy::Discard => self.ensure_free(n_decode, now),
+            EvictPolicy::OffloadToCpu => self.pool.can_alloc(n_decode),
+        };
+        if batched {
+            self.pool.alloc(n_decode).expect("reserved above");
+            for seq in &mut self.running {
+                if !seq.is_decode() {
+                    continue;
+                }
+                seq.advance_decode(&mut out.work);
+                self.counters.decode_tokens += 1;
+            }
+            return;
+        }
+        // Memory-pressure path: per-sequence allocation with vLLM-style
+        // recompute preemption, exactly as before.
         let mut i = 0;
         while i < self.running.len() {
             if self.running[i].phase != SeqPhase::Decode {
@@ -448,17 +520,8 @@ impl SimEngine {
                 continue; // sequence stalls this iteration
             }
             self.pool.alloc(1).expect("checked");
-            let seq = &mut self.running[i];
-            seq.private_tokens += 1;
-            let tok = seq.next_gen_token();
-            seq.output.push(tok);
-            seq.generated += 1;
-            out.work.decode_seqs += 1;
-            out.work.decode_ctx_tokens += seq.context_len();
+            self.running[i].advance_decode(&mut out.work);
             self.counters.decode_tokens += 1;
-            if seq.decode_done() {
-                seq.phase = SeqPhase::Finished;
-            }
             i += 1;
         }
     }
@@ -502,10 +565,10 @@ impl SimEngine {
             let seq = self.running.remove(i);
             self.congested = false; // capacity released: admissions may resume
             self.tree.unlock_path(&seq.locked_path);
-            // Full sequence (prompt + output) becomes reusable prefix state.
-            let mut full = seq.req.prompt.clone();
-            full.extend_from_slice(&seq.output);
-            let ins = self.tree.insert(&full, now);
+            // Full sequence (prompt + output) becomes reusable prefix
+            // state; inserted straight from the two slices — no O(context)
+            // concatenation per finished request.
+            let ins = self.tree.insert_parts(&seq.req.prompt, &seq.output, now);
             // The tree took ownership of `new_gpu_tokens` of this request's
             // private slots; anything beyond that duplicates existing cache
             // (another agent inserted the same prefix meanwhile) — free it.
@@ -681,6 +744,27 @@ mod tests {
         assert_eq!(out.admitted, 2);
         assert_eq!(e.running_len(), 2);
         assert_eq!(e.waiting_len(), 4);
+    }
+
+    #[test]
+    fn blocked_head_admits_once_memory_frees() {
+        // Exercises the head-of-line admit cache: while the head doesn't
+        // fit and nothing moves, the re-match is skipped; once capacity
+        // frees (first request finishes and its cache becomes evictable),
+        // the head must still be admitted and complete.
+        let mut e = tiny_engine(10_000);
+        e.submit(mk_req(1, 1, (0..6000).collect(), 30, 0));
+        // Let request 1 occupy the pool.
+        let mut now = Micros::ZERO;
+        for _ in 0..4 {
+            let out = e.step(now);
+            now += out.duration + Micros(1);
+        }
+        // Head-of-line: needs more than the current free pool.
+        e.submit(mk_req(2, 2, (100_000..107_000).collect(), 30, 0));
+        let done = drive(&mut e, 300);
+        assert_eq!(e.counters.finished, 2);
+        assert!(done.iter().any(|f| f.id == RequestId(2)));
     }
 
     #[test]

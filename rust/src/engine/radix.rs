@@ -11,15 +11,38 @@
 //! This is exactly the structure whose recency-based eviction produces
 //! middle-phase thrashing (paper §3): a paused agent's path loses recency
 //! while it waits on a tool, gets evicted, and must be recomputed on resume.
+//!
+//! ## Hot-path representation (see DESIGN.md §Perf)
+//!
+//! * **Token arena.**  All edge labels live in one append-only `Vec<Token>`
+//!   slab; nodes store `(off, len)` ranges into it.  `split()` is two range
+//!   adjustments with zero copies, and `match_prefix` compares the probe
+//!   against contiguous memory.  Discarded leaves leak their arena range —
+//!   bounded by the total tokens ever inserted in a run, which is fine for
+//!   simulation lifetimes and keeps the slab append-only.
+//! * **Intrusive LRU list.**  Eviction candidates sit on a doubly-linked
+//!   list threaded through the nodes, kept sorted by `(last_access,
+//!   version, id)` — the exact pop order of the lazy binary heap this
+//!   replaced, so eviction decisions (and therefore every simulation
+//!   result) are bit-identical.  Touch/pop/fresh-insert are O(1);
+//!   re-inserting a node whose stamp went stale while it was off-list
+//!   (e.g. unlock after a long-held lock) walks backward from the tail
+//!   past candidates newer than that stamp — see `lru_insert` for the
+//!   cost trade-off.  Membership mirrors the old
+//!   heap's "has a currently-valid entry" rule: a node touched after its
+//!   last `push_candidate` is *not* evictable until the next push — that
+//!   quirk is load-bearing for which caches survive, so it is preserved.
+//! * **Incremental counters.**  `node_count` and the per-node GPU-child
+//!   count (`is_gpu_leaf`) are maintained on every mutation instead of
+//!   being recomputed by scans.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
-
-use crate::core::{Micros, Token};
+use crate::core::{FxHashMap, Micros, Token};
 
 pub type NodeId = usize;
 
 const ROOT: NodeId = 0;
+/// Null link for the intrusive LRU list.
+const NIL: NodeId = usize::MAX;
 
 /// Where a node's KV currently lives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,24 +53,94 @@ pub enum Residency {
 
 #[derive(Debug)]
 struct Node {
-    key: Vec<Token>,
-    children: HashMap<Token, NodeId>,
+    /// Edge label: `arena[off..off + len]`.
+    off: usize,
+    len: usize,
+    children: FxHashMap<Token, NodeId>,
     parent: NodeId,
     ref_count: u32,
     /// Number of locked nodes in this node's subtree (including itself).
     /// A node with `pin_count > 0` lies on a root→locked path and cannot
     /// be reclaimed; maintained incrementally by lock/unlock walks.
     pin_count: u32,
+    /// Children currently GPU-resident; 0 ⇒ this node is a *GPU leaf*
+    /// (its subtree holds no other GPU memory) and may be evicted.
+    gpu_children: u32,
     last_access: Micros,
+    /// Bumped on every access; a node whose version moved past its last
+    /// `push_candidate` is off the LRU list until re-pushed.
+    version: u64,
     residency: Residency,
     alive: bool,
-    /// Bumped on every access; stale LRU heap entries are skipped.
-    version: u64,
+    /// Intrusive LRU links (NIL when not on the list).
+    lru_prev: NodeId,
+    lru_next: NodeId,
+    in_lru: bool,
 }
 
 impl Node {
     fn tokens(&self) -> u64 {
-        self.key.len() as u64
+        self.len as u64
+    }
+}
+
+/// A probe sequence presented as up to two back-to-back slices, so callers
+/// can match/insert `prompt ⧺ output` without materialising the
+/// concatenation (the `collect_finished` hot path).
+#[derive(Clone, Copy)]
+struct Probe<'a> {
+    a: &'a [Token],
+    b: &'a [Token],
+}
+
+impl<'a> Probe<'a> {
+    fn len(&self) -> usize {
+        self.a.len() + self.b.len()
+    }
+
+    #[inline]
+    fn at(&self, pos: usize) -> Token {
+        if pos < self.a.len() {
+            self.a[pos]
+        } else {
+            self.b[pos - self.a.len()]
+        }
+    }
+
+    /// Length of the common run between `key` and `self[pos..]`, capped at
+    /// `key.len()`.  Whole-segment slice equality compiles to memcmp, which
+    /// dominates on full-edge matches (agent-history reuse).
+    fn common_with(&self, key: &[Token], pos: usize) -> usize {
+        let maxcmp = key.len().min(self.len() - pos);
+        let mut done = 0usize;
+        while done < maxcmp {
+            let p = pos + done;
+            let (seg, seg_off) = if p < self.a.len() {
+                (self.a, p)
+            } else {
+                (self.b, p - self.a.len())
+            };
+            let n = (seg.len() - seg_off).min(maxcmp - done);
+            let k = &key[done..done + n];
+            let s = &seg[seg_off..seg_off + n];
+            if k == s {
+                done += n;
+            } else {
+                done += k.iter().zip(s).take_while(|(x, y)| x == y).count();
+                break;
+            }
+        }
+        done
+    }
+
+    /// Append `self[from..]` to the arena.
+    fn extend_arena(&self, arena: &mut Vec<Token>, from: usize) {
+        if from < self.a.len() {
+            arena.extend_from_slice(&self.a[from..]);
+            arena.extend_from_slice(self.b);
+        } else {
+            arena.extend_from_slice(&self.b[from - self.a.len()..]);
+        }
     }
 }
 
@@ -103,34 +196,55 @@ pub enum EvictPolicy {
 pub struct RadixTree {
     nodes: Vec<Node>,
     free_slots: Vec<NodeId>,
+    /// Append-only token slab backing every edge label.
+    arena: Vec<Token>,
     gpu_tokens: u64,
     cpu_tokens: u64,
     /// GPU tokens pinned by locked paths (incremental; see `pin_count`).
     pinned_gpu_tokens: u64,
-    /// Lazy min-heap of eviction candidates: (last_access, version, id).
-    lru: BinaryHeap<Reverse<(Micros, u64, NodeId)>>,
+    /// Live nodes excluding the root (incremental).
+    live_nodes: usize,
+    /// Bumped on every structural or content mutation (insert, split,
+    /// evict, reload, trim).  An unchanged epoch guarantees a repeated
+    /// match of the same probe returns the same totals over the same node
+    /// path — what lets the engine skip redundant head-of-line re-matches
+    /// and replay their recency touches from a cached path.
+    epoch: u64,
+    /// Intrusive LRU list of eviction candidates, sorted ascending by
+    /// `(last_access, version, id)` — head is the eviction victim.
+    lru_head: NodeId,
+    lru_tail: NodeId,
 }
 
 impl RadixTree {
     pub fn new() -> RadixTree {
         let root = Node {
-            key: Vec::new(),
-            children: HashMap::new(),
+            off: 0,
+            len: 0,
+            children: FxHashMap::default(),
             parent: ROOT,
             ref_count: 1, // the root is never evictable
             pin_count: 0,
+            gpu_children: 0,
             last_access: Micros::ZERO,
+            version: 0,
             residency: Residency::Gpu,
             alive: true,
-            version: 0,
+            lru_prev: NIL,
+            lru_next: NIL,
+            in_lru: false,
         };
         RadixTree {
             nodes: vec![root],
             free_slots: Vec::new(),
+            arena: Vec::new(),
             gpu_tokens: 0,
             cpu_tokens: 0,
             pinned_gpu_tokens: 0,
-            lru: BinaryHeap::new(),
+            live_nodes: 0,
+            epoch: 0,
+            lru_head: NIL,
+            lru_tail: NIL,
         }
     }
 
@@ -145,14 +259,28 @@ impl RadixTree {
         self.cpu_tokens
     }
 
-    /// Number of live nodes (excluding the root).
+    /// Number of live nodes (excluding the root).  O(1).
     pub fn node_count(&self) -> usize {
-        self.nodes.iter().filter(|n| n.alive).count() - 1
+        self.live_nodes
+    }
+
+    /// Mutation epoch: unchanged epoch (plus unchanged pool state) means a
+    /// repeated `match_prefix` of the same probe returns the same totals
+    /// over the same node path.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Total tokens ever appended to the arena (diagnostics; the slab is
+    /// append-only, so this bounds resident slab memory).
+    pub fn arena_len(&self) -> usize {
+        self.arena.len()
     }
 
     // -- allocation ---------------------------------------------------------
 
     fn alloc_node(&mut self, node: Node) -> NodeId {
+        self.live_nodes += 1;
         if let Some(id) = self.free_slots.pop() {
             self.nodes[id] = node;
             id
@@ -163,6 +291,12 @@ impl RadixTree {
     }
 
     fn touch(&mut self, id: NodeId, now: Micros) {
+        if self.nodes[id].in_lru {
+            // The old lazy heap never re-pushed on touch, so a touched
+            // candidate stayed unevictable until the next push_candidate.
+            // Dropping it from the list preserves that exactly.
+            self.lru_remove(id);
+        }
         let node = &mut self.nodes[id];
         node.last_access = now;
         node.version += 1;
@@ -171,41 +305,101 @@ impl RadixTree {
     /// True when `id` has no GPU-resident children.  In Offload mode a
     /// node's children may be demoted to the CPU tier without being
     /// removed; the node is then a *GPU leaf* and must stay evictable or
-    /// GPU inner nodes leak unreclaimably.
+    /// GPU inner nodes leak unreclaimably.  O(1) via the incremental
+    /// `gpu_children` counter.
     fn is_gpu_leaf(&self, id: NodeId) -> bool {
-        self.nodes[id]
-            .children
-            .values()
-            .all(|&c| self.nodes[c].residency == Residency::Cpu)
+        self.nodes[id].gpu_children == 0
     }
 
-    /// Register `id` as a potential LRU candidate with its current stamp.
+    // -- intrusive LRU list -------------------------------------------------
+
+    fn lru_key(&self, id: NodeId) -> (Micros, u64, NodeId) {
+        let n = &self.nodes[id];
+        (n.last_access, n.version, id)
+    }
+
+    fn lru_remove(&mut self, id: NodeId) {
+        debug_assert!(self.nodes[id].in_lru);
+        let (prev, next) = (self.nodes[id].lru_prev, self.nodes[id].lru_next);
+        if prev == NIL {
+            self.lru_head = next;
+        } else {
+            self.nodes[prev].lru_next = next;
+        }
+        if next == NIL {
+            self.lru_tail = prev;
+        } else {
+            self.nodes[next].lru_prev = prev;
+        }
+        let n = &mut self.nodes[id];
+        n.lru_prev = NIL;
+        n.lru_next = NIL;
+        n.in_lru = false;
+    }
+
+    /// Insert `id` at its sorted position.  Fresh-stamped entries (new
+    /// leaves, just-touched pushes) are a tail append, O(1).  Stale-stamped
+    /// re-entries (unlock after a long-held lock, leaf transitions) walk
+    /// backward past every candidate that entered since that stamp —
+    /// worst-case O(live candidates) per re-entry, the price of replacing
+    /// the heap's O(log n) push while keeping its exact pop order.  The
+    /// dominant operations (touch, pop, fresh insert) stay O(1); if
+    /// profiles ever show the walk dominating on pause-heavy fleets, an
+    /// ordered index over the same (stamp, version, id) keys is the
+    /// drop-in fix (see ROADMAP "Open items").
+    fn lru_insert(&mut self, id: NodeId) {
+        debug_assert!(!self.nodes[id].in_lru);
+        let key = self.lru_key(id);
+        let mut after = self.lru_tail;
+        while after != NIL && self.lru_key(after) > key {
+            after = self.nodes[after].lru_prev;
+        }
+        let before = if after == NIL {
+            let h = self.lru_head;
+            self.lru_head = id;
+            h
+        } else {
+            let n = self.nodes[after].lru_next;
+            self.nodes[after].lru_next = id;
+            n
+        };
+        if before == NIL {
+            self.lru_tail = id;
+        } else {
+            self.nodes[before].lru_prev = id;
+        }
+        let n = &mut self.nodes[id];
+        n.lru_prev = after;
+        n.lru_next = before;
+        n.in_lru = true;
+    }
+
+    /// Register `id` as an LRU candidate (no-op if already registered or
+    /// ineligible) — the analogue of the old heap push.
     fn push_candidate(&mut self, id: NodeId) {
         if id == ROOT {
             return;
         }
         let n = &self.nodes[id];
         if n.alive
+            && !n.in_lru
             && n.ref_count == 0
             && n.residency == Residency::Gpu
-            && self.is_gpu_leaf(id)
+            && n.gpu_children == 0
         {
-            self.lru.push(Reverse((n.last_access, n.version, id)));
+            self.lru_insert(id);
         }
     }
 
     /// Split `id`'s edge so its first `at` tokens become a new parent node.
-    /// Returns the new parent's id.
+    /// Returns the new parent's id.  Zero-copy: both halves keep pointing
+    /// into the shared arena.
     fn split(&mut self, id: NodeId, at: usize) -> NodeId {
-        debug_assert!(at > 0 && at < self.nodes[id].key.len());
-        let (upper_key, parent, last_access, residency) = {
-            let n = &mut self.nodes[id];
-            let upper_key: Vec<Token> = n.key[..at].to_vec();
-            let rest: Vec<Token> = n.key[at..].to_vec();
-            n.key = rest;
-            (upper_key, n.parent, n.last_access, n.residency)
+        debug_assert!(at > 0 && at < self.nodes[id].len);
+        let (off, parent, last_access, residency) = {
+            let n = &self.nodes[id];
+            (n.off, n.parent, n.last_access, n.residency)
         };
-        let first_upper = upper_key[0];
         // Locks live on the *deepest* node of a request's path only (see
         // `lock_path`), so the new upper node starts unreferenced: the
         // still-locked lower half protects it transitively via the child
@@ -213,22 +407,42 @@ impl RadixTree {
         // unlocks the lower node.
         let lower_pins = self.nodes[id].pin_count;
         let upper = self.alloc_node(Node {
-            key: upper_key,
-            children: HashMap::new(),
+            off,
+            len: at,
+            children: FxHashMap::default(),
             parent,
             ref_count: 0,
             // The upper half sits on every root→locked path the lower half
             // is on; pinned-token totals are unchanged by the split.
             pin_count: lower_pins,
+            // The lower half is the upper's only child and shares its
+            // residency.
+            gpu_children: if residency == Residency::Gpu { 1 } else { 0 },
             last_access,
+            version: 0,
             residency,
             alive: true,
-            version: 0,
+            lru_prev: NIL,
+            lru_next: NIL,
+            in_lru: false,
         });
-        let first_lower = self.nodes[id].key[0];
+        {
+            let n = &mut self.nodes[id];
+            n.off = off + at;
+            n.len -= at;
+            n.parent = upper;
+        }
+        // `id` keeps its identity, (stamp, version) and therefore its LRU
+        // position — only its token range shrank, exactly as the old heap
+        // entry kept pointing at the shrunken node.
+        let first_upper = self.arena[off];
+        let first_lower = self.arena[off + at];
         self.nodes[upper].children.insert(first_lower, id);
-        self.nodes[id].parent = upper;
         self.nodes[parent].children.insert(first_upper, upper);
+        // A split leaves match totals unchanged but alters path structure;
+        // bumping the epoch keeps cached paths (the engine's blocked-head
+        // fast path) from straddling a node they no longer fully cover.
+        self.epoch += 1;
         upper
     }
 
@@ -237,29 +451,23 @@ impl RadixTree {
     /// Match `tokens` against the tree, splitting edges so the matched
     /// prefix is covered by whole nodes.  Updates recency on the path.
     pub fn match_prefix(&mut self, tokens: &[Token], now: Micros) -> MatchResult {
+        self.match_probe(Probe { a: tokens, b: &[] }, now)
+    }
+
+    fn match_probe(&mut self, p: Probe<'_>, now: Micros) -> MatchResult {
         let mut result = MatchResult::default();
         let mut cur = ROOT;
         let mut pos = 0usize;
-        while pos < tokens.len() {
-            let Some(&child) = self.nodes[cur].children.get(&tokens[pos]) else {
+        let total = p.len();
+        while pos < total {
+            let Some(&child) = self.nodes[cur].children.get(&p.at(pos)) else {
                 break;
             };
-            let klen = self.nodes[child].key.len();
-            let maxcmp = klen.min(tokens.len() - pos);
-            let same = {
-                let key = &self.nodes[child].key;
-                // Fast path: whole-window slice equality compiles to memcmp
-                // (full-edge matches dominate agent-history reuse).
-                if key[..maxcmp] == tokens[pos..pos + maxcmp] {
-                    maxcmp
-                } else {
-                    key[..maxcmp]
-                        .iter()
-                        .zip(&tokens[pos..pos + maxcmp])
-                        .take_while(|(a, b)| a == b)
-                        .count()
-                }
+            let (off, klen) = {
+                let n = &self.nodes[child];
+                (n.off, n.len)
             };
+            let same = p.common_with(&self.arena[off..off + klen], pos);
             if same == 0 {
                 break;
             }
@@ -284,30 +492,73 @@ impl RadixTree {
         result
     }
 
+    /// Re-touch `path` (recency refresh) without re-matching — used by the
+    /// engine so a blocked head-of-line request's matched prefix ages
+    /// exactly as the per-step re-match it replaces would have kept it
+    /// fresh.  Callers must ensure the tree is structurally unchanged since
+    /// the path was obtained (the engine's epoch/free/evictable guard
+    /// does).
+    pub fn touch_path(&mut self, path: &[NodeId], now: Micros) {
+        for &id in path {
+            debug_assert!(self.nodes[id].alive);
+            self.touch(id, now);
+        }
+    }
+
     /// Insert `tokens`, reusing any matched prefix.  New tokens land on GPU.
     pub fn insert(&mut self, tokens: &[Token], now: Micros) -> InsertResult {
-        let m = self.match_prefix(tokens, now);
+        self.insert_probe(Probe { a: tokens, b: &[] }, now)
+    }
+
+    /// Insert the logical concatenation `head ⧺ tail` without materialising
+    /// it — identical tree mutations to `insert(&[head, tail].concat())`.
+    pub fn insert_parts(
+        &mut self,
+        head: &[Token],
+        tail: &[Token],
+        now: Micros,
+    ) -> InsertResult {
+        self.insert_probe(Probe { a: head, b: tail }, now)
+    }
+
+    fn insert_probe(&mut self, p: Probe<'_>, now: Micros) -> InsertResult {
+        let m = self.match_probe(p, now);
         let matched = m.total() as usize;
         let mut path = m.path;
         let cur = path.last().copied().unwrap_or(ROOT);
         let mut new_gpu = 0u64;
-        if matched < tokens.len() {
-            let rest: Vec<Token> = tokens[matched..].to_vec();
-            new_gpu = rest.len() as u64;
-            let first = rest[0];
+        if matched < p.len() {
+            let off = self.arena.len();
+            p.extend_arena(&mut self.arena, matched);
+            let len = self.arena.len() - off;
+            new_gpu = len as u64;
+            let first = self.arena[off];
             let leaf = self.alloc_node(Node {
-                key: rest,
-                children: HashMap::new(),
+                off,
+                len,
+                children: FxHashMap::default(),
                 parent: cur,
                 ref_count: 0,
                 pin_count: 0,
+                gpu_children: 0,
                 last_access: now,
+                version: 0,
                 residency: Residency::Gpu,
                 alive: true,
-                version: 0,
+                lru_prev: NIL,
+                lru_next: NIL,
+                in_lru: false,
             });
+            // `cur` gains a GPU child and stops being a GPU leaf.  (The
+            // match already touched it off the LRU list unless it's the
+            // root; this guard covers direct structural callers.)
+            if self.nodes[cur].in_lru {
+                self.lru_remove(cur);
+            }
             self.nodes[cur].children.insert(first, leaf);
+            self.nodes[cur].gpu_children += 1;
             self.gpu_tokens += new_gpu;
+            self.epoch += 1;
             path.push(leaf);
             self.push_candidate(leaf);
         }
@@ -324,6 +575,9 @@ impl RadixTree {
     pub fn lock_path(&mut self, path: &[NodeId]) {
         if let Some(&last) = path.last() {
             debug_assert!(self.nodes[last].alive);
+            if self.nodes[last].in_lru {
+                self.lru_remove(last);
+            }
             self.nodes[last].ref_count += 1;
             // Pin the root→last chain (O(depth), keeps the evictable
             // counter O(1) to read — the controller samples it every step).
@@ -332,7 +586,7 @@ impl RadixTree {
                 let n = &mut self.nodes[id];
                 n.pin_count += 1;
                 if n.pin_count == 1 && n.residency == Residency::Gpu {
-                    self.pinned_gpu_tokens += n.key.len() as u64;
+                    self.pinned_gpu_tokens += n.len as u64;
                 }
                 id = n.parent;
             }
@@ -350,7 +604,7 @@ impl RadixTree {
                 debug_assert!(n.pin_count > 0);
                 n.pin_count -= 1;
                 if n.pin_count == 0 && n.residency == Residency::Gpu {
-                    self.pinned_gpu_tokens -= n.key.len() as u64;
+                    self.pinned_gpu_tokens -= n.len as u64;
                 }
                 id = n.parent;
             }
@@ -407,24 +661,22 @@ impl RadixTree {
     pub fn evict(&mut self, want: u64, policy: EvictPolicy) -> EvictResult {
         let mut out = EvictResult::default();
         while out.freed_gpu_tokens < want {
-            let Some(Reverse((stamp, version, id))) = self.lru.pop() else {
+            let id = self.lru_head;
+            if id == NIL {
                 break;
-            };
-            // Lazy validation: skip stale heap entries.
-            let valid = {
-                let n = &self.nodes[id];
-                n.alive
-                    && n.ref_count == 0
-                    && n.residency == Residency::Gpu
-                    && n.version == version
-                    && n.last_access == stamp
-            } && self.is_gpu_leaf(id);
-            if !valid {
-                continue;
             }
+            // List membership is maintained eagerly: the head is always a
+            // currently-valid candidate.
+            debug_assert!({
+                let n = &self.nodes[id];
+                n.alive && n.ref_count == 0 && n.residency == Residency::Gpu
+            } && self.is_gpu_leaf(id));
+            self.lru_remove(id);
             // Discard may only remove fully childless nodes; a GPU node
             // whose children live in the CPU tier (possible when policies
-            // are mixed across calls) must stay to anchor them.
+            // are mixed across calls) must stay to anchor them.  (Like the
+            // old heap's discarded pop, it stays unevictable until the
+            // next push_candidate revalidates it.)
             if policy == EvictPolicy::Discard && !self.nodes[id].children.is_empty() {
                 continue;
             }
@@ -440,8 +692,7 @@ impl RadixTree {
                 EvictPolicy::OffloadToCpu => {
                     out.offloaded_tokens += tokens;
                     self.cpu_tokens += tokens;
-                    let n = &mut self.nodes[id];
-                    if n.pin_count > 0 {
+                    if self.nodes[id].pin_count > 0 {
                         // Pinned via a locked CPU descendant: it leaves the
                         // GPU tier, so it leaves the pinned-GPU total too.
                         self.pinned_gpu_tokens -= tokens;
@@ -452,20 +703,32 @@ impl RadixTree {
                     // A CPU parent whose children are gone stays in the
                     // tree; GPU ancestors may now be leaves.
                     let parent = self.nodes[id].parent;
+                    self.nodes[parent].gpu_children -= 1;
                     self.push_candidate(parent);
                 }
             }
+        }
+        if out.nodes > 0 {
+            self.epoch += 1;
         }
         out
     }
 
     fn remove_leaf(&mut self, id: NodeId) {
         debug_assert!(self.nodes[id].children.is_empty());
+        if self.nodes[id].in_lru {
+            self.lru_remove(id);
+        }
         let parent = self.nodes[id].parent;
-        let first = self.nodes[id].key[0];
+        let first = self.arena[self.nodes[id].off];
         self.nodes[parent].children.remove(&first);
-        self.nodes[id].alive = false;
-        self.nodes[id].key = Vec::new();
+        if self.nodes[id].residency == Residency::Gpu {
+            self.nodes[parent].gpu_children -= 1;
+        }
+        let n = &mut self.nodes[id];
+        n.alive = false;
+        n.len = 0; // arena range leaked by design (append-only slab)
+        self.live_nodes -= 1;
         self.free_slots.push(id);
         // The parent may have become an eviction candidate.
         self.push_candidate(parent);
@@ -478,7 +741,7 @@ impl RadixTree {
             return 0;
         }
         let mut dropped = 0u64;
-        // CPU nodes are not in the GPU LRU heap; scan (rare path).
+        // CPU nodes are not on the GPU LRU list; scan (rare path).
         let mut cpu_leaves: Vec<(Micros, NodeId)> = self
             .nodes
             .iter()
@@ -502,6 +765,9 @@ impl RadixTree {
             dropped += tokens;
             self.remove_leaf(id);
         }
+        if dropped > 0 {
+            self.epoch += 1;
+        }
         dropped
     }
 
@@ -516,37 +782,55 @@ impl RadixTree {
                 n.residency = Residency::Gpu;
                 n.last_access = now;
                 n.version += 1;
-                promoted += n.key.len() as u64;
+                promoted += n.len as u64;
                 if n.pin_count > 0 {
-                    self.pinned_gpu_tokens += n.key.len() as u64;
+                    self.pinned_gpu_tokens += n.len as u64;
+                }
+                // The parent regained a GPU child and stops being a GPU
+                // leaf.  (Parents on the reload path were just touched by
+                // the match, so they are off the list already; this guard
+                // covers out-of-path parents.)
+                let parent = self.nodes[id].parent;
+                self.nodes[parent].gpu_children += 1;
+                if self.nodes[parent].in_lru {
+                    self.lru_remove(parent);
                 }
             }
         }
         self.cpu_tokens -= promoted;
         self.gpu_tokens += promoted;
+        if promoted > 0 {
+            self.epoch += 1;
+        }
         promoted
     }
 
-    /// Debug invariant: recomputed token counters match node contents.
+    /// Debug invariant: recomputed counters match node contents, links and
+    /// the LRU list are consistent.
     pub fn check_invariants(&self) -> std::result::Result<(), String> {
         let mut gpu = 0u64;
         let mut cpu = 0u64;
+        let mut live = 0usize;
         for (id, n) in self.nodes.iter().enumerate() {
             if !n.alive || id == ROOT {
                 continue;
+            }
+            live += 1;
+            if n.off + n.len > self.arena.len() {
+                return Err(format!("node {id} range escapes the arena"));
+            }
+            if n.len == 0 {
+                return Err(format!("live node {id} has an empty edge"));
             }
             match n.residency {
                 Residency::Gpu => gpu += n.tokens(),
                 Residency::Cpu => cpu += n.tokens(),
             }
-            if !n.alive {
-                continue;
-            }
             let parent = &self.nodes[n.parent];
             if !parent.alive {
                 return Err(format!("node {id} has dead parent {}", n.parent));
             }
-            if parent.children.get(&n.key[0]) != Some(&id) {
+            if parent.children.get(&self.arena[n.off]) != Some(&id) {
                 return Err(format!("node {id} not linked from parent"));
             }
         }
@@ -555,6 +839,62 @@ impl RadixTree {
         }
         if cpu != self.cpu_tokens {
             return Err(format!("cpu tokens {cpu} != counter {}", self.cpu_tokens));
+        }
+        if live != self.live_nodes {
+            return Err(format!("live nodes {live} != counter {}", self.live_nodes));
+        }
+        // Incremental GPU-child counters vs reality.
+        for (id, n) in self.nodes.iter().enumerate() {
+            if !n.alive {
+                continue;
+            }
+            let actual = n
+                .children
+                .values()
+                .filter(|&&c| self.nodes[c].residency == Residency::Gpu)
+                .count() as u32;
+            if actual != n.gpu_children {
+                return Err(format!(
+                    "node {id} gpu_children {} != actual {actual}",
+                    n.gpu_children
+                ));
+            }
+        }
+        // LRU list: sorted, flags consistent, members are valid candidates.
+        let mut seen = 0usize;
+        let mut prev = NIL;
+        let mut cur = self.lru_head;
+        while cur != NIL {
+            let n = &self.nodes[cur];
+            if !n.in_lru {
+                return Err(format!("lru node {cur} not flagged in_lru"));
+            }
+            if n.lru_prev != prev {
+                return Err(format!("lru node {cur} has bad prev link"));
+            }
+            if !(n.alive
+                && n.ref_count == 0
+                && n.residency == Residency::Gpu
+                && n.gpu_children == 0)
+            {
+                return Err(format!("lru node {cur} is not a valid candidate"));
+            }
+            if prev != NIL && self.lru_key(prev) >= self.lru_key(cur) {
+                return Err(format!("lru order violated at node {cur}"));
+            }
+            seen += 1;
+            if seen > self.nodes.len() {
+                return Err("lru list contains a cycle".to_string());
+            }
+            prev = cur;
+            cur = n.lru_next;
+        }
+        if prev != self.lru_tail {
+            return Err("lru tail link inconsistent".to_string());
+        }
+        let flagged = self.nodes.iter().filter(|n| n.in_lru).count();
+        if flagged != seen {
+            return Err(format!("{flagged} nodes flagged in_lru, {seen} on list"));
         }
         let fast = self.evictable_gpu_tokens();
         let slow = self.evictable_gpu_tokens_slow();
@@ -621,6 +961,40 @@ mod tests {
     }
 
     #[test]
+    fn split_is_zero_copy() {
+        let mut t = RadixTree::new();
+        t.insert(&toks(0..1000), Micros(1));
+        let before = t.arena_len();
+        t.match_prefix(&toks(0..400), Micros(2)); // forces a split
+        assert_eq!(t.arena_len(), before, "split must not grow the arena");
+        assert_eq!(t.node_count(), 2);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn insert_parts_equals_insert_of_concatenation() {
+        let head = toks(0..500);
+        let tail = toks(9000..9300);
+        let full: Vec<Token> = head.iter().chain(tail.iter()).copied().collect();
+
+        let mut a = RadixTree::new();
+        let mut b = RadixTree::new();
+        a.insert(&toks(0..200), Micros(1));
+        b.insert(&toks(0..200), Micros(1));
+        let ia = a.insert(&full, Micros(2));
+        let ib = b.insert_parts(&head, &tail, Micros(2));
+        assert_eq!(ia.new_gpu_tokens, ib.new_gpu_tokens);
+        assert_eq!(ia.cpu_tokens, ib.cpu_tokens);
+        assert_eq!(ia.path.len(), ib.path.len());
+        assert_eq!(a.gpu_tokens(), b.gpu_tokens());
+        assert_eq!(a.node_count(), b.node_count());
+        // Both trees must now fully match the concatenation.
+        assert_eq!(b.match_prefix(&full, Micros(3)).total(), full.len() as u64);
+        a.check_invariants().unwrap();
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
     fn eviction_frees_lru_first() {
         let mut t = RadixTree::new();
         let a = toks(0..100);
@@ -635,6 +1009,47 @@ mod tests {
         // `a` must still fully match; `b` is gone.
         assert_eq!(t.match_prefix(&a, Micros(4)).gpu_tokens, 100);
         assert_eq!(t.match_prefix(&b, Micros(5)).gpu_tokens, 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn touched_candidate_is_parked_until_repushed() {
+        // Heap-parity quirk: a candidate touched by a bare match loses its
+        // (only) valid LRU registration and survives even a full eviction
+        // sweep until something re-pushes it.
+        let mut t = RadixTree::new();
+        let a = toks(0..100);
+        t.insert(&a, Micros(1)); // leaf pushed as candidate
+        t.match_prefix(&a, Micros(2)); // touch: registration goes stale
+        let ev = t.evict(u64::MAX, EvictPolicy::Discard);
+        assert_eq!(ev.freed_gpu_tokens, 0, "touched leaf must be parked");
+        assert_eq!(t.gpu_tokens(), 100);
+        // An unlock re-push restores evictability.
+        let m = t.match_prefix(&a, Micros(3));
+        t.lock_path(&m.path);
+        t.unlock_path(&m.path);
+        let ev = t.evict(u64::MAX, EvictPolicy::Discard);
+        assert_eq!(ev.freed_gpu_tokens, 100);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stale_stamp_reentry_sorts_before_fresher_candidates() {
+        // A node unlocked long after its last touch must re-enter the LRU
+        // order at its (old) stamp, i.e. be evicted before fresher nodes —
+        // paused agents' caches losing recency is the paper's §3 pathology.
+        let mut t = RadixTree::new();
+        let a = toks(0..100);
+        let b = toks(1000..1100);
+        let ins = t.insert(&a, Micros(1));
+        t.lock_path(&ins.path);
+        t.insert(&b, Micros(50)); // fresher candidate while `a` is locked
+        t.unlock_path(&ins.path); // `a` re-enters with stamp 1
+        let ev = t.evict(10, EvictPolicy::Discard);
+        assert_eq!(ev.freed_gpu_tokens, 100);
+        // `a` (stamp 1) went first; `b` survives.
+        assert_eq!(t.match_prefix(&b, Micros(60)).gpu_tokens, 100);
+        assert_eq!(t.match_prefix(&a, Micros(61)).gpu_tokens, 0);
         t.check_invariants().unwrap();
     }
 
@@ -715,6 +1130,30 @@ mod tests {
         assert!(dropped >= 100);
         assert!(t.cpu_tokens() <= 200);
         t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn epoch_tracks_content_mutations_only() {
+        let mut t = RadixTree::new();
+        let e0 = t.epoch();
+        t.insert(&toks(0..100), Micros(1));
+        let e1 = t.epoch();
+        assert!(e1 > e0, "insert must bump the epoch");
+        let m = t.match_prefix(&toks(0..100), Micros(2));
+        assert_eq!(t.epoch(), e1, "a full (split-free) match must not bump the epoch");
+        // A splitting match changes path structure and must bump it.
+        let mut t2 = RadixTree::new();
+        t2.insert(&toks(0..100), Micros(1));
+        let e2 = t2.epoch();
+        t2.match_prefix(&toks(0..40), Micros(2));
+        assert!(t2.epoch() > e2, "a splitting match must bump the epoch");
+        // Re-arm candidacy (the match parked the leaf), then evict.
+        t.lock_path(&m.path);
+        t.unlock_path(&m.path);
+        assert_eq!(t.epoch(), e1, "lock/unlock must not bump the epoch");
+        let ev = t.evict(u64::MAX, EvictPolicy::OffloadToCpu);
+        assert_eq!(ev.offloaded_tokens, 100);
+        assert!(t.epoch() > e1, "eviction must bump the epoch");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Per-request (one ReAct generation step) state inside the engine.
 
 use crate::core::{AgentId, Micros, RequestId, Token};
+use crate::costmodel::StepWork;
 
 use super::radix::NodeId;
 
@@ -77,16 +78,31 @@ impl RunningSeq {
         }
     }
 
+    #[inline]
     pub fn prompt_len(&self) -> u64 {
         self.req.prompt.len() as u64
     }
 
+    /// In the decode phase (generating one token per iteration)?
+    #[inline]
+    pub fn is_decode(&self) -> bool {
+        self.phase == SeqPhase::Decode
+    }
+
+    /// Still prefilling its uncached prompt suffix?
+    #[inline]
+    pub fn is_prefill(&self) -> bool {
+        self.phase == SeqPhase::Prefill
+    }
+
     /// Prompt tokens still to prefill.
+    #[inline]
     pub fn prefill_remaining(&self) -> u64 {
         self.prompt_len() - self.cached_len - self.prefilled
     }
 
     /// Current total context length (cached + prefilled + generated).
+    #[inline]
     pub fn context_len(&self) -> u64 {
         self.cached_len + self.prefilled + self.generated
     }
@@ -106,11 +122,29 @@ impl RunningSeq {
         }
     }
 
+    /// Apply one decode step — consume the pool slot the caller already
+    /// charged, emit the next token, and record the step's work.  The one
+    /// place decode bookkeeping lives, shared by the engine's batched and
+    /// memory-pressure paths so their accounting can never diverge.
+    pub fn advance_decode(&mut self, work: &mut StepWork) {
+        self.private_tokens += 1;
+        let tok = self.next_gen_token();
+        self.output.push(tok);
+        self.generated += 1;
+        work.decode_seqs += 1;
+        work.decode_ctx_tokens += self.context_len();
+        if self.decode_done() {
+            self.phase = SeqPhase::Finished;
+        }
+    }
+
+    #[inline]
     pub fn decode_done(&self) -> bool {
         self.generated >= self.req.gen.len() as u64
     }
 
     /// The token produced by the next decode step.
+    #[inline]
     pub fn next_gen_token(&self) -> Token {
         self.req.gen[self.generated as usize]
     }

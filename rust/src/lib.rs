@@ -44,3 +44,5 @@ pub mod repro;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+#[doc(hidden)]
+pub mod xla_stub;

@@ -7,24 +7,29 @@ use crate::config::{AimdParams, EvictionMode, SchedulerKind};
 use crate::core::Result;
 use crate::metrics::Table;
 
-use super::{run_system, ExpOutput};
+use super::{run_systems, system_job, ExpOutput};
 
 pub fn run() -> Result<ExpOutput> {
     let cluster = presets::qwen3_cluster(2);
     let workload = presets::qwen3_workload(256);
 
-    let base = run_system(
-        cluster.clone(),
-        workload.clone(),
-        SchedulerKind::Uncontrolled,
-        EvictionMode::Discard,
-    )?;
-    let conc = run_system(
-        cluster,
-        workload,
-        SchedulerKind::Concur(AimdParams::default()),
-        EvictionMode::Discard,
-    )?;
+    // Baseline and CONCUR runs are independent: run them side by side.
+    let mut results = run_systems(vec![
+        system_job(
+            cluster.clone(),
+            workload.clone(),
+            SchedulerKind::Uncontrolled,
+            EvictionMode::Discard,
+        ),
+        system_job(
+            cluster,
+            workload,
+            SchedulerKind::Concur(AimdParams::default()),
+            EvictionMode::Discard,
+        ),
+    ])?;
+    let conc = results.pop().expect("two results");
+    let base = results.pop().expect("two results");
 
     // Resampled series side by side (normalized to each run's duration).
     let n = 24;

@@ -6,18 +6,37 @@ use crate::config::{AimdParams, EvictionMode, SchedulerKind};
 use crate::core::Result;
 use crate::metrics::Table;
 
-use super::{cell_latency, run_system, ExpOutput};
+use super::{cell_latency, run_systems, system_job, ExpOutput};
 
 pub fn run() -> Result<ExpOutput> {
     let cluster = presets::qwen3_cluster(2);
     let workload = presets::qwen3_workload(256);
 
-    let base = run_system(
+    // Uncontrolled + every fixed level + CONCUR: one parallel batch.
+    let mut jobs = vec![system_job(
         cluster.clone(),
         workload.clone(),
         SchedulerKind::Uncontrolled,
         EvictionMode::Discard,
-    )?;
+    )];
+    for level in presets::FIG6_FIXED_LEVELS {
+        jobs.push(system_job(
+            cluster.clone(),
+            workload.clone(),
+            SchedulerKind::AgentCap(level),
+            EvictionMode::Discard,
+        ));
+    }
+    jobs.push(system_job(
+        cluster,
+        workload,
+        SchedulerKind::Concur(AimdParams::default()),
+        EvictionMode::Discard,
+    ));
+    let mut results = run_systems(jobs)?;
+    let conc = results.pop().expect("last job is CONCUR");
+    let fixed = results.split_off(1);
+    let base = results.pop().expect("first job is uncontrolled");
     let b = base.total_time.as_secs_f64();
 
     let mut table = Table::new(
@@ -35,13 +54,7 @@ pub fn run() -> Result<ExpOutput> {
     ]);
 
     let mut best_fixed = f64::INFINITY;
-    for level in presets::FIG6_FIXED_LEVELS {
-        let r = run_system(
-            cluster.clone(),
-            workload.clone(),
-            SchedulerKind::AgentCap(level),
-            EvictionMode::Discard,
-        )?;
+    for (level, r) in presets::FIG6_FIXED_LEVELS.iter().zip(&fixed) {
         let lat = r.total_time.as_secs_f64();
         best_fixed = best_fixed.min(lat);
         table.row(vec![
@@ -55,12 +68,6 @@ pub fn run() -> Result<ExpOutput> {
         ]);
     }
 
-    let conc = run_system(
-        cluster,
-        workload,
-        SchedulerKind::Concur(AimdParams::default()),
-        EvictionMode::Discard,
-    )?;
     let clat = conc.total_time.as_secs_f64();
     table.row(vec![
         "CONCUR (adaptive)".into(),

@@ -62,6 +62,24 @@ impl ExpOutput {
     }
 }
 
+/// Build the repro-standard job for a (cluster, workload, scheduler,
+/// eviction) tuple.
+pub fn system_job(
+    cluster: ClusterSpec,
+    workload: WorkloadConfig,
+    scheduler: SchedulerKind,
+    eviction: EvictionMode,
+) -> JobConfig {
+    let engine = EngineConfig {
+        eviction,
+        // H_t responsiveness matters for the control loop (see DESIGN.md
+        // §CONCUR-implementation-notes).
+        hit_window: 8,
+        ..EngineConfig::default()
+    };
+    JobConfig { cluster, engine, workload, scheduler }
+}
+
 /// Run one job for a (cluster, workload, scheduler, eviction) tuple with
 /// the repro-standard engine settings.
 pub fn run_system(
@@ -70,15 +88,15 @@ pub fn run_system(
     scheduler: SchedulerKind,
     eviction: EvictionMode,
 ) -> Result<RunResult> {
-    let engine = EngineConfig {
-        eviction,
-        // H_t responsiveness matters for the control loop (see DESIGN.md
-        // §CONCUR-implementation-notes).
-        hit_window: 8,
-        ..EngineConfig::default()
-    };
-    let job = JobConfig { cluster, engine, workload, scheduler };
-    run_job(&job)
+    run_job(&system_job(cluster, workload, scheduler, eviction))
+}
+
+/// Run a batch of repro jobs across all cores (results positionally
+/// aligned; first error aborts the harness).  Every table/figure harness
+/// funnels its grid through here so a full paper reproduction fans out
+/// instead of running cell by cell.
+pub fn run_systems(jobs: Vec<JobConfig>) -> Result<Vec<RunResult>> {
+    crate::driver::run_jobs_parallel(&jobs).into_iter().collect()
 }
 
 /// All known experiments in paper order.

@@ -10,7 +10,7 @@ use crate::config::{AimdParams, EvictionMode, SchedulerKind};
 use crate::core::Result;
 use crate::metrics::Table;
 
-use super::{cell_latency, run_system, ExpOutput};
+use super::{cell_latency, run_systems, system_job, ExpOutput};
 
 /// (model label, batch, tp) rows exactly as in the paper.
 pub const ROWS: [(&str, usize, u32); 6] = [
@@ -41,7 +41,8 @@ pub fn run() -> Result<ExpOutput> {
         "CONCUR (s)",
     ]);
 
-    let mut concur_wins = 0usize;
+    // Build the whole 6x4 grid up front and fan it out across cores.
+    let mut jobs = Vec::new();
     for (model, batch, tp) in ROWS {
         let (cluster, workload) = if model.starts_with("Qwen3") {
             (presets::qwen3_cluster(tp), presets::qwen3_workload(batch))
@@ -49,32 +50,36 @@ pub fn run() -> Result<ExpOutput> {
             (presets::dsv3_cluster(tp), presets::dsv3_workload(batch))
         };
         let cap = request_cap_for(batch);
-
-        let base = run_system(
+        jobs.push(system_job(
             cluster.clone(),
             workload.clone(),
             SchedulerKind::Uncontrolled,
             EvictionMode::Discard,
-        )?;
-        let reqc = run_system(
+        ));
+        jobs.push(system_job(
             cluster.clone(),
             workload.clone(),
             SchedulerKind::RequestCap(cap),
             EvictionMode::Discard,
-        )?;
-        let hic = run_system(
+        ));
+        jobs.push(system_job(
             cluster.clone(),
             workload.clone(),
             SchedulerKind::Uncontrolled,
             EvictionMode::Offload,
-        )?;
-        let conc = run_system(
+        ));
+        jobs.push(system_job(
             cluster,
             workload,
             SchedulerKind::Concur(AimdParams::default()),
             EvictionMode::Discard,
-        )?;
+        ));
+    }
+    let results = run_systems(jobs)?;
 
+    let mut concur_wins = 0usize;
+    for (r, (model, batch, tp)) in results.chunks(4).zip(ROWS) {
+        let [base, reqc, hic, conc] = r else { unreachable!("4 systems per row") };
         let b = base.total_time.as_secs_f64();
         let all = [
             b,

@@ -11,7 +11,7 @@ use crate::config::{AimdParams, EvictionMode, SchedulerKind};
 use crate::core::Result;
 use crate::metrics::Table;
 
-use super::{run_system, ExpOutput};
+use super::{run_systems, system_job, ExpOutput};
 
 pub const BATCHES: [usize; 3] = [16, 32, 40];
 
@@ -25,39 +25,44 @@ pub fn run() -> Result<ExpOutput> {
             "CONCUR (%)",
         ]);
 
-    let mut sglang_rates = Vec::new();
-    let mut concur_rates = Vec::new();
-    let mut hicache_rates = Vec::new();
+    // 3 batches x 4 systems, fanned out across cores.
+    let mut jobs = Vec::new();
     for batch in BATCHES {
         let cluster = presets::dsv3_cluster(16);
         let workload = presets::dsv3_workload(batch);
         let cap = super::table1::request_cap_for(batch);
-
-        let base = run_system(
+        jobs.push(system_job(
             cluster.clone(),
             workload.clone(),
             SchedulerKind::Uncontrolled,
             EvictionMode::Discard,
-        )?;
-        let hic = run_system(
+        ));
+        jobs.push(system_job(
             cluster.clone(),
             workload.clone(),
             SchedulerKind::Uncontrolled,
             EvictionMode::Offload,
-        )?;
-        let reqc = run_system(
+        ));
+        jobs.push(system_job(
             cluster.clone(),
             workload.clone(),
             SchedulerKind::RequestCap(cap),
             EvictionMode::Discard,
-        )?;
-        let conc = run_system(
+        ));
+        jobs.push(system_job(
             cluster,
             workload,
             SchedulerKind::Concur(AimdParams::default()),
             EvictionMode::Discard,
-        )?;
+        ));
+    }
+    let results = run_systems(jobs)?;
 
+    let mut sglang_rates = Vec::new();
+    let mut concur_rates = Vec::new();
+    let mut hicache_rates = Vec::new();
+    for (r, batch) in results.chunks(4).zip(BATCHES) {
+        let [base, hic, reqc, conc] = r else { unreachable!("4 systems per batch") };
         sglang_rates.push(base.hit_rate);
         concur_rates.push(conc.hit_rate);
         hicache_rates.push(hic.hit_rate);

@@ -6,14 +6,15 @@ use crate::config::{AimdParams, EvictionMode, SchedulerKind};
 use crate::core::Result;
 use crate::metrics::Table;
 
-use super::{run_system, ExpOutput};
+use super::{run_systems, system_job, ExpOutput};
+use crate::config::JobConfig;
 
 /// Paper's sweep: vary U_high at U_low=0.2, then vary U_low at U_high=0.5.
 pub const U_HIGH_SWEEP: [f64; 4] = [0.4, 0.5, 0.6, 0.8];
 pub const U_LOW_SWEEP: [f64; 4] = [0.1, 0.2, 0.3, 0.5];
 pub const TPS: [u32; 3] = [8, 4, 2];
 
-fn latency(u_low: f64, u_high: f64, tp: u32) -> Result<f64> {
+fn sensitivity_job(u_low: f64, u_high: f64, tp: u32) -> JobConfig {
     // Sensitivity of the *paper's control law* (Eq. 1): the band-probe
     // congestion-avoidance extension is disabled here, otherwise it masks
     // the U_low starvation the paper reports (see EXPERIMENTS.md).
@@ -23,13 +24,12 @@ fn latency(u_low: f64, u_high: f64, tp: u32) -> Result<f64> {
         band_probe_every: 0,
         ..AimdParams::default()
     };
-    let r = run_system(
+    system_job(
         presets::qwen3_cluster(tp),
         presets::qwen3_workload(256),
         SchedulerKind::Concur(p),
         EvictionMode::Discard,
-    )?;
-    Ok(r.total_time.as_secs_f64())
+    )
 }
 
 pub fn run() -> Result<ExpOutput> {
@@ -38,27 +38,35 @@ pub fn run() -> Result<ExpOutput> {
     )
     .header(&["U_low", "U_high", "TP8 (s)", "TP4 (s)", "TP2 (s)"]);
 
-    let mut rows: Vec<(f64, f64, Vec<f64>)> = Vec::new();
+    // Collect the (u_low, u_high) grid, then run rows x TPs in parallel.
+    let mut grid: Vec<(f64, f64)> = Vec::new();
     for &u_high in &U_HIGH_SWEEP {
-        let mut lats = Vec::new();
-        for &tp in &TPS {
-            lats.push(latency(0.2, u_high, tp)?);
-        }
-        rows.push((0.2, u_high, lats));
+        grid.push((0.2, u_high));
     }
     for &u_low in &U_LOW_SWEEP {
         if u_low == 0.2 {
             continue; // (0.2, 0.5) already measured above
         }
-        // u_low = 0.5 with u_high = 0.5 is invalid (must be strictly
-        // ordered); the paper's row is u_low just below; use 0.49.
-        let ul = if u_low >= 0.5 { 0.49 } else { u_low };
-        let mut lats = Vec::new();
-        for &tp in &TPS {
-            lats.push(latency(ul, 0.5, tp)?);
-        }
-        rows.push((u_low, 0.5, lats));
+        grid.push((u_low, 0.5));
     }
+    let jobs: Vec<JobConfig> = grid
+        .iter()
+        .flat_map(|&(u_low, u_high)| {
+            // u_low = 0.5 with u_high = 0.5 is invalid (must be strictly
+            // ordered); the paper's row is u_low just below; use 0.49.
+            let ul = if u_low >= u_high { 0.49 } else { u_low };
+            TPS.iter().map(move |&tp| sensitivity_job(ul, u_high, tp))
+        })
+        .collect();
+    let results = run_systems(jobs)?;
+
+    let rows: Vec<(f64, f64, Vec<f64>)> = grid
+        .iter()
+        .zip(results.chunks(TPS.len()))
+        .map(|(&(u_low, u_high), r)| {
+            (u_low, u_high, r.iter().map(|x| x.total_time.as_secs_f64()).collect())
+        })
+        .collect();
 
     // Identify the default row for the "optimal is (0.2, 0.5)" note.
     let default_lats = rows

@@ -9,6 +9,10 @@
 //! Model parameters are uploaded to the device once at load time and reused
 //! across every call; KV caches round-trip as literals per step (CPU PJRT —
 //! host copies are memcpy-cheap at tiny-model scale).
+//!
+//! The offline build has no PJRT bindings; `crate::xla_stub` provides the
+//! same API and fails with a clear message at client construction, so this
+//! layer stays compiled and the simulator path is unaffected.
 
 pub mod artifacts;
 
@@ -17,6 +21,7 @@ pub use artifacts::{ArtifactKind, Manifest, ModelGeometry};
 use std::collections::HashMap;
 
 use crate::core::{ConcurError, Result};
+use crate::xla_stub as xla;
 
 /// KV cache state for one compiled batch variant, owned by the caller
 /// between steps.  Shapes: `[L, B, T, H, D]` f32.

@@ -145,6 +145,583 @@ fn eviction_is_complete_and_exact() {
     }
 }
 
+/// Pre-arena radix tree, embedded verbatim as a behavioral oracle: per-node
+/// `Vec<Token>` edge labels and the lazy version-stamped `BinaryHeap` LRU.
+/// The production tree (arena + intrusive LRU list) must reproduce its
+/// observable behavior *exactly* — eviction order included — so that the
+/// perf rewrite cannot silently change simulation results.
+mod reference {
+    use std::cmp::Reverse;
+    use std::collections::{BinaryHeap, HashMap};
+
+    use concur::core::{Micros, Token};
+
+    pub type NodeId = usize;
+
+    const ROOT: NodeId = 0;
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Residency {
+        Gpu,
+        Cpu,
+    }
+
+    #[derive(Debug)]
+    struct Node {
+        key: Vec<Token>,
+        children: HashMap<Token, NodeId>,
+        parent: NodeId,
+        ref_count: u32,
+        pin_count: u32,
+        last_access: Micros,
+        residency: Residency,
+        alive: bool,
+        version: u64,
+    }
+
+    impl Node {
+        fn tokens(&self) -> u64 {
+            self.key.len() as u64
+        }
+    }
+
+    #[derive(Debug, Clone, Default)]
+    pub struct MatchResult {
+        pub path: Vec<NodeId>,
+        pub gpu_tokens: u64,
+        pub cpu_tokens: u64,
+    }
+
+    impl MatchResult {
+        pub fn total(&self) -> u64 {
+            self.gpu_tokens + self.cpu_tokens
+        }
+    }
+
+    #[derive(Debug, Clone, Default)]
+    pub struct InsertResult {
+        pub path: Vec<NodeId>,
+        pub new_gpu_tokens: u64,
+        pub cpu_tokens: u64,
+    }
+
+    #[derive(Debug, Clone, Default)]
+    pub struct EvictResult {
+        pub freed_gpu_tokens: u64,
+        pub offloaded_tokens: u64,
+        pub discarded_tokens: u64,
+        pub nodes: usize,
+    }
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum EvictPolicy {
+        Discard,
+        OffloadToCpu,
+    }
+
+    pub struct RadixTree {
+        nodes: Vec<Node>,
+        free_slots: Vec<NodeId>,
+        gpu_tokens: u64,
+        cpu_tokens: u64,
+        pinned_gpu_tokens: u64,
+        lru: BinaryHeap<Reverse<(Micros, u64, NodeId)>>,
+    }
+
+    impl RadixTree {
+        pub fn new() -> RadixTree {
+            let root = Node {
+                key: Vec::new(),
+                children: HashMap::new(),
+                parent: ROOT,
+                ref_count: 1,
+                pin_count: 0,
+                last_access: Micros::ZERO,
+                residency: Residency::Gpu,
+                alive: true,
+                version: 0,
+            };
+            RadixTree {
+                nodes: vec![root],
+                free_slots: Vec::new(),
+                gpu_tokens: 0,
+                cpu_tokens: 0,
+                pinned_gpu_tokens: 0,
+                lru: BinaryHeap::new(),
+            }
+        }
+
+        pub fn gpu_tokens(&self) -> u64 {
+            self.gpu_tokens
+        }
+
+        pub fn cpu_tokens(&self) -> u64 {
+            self.cpu_tokens
+        }
+
+        pub fn node_count(&self) -> usize {
+            self.nodes.iter().filter(|n| n.alive).count() - 1
+        }
+
+        pub fn evictable_gpu_tokens(&self) -> u64 {
+            self.gpu_tokens - self.pinned_gpu_tokens
+        }
+
+        fn alloc_node(&mut self, node: Node) -> NodeId {
+            if let Some(id) = self.free_slots.pop() {
+                self.nodes[id] = node;
+                id
+            } else {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+
+        fn touch(&mut self, id: NodeId, now: Micros) {
+            let node = &mut self.nodes[id];
+            node.last_access = now;
+            node.version += 1;
+        }
+
+        fn is_gpu_leaf(&self, id: NodeId) -> bool {
+            self.nodes[id]
+                .children
+                .values()
+                .all(|&c| self.nodes[c].residency == Residency::Cpu)
+        }
+
+        fn push_candidate(&mut self, id: NodeId) {
+            if id == ROOT {
+                return;
+            }
+            let n = &self.nodes[id];
+            if n.alive
+                && n.ref_count == 0
+                && n.residency == Residency::Gpu
+                && self.is_gpu_leaf(id)
+            {
+                self.lru.push(Reverse((n.last_access, n.version, id)));
+            }
+        }
+
+        fn split(&mut self, id: NodeId, at: usize) -> NodeId {
+            let (upper_key, parent, last_access, residency) = {
+                let n = &mut self.nodes[id];
+                let upper_key: Vec<Token> = n.key[..at].to_vec();
+                let rest: Vec<Token> = n.key[at..].to_vec();
+                n.key = rest;
+                (upper_key, n.parent, n.last_access, n.residency)
+            };
+            let first_upper = upper_key[0];
+            let lower_pins = self.nodes[id].pin_count;
+            let upper = self.alloc_node(Node {
+                key: upper_key,
+                children: HashMap::new(),
+                parent,
+                ref_count: 0,
+                pin_count: lower_pins,
+                last_access,
+                residency,
+                alive: true,
+                version: 0,
+            });
+            let first_lower = self.nodes[id].key[0];
+            self.nodes[upper].children.insert(first_lower, id);
+            self.nodes[id].parent = upper;
+            self.nodes[parent].children.insert(first_upper, upper);
+            upper
+        }
+
+        pub fn match_prefix(&mut self, tokens: &[Token], now: Micros) -> MatchResult {
+            let mut result = MatchResult::default();
+            let mut cur = ROOT;
+            let mut pos = 0usize;
+            while pos < tokens.len() {
+                let Some(&child) = self.nodes[cur].children.get(&tokens[pos]) else {
+                    break;
+                };
+                let klen = self.nodes[child].key.len();
+                let maxcmp = klen.min(tokens.len() - pos);
+                let same = {
+                    let key = &self.nodes[child].key;
+                    if key[..maxcmp] == tokens[pos..pos + maxcmp] {
+                        maxcmp
+                    } else {
+                        key[..maxcmp]
+                            .iter()
+                            .zip(&tokens[pos..pos + maxcmp])
+                            .take_while(|(a, b)| a == b)
+                            .count()
+                    }
+                };
+                if same == 0 {
+                    break;
+                }
+                let matched_node = if same < klen {
+                    self.split(child, same)
+                } else {
+                    child
+                };
+                self.touch(matched_node, now);
+                match self.nodes[matched_node].residency {
+                    Residency::Gpu => result.gpu_tokens += same as u64,
+                    Residency::Cpu => result.cpu_tokens += same as u64,
+                }
+                result.path.push(matched_node);
+                pos += same;
+                cur = matched_node;
+                if same < klen {
+                    break;
+                }
+            }
+            result
+        }
+
+        pub fn insert(&mut self, tokens: &[Token], now: Micros) -> InsertResult {
+            let m = self.match_prefix(tokens, now);
+            let matched = m.total() as usize;
+            let mut path = m.path;
+            let cur = path.last().copied().unwrap_or(ROOT);
+            let mut new_gpu = 0u64;
+            if matched < tokens.len() {
+                let rest: Vec<Token> = tokens[matched..].to_vec();
+                new_gpu = rest.len() as u64;
+                let first = rest[0];
+                let leaf = self.alloc_node(Node {
+                    key: rest,
+                    children: HashMap::new(),
+                    parent: cur,
+                    ref_count: 0,
+                    pin_count: 0,
+                    last_access: now,
+                    residency: Residency::Gpu,
+                    alive: true,
+                    version: 0,
+                });
+                self.nodes[cur].children.insert(first, leaf);
+                self.gpu_tokens += new_gpu;
+                path.push(leaf);
+                self.push_candidate(leaf);
+            }
+            InsertResult { path, new_gpu_tokens: new_gpu, cpu_tokens: m.cpu_tokens }
+        }
+
+        pub fn lock_path(&mut self, path: &[NodeId]) {
+            if let Some(&last) = path.last() {
+                self.nodes[last].ref_count += 1;
+                let mut id = last;
+                while id != ROOT {
+                    let n = &mut self.nodes[id];
+                    n.pin_count += 1;
+                    if n.pin_count == 1 && n.residency == Residency::Gpu {
+                        self.pinned_gpu_tokens += n.key.len() as u64;
+                    }
+                    id = n.parent;
+                }
+            }
+        }
+
+        pub fn unlock_path(&mut self, path: &[NodeId]) {
+            if let Some(&last) = path.last() {
+                self.nodes[last].ref_count -= 1;
+                let mut id = last;
+                while id != ROOT {
+                    let n = &mut self.nodes[id];
+                    n.pin_count -= 1;
+                    if n.pin_count == 0 && n.residency == Residency::Gpu {
+                        self.pinned_gpu_tokens -= n.key.len() as u64;
+                    }
+                    id = n.parent;
+                }
+                self.push_candidate(last);
+            }
+        }
+
+        pub fn evict(&mut self, want: u64, policy: EvictPolicy) -> EvictResult {
+            let mut out = EvictResult::default();
+            while out.freed_gpu_tokens < want {
+                let Some(Reverse((stamp, version, id))) = self.lru.pop() else {
+                    break;
+                };
+                let valid = {
+                    let n = &self.nodes[id];
+                    n.alive
+                        && n.ref_count == 0
+                        && n.residency == Residency::Gpu
+                        && n.version == version
+                        && n.last_access == stamp
+                } && self.is_gpu_leaf(id);
+                if !valid {
+                    continue;
+                }
+                if policy == EvictPolicy::Discard && !self.nodes[id].children.is_empty()
+                {
+                    continue;
+                }
+                let tokens = self.nodes[id].tokens();
+                out.freed_gpu_tokens += tokens;
+                out.nodes += 1;
+                self.gpu_tokens -= tokens;
+                match policy {
+                    EvictPolicy::Discard => {
+                        out.discarded_tokens += tokens;
+                        self.remove_leaf(id);
+                    }
+                    EvictPolicy::OffloadToCpu => {
+                        out.offloaded_tokens += tokens;
+                        self.cpu_tokens += tokens;
+                        let n = &mut self.nodes[id];
+                        if n.pin_count > 0 {
+                            self.pinned_gpu_tokens -= tokens;
+                        }
+                        let n = &mut self.nodes[id];
+                        n.residency = Residency::Cpu;
+                        n.version += 1;
+                        let parent = self.nodes[id].parent;
+                        self.push_candidate(parent);
+                    }
+                }
+            }
+            out
+        }
+
+        fn remove_leaf(&mut self, id: NodeId) {
+            let parent = self.nodes[id].parent;
+            let first = self.nodes[id].key[0];
+            self.nodes[parent].children.remove(&first);
+            self.nodes[id].alive = false;
+            self.nodes[id].key = Vec::new();
+            self.free_slots.push(id);
+            self.push_candidate(parent);
+        }
+
+        pub fn trim_cpu(&mut self, limit: u64) -> u64 {
+            if self.cpu_tokens <= limit {
+                return 0;
+            }
+            let mut dropped = 0u64;
+            let mut cpu_leaves: Vec<(Micros, NodeId)> = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(id, n)| {
+                    *id != ROOT
+                        && n.alive
+                        && n.residency == Residency::Cpu
+                        && n.children.is_empty()
+                        && n.ref_count == 0
+                })
+                .map(|(id, n)| (n.last_access, id))
+                .collect();
+            cpu_leaves.sort_unstable();
+            for (_, id) in cpu_leaves {
+                if self.cpu_tokens <= limit {
+                    break;
+                }
+                let tokens = self.nodes[id].tokens();
+                self.cpu_tokens -= tokens;
+                dropped += tokens;
+                self.remove_leaf(id);
+            }
+            dropped
+        }
+
+        pub fn reload_path(&mut self, path: &[NodeId], now: Micros) -> u64 {
+            let mut promoted = 0u64;
+            for &id in path {
+                let n = &mut self.nodes[id];
+                if n.alive && n.residency == Residency::Cpu {
+                    n.residency = Residency::Gpu;
+                    n.last_access = now;
+                    n.version += 1;
+                    promoted += n.key.len() as u64;
+                    if n.pin_count > 0 {
+                        self.pinned_gpu_tokens += n.key.len() as u64;
+                    }
+                }
+            }
+            self.cpu_tokens -= promoted;
+            self.gpu_tokens += promoted;
+            promoted
+        }
+    }
+}
+
+/// PROPERTY (differential): the arena + intrusive-LRU tree is observably
+/// identical to the pre-rewrite implementation — same match/insert/evict/
+/// reload/trim token counts, same path lengths, same global counters —
+/// under arbitrary interleavings of every operation, in both eviction
+/// policies.  Inserts randomly go through `insert_parts` to also pin the
+/// two-slice insert path to the concatenated-insert semantics.
+#[test]
+fn arena_tree_matches_reference_implementation() {
+    use concur::engine::RadixTree as NewTree;
+
+    use crate::reference::RadixTree as RefTree;
+
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(9000 + seed);
+        let mut new_t = NewTree::new();
+        let mut ref_t = RefTree::new();
+        // Parallel lock stacks: each implementation locks its own node ids.
+        let mut locked: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
+        let mut clockv = 0u64;
+        for op in 0..300 {
+            clockv += 1;
+            let now = Micros(clockv);
+            match rng.gen_range(0, 12) {
+                0..=3 => {
+                    let seq = random_seq(&mut rng, 300);
+                    let cut = rng.gen_range(0, seq.len() as u64 + 1) as usize;
+                    let a = new_t.insert_parts(&seq[..cut], &seq[cut..], now);
+                    let b = ref_t.insert(&seq, now);
+                    assert_eq!(a.new_gpu_tokens, b.new_gpu_tokens, "seed {seed} op {op}");
+                    assert_eq!(a.cpu_tokens, b.cpu_tokens, "seed {seed} op {op}");
+                    assert_eq!(a.path.len(), b.path.len(), "seed {seed} op {op}");
+                    if rng.chance(0.35) && !a.path.is_empty() {
+                        new_t.lock_path(&a.path);
+                        ref_t.lock_path(&b.path);
+                        locked.push((a.path.clone(), b.path.clone()));
+                    }
+                }
+                4..=5 => {
+                    let seq = random_seq(&mut rng, 300);
+                    let a = new_t.match_prefix(&seq, now);
+                    let b = ref_t.match_prefix(&seq, now);
+                    assert_eq!(a.gpu_tokens, b.gpu_tokens, "seed {seed} op {op}");
+                    assert_eq!(a.cpu_tokens, b.cpu_tokens, "seed {seed} op {op}");
+                    assert_eq!(a.path.len(), b.path.len(), "seed {seed} op {op}");
+                }
+                6 => {
+                    if let Some((pa, pb)) = locked.pop() {
+                        new_t.unlock_path(&pa);
+                        ref_t.unlock_path(&pb);
+                    }
+                }
+                7..=9 => {
+                    let want = rng.gen_range(1, 2_000);
+                    let (policy_new, policy_ref) = if rng.chance(0.5) {
+                        (
+                            concur::engine::EvictPolicy::Discard,
+                            reference::EvictPolicy::Discard,
+                        )
+                    } else {
+                        (
+                            concur::engine::EvictPolicy::OffloadToCpu,
+                            reference::EvictPolicy::OffloadToCpu,
+                        )
+                    };
+                    let a = new_t.evict(want, policy_new);
+                    let b = ref_t.evict(want, policy_ref);
+                    assert_eq!(
+                        a.freed_gpu_tokens, b.freed_gpu_tokens,
+                        "seed {seed} op {op}: eviction diverged"
+                    );
+                    assert_eq!(a.offloaded_tokens, b.offloaded_tokens, "seed {seed} op {op}");
+                    assert_eq!(a.discarded_tokens, b.discarded_tokens, "seed {seed} op {op}");
+                    assert_eq!(a.nodes, b.nodes, "seed {seed} op {op}");
+                }
+                10 => {
+                    let limit = rng.gen_range(0, 2_000);
+                    let a = new_t.trim_cpu(limit);
+                    let b = ref_t.trim_cpu(limit);
+                    assert_eq!(a, b, "seed {seed} op {op}: trim diverged");
+                }
+                _ => {
+                    let seq = random_seq(&mut rng, 300);
+                    let a = new_t.match_prefix(&seq, now);
+                    let b = ref_t.match_prefix(&seq, now);
+                    assert_eq!(a.cpu_tokens, b.cpu_tokens, "seed {seed} op {op}");
+                    if a.cpu_tokens > 0 {
+                        let pa = new_t.reload_path(&a.path, now);
+                        let pb = ref_t.reload_path(&b.path, now);
+                        assert_eq!(pa, pb, "seed {seed} op {op}: reload diverged");
+                    }
+                }
+            }
+            assert_eq!(new_t.gpu_tokens(), ref_t.gpu_tokens(), "seed {seed} op {op}");
+            assert_eq!(new_t.cpu_tokens(), ref_t.cpu_tokens(), "seed {seed} op {op}");
+            assert_eq!(new_t.node_count(), ref_t.node_count(), "seed {seed} op {op}");
+            assert_eq!(
+                new_t.evictable_gpu_tokens(),
+                ref_t.evictable_gpu_tokens(),
+                "seed {seed} op {op}"
+            );
+            new_t.check_invariants().unwrap_or_else(|e| {
+                panic!("seed {seed} op {op}: invariant violated: {e}")
+            });
+        }
+        // Full drain must agree too (including the parked-node quirk:
+        // touched-but-never-repushed candidates survive in both).
+        while let Some((pa, pb)) = locked.pop() {
+            new_t.unlock_path(&pa);
+            ref_t.unlock_path(&pb);
+        }
+        let a = new_t.evict(u64::MAX, concur::engine::EvictPolicy::Discard);
+        let b = ref_t.evict(u64::MAX, reference::EvictPolicy::Discard);
+        assert_eq!(a.freed_gpu_tokens, b.freed_gpu_tokens, "seed {seed}: final drain");
+        assert_eq!(new_t.node_count(), ref_t.node_count(), "seed {seed}: final drain");
+    }
+}
+
+/// PROPERTY: `run_jobs_parallel` returns bit-identical `RunResult`s to
+/// serial execution on randomized seeded workloads — the parallel sweep
+/// harness must never change simulation outcomes.
+#[test]
+fn parallel_sweep_is_bit_identical_on_random_jobs() {
+    use concur::config::{
+        AimdParams, EngineConfig, EvictionMode, JobConfig, SchedulerKind,
+        WorkloadConfig,
+    };
+    use concur::config::presets;
+    use concur::driver::{run_jobs, run_jobs_parallel_with};
+
+    let mut rng = Rng::new(0xC0_FFEE);
+    let jobs: Vec<JobConfig> = (0..6)
+        .map(|i| {
+            let scheduler = match i % 4 {
+                0 => SchedulerKind::Uncontrolled,
+                1 => SchedulerKind::Concur(AimdParams::default()),
+                2 => SchedulerKind::AgentCap(rng.gen_range(2, 6) as usize),
+                _ => SchedulerKind::RequestCap(rng.gen_range(2, 6) as usize),
+            };
+            let eviction = if rng.chance(0.5) {
+                EvictionMode::Discard
+            } else {
+                EvictionMode::Offload
+            };
+            JobConfig {
+                cluster: presets::qwen3_cluster(8),
+                engine: EngineConfig { eviction, hit_window: 8, ..EngineConfig::default() },
+                workload: WorkloadConfig {
+                    n_agents: rng.gen_range(4, 10) as usize,
+                    steps_min: 2,
+                    steps_max: 3,
+                    seed: rng.gen_range(1, 1_000),
+                    ..WorkloadConfig::default()
+                },
+                scheduler,
+            }
+        })
+        .collect();
+
+    let serial = run_jobs(&jobs);
+    for threads in [2usize, 4, 8] {
+        let parallel = run_jobs_parallel_with(&jobs, threads);
+        for (i, (s, p)) in serial.iter().zip(&parallel).enumerate() {
+            let (s, p) = (s.as_ref().unwrap(), p.as_ref().unwrap());
+            assert_eq!(s.total_time, p.total_time, "job {i} ({} threads)", threads);
+            assert_eq!(s.hit_rate, p.hit_rate, "job {i}");
+            assert_eq!(s.counters.decode_tokens, p.counters.decode_tokens, "job {i}");
+            assert_eq!(s.counters.prefill_tokens, p.counters.prefill_tokens, "job {i}");
+            assert_eq!(s.counters.evicted_tokens, p.counters.evicted_tokens, "job {i}");
+            assert_eq!(s.counters.preemptions, p.counters.preemptions, "job {i}");
+            assert_eq!(s.engine_steps, p.engine_steps, "job {i}");
+            assert_eq!(s.agents_finished, p.agents_finished, "job {i}");
+        }
+    }
+}
+
 /// PROPERTY: the engine's pool/tree/private accounting stays exact under
 /// random multi-agent request streams with random pool sizes.
 #[test]
