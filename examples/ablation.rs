@@ -16,7 +16,7 @@
 //! cargo run --release --example ablation
 //! ```
 
-use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
+use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind, TopologyConfig};
 use concur::driver::run_jobs_parallel;
 
 fn main() -> concur::core::Result<()> {
@@ -42,6 +42,7 @@ fn main() -> concur::core::Result<()> {
             engine: EngineConfig { hit_window: *hit_window, ..EngineConfig::default() },
             workload: presets::qwen3_workload(256),
             scheduler: SchedulerKind::Concur(*params),
+            topology: TopologyConfig::default(),
         })
         .collect();
     let results = run_jobs_parallel(&jobs)

@@ -14,7 +14,7 @@
 //! cargo run --release --example concurrency_sweep
 //! ```
 
-use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
+use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind, TopologyConfig};
 use concur::driver::run_jobs_parallel;
 
 const BATCHES: [usize; 5] = [16, 32, 64, 128, 256];
@@ -33,6 +33,7 @@ fn main() -> concur::core::Result<()> {
                 engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
                 workload: presets::qwen3_workload(batch),
                 scheduler: sched,
+                topology: TopologyConfig::default(),
             })
         })
         .collect();

@@ -7,7 +7,7 @@
 //! perf report --stdio --no-children
 //! ```
 
-use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
+use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind, TopologyConfig};
 use concur::driver::run_job;
 fn main() {
     let sched = match std::env::args().nth(1).as_deref() {
@@ -19,6 +19,7 @@ fn main() {
         engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
         workload: presets::qwen3_workload(256),
         scheduler: sched,
+        topology: TopologyConfig::default(),
     };
     let t = std::time::Instant::now();
     let r = run_job(&job).unwrap();

@@ -5,7 +5,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
+use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind, TopologyConfig};
 use concur::driver::run_job;
 
 fn main() -> concur::core::Result<()> {
@@ -16,6 +16,7 @@ fn main() -> concur::core::Result<()> {
         engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
         workload: presets::qwen3_workload(64),
         scheduler: SchedulerKind::Concur(AimdParams::default()),
+        topology: TopologyConfig::default(),
     };
 
     let r = run_job(&job)?;

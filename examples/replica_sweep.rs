@@ -1,0 +1,36 @@
+//! Replica sweep: data-parallel cluster scaling across router policies.
+//!
+//! Runs the `cluster_scaling` grid — a fixed offered load of 128 agents
+//! on 1/2/4/8 Qwen3-TP2 engine replicas under round-robin, least-loaded
+//! and cache-affinity routing — prints the scaling table, and writes
+//! `BENCH_cluster.json` (override the path with `BENCH_JSON_PATH`) so the
+//! nightly CI job can archive the fleet-scaling trajectory next to
+//! `BENCH_hotpath.json`.
+//!
+//! ```sh
+//! cargo run --release --example replica_sweep
+//! ```
+
+use concur::repro::cluster_scaling;
+
+fn main() -> concur::core::Result<()> {
+    let wall = std::time::Instant::now();
+    let cells = cluster_scaling::run_sweep()?;
+    println!("{}", cluster_scaling::output_from(&cells).render());
+
+    let json_path = std::env::var("BENCH_JSON_PATH")
+        .unwrap_or_else(|_| "BENCH_cluster.json".to_string());
+    let json_path = std::path::PathBuf::from(json_path);
+    std::fs::write(
+        &json_path,
+        format!("{}\n", cluster_scaling::bench_json(&cells).to_string_pretty()),
+    )?;
+    println!(
+        "({} simulations in {:.1}s wall time; machine-readable results \
+         written to {})",
+        cells.len(),
+        wall.elapsed().as_secs_f64(),
+        json_path.display()
+    );
+    Ok(())
+}

@@ -10,7 +10,7 @@
 mod bench_util;
 use bench_util::Recorder;
 
-use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind};
+use concur::config::{presets, AimdParams, EngineConfig, JobConfig, SchedulerKind, TopologyConfig};
 use concur::coordinator::{AimdController, ControlInputs, Controller};
 use concur::core::{Micros, Rng, Token};
 use concur::costmodel::CostModel;
@@ -148,6 +148,7 @@ fn main() {
         engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
         workload: presets::qwen3_workload(64),
         scheduler: SchedulerKind::Concur(AimdParams::default()),
+        topology: TopologyConfig::default(),
     };
     rec.report("driver: full job, 64 agents, Qwen3 TP2, CONCUR", 5, || {
         let r = run_job(&table1_job()).unwrap();

@@ -1,0 +1,490 @@
+//! Data-parallel serving cluster: N engine replicas behind one controller.
+//!
+//! A production deployment runs N data-parallel `SimEngine` replicas —
+//! each with its own KV pool and radix cache — behind a single admission
+//! coordinator.  This module owns that topology:
+//!
+//! * [`router`] decides which replica an agent's next generation step
+//!   lands on (round-robin / least-loaded / cache-affinity);
+//! * [`run_sharded`] is the fleet event loop: per-replica iteration
+//!   timelines, one global [`Controller`] regulating admission for the
+//!   whole fleet through aggregated signals — `U_t` as the max over
+//!   replica working-set usages (the fleet is as congested as its worst
+//!   shard), `H_t` as the admission-weighted mean hit rate;
+//! * [`ClusterCoordinator`] packages both behind `driver::run_job`.
+//!
+//! ## Timing semantics (and the N=1 contract)
+//!
+//! The cluster clock stops at replica iteration boundaries, and at tool
+//! completions only when the whole fleet is idle — exactly the
+//! event-boundary semantics of the pre-cluster single-engine driver,
+//! which the N=1 path must reproduce **bit-for-bit** (differential-tested
+//! in `tests/cluster_integration.rs`).  The cost of keeping that contract
+//! at N>1 is that an idle replica can receive work up to one
+//! (busiest-replica) iteration late; iterations are milliseconds against
+//! second-scale tool latencies, so the distortion is negligible and —
+//! more importantly — identical across router policies under comparison.
+//!
+//! Replicas are advanced in index order and every event queue tie-breaks
+//! by insertion order, so cluster runs are deterministic for any N.
+
+pub mod router;
+
+pub use router::{make_router, CacheAffinityRouter, ReplicaLoad, Router};
+
+use crate::agent::Agent;
+use crate::config::JobConfig;
+use crate::coordinator::{slots::BoundaryDecision, ControlInputs, Controller};
+use crate::core::{AgentId, ConcurError, Micros, RequestId, Result};
+use crate::costmodel::CostModel;
+use crate::driver::RunResult;
+use crate::engine::{EngineCounters, EngineSignals, FinishedReq, SimEngine};
+use crate::metrics::{Breakdown, Histogram, LifetimeRatio, Phase, TimeSeries};
+use crate::sim::{EventQueue, SimClock};
+
+/// Owns the replica fleet and its router for one job.
+pub struct ClusterCoordinator {
+    engines: Vec<SimEngine>,
+    router: Box<dyn Router>,
+}
+
+impl ClusterCoordinator {
+    /// Build `job.topology.replicas` independent engine replicas, each
+    /// with its own KV pool, radix cache and host link.
+    pub fn new(job: &JobConfig) -> ClusterCoordinator {
+        let n = job.topology.replicas.max(1);
+        let engines = (0..n)
+            .map(|_| SimEngine::new(job.engine.clone(), CostModel::new(job.cluster.clone())))
+            .collect();
+        ClusterCoordinator { engines, router: make_router(job.topology.router) }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Run one batch job over the fleet to completion.
+    pub fn run(
+        mut self,
+        agents: Vec<Agent>,
+        controller: Box<dyn Controller>,
+    ) -> Result<RunResult> {
+        run_sharded(&mut self.engines, self.router.as_mut(), agents, controller)
+    }
+}
+
+/// A replica iteration in flight: effects land when the clock reaches
+/// `done_at` (the single-engine driver's "step, then advance" made
+/// concurrent).
+struct InFlight {
+    done_at: Micros,
+    finished: Vec<FinishedReq>,
+}
+
+/// Fleet-level engine signals for the controller and telemetry series.
+/// With one replica this returns its signals verbatim (the bit-exact
+/// single-engine path); otherwise `U`-style signals take the max over
+/// replicas and `H_t` is the admission-weighted mean, weighted by each
+/// replica's *windowed* observation count — recent admissions — so a
+/// long-idle replica's frozen window cannot outvote the replicas
+/// actively serving traffic.  Single pass, no intermediate allocation.
+fn aggregate_signals(engines: &[SimEngine]) -> EngineSignals {
+    if engines.len() == 1 {
+        return engines[0].signals();
+    }
+    let mut agg =
+        EngineSignals { kv_usage: 0.0, pool_usage: 0.0, hit_rate: 0.0, running: 0, waiting: 0 };
+    let (mut num, mut den, mut hit_sum) = (0.0, 0.0, 0.0);
+    for e in engines {
+        let s = e.signals();
+        agg.kv_usage = agg.kv_usage.max(s.kv_usage);
+        agg.pool_usage = agg.pool_usage.max(s.pool_usage);
+        agg.running += s.running;
+        agg.waiting += s.waiting;
+        let w = e.hit_observations() as f64;
+        num += w * s.hit_rate;
+        den += w;
+        hit_sum += s.hit_rate;
+    }
+    agg.hit_rate = if den > 0.0 { num / den } else { hit_sum / engines.len() as f64 };
+    agg
+}
+
+/// The controller's `U_t` numerator/denominator: footprint and capacity
+/// of the most-loaded replica, so `ControlInputs::usage()` yields the
+/// max-over-replicas usage without floating-point detours (compared by
+/// cross-multiplication; exact for N=1 by construction).
+fn fleet_usage(footprint: &[u64], engines: &[SimEngine]) -> (u64, u64) {
+    let mut best = (footprint[0], engines[0].pool().capacity());
+    for (fp, e) in footprint.iter().zip(engines).skip(1) {
+        let cand = (*fp, e.pool().capacity());
+        if (cand.0 as u128) * (best.1 as u128) > (best.0 as u128) * (cand.1 as u128) {
+            best = cand;
+        }
+    }
+    best
+}
+
+/// Ask the router for a replica, giving it the live load snapshot (built
+/// into the caller's reused scratch buffer — no per-request allocation).
+/// The caller moves the agent's footprint ledger entry if the choice
+/// migrates it.  Single-replica fleets skip the router entirely (the N=1
+/// path carries zero routing overhead).
+// Private twice-used helper: the arg list IS the routing context; a
+// one-off params struct would only rename it.
+#[allow(clippy::too_many_arguments)]
+fn route_to(
+    router: &mut dyn Router,
+    engines: &[SimEngine],
+    footprint: &[u64],
+    loads: &mut Vec<ReplicaLoad>,
+    current: Option<usize>,
+    aid: AgentId,
+    ctx: u64,
+    now: Micros,
+) -> usize {
+    if engines.len() == 1 {
+        return 0;
+    }
+    loads.clear();
+    loads.extend(engines.iter().zip(footprint).map(|(e, &fp)| ReplicaLoad {
+        active_footprint: fp,
+        capacity: e.pool().capacity(),
+    }));
+    let r = router.route(aid, ctx, current, now, loads);
+    assert!(r < engines.len(), "router returned out-of-range replica {r}");
+    r
+}
+
+/// Run a complete batch job over an explicit replica slice.  This is the
+/// one driver loop in the crate: `driver::run_with` calls it with a
+/// single-element slice and `driver::run_job` with the configured fleet.
+pub fn run_sharded(
+    engines: &mut [SimEngine],
+    router: &mut dyn Router,
+    agents: Vec<Agent>,
+    mut controller: Box<dyn Controller>,
+) -> Result<RunResult> {
+    assert!(!engines.is_empty(), "cluster needs at least one replica");
+    let n = engines.len();
+    if let Some(cap) = controller.engine_request_cap() {
+        for e in engines.iter_mut() {
+            e.cfg.max_running = cap;
+        }
+    }
+
+    let mut slots = crate::coordinator::SlotManager::new();
+    let total_gen: u64 = agents.iter().map(|a| a.total_gen_tokens()).sum();
+    let agents_total = agents.len();
+    // Agent ids from the workload generator are dense 0..n — index by id
+    // for O(1) access on the hot path.
+    let mut fleet: Vec<Agent> = agents;
+    fleet.sort_by_key(|a| a.id.0);
+    for (i, a) in fleet.iter().enumerate() {
+        assert_eq!(a.id.0 as usize, i, "driver requires dense agent ids");
+        slots.register(a.id);
+    }
+    fn agent(fleet: &mut [Agent], id: AgentId) -> &mut Agent {
+        &mut fleet[id.0 as usize]
+    }
+    // Replica each agent's working set currently sits on (None before
+    // first admission) and the per-replica slot-holder footprints — the
+    // numerators of each replica's U_t, maintained incrementally.
+    let mut assignment: Vec<Option<usize>> = vec![None; agents_total];
+    let mut footprint: Vec<u64> = vec![0; n];
+
+    let mut clock = SimClock::new();
+    let mut events: EventQueue<AgentId> = EventQueue::new();
+    let mut next_req: u64 = 0;
+    let mut toolwait = Micros::ZERO;
+
+    let mut usage_series = TimeSeries::new("kv_usage");
+    let mut hit_series = TimeSeries::new("hit_rate");
+    let mut active_series = TimeSeries::new("active_agents");
+    let mut window_series = TimeSeries::new("window");
+    let mut agent_latency = Histogram::new("agent_e2e_latency");
+
+    let mut finished_agents = 0usize;
+    let mut engine_steps = 0u64;
+    let mut stagnant: Vec<u32> = vec![0; n];
+    let mut inflight: Vec<Option<InFlight>> = (0..n).map(|_| None).collect();
+    // Scratch for per-decision load snapshots (reused, never reallocated).
+    let mut loads: Vec<ReplicaLoad> = Vec::with_capacity(n);
+
+    loop {
+        let now = clock.now();
+
+        // 1. Land replica iterations completing now: apply finished
+        //    requests, then give the controller one observation per
+        //    completed iteration.
+        for slot in inflight.iter_mut() {
+            if !slot.as_ref().is_some_and(|f| f.done_at <= now) {
+                continue;
+            }
+            let fin = slot.take().expect("checked above");
+            debug_assert_eq!(fin.done_at, now, "completion skipped by the clock");
+            for f in fin.finished {
+                let a = agent(&mut fleet, f.agent);
+                let before = a.context_len() as u64;
+                let ar = assignment[f.agent.0 as usize].expect("agent never assigned");
+                match a.on_step_finished(&f.output, now) {
+                    Some(tool_latency) => {
+                        // Still active: account its context growth.
+                        footprint[ar] += a.context_len() as u64 - before;
+                        events.push(now + tool_latency, f.agent);
+                    }
+                    None => {
+                        footprint[ar] -= before; // slot released
+                        slots.release(f.agent);
+                        finished_agents += 1;
+                        let start = a.started_at.unwrap_or(Micros::ZERO);
+                        agent_latency.record(now.saturating_sub(start));
+                    }
+                }
+            }
+            #[cfg(debug_assertions)]
+            for (rep, fp) in footprint.iter().enumerate() {
+                let expect: u64 = slots
+                    .active_ids()
+                    .filter(|aid| assignment[aid.0 as usize] == Some(rep))
+                    .map(|aid| fleet[aid.0 as usize].context_len() as u64)
+                    .sum();
+                debug_assert_eq!(expect, *fp, "replica {rep} footprint drifted");
+            }
+            let sig = aggregate_signals(engines);
+            let (fp, cap) = fleet_usage(&footprint, engines);
+            controller.on_signals(&ControlInputs {
+                engine: sig,
+                active_agents: slots.active_count(),
+                active_footprint: fp,
+                capacity: cap,
+            });
+            usage_series.record(now, sig.pool_usage);
+            hit_series.record(now, sig.hit_rate);
+            active_series.record(now, slots.active_count() as f64);
+            let w = controller.window();
+            window_series.record(now, if w == usize::MAX { f64::NAN } else { w as f64 });
+        }
+
+        // 2. Deliver due tool completions; paused agents wait for slots.
+        while let Some((_, aid)) = events.pop_due(now) {
+            let a = agent(&mut fleet, aid);
+            a.on_tool_done();
+            if slots.on_step_boundary(aid, controller.window()) == BoundaryDecision::Continue {
+                let ctx = a.context_len() as u64;
+                let req = a.make_request(RequestId(next_req), now);
+                next_req += 1;
+                let cur = assignment[aid.0 as usize];
+                let tgt = route_to(router, engines, &footprint, &mut loads, cur, aid, ctx, now);
+                let old = cur.expect("active agent was never assigned");
+                if old != tgt {
+                    // Migration: the working set follows the agent.
+                    footprint[old] -= ctx;
+                    footprint[tgt] += ctx;
+                    assignment[aid.0 as usize] = Some(tgt);
+                }
+                engines[tgt].submit(req);
+            } else {
+                let ar = assignment[aid.0 as usize].expect("paused before admission");
+                footprint[ar] -= a.context_len() as u64; // paused
+            }
+        }
+
+        // 3. Grant freed slots (resume paused LIFO, admit fresh FIFO).
+        for aid in slots.grant_up_to(controller.window()) {
+            let a = agent(&mut fleet, aid);
+            let ctx = a.context_len() as u64;
+            let req = a.make_request(RequestId(next_req), now);
+            next_req += 1;
+            let cur = assignment[aid.0 as usize];
+            let tgt = route_to(router, engines, &footprint, &mut loads, cur, aid, ctx, now);
+            assignment[aid.0 as usize] = Some(tgt);
+            footprint[tgt] += ctx;
+            engines[tgt].submit(req);
+        }
+
+        // 4. Start an iteration on every idle replica with queued work.
+        for (r, e) in engines.iter_mut().enumerate() {
+            if inflight[r].is_some() || !e.has_work() {
+                continue;
+            }
+            let out = e.step(now);
+            engine_steps += 1;
+            let progressed = !out.work.is_empty() || !out.finished.is_empty();
+            if progressed {
+                stagnant[r] = 0;
+            } else {
+                stagnant[r] += 1;
+                if stagnant[r] > 10_000 {
+                    let sig = e.signals();
+                    return Err(ConcurError::engine(format!(
+                        "livelock: replica {r} made no progress for 10k \
+                         iterations (running={} waiting={} pool_usage={:.3} \
+                         working_usage={:.3} free={} evictable={})",
+                        sig.running,
+                        sig.waiting,
+                        sig.pool_usage,
+                        sig.kv_usage,
+                        e.pool().free(),
+                        e.tree().evictable_gpu_tokens(),
+                    )));
+                }
+            }
+            inflight[r] = Some(InFlight {
+                done_at: now + Micros(out.duration.0.max(1)),
+                finished: out.finished,
+            });
+        }
+
+        // 5. Advance: to the earliest iteration boundary, else (fleet
+        //    fully idle) jump to the next tool completion.
+        if let Some(t) = inflight.iter().flatten().map(|f| f.done_at).min() {
+            clock.advance_to(t);
+        } else if let Some(t) = events.peek_time() {
+            toolwait += t.saturating_sub(now);
+            clock.advance_to(t);
+        } else {
+            break; // no work in flight, no future events → done
+        }
+    }
+
+    if finished_agents != agents_total {
+        return Err(ConcurError::engine(format!(
+            "run ended with {finished_agents}/{agents_total} agents finished"
+        )));
+    }
+
+    let total_time = clock.now();
+    let mut breakdown = Breakdown::new();
+    for e in engines.iter_mut() {
+        breakdown.merge(&std::mem::take(&mut e.breakdown));
+    }
+    breakdown.add(Phase::ToolWait, toolwait);
+    let mut counters = EngineCounters::default();
+    let mut hits = LifetimeRatio::default();
+    for e in engines.iter() {
+        counters.merge(&e.counters);
+        hits.record(e.lifetime_hits.num, e.lifetime_hits.den);
+    }
+    let throughput_tps = if total_time.0 > 0 {
+        total_gen as f64 / total_time.as_secs_f64()
+    } else {
+        0.0
+    };
+
+    Ok(RunResult {
+        scheduler: controller.name(),
+        total_time,
+        breakdown,
+        hit_rate: hits.ratio(),
+        counters,
+        usage_series,
+        hit_series,
+        active_series,
+        window_series,
+        agents_total,
+        agents_finished: finished_agents,
+        total_gen_tokens: total_gen,
+        throughput_tps,
+        agent_latency,
+        engine_steps,
+        pauses: slots.pauses,
+        resumes: slots.resumes,
+        replicas: n,
+        router: if n == 1 { "single".into() } else { router.name() },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::WorkloadGenerator;
+    use crate::config::presets;
+    use crate::config::{
+        AimdParams, EngineConfig, JobConfig, RouterKind, SchedulerKind,
+        TopologyConfig, WorkloadConfig,
+    };
+    use crate::coordinator::make_controller;
+
+    fn cluster_job(replicas: usize, router: RouterKind) -> JobConfig {
+        JobConfig {
+            cluster: presets::qwen3_cluster(8),
+            engine: EngineConfig::default(),
+            workload: WorkloadConfig {
+                n_agents: 12,
+                steps_min: 2,
+                steps_max: 4,
+                ..WorkloadConfig::default()
+            },
+            scheduler: SchedulerKind::Concur(AimdParams::default()),
+            topology: TopologyConfig { replicas, router },
+        }
+    }
+
+    fn run(job: &JobConfig) -> RunResult {
+        let agents = WorkloadGenerator::new(job.workload.clone()).generate();
+        let controller = make_controller(&job.scheduler);
+        ClusterCoordinator::new(job).run(agents, controller).unwrap()
+    }
+
+    #[test]
+    fn coordinator_builds_the_configured_fleet() {
+        let c = ClusterCoordinator::new(&cluster_job(4, RouterKind::RoundRobin));
+        assert_eq!(c.replicas(), 4);
+    }
+
+    #[test]
+    fn multi_replica_job_completes_under_every_router() {
+        for router in [
+            RouterKind::RoundRobin,
+            RouterKind::LeastLoaded,
+            RouterKind::CacheAffinity,
+        ] {
+            let r = run(&cluster_job(3, router));
+            assert_eq!(r.agents_finished, 12, "{router:?} lost agents");
+            assert_eq!(r.replicas, 3);
+            assert_eq!(r.router, router.name());
+            assert!(r.total_time.0 > 0);
+        }
+    }
+
+    #[test]
+    fn single_replica_reports_the_single_path() {
+        let r = run(&cluster_job(1, RouterKind::LeastLoaded));
+        assert_eq!(r.replicas, 1);
+        assert_eq!(r.router, "single");
+        assert_eq!(r.agents_finished, 12);
+    }
+
+    #[test]
+    fn fleet_usage_picks_the_most_loaded_replica() {
+        let job = cluster_job(2, RouterKind::RoundRobin);
+        let engines: Vec<SimEngine> = (0..2)
+            .map(|_| SimEngine::new(job.engine.clone(), CostModel::new(job.cluster.clone())))
+            .collect();
+        let cap = engines[0].pool().capacity();
+        assert_eq!(fleet_usage(&[10, 50], &engines), (50, cap));
+        assert_eq!(fleet_usage(&[70, 50], &engines), (70, cap));
+    }
+
+    #[test]
+    fn aggregate_signals_sums_queue_depths() {
+        let job = cluster_job(2, RouterKind::RoundRobin);
+        let mut engines: Vec<SimEngine> = (0..2)
+            .map(|_| SimEngine::new(job.engine.clone(), CostModel::new(job.cluster.clone())))
+            .collect();
+        engines[0].submit(crate::engine::Request {
+            id: RequestId(0),
+            agent: AgentId(0),
+            prompt: (0..64).collect(),
+            gen: (1000..1010).collect(),
+            prev_ctx: 0,
+            submitted_at: Micros::ZERO,
+        });
+        let sig = aggregate_signals(&engines);
+        assert_eq!(sig.waiting, 1);
+        assert_eq!(sig.running, 0);
+        // Fresh engines report the optimistic hit-rate default.
+        assert_eq!(sig.hit_rate, 1.0);
+    }
+}

@@ -1,0 +1,297 @@
+//! Replica routing policies for the data-parallel cluster.
+//!
+//! Routing decides *where an agent's next generation step lands relative
+//! to its warm prefix* — which dominates multi-agent throughput far more
+//! than raw load spread (cf. KVFlow / Continuum in PAPERS.md).  Three
+//! policies span the trade-off space:
+//!
+//! * [`RoundRobinRouter`] — per-request cycling.  Perfectly even request
+//!   spread, but an agent revisits a given replica only every N steps, so
+//!   each admission misses its last N-1 steps of context (recompute).
+//! * [`LeastLoadedRouter`] — per-request argmin over active KV working
+//!   sets.  Best instantaneous memory balance, but agents migrate whenever
+//!   another replica dips below their current one, abandoning warm
+//!   prefixes mid-trajectory.
+//! * [`CacheAffinityRouter`] — each agent is pinned to an id-hashed home
+//!   replica; every step of the trajectory extends the same radix path,
+//!   so hit rate matches the single-replica driver at 1/N the load.  Load
+//!   imbalance is tolerated until it is *sustained* — observed overloaded
+//!   at several distinct simulation instants in a row — then individual
+//!   steps spill to the least-loaded replica without re-homing the agent.
+//!
+//! All policies are deterministic: ties break toward the lowest replica
+//! index and every input comes from the simulation state.
+
+use crate::config::RouterKind;
+use crate::core::{AgentId, Micros};
+
+/// Per-replica load snapshot offered to routing decisions.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaLoad {
+    /// Σ context tokens of slot-holding agents currently assigned here
+    /// (the same agent-level working set the controller's U_t watches).
+    pub active_footprint: u64,
+    /// KV pool capacity in tokens.
+    pub capacity: u64,
+}
+
+/// A routing policy: picks the replica for one agent's next request.
+pub trait Router {
+    fn name(&self) -> String;
+
+    /// Choose a replica index in `0..replicas.len()` for `agent`'s next
+    /// generation step at simulation time `now`.  `ctx_tokens` is the
+    /// agent's current context length; `current` is the replica its
+    /// working set sits on right now (`None` before first admission).
+    fn route(
+        &mut self,
+        agent: AgentId,
+        ctx_tokens: u64,
+        current: Option<usize>,
+        now: Micros,
+        replicas: &[ReplicaLoad],
+    ) -> usize;
+}
+
+/// Replica with the smallest active working set (ties → lowest index).
+fn least_loaded(replicas: &[ReplicaLoad]) -> usize {
+    let mut best = 0;
+    for (i, r) in replicas.iter().enumerate().skip(1) {
+        if r.active_footprint < replicas[best].active_footprint {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Cache-oblivious per-request cycling.
+#[derive(Debug, Default)]
+pub struct RoundRobinRouter {
+    next: usize,
+}
+
+impl Router for RoundRobinRouter {
+    fn name(&self) -> String {
+        "round-robin".into()
+    }
+
+    fn route(
+        &mut self,
+        _agent: AgentId,
+        _ctx_tokens: u64,
+        _current: Option<usize>,
+        _now: Micros,
+        replicas: &[ReplicaLoad],
+    ) -> usize {
+        let r = self.next % replicas.len();
+        self.next = self.next.wrapping_add(1);
+        r
+    }
+}
+
+/// Per-request argmin over active KV working sets.
+#[derive(Debug, Default)]
+pub struct LeastLoadedRouter;
+
+impl Router for LeastLoadedRouter {
+    fn name(&self) -> String {
+        "least-loaded".into()
+    }
+
+    fn route(
+        &mut self,
+        _agent: AgentId,
+        _ctx_tokens: u64,
+        _current: Option<usize>,
+        _now: Micros,
+        replicas: &[ReplicaLoad],
+    ) -> usize {
+        least_loaded(replicas)
+    }
+}
+
+/// Home-replica pinning with sustained-imbalance spill.
+#[derive(Debug)]
+pub struct CacheAffinityRouter {
+    /// Spill only after the home replica has been over the imbalance bar
+    /// at this many consecutive *distinct simulation instants* (transient
+    /// skew from a few long-context agents is cheaper to ride out than a
+    /// cold prefix; a burst of same-instant routing decisions counts
+    /// once).
+    pub spill_after: u32,
+    /// Overload bar: footprint > `imbalance` × fleet-mean footprint.
+    pub imbalance: f64,
+    /// ... and footprint > `pressure` × pool capacity (an imbalanced but
+    /// mostly-empty fleet has no reason to give up cache locality).
+    pub pressure: f64,
+    /// Per-replica consecutive-overload streak, advanced at most once per
+    /// distinct `now` (streaks only move while requests flow; with no
+    /// routing activity there is nothing to spill anyway).
+    streaks: Vec<u32>,
+    last_advance: Option<Micros>,
+    /// Requests routed away from their home (telemetry).
+    pub spills: u64,
+}
+
+impl Default for CacheAffinityRouter {
+    fn default() -> CacheAffinityRouter {
+        CacheAffinityRouter {
+            spill_after: 8,
+            imbalance: 1.5,
+            pressure: 0.75,
+            streaks: Vec::new(),
+            last_advance: None,
+            spills: 0,
+        }
+    }
+}
+
+impl Router for CacheAffinityRouter {
+    fn name(&self) -> String {
+        "cache-affinity".into()
+    }
+
+    fn route(
+        &mut self,
+        agent: AgentId,
+        _ctx_tokens: u64,
+        _current: Option<usize>,
+        now: Micros,
+        replicas: &[ReplicaLoad],
+    ) -> usize {
+        let n = replicas.len();
+        if self.streaks.len() != n {
+            self.streaks = vec![0; n];
+            self.last_advance = None;
+        }
+        if self.last_advance != Some(now) {
+            self.last_advance = Some(now);
+            let mean = replicas.iter().map(|r| r.active_footprint).sum::<u64>() as f64 / n as f64;
+            for (i, r) in replicas.iter().enumerate() {
+                let fp = r.active_footprint as f64;
+                let overloaded =
+                    fp > self.imbalance * mean && fp > self.pressure * r.capacity as f64;
+                if overloaded {
+                    self.streaks[i] = self.streaks[i].saturating_add(1);
+                } else {
+                    self.streaks[i] = 0;
+                }
+            }
+        }
+        let home = agent.0 as usize % n;
+        if self.streaks[home] >= self.spill_after {
+            let target = least_loaded(replicas);
+            if target != home {
+                self.spills += 1;
+                return target;
+            }
+        }
+        home
+    }
+}
+
+/// Instantiate a router from configuration.
+pub fn make_router(kind: RouterKind) -> Box<dyn Router> {
+    match kind {
+        RouterKind::RoundRobin => Box::new(RoundRobinRouter::default()),
+        RouterKind::LeastLoaded => Box::new(LeastLoadedRouter),
+        RouterKind::CacheAffinity => Box::new(CacheAffinityRouter::default()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(footprints: &[u64], capacity: u64) -> Vec<ReplicaLoad> {
+        footprints
+            .iter()
+            .map(|&f| ReplicaLoad { active_footprint: f, capacity })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = RoundRobinRouter::default();
+        let l = loads(&[0, 0, 0], 100);
+        let picks: Vec<usize> =
+            (0..6).map(|i| r.route(AgentId(i), 10, None, Micros(i), &l)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_argmin_with_index_ties() {
+        let mut r = LeastLoadedRouter;
+        let t = Micros(1);
+        assert_eq!(r.route(AgentId(9), 10, None, t, &loads(&[50, 20, 30], 100)), 1);
+        assert_eq!(r.route(AgentId(9), 10, None, t, &loads(&[20, 20, 30], 100)), 0);
+    }
+
+    #[test]
+    fn affinity_pins_agents_to_home() {
+        let mut r = CacheAffinityRouter::default();
+        let l = loads(&[10, 10, 10, 10], 1_000);
+        let mut t = 0u64;
+        for agent in 0..8u64 {
+            let home = (agent % 4) as usize;
+            for _ in 0..3 {
+                t += 1;
+                assert_eq!(r.route(AgentId(agent), 10, Some(home), Micros(t), &l), home);
+            }
+        }
+        assert_eq!(r.spills, 0);
+    }
+
+    #[test]
+    fn affinity_spills_only_under_sustained_pressure() {
+        let mut r = CacheAffinityRouter::default();
+        // Replica 0 over both bars (>1.5x mean, >0.75 capacity).
+        let hot = loads(&[95, 10, 10, 10], 100);
+        // A short burst does not spill...
+        let mut t = 0u64;
+        for _ in 0..(r.spill_after - 1) {
+            t += 1;
+            assert_eq!(r.route(AgentId(0), 10, Some(0), Micros(t), &hot), 0);
+        }
+        // ...the sustained streak does, to the least-loaded replica.
+        t += 1;
+        assert_eq!(r.route(AgentId(0), 10, Some(0), Micros(t), &hot), 1);
+        assert_eq!(r.spills, 1);
+        // Agents homed elsewhere are unaffected.
+        assert_eq!(r.route(AgentId(2), 10, Some(2), Micros(t), &hot), 2);
+        // Once the pressure clears the streak resets and home is restored.
+        assert_eq!(r.route(AgentId(0), 10, Some(1), Micros(t + 1), &loads(&[10; 4], 100)), 0);
+        for k in 0..3u64 {
+            assert_eq!(r.route(AgentId(0), 10, Some(0), Micros(t + 2 + k), &hot), 0);
+        }
+    }
+
+    #[test]
+    fn affinity_streak_advances_once_per_instant() {
+        let mut r = CacheAffinityRouter::default();
+        let hot = loads(&[95, 10, 10, 10], 100);
+        // 100 same-instant decisions: one streak advance, no spill.
+        for _ in 0..100 {
+            assert_eq!(r.route(AgentId(0), 10, Some(0), Micros(7), &hot), 0);
+        }
+        assert_eq!(r.spills, 0);
+    }
+
+    #[test]
+    fn affinity_ignores_imbalance_in_an_empty_fleet() {
+        let mut r = CacheAffinityRouter::default();
+        // 40 vs 1: heavily imbalanced but far below the pressure bar.
+        let l = loads(&[40, 1, 1, 1], 1_000);
+        for t in 0..20u64 {
+            assert_eq!(r.route(AgentId(4), 10, Some(0), Micros(t), &l), 0);
+        }
+        assert_eq!(r.spills, 0);
+    }
+
+    #[test]
+    fn factory_dispatches() {
+        assert_eq!(make_router(RouterKind::RoundRobin).name(), "round-robin");
+        assert_eq!(make_router(RouterKind::LeastLoaded).name(), "least-loaded");
+        assert_eq!(make_router(RouterKind::CacheAffinity).name(), "cache-affinity");
+    }
+}

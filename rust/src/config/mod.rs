@@ -34,6 +34,56 @@ impl SchedulerKind {
     }
 }
 
+/// How the cluster routes an agent's generation steps across data-parallel
+/// engine replicas (see `cluster::router` for the policies' trade-offs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    /// Cycle through replicas per request; load-even, cache-oblivious.
+    RoundRobin,
+    /// Send each request to the replica with the smallest active KV
+    /// working set; balances memory but migrates agents off their warm
+    /// prefixes.
+    LeastLoaded,
+    /// Pin each agent to a home replica (id-hashed) and spill to the
+    /// least-loaded replica only under sustained home overload.
+    CacheAffinity,
+}
+
+impl RouterKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastLoaded => "least-loaded",
+            RouterKind::CacheAffinity => "cache-affinity",
+        }
+    }
+}
+
+/// Data-parallel serving topology: how many engine replicas a job runs on
+/// (each with its own KV pool and radix cache) and how agents are routed
+/// between them.  The default single replica reproduces the pre-cluster
+/// driver bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopologyConfig {
+    pub replicas: usize,
+    pub router: RouterKind,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> TopologyConfig {
+        TopologyConfig { replicas: 1, router: RouterKind::CacheAffinity }
+    }
+}
+
+impl TopologyConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.replicas == 0 {
+            return Err(ConcurError::config("replicas must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
 /// AIMD control-law parameters (paper §4.3, defaults §5).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AimdParams {
@@ -232,11 +282,14 @@ pub struct JobConfig {
     pub engine: EngineConfig,
     pub workload: WorkloadConfig,
     pub scheduler: SchedulerKind,
+    /// Replica count + routing policy (defaults to a single replica).
+    pub topology: TopologyConfig,
 }
 
 impl JobConfig {
     pub fn validate(&self) -> Result<()> {
         self.workload.validate()?;
+        self.topology.validate()?;
         if let SchedulerKind::Concur(p) = &self.scheduler {
             p.validate()?;
         }
@@ -289,6 +342,24 @@ impl JobConfig {
             engine.eviction = EvictionMode::Offload;
         }
 
+        let mut topology = TopologyConfig::default();
+        let t = v.get("topology");
+        if let Some(n) = t.get("replicas").as_usize() {
+            topology.replicas = n;
+        }
+        if let Some(r) = t.get("router").as_str() {
+            topology.router = match r {
+                "round-robin" => RouterKind::RoundRobin,
+                "least-loaded" => RouterKind::LeastLoaded,
+                "cache-affinity" => RouterKind::CacheAffinity,
+                other => {
+                    return Err(ConcurError::config(format!(
+                        "unknown router '{other}'"
+                    )))
+                }
+            };
+        }
+
         let scheduler = match v.get("scheduler").as_str().unwrap_or("concur") {
             "sglang" | "uncontrolled" => SchedulerKind::Uncontrolled,
             "request-cap" => SchedulerKind::RequestCap(
@@ -324,7 +395,7 @@ impl JobConfig {
             }
         };
 
-        let job = JobConfig { cluster, engine, workload, scheduler };
+        let job = JobConfig { cluster, engine, workload, scheduler, topology };
         job.validate()?;
         Ok(job)
     }
@@ -398,6 +469,36 @@ mod tests {
             }
             _ => panic!("wrong scheduler"),
         }
+    }
+
+    #[test]
+    fn topology_defaults_to_single_replica() {
+        let t = TopologyConfig::default();
+        assert_eq!(t.replicas, 1);
+        assert_eq!(t.router, RouterKind::CacheAffinity);
+        t.validate().unwrap();
+        assert!(TopologyConfig { replicas: 0, ..t }.validate().is_err());
+    }
+
+    #[test]
+    fn json_config_parses_topology() {
+        let text = r#"{
+            "model": "qwen3-32b", "tp": 2,
+            "topology": {"replicas": 4, "router": "least-loaded"}
+        }"#;
+        let job = JobConfig::from_json(&Value::parse(text).unwrap()).unwrap();
+        assert_eq!(job.topology.replicas, 4);
+        assert_eq!(job.topology.router, RouterKind::LeastLoaded);
+
+        let bad = r#"{"topology": {"router": "sticky"}}"#;
+        assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn router_names() {
+        assert_eq!(RouterKind::RoundRobin.name(), "round-robin");
+        assert_eq!(RouterKind::LeastLoaded.name(), "least-loaded");
+        assert_eq!(RouterKind::CacheAffinity.name(), "cache-affinity");
     }
 
     #[test]

@@ -6,7 +6,8 @@
 use crate::costmodel::{ClusterSpec, GpuSpec, ModelSpec};
 
 use super::{
-    AimdParams, EngineConfig, EvictionMode, JobConfig, SchedulerKind, WorkloadConfig,
+    AimdParams, EngineConfig, EvictionMode, JobConfig, RouterKind, SchedulerKind,
+    TopologyConfig, WorkloadConfig,
 };
 
 /// Workload used for the Qwen3-32B rows (batch 256 agents).  Trajectories
@@ -58,7 +59,22 @@ pub fn job(
         // HiCache rows flip the eviction mode; everything else discards.
         _ => EngineConfig::default(),
     };
-    JobConfig { cluster, engine, workload, scheduler }
+    JobConfig { cluster, engine, workload, scheduler, topology: TopologyConfig::default() }
+}
+
+/// A data-parallel job: `replicas` engine replicas (each a full `cluster`
+/// with its own KV pool) fed through `router`.  The `cluster_scaling`
+/// repro scenario and the `replica_sweep` example build their grids here.
+pub fn replicated_job(
+    cluster: ClusterSpec,
+    workload: WorkloadConfig,
+    scheduler: SchedulerKind,
+    replicas: usize,
+    router: RouterKind,
+) -> JobConfig {
+    let mut j = job(cluster, workload, scheduler);
+    j.topology = TopologyConfig { replicas, router };
+    j
 }
 
 /// The four systems compared in Tables 1-2.  `request_cap` follows the
@@ -106,6 +122,20 @@ mod tests {
         )
         .validate()
         .unwrap();
+    }
+
+    #[test]
+    fn replicated_job_sets_topology() {
+        let j = replicated_job(
+            qwen3_cluster(2),
+            qwen3_workload(64),
+            SchedulerKind::Uncontrolled,
+            4,
+            RouterKind::CacheAffinity,
+        );
+        j.validate().unwrap();
+        assert_eq!(j.topology.replicas, 4);
+        assert_eq!(j.topology.router, RouterKind::CacheAffinity);
     }
 
     #[test]

@@ -1,22 +1,23 @@
-//! End-to-end batch-job driver: agents × controller × engine × clock.
+//! End-to-end batch-job driver: agents × controller × cluster × clock.
 //!
 //! Runs one offline agentic batch-inference job to completion under a
 //! given admission scheduler and collects everything the paper's tables
 //! and figures need: end-to-end latency, lifetime hit rate, usage/hit-rate
 //! time series, the latency breakdown and controller window trajectory.
 //!
-//! All agents are submitted at t=0 (offline batch); the DES clock advances
-//! by engine-iteration durations and jumps across engine-idle gaps to the
-//! next tool completion.
+//! All agents are submitted at t=0 (offline batch).  The event loop lives
+//! in [`crate::cluster::run_sharded`]: a job runs on
+//! `job.topology.replicas` data-parallel engine replicas, and the classic
+//! single-engine path is simply its N=1 case (bit-identical to the
+//! pre-cluster driver — see `tests/cluster_integration.rs`).
 
 use crate::agent::{Agent, WorkloadGenerator};
-use crate::config::JobConfig;
+use crate::cluster::{make_router, ClusterCoordinator};
+use crate::config::{JobConfig, RouterKind};
 use crate::coordinator::{make_controller, Controller};
-use crate::core::{AgentId, ConcurError, Micros, RequestId, Result};
-use crate::costmodel::CostModel;
+use crate::core::{Micros, Result};
 use crate::engine::{EngineCounters, SimEngine};
 use crate::metrics::{Breakdown, Histogram, Phase, TimeSeries};
-use crate::sim::{EventQueue, SimClock};
 
 /// Everything measured over one job run.
 pub struct RunResult {
@@ -41,6 +42,10 @@ pub struct RunResult {
     pub engine_steps: u64,
     pub pauses: u64,
     pub resumes: u64,
+    /// Data-parallel engine replicas the job ran on.
+    pub replicas: usize,
+    /// Routing policy name (`"single"` for one-replica runs).
+    pub router: String,
 }
 
 impl RunResult {
@@ -57,14 +62,13 @@ impl RunResult {
     }
 }
 
-/// Run a complete job described by `job`.
+/// Run a complete job described by `job` on its configured replica fleet
+/// (a single replica unless `job.topology` says otherwise).
 pub fn run_job(job: &JobConfig) -> Result<RunResult> {
     job.validate()?;
     let agents = WorkloadGenerator::new(job.workload.clone()).generate();
     let controller = make_controller(&job.scheduler);
-    let cost = CostModel::new(job.cluster.clone());
-    let mut engine = SimEngine::new(job.engine.clone(), cost);
-    run_with(&mut engine, agents, controller)
+    ClusterCoordinator::new(job).run(agents, controller)
 }
 
 /// Run every job serially, in order.  Reference implementation for
@@ -81,12 +85,38 @@ pub fn run_jobs(jobs: &[JobConfig]) -> Vec<Result<RunResult>> {
 /// results are scattered back by index.  This is what lets a full paper
 /// reproduction (tables × figures × sweeps) saturate a box instead of
 /// running one simulation at a time.
+///
+/// Worker count: `CONCUR_WORKERS` if set (clamped to the machine's
+/// available parallelism), else all available cores.
 pub fn run_jobs_parallel(jobs: &[JobConfig]) -> Vec<Result<RunResult>> {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = resolve_workers(
+        std::env::var("CONCUR_WORKERS").ok().as_deref(),
+        available_parallelism(),
+    );
     run_jobs_parallel_with(jobs, threads)
 }
 
+fn available_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve the sweep worker count from an optional `CONCUR_WORKERS`-style
+/// override and the machine's available parallelism.  Requests above
+/// `available` are clamped — a 2-core CI runner must not be oversubscribed
+/// by an 8-worker default — and unparsable or zero overrides fall back to
+/// `available`.
+pub fn resolve_workers(requested: Option<&str>, available: usize) -> usize {
+    let available = available.max(1);
+    match requested.and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n.min(available),
+        _ => available,
+    }
+}
+
 /// [`run_jobs_parallel`] with an explicit worker count (`0`/`1` ⇒ serial).
+/// The explicit count is honored verbatim — the determinism proptests
+/// deliberately oversubscribe small machines to exercise 4- and 8-worker
+/// scheduling; only the `CONCUR_WORKERS` env path clamps.
 pub fn run_jobs_parallel_with(
     jobs: &[JobConfig],
     threads: usize,
@@ -131,196 +161,29 @@ pub fn run_jobs_parallel_with(
         .collect()
 }
 
-/// Run with explicit parts (used by repro harnesses that customize the
-/// engine, e.g. shrunken pools for unit-scale studies).
+/// Run with an explicit engine (used by repro harnesses that customize
+/// it, e.g. shrunken pools for unit-scale studies).  This is the N=1 case
+/// of [`crate::cluster::run_sharded`]; the router never fires.
 pub fn run_with(
     engine: &mut SimEngine,
     agents: Vec<Agent>,
-    mut controller: Box<dyn Controller>,
+    controller: Box<dyn Controller>,
 ) -> Result<RunResult> {
-    if let Some(cap) = controller.engine_request_cap() {
-        engine.cfg.max_running = cap;
-    }
-
-    let mut slots = crate::coordinator::SlotManager::new();
-    let total_gen: u64 = agents.iter().map(|a| a.total_gen_tokens()).sum();
-    let agents_total = agents.len();
-    // Agent ids from the workload generator are dense 0..n — index by id
-    // for O(1) access on the hot path.
-    let mut fleet: Vec<Agent> = agents;
-    fleet.sort_by_key(|a| a.id.0);
-    for (i, a) in fleet.iter().enumerate() {
-        assert_eq!(a.id.0 as usize, i, "driver requires dense agent ids");
-        slots.register(a.id);
-    }
-    fn agent(fleet: &mut [Agent], id: AgentId) -> &mut Agent {
-        &mut fleet[id.0 as usize]
-    }
-    // Aggregate context of slot-holding agents (the controller's U_t
-    // numerator), maintained incrementally — recomputing it per step was
-    // ~25% of simulation wall time.
-    let mut active_footprint: u64 = 0;
-
-    let mut clock = SimClock::new();
-    let mut events: EventQueue<AgentId> = EventQueue::new();
-    let mut next_req: u64 = 0;
-    let mut result_breakdown_toolwait = Micros::ZERO;
-
-    let mut usage_series = TimeSeries::new("kv_usage");
-    let mut hit_series = TimeSeries::new("hit_rate");
-    let mut active_series = TimeSeries::new("active_agents");
-    let mut window_series = TimeSeries::new("window");
-    let mut agent_latency = Histogram::new("agent_e2e_latency");
-
-    let mut finished_agents = 0usize;
-    let mut engine_steps = 0u64;
-    let mut stagnant = 0u32;
-
-    loop {
-        let now = clock.now();
-
-        // 1. Deliver due tool completions; paused agents wait for slots.
-        while let Some((_, aid)) = events.pop_due(now) {
-            let a = agent(&mut fleet, aid);
-            a.on_tool_done();
-            if slots.on_step_boundary(aid, controller.window())
-                == crate::coordinator::slots::BoundaryDecision::Continue
-            {
-                let req = a.make_request(RequestId(next_req), now);
-                next_req += 1;
-                engine.submit(req);
-            } else {
-                active_footprint -= a.context_len() as u64; // paused
-            }
-        }
-
-        // 2. Grant freed slots (resume paused LIFO, admit fresh FIFO).
-        for aid in slots.grant_up_to(controller.window()) {
-            let a = agent(&mut fleet, aid);
-            active_footprint += a.context_len() as u64;
-            let req = a.make_request(RequestId(next_req), now);
-            next_req += 1;
-            engine.submit(req);
-        }
-
-        // 3. Advance: engine iteration, or jump to the next tool event.
-        if engine.has_work() {
-            let out = engine.step(now);
-            engine_steps += 1;
-            let progressed = !out.work.is_empty() || !out.finished.is_empty();
-            if progressed {
-                stagnant = 0;
-            } else {
-                stagnant += 1;
-                if stagnant > 10_000 {
-                    let sig = engine.signals();
-                    return Err(ConcurError::engine(format!(
-                        "livelock: no progress for 10k iterations \
-                         (running={} waiting={} pool_usage={:.3} \
-                         working_usage={:.3} free={} evictable={})",
-                        sig.running,
-                        sig.waiting,
-                        sig.pool_usage,
-                        sig.kv_usage,
-                        engine.pool().free(),
-                        engine.tree().evictable_gpu_tokens(),
-                    )));
-                }
-            }
-            clock.advance(Micros(out.duration.0.max(1)));
-            let after = clock.now();
-
-            for fin in out.finished {
-                let a = agent(&mut fleet, fin.agent);
-                let before = a.context_len() as u64;
-                match a.on_step_finished(&fin.output, after) {
-                    Some(tool_latency) => {
-                        // Still active: account its context growth.
-                        active_footprint += a.context_len() as u64 - before;
-                        events.push(after + tool_latency, fin.agent);
-                    }
-                    None => {
-                        active_footprint -= before; // slot released
-                        slots.release(fin.agent);
-                        finished_agents += 1;
-                        let start = a.started_at.unwrap_or(Micros::ZERO);
-                        agent_latency.record(after.saturating_sub(start));
-                    }
-                }
-            }
-
-            let sig = engine.signals();
-            debug_assert_eq!(
-                active_footprint,
-                slots
-                    .active_ids()
-                    .map(|aid| fleet[aid.0 as usize].context_len() as u64)
-                    .sum::<u64>(),
-                "incremental footprint drifted"
-            );
-            controller.on_signals(&crate::coordinator::ControlInputs {
-                engine: sig,
-                active_agents: slots.active_count(),
-                active_footprint,
-                capacity: engine.pool().capacity(),
-            });
-            usage_series.record(after, sig.pool_usage);
-            hit_series.record(after, sig.hit_rate);
-            active_series.record(after, slots.active_count() as f64);
-            let w = controller.window();
-            window_series.record(
-                after,
-                if w == usize::MAX { f64::NAN } else { w as f64 },
-            );
-        } else if let Some(t) = events.peek_time() {
-            result_breakdown_toolwait += t.saturating_sub(now);
-            clock.advance_to(t);
-        } else {
-            break; // no engine work, no future events → done
-        }
-    }
-
-    if finished_agents != agents_total {
-        return Err(ConcurError::engine(format!(
-            "run ended with {finished_agents}/{agents_total} agents finished"
-        )));
-    }
-
-    let total_time = clock.now();
-    let mut breakdown = std::mem::take(&mut engine.breakdown);
-    breakdown.add(Phase::ToolWait, result_breakdown_toolwait);
-    let throughput_tps = if total_time.0 > 0 {
-        total_gen as f64 / total_time.as_secs_f64()
-    } else {
-        0.0
-    };
-
-    Ok(RunResult {
-        scheduler: controller.name(),
-        total_time,
-        breakdown,
-        hit_rate: engine.lifetime_hits.ratio(),
-        counters: engine.counters,
-        usage_series,
-        hit_series,
-        active_series,
-        window_series,
-        agents_total,
-        agents_finished: finished_agents,
-        total_gen_tokens: total_gen,
-        throughput_tps,
-        agent_latency,
-        engine_steps,
-        pauses: slots.pauses,
-        resumes: slots.resumes,
-    })
+    let mut router = make_router(RouterKind::CacheAffinity);
+    crate::cluster::run_sharded(
+        std::slice::from_mut(engine),
+        router.as_mut(),
+        agents,
+        controller,
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{
-        AimdParams, EngineConfig, JobConfig, SchedulerKind, WorkloadConfig,
+        AimdParams, EngineConfig, JobConfig, RouterKind, SchedulerKind,
+        TopologyConfig, WorkloadConfig,
     };
     use crate::config::presets;
 
@@ -335,6 +198,7 @@ mod tests {
                 ..WorkloadConfig::default()
             },
             scheduler,
+            topology: TopologyConfig::default(),
         }
     }
 
@@ -377,6 +241,37 @@ mod tests {
     fn request_cap_sets_engine_cap() {
         let r = run_job(&small_job(SchedulerKind::RequestCap(2))).unwrap();
         assert_eq!(r.agents_finished, 8);
+    }
+
+    #[test]
+    fn replicated_job_runs_through_the_cluster_path() {
+        let mut job = small_job(SchedulerKind::Concur(AimdParams::default()));
+        job.topology = TopologyConfig { replicas: 2, router: RouterKind::CacheAffinity };
+        let r = run_job(&job).unwrap();
+        assert_eq!(r.agents_finished, 8);
+        assert_eq!(r.replicas, 2);
+        assert_eq!(r.router, "cache-affinity");
+    }
+
+    #[test]
+    fn single_replica_run_reports_single_router() {
+        let r = run_job(&small_job(SchedulerKind::Uncontrolled)).unwrap();
+        assert_eq!(r.replicas, 1);
+        assert_eq!(r.router, "single");
+    }
+
+    #[test]
+    fn worker_resolution_clamps_and_falls_back() {
+        // Unset / garbage / zero → all available cores.
+        assert_eq!(resolve_workers(None, 8), 8);
+        assert_eq!(resolve_workers(Some("many"), 8), 8);
+        assert_eq!(resolve_workers(Some("0"), 8), 8);
+        // In-range override respected; oversubscription clamped.
+        assert_eq!(resolve_workers(Some("3"), 8), 3);
+        assert_eq!(resolve_workers(Some(" 4 "), 8), 4);
+        assert_eq!(resolve_workers(Some("8"), 2), 2);
+        // Degenerate availability never yields zero workers.
+        assert_eq!(resolve_workers(None, 0), 1);
     }
 
     #[test]

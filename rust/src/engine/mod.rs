@@ -52,7 +52,7 @@ pub struct StepOutcome {
 }
 
 /// Cumulative engine counters (telemetry / tables).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EngineCounters {
     pub admitted: u64,
     pub finished: u64,
@@ -65,6 +65,23 @@ pub struct EngineCounters {
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
     pub stalled_decode_steps: u64,
+}
+
+impl EngineCounters {
+    /// Fold another replica's counters in (per-replica → fleet totals).
+    pub fn merge(&mut self, other: &EngineCounters) {
+        self.admitted += other.admitted;
+        self.finished += other.finished;
+        self.preemptions += other.preemptions;
+        self.evictions += other.evictions;
+        self.evicted_tokens += other.evicted_tokens;
+        self.offloaded_tokens += other.offloaded_tokens;
+        self.reloaded_tokens += other.reloaded_tokens;
+        self.recompute_tokens += other.recompute_tokens;
+        self.prefill_tokens += other.prefill_tokens;
+        self.decode_tokens += other.decode_tokens;
+        self.stalled_decode_steps += other.stalled_decode_steps;
+    }
 }
 
 /// Signals exposed to admission controllers after every step — `U_t` and
@@ -171,6 +188,14 @@ impl SimEngine {
         // Optimistic default before observations: the controller should
         // probe upward during warmup, not cut.
         self.hit_window.ratio_or(1.0)
+    }
+
+    /// Admissions currently inside the `H_t` window — the weight of this
+    /// replica's hit rate in fleet-level aggregation (a long-idle replica
+    /// holds at most a full window of stale observations, it can never
+    /// outvote replicas that are actively admitting).
+    pub fn hit_observations(&self) -> usize {
+        self.hit_window.observations()
     }
 
     pub fn signals(&self) -> EngineSignals {
@@ -433,6 +458,10 @@ impl SimEngine {
     /// Chunked prefill under a global per-step token budget, FIFO order.
     fn run_prefill(&mut self, out: &mut StepOutcome, now: Micros) {
         let mut budget = self.cfg.prefill_chunk as u64;
+        // Indexed loop: the body re-borrows `self` mutably (ensure_free,
+        // pool.alloc) between accesses, which `for seq in &mut running`
+        // cannot express.
+        #[allow(clippy::needless_range_loop)]
         for i in 0..self.running.len() {
             if budget == 0 {
                 break;
@@ -738,7 +767,8 @@ mod tests {
         let mut e = tiny_engine(100_000);
         e.cfg.max_running = 2;
         for a in 0..6u64 {
-            e.submit(mk_req(a + 1, a + 1, ((a as u32) * 50_000..(a as u32) * 50_000 + 800).collect(), 20, 0));
+            let base = (a as u32) * 50_000;
+            e.submit(mk_req(a + 1, a + 1, (base..base + 800).collect(), 20, 0));
         }
         let out = e.step(Micros::ZERO);
         assert_eq!(out.admitted, 2);
@@ -783,7 +813,8 @@ mod tests {
     fn breakdown_accumulates_all_time() {
         let mut e = tiny_engine(50_000);
         for a in 0..3u64 {
-            e.submit(mk_req(a + 1, a + 1, ((a as u32) * 50_000..(a as u32) * 50_000 + 1500).collect(), 25, 0));
+            let base = (a as u32) * 50_000;
+            e.submit(mk_req(a + 1, a + 1, (base..base + 1500).collect(), 25, 0));
         }
         drive(&mut e, 300);
         assert!(e.breakdown.total().0 > 0);

@@ -22,6 +22,8 @@
 //! * [`agent`]       — ReAct agent state machine + workload generator.
 //! * [`coordinator`] — the paper's system contribution: CONCUR AIMD
 //!                     admission control plus all evaluated baselines.
+//! * [`cluster`]     — data-parallel serving fleet: N engine replicas,
+//!                     cache-affine routing, aggregated control signals.
 //! * [`driver`]      — glue that runs a full agentic batch job end-to-end.
 //! * [`runtime`]     — PJRT bridge: loads `artifacts/*.hlo.txt` (lowered
 //!                     from the L2 JAX model + L1 Pallas kernels) and
@@ -33,6 +35,7 @@
 //! the request path is pure rust.
 
 pub mod agent;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod core;

@@ -57,6 +57,13 @@ impl Breakdown {
         Breakdown::default()
     }
 
+    /// Fold another breakdown in (per-replica → fleet totals).
+    pub fn merge(&mut self, other: &Breakdown) {
+        for p in ALL_PHASES {
+            self.add(p, other.get(p));
+        }
+    }
+
     pub fn add(&mut self, phase: Phase, t: Micros) {
         match phase {
             Phase::Prefill => self.prefill += t.0,

@@ -8,8 +8,11 @@
 //! crossovers fall) is the reproduction target.
 //!
 //! Run via `concur repro <table1|table2|table3|fig1|fig3|fig5|fig6|all>`
-//! or `cargo bench --bench paper_tables` / `paper_figures`.
+//! or `cargo bench --bench paper_tables` / `paper_figures`.  Beyond the
+//! paper, `concur repro cluster` runs the data-parallel replica-scaling
+//! study (see [`cluster_scaling`]).
 
+pub mod cluster_scaling;
 pub mod fig1;
 pub mod fig3;
 pub mod fig5;
@@ -77,7 +80,8 @@ pub fn system_job(
         hit_window: 8,
         ..EngineConfig::default()
     };
-    JobConfig { cluster, engine, workload, scheduler }
+    let topology = crate::config::TopologyConfig::default();
+    JobConfig { cluster, engine, workload, scheduler, topology }
 }
 
 /// Run one job for a (cluster, workload, scheduler, eviction) tuple with
@@ -99,7 +103,8 @@ pub fn run_systems(jobs: Vec<JobConfig>) -> Result<Vec<RunResult>> {
     crate::driver::run_jobs_parallel(&jobs).into_iter().collect()
 }
 
-/// All known experiments in paper order.
+/// All paper experiments in paper order ("all" runs these; the `cluster`
+/// scaling study is dispatched by name — it is ours, not the paper's).
 pub const ALL: [&str; 7] =
     ["fig1", "fig3", "table1", "table2", "fig5", "fig6", "table3"];
 
@@ -109,6 +114,7 @@ pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
     let mut out = Vec::new();
     for n in names {
         match n {
+            "cluster" => out.push(cluster_scaling::run()?),
             "fig1" => out.extend(fig1::run()?),
             "fig3" => out.push(fig3::run()?),
             "fig5" => out.push(fig5::run()?),
@@ -118,7 +124,8 @@ pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
             "table3" => out.push(table3::run()?),
             other => {
                 return Err(crate::core::ConcurError::config(format!(
-                    "unknown experiment '{other}' (known: {ALL:?} or 'all')"
+                    "unknown experiment '{other}' (known: {ALL:?}, 'cluster' \
+                     or 'all')"
                 )))
             }
         }

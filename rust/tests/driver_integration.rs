@@ -3,7 +3,7 @@
 
 use concur::config::{
     presets, AimdParams, EngineConfig, EvictionMode, JobConfig, SchedulerKind,
-    WorkloadConfig,
+    TopologyConfig, WorkloadConfig,
 };
 use concur::driver::run_job;
 use concur::metrics::Phase;
@@ -14,6 +14,7 @@ fn job(scheduler: SchedulerKind, eviction: EvictionMode, n_agents: usize) -> Job
         engine: EngineConfig { hit_window: 8, eviction, ..EngineConfig::default() },
         workload: WorkloadConfig { n_agents, ..WorkloadConfig::default() },
         scheduler,
+        topology: TopologyConfig::default(),
     }
 }
 
@@ -65,6 +66,7 @@ fn no_pressure_means_no_controller_penalty() {
         engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
         workload: WorkloadConfig { n_agents: 8, ..WorkloadConfig::default() },
         scheduler: s,
+        topology: TopologyConfig::default(),
     };
     let base = run_job(&mk(SchedulerKind::Uncontrolled)).unwrap();
     let conc = run_job(&mk(SchedulerKind::Concur(AimdParams::default()))).unwrap();

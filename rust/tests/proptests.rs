@@ -671,7 +671,7 @@ fn arena_tree_matches_reference_implementation() {
 fn parallel_sweep_is_bit_identical_on_random_jobs() {
     use concur::config::{
         AimdParams, EngineConfig, EvictionMode, JobConfig, SchedulerKind,
-        WorkloadConfig,
+        TopologyConfig, WorkloadConfig,
     };
     use concur::config::presets;
     use concur::driver::{run_jobs, run_jobs_parallel_with};
@@ -701,6 +701,7 @@ fn parallel_sweep_is_bit_identical_on_random_jobs() {
                     ..WorkloadConfig::default()
                 },
                 scheduler,
+                topology: TopologyConfig::default(),
             }
         })
         .collect();
