@@ -135,6 +135,16 @@ impl Agent {
         self.phase = AgentPhase::Ready;
     }
 
+    /// The replica executing this agent's in-flight step died: the
+    /// step's work is lost and the agent returns to `Ready` to reissue
+    /// it — same step, same planned tokens, recomputed from scratch on
+    /// whichever replica admission lands it next.  History and the
+    /// recompute boundary are untouched (the step never completed).
+    pub fn on_replica_failed(&mut self) {
+        assert_eq!(self.phase, AgentPhase::Generating, "agent {} had no step in flight", self.id);
+        self.phase = AgentPhase::Ready;
+    }
+
     pub fn is_done(&self) -> bool {
         self.phase == AgentPhase::Done
     }
@@ -216,5 +226,33 @@ mod tests {
         let mut a = Agent::new(AgentId(1), vec![1], plan(2));
         a.make_request(RequestId(1), Micros::ZERO);
         a.make_request(RequestId(2), Micros::ZERO);
+    }
+
+    #[test]
+    fn replica_failure_reissues_the_same_step() {
+        let mut a = Agent::new(AgentId(1), vec![1, 2, 3], plan(2));
+        let req = a.make_request(RequestId(1), Micros(5));
+        assert_eq!(a.phase, AgentPhase::Generating);
+        // The replica dies mid-step: the agent rewinds to Ready with the
+        // identical request content (nothing was appended).
+        a.on_replica_failed();
+        assert_eq!(a.phase, AgentPhase::Ready);
+        assert_eq!(a.steps_done(), 0);
+        let retry = a.make_request(RequestId(2), Micros(9));
+        assert_eq!(retry.prompt, req.prompt);
+        assert_eq!(retry.gen, req.gen);
+        assert_eq!(retry.prev_ctx, req.prev_ctx);
+        // started_at keeps the original first-submission stamp.
+        assert_eq!(a.started_at, Some(Micros(5)));
+        // The retried step completes normally.
+        let gen = retry.gen.clone();
+        assert!(a.on_step_finished(&gen, Micros(20)).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "no step in flight")]
+    fn replica_failure_requires_an_inflight_step() {
+        let mut a = Agent::new(AgentId(1), vec![1], plan(2));
+        a.on_replica_failed();
     }
 }

@@ -5,47 +5,112 @@
 //! coordinator.  This module owns that topology:
 //!
 //! * [`router`] decides which replica an agent's next generation step
-//!   lands on (round-robin / least-loaded / cache-affinity);
+//!   lands on (round-robin / least-loaded / cache-affinity / rebalance);
 //! * [`run_sharded`] is the fleet event loop: per-replica iteration
 //!   timelines, one global [`Controller`] regulating admission for the
-//!   whole fleet through aggregated signals — `U_t` as the max over
-//!   replica working-set usages (the fleet is as congested as its worst
-//!   shard), `H_t` as the admission-weighted mean hit rate;
+//!   whole fleet, and the scripted [`FaultPlan`] lifecycle (kill /
+//!   drain-and-refill / revive);
 //! * [`ClusterCoordinator`] packages both behind `driver::run_job`.
+//!
+//! ## Signal flow (paper §4.2-§4.3)
+//!
+//! After every completed replica iteration the controller observes one
+//! `ControlInputs`: `U_t` — the aggregate context of slot-holding agents
+//! over pool capacity, taken as the **max over live replicas** (the
+//! fleet is as congested as its worst shard) — and `H_t`, the
+//! admission-weighted mean of per-replica windowed hit rates.  The AIMD
+//! law (paper Eq. 1) then adjusts the active-agent window that
+//! [`run_sharded`] enforces at step boundaries via `SlotManager`.
+//! **Dead replicas are excluded from both aggregates**: a max over a
+//! dead replica would freeze `U_t` on its stale working set and hold the
+//! window down for capacity that no longer exists (DESIGN.md §Faults).
+//!
+//! ## Fault semantics
+//!
+//! * **kill** — the replica's pool/cache/queues are wiped; agents with a
+//!   step in flight there lose it, drop their admission slot and re-enter
+//!   the admission queue (FIFO, behind never-admitted agents — their
+//!   cache died, so they have no warm-resume priority); tool-waiting
+//!   agents keep their slot but their replica pin is cleared.  Ties with
+//!   an iteration completing at the same instant resolve fault-first.
+//! * **drain** — the replica stops receiving admissions (routers see it
+//!   as non-admissible), finishes the requests it holds, then wipes its
+//!   cache and rejoins ("refill").  Unlike kill, agents keep their slots
+//!   and simply route elsewhere at their next step boundary.
+//! * **revive** — a killed replica rejoins the admissible fleet, empty.
 //!
 //! ## Timing semantics (and the N=1 contract)
 //!
-//! The cluster clock stops at replica iteration boundaries, and at tool
-//! completions only when the whole fleet is idle — exactly the
-//! event-boundary semantics of the pre-cluster single-engine driver,
-//! which the N=1 path must reproduce **bit-for-bit** (differential-tested
-//! in `tests/cluster_integration.rs`).  The cost of keeping that contract
-//! at N>1 is that an idle replica can receive work up to one
-//! (busiest-replica) iteration late; iterations are milliseconds against
-//! second-scale tool latencies, so the distortion is negligible and —
-//! more importantly — identical across router policies under comparison.
+//! The cluster clock stops at replica iteration boundaries, at scripted
+//! fault instants, and at tool completions only when the whole fleet is
+//! idle — exactly the event-boundary semantics of the pre-cluster
+//! single-engine driver, which the N=1 no-fault path must reproduce
+//! **bit-for-bit** (differential-tested in
+//! `tests/cluster_integration.rs`, including `FaultPlan::none()` and
+//! identity tool skew).  The cost of keeping that contract at N>1 is
+//! that an idle replica can receive work up to one (busiest-replica)
+//! iteration late; iterations are milliseconds against second-scale tool
+//! latencies, so the distortion is negligible and — more importantly —
+//! identical across router policies under comparison.
 //!
 //! Replicas are advanced in index order and every event queue tie-breaks
-//! by insertion order, so cluster runs are deterministic for any N.
+//! by insertion order, so cluster runs are deterministic for any N, any
+//! fault plan and any skew vector.
 
 pub mod router;
 
-pub use router::{make_router, CacheAffinityRouter, ReplicaLoad, Router};
+pub use router::{
+    make_router, CacheAffinityRouter, RebalanceRouter, ReplicaLoad, RouteCtx, Router,
+};
 
-use crate::agent::Agent;
-use crate::config::JobConfig;
+use crate::agent::{Agent, AgentPhase};
+use crate::config::{FaultKind, FaultPlan, JobConfig};
 use crate::coordinator::{slots::BoundaryDecision, ControlInputs, Controller};
 use crate::core::{AgentId, ConcurError, Micros, RequestId, Result};
 use crate::costmodel::CostModel;
-use crate::driver::RunResult;
+use crate::driver::{AgentOutcome, RunResult};
 use crate::engine::{EngineCounters, EngineSignals, FinishedReq, SimEngine};
 use crate::metrics::{Breakdown, Histogram, LifetimeRatio, Phase, TimeSeries};
 use crate::sim::{EventQueue, SimClock};
 
-/// Owns the replica fleet and its router for one job.
+/// Fault/drain/migration telemetry for one run (all zero when the fleet
+/// stays healthy).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Replica kills applied from the fault plan.
+    pub kills: u64,
+    /// Drains initiated from the fault plan.
+    pub drains: u64,
+    /// Killed replicas revived from the fault plan.
+    pub revives: u64,
+    /// Drained replicas that emptied, wiped their cache and rejoined.
+    pub refills: u64,
+    /// Agents whose in-flight step died with a replica and re-entered
+    /// the admission queue.
+    pub requeued_agents: u64,
+    /// Step-boundary migrations: an agent's next step was routed to a
+    /// different replica than the one its state sat on.
+    pub migrations: u64,
+}
+
+/// Replica lifecycle state inside one `run_sharded` invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReplicaState {
+    Alive,
+    Draining,
+    Dead,
+}
+
+fn admissible_count(state: &[ReplicaState]) -> usize {
+    state.iter().filter(|s| **s == ReplicaState::Alive).count()
+}
+
+/// Owns the replica fleet, its router and its fault script for one job.
 pub struct ClusterCoordinator {
     engines: Vec<SimEngine>,
     router: Box<dyn Router>,
+    faults: FaultPlan,
+    tool_skew: Vec<f64>,
 }
 
 impl ClusterCoordinator {
@@ -56,9 +121,15 @@ impl ClusterCoordinator {
         let engines = (0..n)
             .map(|_| SimEngine::new(job.engine.clone(), CostModel::new(job.cluster.clone())))
             .collect();
-        ClusterCoordinator { engines, router: make_router(job.topology.router) }
+        ClusterCoordinator {
+            engines,
+            router: make_router(job.topology.router),
+            faults: job.topology.fault_plan.clone(),
+            tool_skew: job.topology.tool_skew.clone(),
+        }
     }
 
+    /// Number of replicas in the fleet.
     pub fn replicas(&self) -> usize {
         self.engines.len()
     }
@@ -69,7 +140,14 @@ impl ClusterCoordinator {
         agents: Vec<Agent>,
         controller: Box<dyn Controller>,
     ) -> Result<RunResult> {
-        run_sharded(&mut self.engines, self.router.as_mut(), agents, controller)
+        run_sharded(
+            &mut self.engines,
+            self.router.as_mut(),
+            agents,
+            controller,
+            &self.faults,
+            &self.tool_skew,
+        )
     }
 }
 
@@ -84,18 +162,25 @@ struct InFlight {
 /// Fleet-level engine signals for the controller and telemetry series.
 /// With one replica this returns its signals verbatim (the bit-exact
 /// single-engine path); otherwise `U`-style signals take the max over
-/// replicas and `H_t` is the admission-weighted mean, weighted by each
-/// replica's *windowed* observation count — recent admissions — so a
-/// long-idle replica's frozen window cannot outvote the replicas
-/// actively serving traffic.  Single pass, no intermediate allocation.
-fn aggregate_signals(engines: &[SimEngine]) -> EngineSignals {
+/// live replicas and `H_t` is the admission-weighted mean, weighted by
+/// each replica's *windowed* observation count — recent admissions — so
+/// a long-idle replica's frozen window cannot outvote the replicas
+/// actively serving traffic.  Dead replicas are excluded entirely: their
+/// signals describe state that no longer exists.  Single pass, no
+/// intermediate allocation.
+fn aggregate_signals(engines: &[SimEngine], state: &[ReplicaState]) -> EngineSignals {
     if engines.len() == 1 {
         return engines[0].signals();
     }
     let mut agg =
         EngineSignals { kv_usage: 0.0, pool_usage: 0.0, hit_rate: 0.0, running: 0, waiting: 0 };
     let (mut num, mut den, mut hit_sum) = (0.0, 0.0, 0.0);
-    for e in engines {
+    let mut live = 0usize;
+    for (e, st) in engines.iter().zip(state) {
+        if *st == ReplicaState::Dead {
+            continue;
+        }
+        live += 1;
         let s = e.signals();
         agg.kv_usage = agg.kv_usage.max(s.kv_usage);
         agg.pool_usage = agg.pool_usage.max(s.pool_usage);
@@ -106,36 +191,53 @@ fn aggregate_signals(engines: &[SimEngine]) -> EngineSignals {
         den += w;
         hit_sum += s.hit_rate;
     }
-    agg.hit_rate = if den > 0.0 { num / den } else { hit_sum / engines.len() as f64 };
+    agg.hit_rate = if den > 0.0 { num / den } else { hit_sum / live.max(1) as f64 };
     agg
 }
 
 /// The controller's `U_t` numerator/denominator: footprint and capacity
-/// of the most-loaded replica, so `ControlInputs::usage()` yields the
-/// max-over-replicas usage without floating-point detours (compared by
-/// cross-multiplication; exact for N=1 by construction).
-fn fleet_usage(footprint: &[u64], engines: &[SimEngine]) -> (u64, u64) {
-    let mut best = (footprint[0], engines[0].pool().capacity());
-    for (fp, e) in footprint.iter().zip(engines).skip(1) {
-        let cand = (*fp, e.pool().capacity());
-        if (cand.0 as u128) * (best.1 as u128) > (best.0 as u128) * (cand.1 as u128) {
-            best = cand;
+/// of the most-loaded **live** replica, so `ControlInputs::usage()`
+/// yields the max-over-replicas usage without floating-point detours
+/// (compared by cross-multiplication; exact for N=1 by construction).
+/// Dead replicas are skipped — their footprint ledger is zeroed at the
+/// kill, but excluding them here keeps the invariant independent of that
+/// bookkeeping.
+fn fleet_usage(footprint: &[u64], engines: &[SimEngine], state: &[ReplicaState]) -> (u64, u64) {
+    let mut best: Option<(u64, u64)> = None;
+    for ((fp, e), st) in footprint.iter().zip(engines).zip(state) {
+        if *st == ReplicaState::Dead {
+            continue;
         }
+        let cand = (*fp, e.pool().capacity());
+        best = Some(match best {
+            None => cand,
+            Some(b) => {
+                if (cand.0 as u128) * (b.1 as u128) > (b.0 as u128) * (cand.1 as u128) {
+                    cand
+                } else {
+                    b
+                }
+            }
+        });
     }
-    best
+    // FaultPlan validation guarantees a live replica; the fallback keeps
+    // the arithmetic total anyway.
+    best.unwrap_or((0, 1))
 }
 
 /// Ask the router for a replica, giving it the live load snapshot (built
-/// into the caller's reused scratch buffer — no per-request allocation).
-/// The caller moves the agent's footprint ledger entry if the choice
-/// migrates it.  Single-replica fleets skip the router entirely (the N=1
-/// path carries zero routing overhead).
+/// into the caller's reused scratch buffer — no per-request allocation)
+/// and the agent's cache heat on its current replica.  The caller moves
+/// the agent's footprint ledger entry if the choice migrates it.
+/// Single-replica fleets skip the router entirely (the N=1 path carries
+/// zero routing overhead).
 // Private twice-used helper: the arg list IS the routing context; a
 // one-off params struct would only rename it.
 #[allow(clippy::too_many_arguments)]
 fn route_to(
     router: &mut dyn Router,
     engines: &[SimEngine],
+    state: &[ReplicaState],
     footprint: &[u64],
     loads: &mut Vec<ReplicaLoad>,
     current: Option<usize>,
@@ -147,26 +249,92 @@ fn route_to(
         return 0;
     }
     loads.clear();
-    loads.extend(engines.iter().zip(footprint).map(|(e, &fp)| ReplicaLoad {
+    loads.extend(engines.iter().zip(footprint).zip(state).map(|((e, &fp), &st)| ReplicaLoad {
         active_footprint: fp,
         capacity: e.pool().capacity(),
+        admissible: st == ReplicaState::Alive,
     }));
-    let r = router.route(aid, ctx, current, now, loads);
+    let heat = current.and_then(|r| engines[r].agent_heat(aid));
+    let rctx = RouteCtx { agent: aid, ctx_tokens: ctx, current, now, heat };
+    let r = router.route(&rctx, loads);
     assert!(r < engines.len(), "router returned out-of-range replica {r}");
+    assert!(state[r] == ReplicaState::Alive, "router chose non-admissible replica {r}");
     r
+}
+
+/// Scale a tool latency by a replica's skew multiplier.  The identity
+/// multiplier short-circuits so unskewed runs avoid the float round-trip
+/// entirely (bit-identity of the no-skew path).
+fn scale_latency(lat: Micros, skew: f64) -> Micros {
+    if skew == 1.0 {
+        lat
+    } else {
+        Micros((lat.0 as f64 * skew).round() as u64)
+    }
 }
 
 /// Run a complete batch job over an explicit replica slice.  This is the
 /// one driver loop in the crate: `driver::run_with` calls it with a
-/// single-element slice and `driver::run_job` with the configured fleet.
+/// single-element slice, no faults and no skew; `driver::run_job` with
+/// the configured fleet and the job's `TopologyConfig`.
+///
+/// `faults` scripts replica kills / drains / revivals (see the module
+/// docs for semantics) and must validate against `engines.len()`;
+/// `tool_skew` is either empty (uniform 1.0) or one positive multiplier
+/// per replica, applied to the tool latency of every step served there.
+///
+/// # Examples
+///
+/// Drive a tiny two-replica fleet to completion with a healthy fault
+/// plan and uniform tool latencies:
+///
+/// ```
+/// use concur::agent::WorkloadGenerator;
+/// use concur::cluster::{make_router, run_sharded};
+/// use concur::config::{presets, EngineConfig, FaultPlan, RouterKind, WorkloadConfig};
+/// use concur::coordinator::concur_default;
+/// use concur::costmodel::CostModel;
+/// use concur::engine::SimEngine;
+///
+/// let workload =
+///     WorkloadConfig { n_agents: 4, steps_min: 2, steps_max: 2, ..WorkloadConfig::default() };
+/// let agents = WorkloadGenerator::new(workload).generate();
+/// let mut engines: Vec<SimEngine> = (0..2)
+///     .map(|_| SimEngine::new(EngineConfig::default(), CostModel::new(presets::qwen3_cluster(2))))
+///     .collect();
+/// let mut router = make_router(RouterKind::CacheAffinity);
+/// let result = run_sharded(
+///     &mut engines,
+///     router.as_mut(),
+///     agents,
+///     concur_default(),
+///     &FaultPlan::none(),
+///     &[],
+/// )
+/// .unwrap();
+/// assert_eq!(result.agents_finished, 4);
+/// assert_eq!(result.faults.kills, 0);
+/// ```
 pub fn run_sharded(
     engines: &mut [SimEngine],
     router: &mut dyn Router,
     agents: Vec<Agent>,
     mut controller: Box<dyn Controller>,
+    faults: &FaultPlan,
+    tool_skew: &[f64],
 ) -> Result<RunResult> {
     assert!(!engines.is_empty(), "cluster needs at least one replica");
     let n = engines.len();
+    faults.validate(n)?;
+    assert!(
+        tool_skew.is_empty() || tool_skew.len() == n,
+        "tool_skew must be empty or one multiplier per replica"
+    );
+    assert!(
+        tool_skew.iter().all(|s| s.is_finite() && *s > 0.0),
+        "tool_skew multipliers must be finite and > 0"
+    );
+    let skew_of = |r: usize| if tool_skew.is_empty() { 1.0 } else { tool_skew[r] };
     if let Some(cap) = controller.engine_request_cap() {
         for e in engines.iter_mut() {
             e.cfg.max_running = cap;
@@ -188,8 +356,9 @@ pub fn run_sharded(
         &mut fleet[id.0 as usize]
     }
     // Replica each agent's working set currently sits on (None before
-    // first admission) and the per-replica slot-holder footprints — the
-    // numerators of each replica's U_t, maintained incrementally.
+    // first admission or after its replica died) and the per-replica
+    // slot-holder footprints — the numerators of each replica's U_t,
+    // maintained incrementally.
     let mut assignment: Vec<Option<usize>> = vec![None; agents_total];
     let mut footprint: Vec<u64> = vec![0; n];
 
@@ -203,6 +372,9 @@ pub fn run_sharded(
     let mut active_series = TimeSeries::new("active_agents");
     let mut window_series = TimeSeries::new("window");
     let mut agent_latency = Histogram::new("agent_e2e_latency");
+    let mut alive_series = TimeSeries::new("admissible_replicas");
+    alive_series.record(Micros::ZERO, n as f64);
+    let mut per_agent: Vec<AgentOutcome> = Vec::with_capacity(agents_total);
 
     let mut finished_agents = 0usize;
     let mut engine_steps = 0u64;
@@ -211,8 +383,57 @@ pub fn run_sharded(
     // Scratch for per-decision load snapshots (reused, never reallocated).
     let mut loads: Vec<ReplicaLoad> = Vec::with_capacity(n);
 
+    let mut state: Vec<ReplicaState> = vec![ReplicaState::Alive; n];
+    let mut fstats = FaultStats::default();
+    let mut next_fault = 0usize;
+
     loop {
         let now = clock.now();
+
+        // 0. Apply scripted fault transitions due now.  Ties with an
+        //    iteration completing at this instant resolve fault-first: a
+        //    replica that dies at t loses an iteration finishing at t.
+        while let Some(ev) = faults.events().get(next_fault).filter(|e| e.at <= now) {
+            let ev = *ev;
+            next_fault += 1;
+            let r = ev.replica;
+            match ev.kind {
+                FaultKind::Kill => {
+                    // The iteration in flight dies with the replica.
+                    inflight[r] = None;
+                    stagnant[r] = 0;
+                    for (i, slot) in assignment.iter_mut().enumerate() {
+                        if *slot != Some(r) {
+                            continue;
+                        }
+                        // Replica pin cleared for everyone who lived here.
+                        *slot = None;
+                        let a = &mut fleet[i];
+                        if a.phase == AgentPhase::Generating {
+                            // Step in flight lost: back to Ready, slot
+                            // revoked, re-enter the admission queue cold.
+                            a.on_replica_failed();
+                            slots.requeue(a.id);
+                            fstats.requeued_agents += 1;
+                        }
+                    }
+                    footprint[r] = 0;
+                    engines[r].clear_state();
+                    state[r] = ReplicaState::Dead;
+                    fstats.kills += 1;
+                }
+                FaultKind::Drain => {
+                    state[r] = ReplicaState::Draining;
+                    fstats.drains += 1;
+                }
+                FaultKind::Revive => {
+                    // State was wiped at the kill; just rejoin.
+                    state[r] = ReplicaState::Alive;
+                    fstats.revives += 1;
+                }
+            }
+            alive_series.record(now, admissible_count(&state) as f64);
+        }
 
         // 1. Land replica iterations completing now: apply finished
         //    requests, then give the controller one observation per
@@ -231,7 +452,7 @@ pub fn run_sharded(
                     Some(tool_latency) => {
                         // Still active: account its context growth.
                         footprint[ar] += a.context_len() as u64 - before;
-                        events.push(now + tool_latency, f.agent);
+                        events.push(now + scale_latency(tool_latency, skew_of(ar)), f.agent);
                     }
                     None => {
                         footprint[ar] -= before; // slot released
@@ -239,6 +460,11 @@ pub fn run_sharded(
                         finished_agents += 1;
                         let start = a.started_at.unwrap_or(Micros::ZERO);
                         agent_latency.record(now.saturating_sub(start));
+                        per_agent.push(AgentOutcome {
+                            agent: f.agent,
+                            gen_tokens: a.total_gen_tokens(),
+                            finished_at: now,
+                        });
                     }
                 }
             }
@@ -251,8 +477,8 @@ pub fn run_sharded(
                     .sum();
                 debug_assert_eq!(expect, *fp, "replica {rep} footprint drifted");
             }
-            let sig = aggregate_signals(engines);
-            let (fp, cap) = fleet_usage(&footprint, engines);
+            let sig = aggregate_signals(engines, &state);
+            let (fp, cap) = fleet_usage(&footprint, engines, &state);
             controller.on_signals(&ControlInputs {
                 engine: sig,
                 active_agents: slots.active_count(),
@@ -266,6 +492,21 @@ pub fn run_sharded(
             window_series.record(now, if w == usize::MAX { f64::NAN } else { w as f64 });
         }
 
+        // 1b. Drain-and-refill: a draining replica that has emptied (no
+        //     iteration in flight, no running or queued requests) wipes
+        //     its cache and rejoins the admissible fleet.
+        for r in 0..n {
+            if state[r] == ReplicaState::Draining
+                && inflight[r].is_none()
+                && !engines[r].has_work()
+            {
+                engines[r].clear_state();
+                state[r] = ReplicaState::Alive;
+                fstats.refills += 1;
+                alive_series.record(now, admissible_count(&state) as f64);
+            }
+        }
+
         // 2. Deliver due tool completions; paused agents wait for slots.
         while let Some((_, aid)) = events.pop_due(now) {
             let a = agent(&mut fleet, aid);
@@ -275,19 +516,29 @@ pub fn run_sharded(
                 let req = a.make_request(RequestId(next_req), now);
                 next_req += 1;
                 let cur = assignment[aid.0 as usize];
-                let tgt = route_to(router, engines, &footprint, &mut loads, cur, aid, ctx, now);
-                let old = cur.expect("active agent was never assigned");
-                if old != tgt {
-                    // Migration: the working set follows the agent.
-                    footprint[old] -= ctx;
-                    footprint[tgt] += ctx;
-                    assignment[aid.0 as usize] = Some(tgt);
+                let tgt =
+                    route_to(router, engines, &state, &footprint, &mut loads, cur, aid, ctx, now);
+                match cur {
+                    Some(old) if old == tgt => {}
+                    Some(old) => {
+                        // Migration: the working set follows the agent.
+                        footprint[old] -= ctx;
+                        footprint[tgt] += ctx;
+                        assignment[aid.0 as usize] = Some(tgt);
+                        fstats.migrations += 1;
+                    }
+                    None => {
+                        // Working set died with its replica: lands fresh.
+                        footprint[tgt] += ctx;
+                        assignment[aid.0 as usize] = Some(tgt);
+                    }
                 }
                 engines[tgt].submit(req);
-            } else {
-                let ar = assignment[aid.0 as usize].expect("paused before admission");
+            } else if let Some(ar) = assignment[aid.0 as usize] {
                 footprint[ar] -= a.context_len() as u64; // paused
             }
+            // (Paused with no assignment: its ledger entry already went
+            // down with the killed replica.)
         }
 
         // 3. Grant freed slots (resume paused LIFO, admit fresh FIFO).
@@ -297,15 +548,21 @@ pub fn run_sharded(
             let req = a.make_request(RequestId(next_req), now);
             next_req += 1;
             let cur = assignment[aid.0 as usize];
-            let tgt = route_to(router, engines, &footprint, &mut loads, cur, aid, ctx, now);
+            let tgt =
+                route_to(router, engines, &state, &footprint, &mut loads, cur, aid, ctx, now);
+            if cur.is_some_and(|old| old != tgt) {
+                fstats.migrations += 1;
+            }
             assignment[aid.0 as usize] = Some(tgt);
             footprint[tgt] += ctx;
             engines[tgt].submit(req);
         }
 
-        // 4. Start an iteration on every idle replica with queued work.
+        // 4. Start an iteration on every idle live replica with queued
+        //    work (a draining replica keeps iterating to finish what it
+        //    holds; a dead one is skipped).
         for (r, e) in engines.iter_mut().enumerate() {
-            if inflight[r].is_some() || !e.has_work() {
+            if state[r] == ReplicaState::Dead || inflight[r].is_some() || !e.has_work() {
                 continue;
             }
             let out = e.step(now);
@@ -336,15 +593,32 @@ pub fn run_sharded(
             });
         }
 
-        // 5. Advance: to the earliest iteration boundary, else (fleet
-        //    fully idle) jump to the next tool completion.
-        if let Some(t) = inflight.iter().flatten().map(|f| f.done_at).min() {
-            clock.advance_to(t);
-        } else if let Some(t) = events.peek_time() {
-            toolwait += t.saturating_sub(now);
-            clock.advance_to(t);
-        } else {
-            break; // no work in flight, no future events → done
+        // 5. Advance to the earliest of: an iteration boundary, a
+        //    scripted fault instant, or (when the whole fleet is idle)
+        //    the next tool completion.  Idle gaps count as tool wait.
+        if finished_agents == agents_total {
+            break; // done; trailing fault events are moot
+        }
+        let next_boundary = inflight.iter().flatten().map(|f| f.done_at).min();
+        let next_fault_t = faults.events().get(next_fault).map(|e| e.at);
+        let idle = next_boundary.is_none();
+        let mut target = match (next_boundary, next_fault_t) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        if idle {
+            if let Some(t) = events.peek_time() {
+                target = Some(target.map_or(t, |x| x.min(t)));
+            }
+        }
+        match target {
+            Some(t) => {
+                if idle {
+                    toolwait += t.saturating_sub(now);
+                }
+                clock.advance_to(t);
+            }
+            None => break, // no work in flight, no future events → done
         }
     }
 
@@ -392,6 +666,9 @@ pub fn run_sharded(
         resumes: slots.resumes,
         replicas: n,
         router: if n == 1 { "single".into() } else { router.name() },
+        faults: fstats,
+        alive_series,
+        per_agent,
     })
 }
 
@@ -401,7 +678,7 @@ mod tests {
     use crate::agent::WorkloadGenerator;
     use crate::config::presets;
     use crate::config::{
-        AimdParams, EngineConfig, JobConfig, RouterKind, SchedulerKind,
+        AimdParams, EngineConfig, FaultEvent, JobConfig, RouterKind, SchedulerKind,
         TopologyConfig, WorkloadConfig,
     };
     use crate::coordinator::make_controller;
@@ -417,7 +694,7 @@ mod tests {
                 ..WorkloadConfig::default()
             },
             scheduler: SchedulerKind::Concur(AimdParams::default()),
-            topology: TopologyConfig { replicas, router },
+            topology: TopologyConfig { replicas, router, ..TopologyConfig::default() },
         }
     }
 
@@ -439,12 +716,15 @@ mod tests {
             RouterKind::RoundRobin,
             RouterKind::LeastLoaded,
             RouterKind::CacheAffinity,
+            RouterKind::Rebalance,
         ] {
             let r = run(&cluster_job(3, router));
             assert_eq!(r.agents_finished, 12, "{router:?} lost agents");
             assert_eq!(r.replicas, 3);
             assert_eq!(r.router, router.name());
             assert!(r.total_time.0 > 0);
+            assert_eq!(r.faults, FaultStats { migrations: r.faults.migrations, ..Default::default() });
+            assert_eq!(r.per_agent.len(), 12);
         }
     }
 
@@ -454,21 +734,29 @@ mod tests {
         assert_eq!(r.replicas, 1);
         assert_eq!(r.router, "single");
         assert_eq!(r.agents_finished, 12);
+        // Healthy N=1: one admissible-replicas point, no fault telemetry.
+        assert_eq!(r.alive_series.len(), 1);
+        assert_eq!(r.faults, FaultStats::default());
     }
 
     #[test]
-    fn fleet_usage_picks_the_most_loaded_replica() {
+    fn fleet_usage_picks_the_most_loaded_live_replica() {
         let job = cluster_job(2, RouterKind::RoundRobin);
         let engines: Vec<SimEngine> = (0..2)
             .map(|_| SimEngine::new(job.engine.clone(), CostModel::new(job.cluster.clone())))
             .collect();
         let cap = engines[0].pool().capacity();
-        assert_eq!(fleet_usage(&[10, 50], &engines), (50, cap));
-        assert_eq!(fleet_usage(&[70, 50], &engines), (70, cap));
+        let alive = vec![ReplicaState::Alive; 2];
+        assert_eq!(fleet_usage(&[10, 50], &engines, &alive), (50, cap));
+        assert_eq!(fleet_usage(&[70, 50], &engines, &alive), (70, cap));
+        // A dead replica cannot be the fleet maximum, whatever its ledger
+        // says (exclusion is what un-freezes U_t after a kill).
+        let half_dead = vec![ReplicaState::Dead, ReplicaState::Alive];
+        assert_eq!(fleet_usage(&[70, 50], &engines, &half_dead), (50, cap));
     }
 
     #[test]
-    fn aggregate_signals_sums_queue_depths() {
+    fn aggregate_signals_sums_queue_depths_of_live_replicas() {
         let job = cluster_job(2, RouterKind::RoundRobin);
         let mut engines: Vec<SimEngine> = (0..2)
             .map(|_| SimEngine::new(job.engine.clone(), CostModel::new(job.cluster.clone())))
@@ -481,10 +769,38 @@ mod tests {
             prev_ctx: 0,
             submitted_at: Micros::ZERO,
         });
-        let sig = aggregate_signals(&engines);
+        let alive = vec![ReplicaState::Alive; 2];
+        let sig = aggregate_signals(&engines, &alive);
         assert_eq!(sig.waiting, 1);
         assert_eq!(sig.running, 0);
         // Fresh engines report the optimistic hit-rate default.
         assert_eq!(sig.hit_rate, 1.0);
+        // Dead replicas drop out of the aggregate entirely.
+        let dead0 = vec![ReplicaState::Dead, ReplicaState::Alive];
+        assert_eq!(aggregate_signals(&engines, &dead0).waiting, 0);
+    }
+
+    #[test]
+    fn scale_latency_identity_is_exact() {
+        let lat = Micros(1_234_567);
+        assert_eq!(scale_latency(lat, 1.0), lat);
+        assert_eq!(scale_latency(lat, 2.0), Micros(2_469_134));
+        assert_eq!(scale_latency(Micros(1_000), 0.5), Micros(500));
+    }
+
+    #[test]
+    fn killed_replica_fleet_still_finishes() {
+        // Anchor the kill at half the healthy makespan: both runs are
+        // identical up to that instant, and the healthy run still has
+        // unfinished agents there, so the kill is guaranteed mid-run.
+        let healthy = run(&cluster_job(3, RouterKind::Rebalance));
+        let mut job = cluster_job(3, RouterKind::Rebalance);
+        job.topology.fault_plan =
+            FaultPlan::new(vec![FaultEvent::kill(0, Micros(healthy.total_time.0 / 2))]);
+        let r = run(&job);
+        assert_eq!(r.agents_finished, 12);
+        assert_eq!(r.faults.kills, 1);
+        // The admissible-replica series recorded the drop.
+        assert_eq!(r.alive_series.points().last().unwrap().1, 2.0);
     }
 }

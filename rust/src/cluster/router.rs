@@ -2,7 +2,7 @@
 //!
 //! Routing decides *where an agent's next generation step lands relative
 //! to its warm prefix* — which dominates multi-agent throughput far more
-//! than raw load spread (cf. KVFlow / Continuum in PAPERS.md).  Three
+//! than raw load spread (cf. KVFlow / Continuum in PAPERS.md).  Four
 //! policies span the trade-off space:
 //!
 //! * [`RoundRobinRouter`] — per-request cycling.  Perfectly even request
@@ -18,12 +18,22 @@
 //!   imbalance is tolerated until it is *sustained* — observed overloaded
 //!   at several distinct simulation instants in a row — then individual
 //!   steps spill to the least-loaded replica without re-homing the agent.
+//! * [`RebalanceRouter`] — cache-affinity homes that can be *re-assigned*:
+//!   under sustained imbalance or replica loss it migrates **cold agents
+//!   first** (ranked by the engine's per-agent cache-heat signal — time
+//!   since the agent last completed a decode on its current replica).
+//!   A cold agent's radix path is the most likely to have been LRU-evicted
+//!   already, so moving it forfeits the least warm state; hot agents keep
+//!   their pins.  This replaces the load-only spill, which migrates
+//!   whichever agent happens to request next, warm or not.
 //!
 //! All policies are deterministic: ties break toward the lowest replica
-//! index and every input comes from the simulation state.
+//! index and every input comes from the simulation state.  Replicas that
+//! are dead or draining are offered with [`ReplicaLoad::admissible`] set
+//! to `false`, and every policy must route around them.
 
 use crate::config::RouterKind;
-use crate::core::{AgentId, Micros};
+use crate::core::{AgentId, FxHashMap, Micros};
 
 /// Per-replica load snapshot offered to routing decisions.
 #[derive(Debug, Clone, Copy)]
@@ -33,38 +43,68 @@ pub struct ReplicaLoad {
     pub active_footprint: u64,
     /// KV pool capacity in tokens.
     pub capacity: u64,
+    /// May this replica receive new work?  `false` while the replica is
+    /// dead or draining; routers must never return a non-admissible
+    /// index (the fleet loop asserts it).
+    pub admissible: bool,
+}
+
+/// Everything a routing decision may consult about the requesting agent.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteCtx {
+    /// Agent issuing its next generation step.
+    pub agent: AgentId,
+    /// The agent's current context length in tokens.
+    pub ctx_tokens: u64,
+    /// Replica its working set sits on right now (`None` before first
+    /// admission, or after that replica was killed).
+    pub current: Option<usize>,
+    /// Simulation time of the decision.
+    pub now: Micros,
+    /// Cache heat: when the agent last completed a generation step on
+    /// `current` (`None` = never decoded there, or the state died with
+    /// its replica).  Staleness correlates with LRU eviction depth, so
+    /// time-since-last-decode ranks agents coldest-first for migration.
+    pub heat: Option<Micros>,
 }
 
 /// A routing policy: picks the replica for one agent's next request.
 pub trait Router {
+    /// Stable policy name (reported in [`RunResult`]s and bench JSON).
+    ///
+    /// [`RunResult`]: crate::driver::RunResult
     fn name(&self) -> String;
 
-    /// Choose a replica index in `0..replicas.len()` for `agent`'s next
-    /// generation step at simulation time `now`.  `ctx_tokens` is the
-    /// agent's current context length; `current` is the replica its
-    /// working set sits on right now (`None` before first admission).
-    fn route(
-        &mut self,
-        agent: AgentId,
-        ctx_tokens: u64,
-        current: Option<usize>,
-        now: Micros,
-        replicas: &[ReplicaLoad],
-    ) -> usize;
+    /// Choose a replica index in `0..replicas.len()` for the agent
+    /// described by `ctx`.
+    ///
+    /// Contract: the returned index must satisfy
+    /// `replicas[index].admissible`; the caller guarantees at least one
+    /// admissible replica exists (enforced by `FaultPlan` validation)
+    /// and asserts the contract after every decision.
+    fn route(&mut self, ctx: &RouteCtx, replicas: &[ReplicaLoad]) -> usize;
 }
 
-/// Replica with the smallest active working set (ties → lowest index).
+/// Admissible replica with the smallest active working set (ties → lowest
+/// index).  Callers guarantee at least one admissible replica.
 fn least_loaded(replicas: &[ReplicaLoad]) -> usize {
-    let mut best = 0;
-    for (i, r) in replicas.iter().enumerate().skip(1) {
-        if r.active_footprint < replicas[best].active_footprint {
-            best = i;
+    let mut best: Option<usize> = None;
+    for (i, r) in replicas.iter().enumerate() {
+        if !r.admissible {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some(b) => r.active_footprint < replicas[b].active_footprint,
+        };
+        if better {
+            best = Some(i);
         }
     }
-    best
+    best.expect("no admissible replica offered to router")
 }
 
-/// Cache-oblivious per-request cycling.
+/// Cache-oblivious per-request cycling (skipping non-admissible replicas).
 #[derive(Debug, Default)]
 pub struct RoundRobinRouter {
     next: usize,
@@ -75,17 +115,16 @@ impl Router for RoundRobinRouter {
         "round-robin".into()
     }
 
-    fn route(
-        &mut self,
-        _agent: AgentId,
-        _ctx_tokens: u64,
-        _current: Option<usize>,
-        _now: Micros,
-        replicas: &[ReplicaLoad],
-    ) -> usize {
-        let r = self.next % replicas.len();
-        self.next = self.next.wrapping_add(1);
-        r
+    fn route(&mut self, _ctx: &RouteCtx, replicas: &[ReplicaLoad]) -> usize {
+        let n = replicas.len();
+        for _ in 0..n {
+            let r = self.next % n;
+            self.next = self.next.wrapping_add(1);
+            if replicas[r].admissible {
+                return r;
+            }
+        }
+        unreachable!("no admissible replica offered to router")
     }
 }
 
@@ -98,15 +137,57 @@ impl Router for LeastLoadedRouter {
         "least-loaded".into()
     }
 
-    fn route(
-        &mut self,
-        _agent: AgentId,
-        _ctx_tokens: u64,
-        _current: Option<usize>,
-        _now: Micros,
-        replicas: &[ReplicaLoad],
-    ) -> usize {
+    fn route(&mut self, _ctx: &RouteCtx, replicas: &[ReplicaLoad]) -> usize {
         least_loaded(replicas)
+    }
+}
+
+/// Shared sustained-imbalance detector: per-replica streaks of distinct
+/// simulation instants at which the replica was over both the imbalance
+/// and the pressure bar.  Streaks advance at most once per instant
+/// (streaks only move while requests flow; with no routing activity
+/// there is nothing to move), and non-admissible replicas always read as
+/// streak 0.
+#[derive(Debug, Default)]
+struct OverloadStreaks {
+    streaks: Vec<u32>,
+    last_advance: Option<Micros>,
+}
+
+impl OverloadStreaks {
+    /// Advance the streaks for instant `now` (no-op if already advanced
+    /// at this instant) and return the streak table.
+    fn advance(&mut self, now: Micros, replicas: &[ReplicaLoad], imbalance: f64, pressure: f64) {
+        let n = replicas.len();
+        if self.streaks.len() != n {
+            self.streaks = vec![0; n];
+            self.last_advance = None;
+        }
+        if self.last_advance == Some(now) {
+            return;
+        }
+        self.last_advance = Some(now);
+        let admissible = replicas.iter().filter(|r| r.admissible).count().max(1);
+        let mean = replicas
+            .iter()
+            .filter(|r| r.admissible)
+            .map(|r| r.active_footprint)
+            .sum::<u64>() as f64
+            / admissible as f64;
+        for (i, r) in replicas.iter().enumerate() {
+            let fp = r.active_footprint as f64;
+            let overloaded =
+                r.admissible && fp > imbalance * mean && fp > pressure * r.capacity as f64;
+            if overloaded {
+                self.streaks[i] = self.streaks[i].saturating_add(1);
+            } else {
+                self.streaks[i] = 0;
+            }
+        }
+    }
+
+    fn get(&self, i: usize) -> u32 {
+        self.streaks[i]
     }
 }
 
@@ -124,11 +205,7 @@ pub struct CacheAffinityRouter {
     /// ... and footprint > `pressure` × pool capacity (an imbalanced but
     /// mostly-empty fleet has no reason to give up cache locality).
     pub pressure: f64,
-    /// Per-replica consecutive-overload streak, advanced at most once per
-    /// distinct `now` (streaks only move while requests flow; with no
-    /// routing activity there is nothing to spill anyway).
-    streaks: Vec<u32>,
-    last_advance: Option<Micros>,
+    streaks: OverloadStreaks,
     /// Requests routed away from their home (telemetry).
     pub spills: u64,
 }
@@ -139,8 +216,7 @@ impl Default for CacheAffinityRouter {
             spill_after: 8,
             imbalance: 1.5,
             pressure: 0.75,
-            streaks: Vec::new(),
-            last_advance: None,
+            streaks: OverloadStreaks::default(),
             spills: 0,
         }
     }
@@ -151,38 +227,121 @@ impl Router for CacheAffinityRouter {
         "cache-affinity".into()
     }
 
-    fn route(
-        &mut self,
-        agent: AgentId,
-        _ctx_tokens: u64,
-        _current: Option<usize>,
-        now: Micros,
-        replicas: &[ReplicaLoad],
-    ) -> usize {
+    fn route(&mut self, ctx: &RouteCtx, replicas: &[ReplicaLoad]) -> usize {
         let n = replicas.len();
-        if self.streaks.len() != n {
-            self.streaks = vec![0; n];
-            self.last_advance = None;
-        }
-        if self.last_advance != Some(now) {
-            self.last_advance = Some(now);
-            let mean = replicas.iter().map(|r| r.active_footprint).sum::<u64>() as f64 / n as f64;
+        self.streaks.advance(ctx.now, replicas, self.imbalance, self.pressure);
+        let home = ctx.agent.0 as usize % n;
+        if !replicas[home].admissible {
+            // Home down (dead or draining): re-hash the displaced cohort
+            // evenly over the admissible replicas.  Stable while the
+            // admissible set is stable, so displaced agents still build
+            // affinity on their fallback replica.  Counting scan — the
+            // routing path stays allocation-free.
+            let admissible = replicas.iter().filter(|r| r.admissible).count();
+            let mut rank = ctx.agent.0 as usize % admissible.max(1);
             for (i, r) in replicas.iter().enumerate() {
-                let fp = r.active_footprint as f64;
-                let overloaded =
-                    fp > self.imbalance * mean && fp > self.pressure * r.capacity as f64;
-                if overloaded {
-                    self.streaks[i] = self.streaks[i].saturating_add(1);
-                } else {
-                    self.streaks[i] = 0;
+                if !r.admissible {
+                    continue;
                 }
+                if rank == 0 {
+                    return i;
+                }
+                rank -= 1;
             }
+            unreachable!("no admissible replica offered to router");
         }
-        let home = agent.0 as usize % n;
-        if self.streaks[home] >= self.spill_after {
+        if self.streaks.get(home) >= self.spill_after {
             let target = least_loaded(replicas);
             if target != home {
                 self.spills += 1;
+                return target;
+            }
+        }
+        home
+    }
+}
+
+/// Re-homing router: cache-affinity pins that migrate **cold agents
+/// first** under sustained imbalance or replica loss.
+///
+/// Each agent starts on the id-hashed home; unlike
+/// [`CacheAffinityRouter`], the pin is stored and can move.  When the
+/// agent's home has been overloaded for `spill_after` distinct instants
+/// *and* the agent is cold (no decode completed on its current replica
+/// within `cold_after`), it is re-homed to the least-loaded admissible
+/// replica — warm agents keep their radix paths, cold agents (whose
+/// paths are the most likely to be LRU-evicted already) carry the
+/// rebalancing.  Agents whose home is dead or draining re-home
+/// immediately: their pin is cleared and re-established wherever load is
+/// lowest, which is how a refilled (drained or revived) replica fills
+/// back up.
+#[derive(Debug)]
+pub struct RebalanceRouter {
+    /// Re-home only after this many consecutive distinct overload
+    /// instants (same role as [`CacheAffinityRouter::spill_after`]).
+    pub spill_after: u32,
+    /// Overload bar: footprint > `imbalance` × fleet-mean footprint.
+    pub imbalance: f64,
+    /// ... and footprint > `pressure` × pool capacity.  Lower than the
+    /// affinity default: re-homing is permanent, so it is worth doing a
+    /// little earlier than one-off spills.
+    pub pressure: f64,
+    /// An agent is cold when its last decode on its current replica is
+    /// at least this long ago (or unknown).  Calibrated against the
+    /// workload's second-scale tool latencies: the lognormal tail —
+    /// agents parked in long tool calls, whose cache has aged the most —
+    /// clears this bar; agents bouncing straight back do not.
+    pub cold_after: Micros,
+    homes: FxHashMap<u64, usize>,
+    streaks: OverloadStreaks,
+    /// Agents re-homed to another replica (telemetry).
+    pub rehomes: u64,
+}
+
+impl Default for RebalanceRouter {
+    fn default() -> RebalanceRouter {
+        RebalanceRouter {
+            spill_after: 8,
+            imbalance: 1.5,
+            pressure: 0.5,
+            cold_after: Micros(3_000_000),
+            homes: FxHashMap::default(),
+            streaks: OverloadStreaks::default(),
+            rehomes: 0,
+        }
+    }
+}
+
+impl RebalanceRouter {
+    fn is_cold(&self, ctx: &RouteCtx) -> bool {
+        match ctx.heat {
+            None => true,
+            Some(last) => ctx.now.saturating_sub(last) >= self.cold_after,
+        }
+    }
+}
+
+impl Router for RebalanceRouter {
+    fn name(&self) -> String {
+        "rebalance".into()
+    }
+
+    fn route(&mut self, ctx: &RouteCtx, replicas: &[ReplicaLoad]) -> usize {
+        let n = replicas.len();
+        self.streaks.advance(ctx.now, replicas, self.imbalance, self.pressure);
+        let home = self.homes.get(&ctx.agent.0).copied().unwrap_or(ctx.agent.0 as usize % n);
+        if !replicas[home].admissible {
+            // Pin cleared by replica loss: re-establish it by load.
+            let target = least_loaded(replicas);
+            self.homes.insert(ctx.agent.0, target);
+            self.rehomes += 1;
+            return target;
+        }
+        if self.streaks.get(home) >= self.spill_after && self.is_cold(ctx) {
+            let target = least_loaded(replicas);
+            if target != home {
+                self.homes.insert(ctx.agent.0, target);
+                self.rehomes += 1;
                 return target;
             }
         }
@@ -196,6 +355,7 @@ pub fn make_router(kind: RouterKind) -> Box<dyn Router> {
         RouterKind::RoundRobin => Box::new(RoundRobinRouter::default()),
         RouterKind::LeastLoaded => Box::new(LeastLoadedRouter),
         RouterKind::CacheAffinity => Box::new(CacheAffinityRouter::default()),
+        RouterKind::Rebalance => Box::new(RebalanceRouter::default()),
     }
 }
 
@@ -206,25 +366,47 @@ mod tests {
     fn loads(footprints: &[u64], capacity: u64) -> Vec<ReplicaLoad> {
         footprints
             .iter()
-            .map(|&f| ReplicaLoad { active_footprint: f, capacity })
+            .map(|&f| ReplicaLoad { active_footprint: f, capacity, admissible: true })
             .collect()
+    }
+
+    fn ctx(agent: u64, current: Option<usize>, t: u64) -> RouteCtx {
+        RouteCtx {
+            agent: AgentId(agent),
+            ctx_tokens: 10,
+            current,
+            now: Micros(t),
+            heat: None,
+        }
     }
 
     #[test]
     fn round_robin_cycles() {
         let mut r = RoundRobinRouter::default();
         let l = loads(&[0, 0, 0], 100);
-        let picks: Vec<usize> =
-            (0..6).map(|i| r.route(AgentId(i), 10, None, Micros(i), &l)).collect();
+        let picks: Vec<usize> = (0..6).map(|i| r.route(&ctx(i, None, i), &l)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_non_admissible() {
+        let mut r = RoundRobinRouter::default();
+        let mut l = loads(&[0, 0, 0], 100);
+        l[1].admissible = false;
+        let picks: Vec<usize> = (0..4).map(|i| r.route(&ctx(i, None, i), &l)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
     }
 
     #[test]
     fn least_loaded_picks_argmin_with_index_ties() {
         let mut r = LeastLoadedRouter;
-        let t = Micros(1);
-        assert_eq!(r.route(AgentId(9), 10, None, t, &loads(&[50, 20, 30], 100)), 1);
-        assert_eq!(r.route(AgentId(9), 10, None, t, &loads(&[20, 20, 30], 100)), 0);
+        let c = ctx(9, None, 1);
+        assert_eq!(r.route(&c, &loads(&[50, 20, 30], 100)), 1);
+        assert_eq!(r.route(&c, &loads(&[20, 20, 30], 100)), 0);
+        // The argmin never lands on a non-admissible replica.
+        let mut l = loads(&[50, 20, 30], 100);
+        l[1].admissible = false;
+        assert_eq!(r.route(&c, &l), 2);
     }
 
     #[test]
@@ -236,7 +418,7 @@ mod tests {
             let home = (agent % 4) as usize;
             for _ in 0..3 {
                 t += 1;
-                assert_eq!(r.route(AgentId(agent), 10, Some(home), Micros(t), &l), home);
+                assert_eq!(r.route(&ctx(agent, Some(home), t), &l), home);
             }
         }
         assert_eq!(r.spills, 0);
@@ -251,18 +433,18 @@ mod tests {
         let mut t = 0u64;
         for _ in 0..(r.spill_after - 1) {
             t += 1;
-            assert_eq!(r.route(AgentId(0), 10, Some(0), Micros(t), &hot), 0);
+            assert_eq!(r.route(&ctx(0, Some(0), t), &hot), 0);
         }
         // ...the sustained streak does, to the least-loaded replica.
         t += 1;
-        assert_eq!(r.route(AgentId(0), 10, Some(0), Micros(t), &hot), 1);
+        assert_eq!(r.route(&ctx(0, Some(0), t), &hot), 1);
         assert_eq!(r.spills, 1);
         // Agents homed elsewhere are unaffected.
-        assert_eq!(r.route(AgentId(2), 10, Some(2), Micros(t), &hot), 2);
+        assert_eq!(r.route(&ctx(2, Some(2), t), &hot), 2);
         // Once the pressure clears the streak resets and home is restored.
-        assert_eq!(r.route(AgentId(0), 10, Some(1), Micros(t + 1), &loads(&[10; 4], 100)), 0);
+        assert_eq!(r.route(&ctx(0, Some(1), t + 1), &loads(&[10; 4], 100)), 0);
         for k in 0..3u64 {
-            assert_eq!(r.route(AgentId(0), 10, Some(0), Micros(t + 2 + k), &hot), 0);
+            assert_eq!(r.route(&ctx(0, Some(0), t + 2 + k), &hot), 0);
         }
     }
 
@@ -272,7 +454,7 @@ mod tests {
         let hot = loads(&[95, 10, 10, 10], 100);
         // 100 same-instant decisions: one streak advance, no spill.
         for _ in 0..100 {
-            assert_eq!(r.route(AgentId(0), 10, Some(0), Micros(7), &hot), 0);
+            assert_eq!(r.route(&ctx(0, Some(0), 7), &hot), 0);
         }
         assert_eq!(r.spills, 0);
     }
@@ -283,9 +465,79 @@ mod tests {
         // 40 vs 1: heavily imbalanced but far below the pressure bar.
         let l = loads(&[40, 1, 1, 1], 1_000);
         for t in 0..20u64 {
-            assert_eq!(r.route(AgentId(4), 10, Some(0), Micros(t), &l), 0);
+            assert_eq!(r.route(&ctx(4, Some(0), t), &l), 0);
         }
         assert_eq!(r.spills, 0);
+    }
+
+    #[test]
+    fn affinity_rehashes_cohort_of_a_down_home() {
+        let mut r = CacheAffinityRouter::default();
+        let mut l = loads(&[10, 10, 10, 10], 1_000);
+        l[1].admissible = false;
+        // Agents homed on replica 1 spread over {0, 2, 3} and stick there.
+        let fallback_a = r.route(&ctx(1, Some(1), 1), &l);
+        let fallback_b = r.route(&ctx(5, Some(1), 2), &l);
+        assert_ne!(fallback_a, 1);
+        assert_ne!(fallback_b, 1);
+        assert_ne!(fallback_a, fallback_b, "cohort must not pile onto one replica");
+        assert_eq!(r.route(&ctx(1, Some(fallback_a), 3), &l), fallback_a, "fallback is stable");
+        // Other homes are untouched.
+        assert_eq!(r.route(&ctx(2, Some(2), 4), &l), 2);
+    }
+
+    #[test]
+    fn rebalance_pins_until_sustained_overload() {
+        let mut r = RebalanceRouter::default();
+        let l = loads(&[10, 10, 10, 10], 1_000);
+        for t in 1..20u64 {
+            assert_eq!(r.route(&ctx(3, Some(3), t), &l), 3);
+        }
+        assert_eq!(r.rehomes, 0);
+    }
+
+    #[test]
+    fn rebalance_migrates_cold_agents_first() {
+        const SEC: u64 = 1_000_000;
+        let mut r = RebalanceRouter::default();
+        let hot = loads(&[95, 10, 10, 10], 100);
+        // Build the sustained-overload streak on replica 0, one distinct
+        // second-scale instant per decision.
+        let mut t = 0u64;
+        for _ in 0..r.spill_after {
+            t += SEC;
+            // A *hot* agent (decoded just now) keeps its pin throughout.
+            let c = RouteCtx { heat: Some(Micros(t)), ..ctx(0, Some(0), t) };
+            assert_eq!(r.route(&c, &hot), 0);
+        }
+        assert_eq!(r.rehomes, 0, "hot agent must not migrate");
+        // A cold agent (no decode for >= cold_after) is re-homed...
+        t += SEC;
+        let stale = Micros(t).saturating_sub(r.cold_after);
+        let cold = RouteCtx { heat: Some(stale), ..ctx(4, Some(0), t) };
+        assert_eq!(r.route(&cold, &hot), 1);
+        assert_eq!(r.rehomes, 1);
+        // ...while a freshly-decoded agent at the same instant stays put.
+        let warm = RouteCtx { heat: Some(Micros(t)), ..ctx(0, Some(0), t) };
+        assert_eq!(r.route(&warm, &hot), 0);
+        // The new pin is sticky even after pressure clears.
+        let calm = loads(&[10; 4], 100);
+        assert_eq!(r.route(&ctx(4, Some(1), t + SEC), &calm), 1);
+        assert_eq!(r.rehomes, 1);
+    }
+
+    #[test]
+    fn rebalance_clears_pins_of_a_dead_home() {
+        let mut r = RebalanceRouter::default();
+        let mut l = loads(&[10, 30, 20, 40], 1_000);
+        l[0].admissible = false;
+        // Agent homed on dead replica 0 lands on the least-loaded (2).
+        assert_eq!(r.route(&ctx(0, None, 1), &l), 2);
+        assert_eq!(r.rehomes, 1);
+        // The new pin holds once the old home revives: pin was cleared.
+        l[0].admissible = true;
+        assert_eq!(r.route(&ctx(0, Some(2), 2), &l), 2);
+        assert_eq!(r.rehomes, 1);
     }
 
     #[test]
@@ -293,5 +545,6 @@ mod tests {
         assert_eq!(make_router(RouterKind::RoundRobin).name(), "round-robin");
         assert_eq!(make_router(RouterKind::LeastLoaded).name(), "least-loaded");
         assert_eq!(make_router(RouterKind::CacheAffinity).name(), "cache-affinity");
+        assert_eq!(make_router(RouterKind::Rebalance).name(), "rebalance");
     }
 }

@@ -1,0 +1,280 @@
+//! Scripted replica fault plans: kill, drain-and-refill, revive.
+//!
+//! A [`FaultPlan`] is part of [`TopologyConfig`](super::TopologyConfig):
+//! a time-ordered script of replica lifecycle transitions that the
+//! cluster loop (`cluster::run_sharded`) applies at exact simulation
+//! instants.  Plans are configuration, not runtime state — the same
+//! `JobConfig` always reproduces the same disruption, so fault-tolerance
+//! comparisons across routers/schedulers are run on bit-identical
+//! failure timelines.
+//!
+//! Semantics (details in DESIGN.md §Faults):
+//!
+//! * **kill** — the replica process dies at `at`: its KV pool, radix
+//!   cache and queues vanish; agents with an in-flight step there lose
+//!   the step and re-enter the admission queue; the controller stops
+//!   aggregating the dead replica's signals.
+//! * **drain** — the replica stops receiving admissions, finishes the
+//!   requests it already holds, then wipes its cache and rejoins the
+//!   admissible fleet ("refill") — the rolling-restart primitive.
+//! * **revive** — a killed replica rejoins, empty.
+//!
+//! Validation is conservative: replaying the script must leave at least
+//! one replica alive-and-not-draining at every step (a draining replica
+//! is counted as unavailable until the run proves otherwise), so a plan
+//! can never strand routing with zero admissible replicas.
+
+use crate::core::json::Value;
+use crate::core::{ConcurError, Micros, Result};
+
+/// A replica lifecycle transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Replica dies: all KV state and queued work is lost instantly.
+    Kill,
+    /// Replica stops admissions, finishes its running work, rejoins empty.
+    Drain,
+    /// A previously killed replica rejoins the fleet, empty.
+    Revive,
+}
+
+impl FaultKind {
+    /// Stable lowercase name (JSON `kind` field and table labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Kill => "kill",
+            FaultKind::Drain => "drain",
+            FaultKind::Revive => "revive",
+        }
+    }
+}
+
+/// One scripted transition: `replica` undergoes `kind` at instant `at`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Simulation instant the transition fires (ties with an iteration
+    /// completing at the same instant resolve fault-first).
+    pub at: Micros,
+    /// Target replica index in `0..topology.replicas`.
+    pub replica: usize,
+    /// Which transition.
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// Kill `replica` at `at`.
+    pub fn kill(replica: usize, at: Micros) -> FaultEvent {
+        FaultEvent { at, replica, kind: FaultKind::Kill }
+    }
+
+    /// Drain `replica` starting at `at` (refill is automatic once idle).
+    pub fn drain(replica: usize, at: Micros) -> FaultEvent {
+        FaultEvent { at, replica, kind: FaultKind::Drain }
+    }
+
+    /// Revive previously killed `replica` at `at`.
+    pub fn revive(replica: usize, at: Micros) -> FaultEvent {
+        FaultEvent { at, replica, kind: FaultKind::Revive }
+    }
+}
+
+/// A time-ordered script of [`FaultEvent`]s (empty = healthy fleet).
+///
+/// Construction sorts stably by instant, so same-instant events apply in
+/// the order listed.  `FaultPlan::none()` is the default and changes
+/// nothing about a run — the N=1 no-fault path stays bit-identical to
+/// the pre-fault driver (differential-tested).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The healthy fleet: no scripted faults.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Build a plan from events in any order (sorted stably by `at`).
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by_key(|e| e.at);
+        FaultPlan { events }
+    }
+
+    /// No scripted faults?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events in firing order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Validate against a fleet of `replicas` by replaying the script:
+    /// indices in range, transitions legal from each replica's prior
+    /// state (kill from alive/draining, drain from alive, revive from
+    /// dead), and at least one replica alive-and-not-draining after
+    /// every event (drains count as unavailable here because validation
+    /// cannot know when a drain refills).
+    pub fn validate(&self, replicas: usize) -> Result<()> {
+        #[derive(Clone, Copy, PartialEq)]
+        enum S {
+            Alive,
+            Draining,
+            Dead,
+        }
+        let mut state = vec![S::Alive; replicas];
+        for e in &self.events {
+            if e.replica >= replicas {
+                return Err(ConcurError::config(format!(
+                    "fault plan targets replica {} but topology has {replicas}",
+                    e.replica
+                )));
+            }
+            let s = &mut state[e.replica];
+            *s = match (e.kind, *s) {
+                (FaultKind::Kill, S::Alive | S::Draining) => S::Dead,
+                (FaultKind::Drain, S::Alive) => S::Draining,
+                (FaultKind::Revive, S::Dead) => S::Alive,
+                (kind, _) => {
+                    return Err(ConcurError::config(format!(
+                        "fault plan: illegal '{}' of replica {} at {} (kill \
+                         needs a live replica, drain an alive one, revive a \
+                         dead one)",
+                        kind.name(),
+                        e.replica,
+                        e.at
+                    )))
+                }
+            };
+            if !state.iter().any(|s| *s == S::Alive) {
+                return Err(ConcurError::config(format!(
+                    "fault plan leaves no admissible replica at {} (drains \
+                     count as unavailable until they refill)",
+                    e.at
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the `topology.fault_plan` JSON array: each entry is
+    /// `{"at_s": seconds, "replica": index, "kind": "kill|drain|revive"}`
+    /// (see `docs/OPERATIONS.md` for worked configs).
+    pub fn from_json_events(entries: &[Value]) -> Result<FaultPlan> {
+        let mut events = Vec::with_capacity(entries.len());
+        for e in entries {
+            let at = Micros::from_secs_f64(e.req_f64("at_s")?);
+            let replica = e.req_u64("replica")? as usize;
+            let kind = match e.req_str("kind")? {
+                "kill" => FaultKind::Kill,
+                "drain" => FaultKind::Drain,
+                "revive" => FaultKind::Revive,
+                other => {
+                    return Err(ConcurError::config(format!(
+                        "unknown fault kind '{other}' (kill|drain|revive)"
+                    )))
+                }
+            };
+            events.push(FaultEvent { at, replica, kind });
+        }
+        Ok(FaultPlan::new(events))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_empty_and_always_valid() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        for n in 1..4 {
+            p.validate(n).unwrap();
+        }
+    }
+
+    #[test]
+    fn events_are_sorted_stably_by_instant() {
+        let p = FaultPlan::new(vec![
+            FaultEvent::revive(0, Micros(300)),
+            FaultEvent::kill(0, Micros(100)),
+            FaultEvent::drain(1, Micros(100)),
+        ]);
+        let kinds: Vec<FaultKind> = p.events().iter().map(|e| e.kind).collect();
+        // Same-instant events keep listed order (kill before drain).
+        assert_eq!(kinds, vec![FaultKind::Kill, FaultKind::Drain, FaultKind::Revive]);
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range_replica() {
+        let p = FaultPlan::new(vec![FaultEvent::kill(3, Micros(1))]);
+        assert!(p.validate(2).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_illegal_transitions() {
+        // Revive of a never-killed replica.
+        assert!(FaultPlan::new(vec![FaultEvent::revive(1, Micros(1))]).validate(3).is_err());
+        // Double kill.
+        let p = FaultPlan::new(vec![
+            FaultEvent::kill(1, Micros(1)),
+            FaultEvent::kill(1, Micros(2)),
+        ]);
+        assert!(p.validate(3).is_err());
+        // Drain of a dead replica.
+        let p = FaultPlan::new(vec![
+            FaultEvent::kill(1, Micros(1)),
+            FaultEvent::drain(1, Micros(2)),
+        ]);
+        assert!(p.validate(3).is_err());
+        // Kill of a draining replica is allowed.
+        let p = FaultPlan::new(vec![
+            FaultEvent::drain(1, Micros(1)),
+            FaultEvent::kill(1, Micros(2)),
+        ]);
+        p.validate(3).unwrap();
+    }
+
+    #[test]
+    fn validation_requires_a_surviving_replica() {
+        // Killing the only replica is rejected...
+        assert!(FaultPlan::new(vec![FaultEvent::kill(0, Micros(1))]).validate(1).is_err());
+        // ...as is draining it (conservative: refill time is unknown).
+        assert!(FaultPlan::new(vec![FaultEvent::drain(0, Micros(1))]).validate(1).is_err());
+        // Kill + later revive of one of two replicas is fine.
+        let p = FaultPlan::new(vec![
+            FaultEvent::kill(0, Micros(1)),
+            FaultEvent::revive(0, Micros(10)),
+        ]);
+        p.validate(2).unwrap();
+        // Kill one, then the other (even after the revive of the first).
+        let p = FaultPlan::new(vec![
+            FaultEvent::kill(0, Micros(1)),
+            FaultEvent::revive(0, Micros(10)),
+            FaultEvent::kill(1, Micros(20)),
+        ]);
+        p.validate(2).unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let text = r#"[
+            {"at_s": 120.0, "replica": 0, "kind": "kill"},
+            {"at_s": 300.0, "replica": 0, "kind": "revive"},
+            {"at_s": 60.5, "replica": 1, "kind": "drain"}
+        ]"#;
+        let v = Value::parse(text).unwrap();
+        let p = FaultPlan::from_json_events(v.as_array().unwrap()).unwrap();
+        assert_eq!(p.events().len(), 3);
+        // Sorted: drain at 60.5s first.
+        assert_eq!(p.events()[0], FaultEvent::drain(1, Micros(60_500_000)));
+        assert_eq!(p.events()[1], FaultEvent::kill(0, Micros(120_000_000)));
+        p.validate(2).unwrap();
+
+        let bad = Value::parse(r#"[{"at_s": 1, "replica": 0, "kind": "explode"}]"#).unwrap();
+        assert!(FaultPlan::from_json_events(bad.as_array().unwrap()).is_err());
+    }
+}

@@ -4,7 +4,10 @@
 //! Every experiment in `repro/` is expressed as a [`JobConfig`]; users can
 //! also write a JSON config file and run it with `concur sim --config f.json`.
 
+pub mod faults;
 pub mod presets;
+
+pub use faults::{FaultEvent, FaultKind, FaultPlan};
 
 use crate::core::json::Value;
 use crate::core::{ConcurError, Result};
@@ -47,6 +50,10 @@ pub enum RouterKind {
     /// Pin each agent to a home replica (id-hashed) and spill to the
     /// least-loaded replica only under sustained home overload.
     CacheAffinity,
+    /// Cache-affinity homes that are *re-assigned* under sustained
+    /// imbalance or replica loss, migrating cold agents first (ranked by
+    /// the engine's per-agent cache-heat signal).
+    Rebalance,
 }
 
 impl RouterKind {
@@ -55,23 +62,37 @@ impl RouterKind {
             RouterKind::RoundRobin => "round-robin",
             RouterKind::LeastLoaded => "least-loaded",
             RouterKind::CacheAffinity => "cache-affinity",
+            RouterKind::Rebalance => "rebalance",
         }
     }
 }
 
 /// Data-parallel serving topology: how many engine replicas a job runs on
-/// (each with its own KV pool and radix cache) and how agents are routed
-/// between them.  The default single replica reproduces the pre-cluster
-/// driver bit-for-bit.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// (each with its own KV pool and radix cache), how agents are routed
+/// between them, which replica faults are scripted, and how tool latency
+/// skews per replica.  The default — one healthy, unskewed replica —
+/// reproduces the pre-cluster driver bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
 pub struct TopologyConfig {
     pub replicas: usize,
     pub router: RouterKind,
+    /// Scripted replica kills / drains / revivals (empty = healthy fleet).
+    pub fault_plan: FaultPlan,
+    /// Per-replica tool-latency multipliers, threaded into tool-call
+    /// scheduling so routers face heterogeneous service times.  Empty
+    /// means uniform 1.0; otherwise the length must equal `replicas` and
+    /// every multiplier must be finite and positive.
+    pub tool_skew: Vec<f64>,
 }
 
 impl Default for TopologyConfig {
     fn default() -> TopologyConfig {
-        TopologyConfig { replicas: 1, router: RouterKind::CacheAffinity }
+        TopologyConfig {
+            replicas: 1,
+            router: RouterKind::CacheAffinity,
+            fault_plan: FaultPlan::none(),
+            tool_skew: Vec::new(),
+        }
     }
 }
 
@@ -79,6 +100,22 @@ impl TopologyConfig {
     pub fn validate(&self) -> Result<()> {
         if self.replicas == 0 {
             return Err(ConcurError::config("replicas must be >= 1"));
+        }
+        self.fault_plan.validate(self.replicas)?;
+        if !self.tool_skew.is_empty() {
+            if self.tool_skew.len() != self.replicas {
+                return Err(ConcurError::config(format!(
+                    "tool_skew has {} entries for {} replicas (empty = \
+                     uniform 1.0)",
+                    self.tool_skew.len(),
+                    self.replicas
+                )));
+            }
+            if self.tool_skew.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+                return Err(ConcurError::config(
+                    "tool_skew multipliers must be finite and > 0",
+                ));
+            }
         }
         Ok(())
     }
@@ -352,12 +389,26 @@ impl JobConfig {
                 "round-robin" => RouterKind::RoundRobin,
                 "least-loaded" => RouterKind::LeastLoaded,
                 "cache-affinity" => RouterKind::CacheAffinity,
+                "rebalance" | "rebalancing" => RouterKind::Rebalance,
                 other => {
                     return Err(ConcurError::config(format!(
                         "unknown router '{other}'"
                     )))
                 }
             };
+        }
+        if let Some(skew) = t.get("tool_skew").as_array() {
+            topology.tool_skew = skew
+                .iter()
+                .map(|v| {
+                    v.as_f64().ok_or_else(|| {
+                        ConcurError::config("tool_skew entries must be numbers")
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()?;
+        }
+        if let Some(plan) = t.get("fault_plan").as_array() {
+            topology.fault_plan = FaultPlan::from_json_events(plan)?;
         }
 
         let scheduler = match v.get("scheduler").as_str().unwrap_or("concur") {
@@ -489,9 +540,54 @@ mod tests {
         let job = JobConfig::from_json(&Value::parse(text).unwrap()).unwrap();
         assert_eq!(job.topology.replicas, 4);
         assert_eq!(job.topology.router, RouterKind::LeastLoaded);
+        assert!(job.topology.fault_plan.is_empty());
+        assert!(job.topology.tool_skew.is_empty());
 
         let bad = r#"{"topology": {"router": "sticky"}}"#;
         assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn json_config_parses_faults_and_skew() {
+        let text = r#"{
+            "model": "qwen3-32b", "tp": 2,
+            "topology": {
+                "replicas": 3, "router": "rebalance",
+                "tool_skew": [1.0, 1.5, 2.0],
+                "fault_plan": [
+                    {"at_s": 120, "replica": 0, "kind": "kill"},
+                    {"at_s": 240, "replica": 0, "kind": "revive"}
+                ]
+            }
+        }"#;
+        let job = JobConfig::from_json(&Value::parse(text).unwrap()).unwrap();
+        assert_eq!(job.topology.router, RouterKind::Rebalance);
+        assert_eq!(job.topology.tool_skew, vec![1.0, 1.5, 2.0]);
+        assert_eq!(job.topology.fault_plan.events().len(), 2);
+        assert_eq!(
+            job.topology.fault_plan.events()[0],
+            FaultEvent::kill(0, crate::core::Micros(120_000_000))
+        );
+
+        // Validation runs inside from_json: killing the whole fleet fails.
+        let bad = r#"{
+            "topology": {"replicas": 1,
+                         "fault_plan": [{"at_s": 1, "replica": 0, "kind": "kill"}]}
+        }"#;
+        assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn topology_validates_skew_shape() {
+        let mut t = TopologyConfig { replicas: 2, ..TopologyConfig::default() };
+        t.tool_skew = vec![1.0, 2.0];
+        t.validate().unwrap();
+        t.tool_skew = vec![1.0];
+        assert!(t.validate().is_err(), "length mismatch must be rejected");
+        t.tool_skew = vec![1.0, 0.0];
+        assert!(t.validate().is_err(), "non-positive skew must be rejected");
+        t.tool_skew = vec![1.0, f64::NAN];
+        assert!(t.validate().is_err(), "non-finite skew must be rejected");
     }
 
     #[test]
@@ -499,6 +595,7 @@ mod tests {
         assert_eq!(RouterKind::RoundRobin.name(), "round-robin");
         assert_eq!(RouterKind::LeastLoaded.name(), "least-loaded");
         assert_eq!(RouterKind::CacheAffinity.name(), "cache-affinity");
+        assert_eq!(RouterKind::Rebalance.name(), "rebalance");
     }
 
     #[test]

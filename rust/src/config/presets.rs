@@ -73,7 +73,7 @@ pub fn replicated_job(
     router: RouterKind,
 ) -> JobConfig {
     let mut j = job(cluster, workload, scheduler);
-    j.topology = TopologyConfig { replicas, router };
+    j.topology = TopologyConfig { replicas, router, ..TopologyConfig::default() };
     j
 }
 

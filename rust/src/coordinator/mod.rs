@@ -14,7 +14,16 @@
 //!   recently-paused agents (their cache is warmest).
 //!
 //! [`AimdController`] implements the paper's cache-aware control law
-//! (Eq. 1); the other [`Controller`]s are the evaluated baselines.
+//! (Eq. 1, §4.3): additive increase while `U_t < u_low`, multiplicative
+//! decrease when `U_t > u_high` *and* `H_t < h_thresh` — high usage with
+//! a healthy hit rate is throughput, not thrashing.  The other
+//! [`Controller`]s are the evaluated baselines (§5).
+//!
+//! In a multi-replica fleet the same `Controller` trait regulates the
+//! whole cluster: `cluster::run_sharded` aggregates per-replica signals
+//! (max usage over live replicas, admission-weighted hit rate — dead
+//! replicas excluded) into one [`ControlInputs`] stream, so controllers
+//! are topology- and fault-oblivious by construction.
 
 pub mod aimd;
 pub mod slots;

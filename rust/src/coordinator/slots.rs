@@ -79,6 +79,17 @@ impl SlotManager {
         debug_assert!(had, "release of agent without slot");
     }
 
+    /// Revoke `agent`'s slot outside a step boundary (its replica died
+    /// mid-step): it re-enters the fresh admission queue FIFO.  Unlike
+    /// [`SlotManager::on_step_boundary`] pausing, it gets no warm-resume
+    /// priority — its cache died with the replica, so it is
+    /// indistinguishable from a never-admitted agent.
+    pub fn requeue(&mut self, agent: AgentId) {
+        let had = self.active.remove(&agent);
+        debug_assert!(had, "requeue of agent without slot");
+        self.fresh.push_back(agent);
+    }
+
     /// Grant slots up to `window`, returning agents to (re)start, paused
     /// agents first (LIFO), then fresh agents (FIFO).
     pub fn grant_up_to(&mut self, window: usize) -> Vec<AgentId> {
@@ -163,6 +174,23 @@ mod tests {
         s.release(AgentId(0));
         assert_eq!(s.active_count(), 1);
         assert_eq!(s.grant_up_to(2), ids(&[2]));
+    }
+
+    #[test]
+    fn requeue_rejoins_the_fresh_queue_behind_waiters() {
+        let mut s = SlotManager::new();
+        for i in 0..4 {
+            s.register(AgentId(i));
+        }
+        s.grant_up_to(3); // 0,1,2 active; 3 fresh
+        s.requeue(AgentId(1));
+        assert_eq!(s.active_count(), 2);
+        assert_eq!(s.pending_count(), 2);
+        // Re-grant: the never-admitted 3 goes first (FIFO), then 1.
+        assert_eq!(s.grant_up_to(4), ids(&[3, 1]));
+        // A requeue is neither a pause nor a resume.
+        assert_eq!(s.pauses, 0);
+        assert_eq!(s.resumes, 0);
     }
 
     #[test]

@@ -7,17 +7,30 @@
 //!
 //! All agents are submitted at t=0 (offline batch).  The event loop lives
 //! in [`crate::cluster::run_sharded`]: a job runs on
-//! `job.topology.replicas` data-parallel engine replicas, and the classic
-//! single-engine path is simply its N=1 case (bit-identical to the
-//! pre-cluster driver — see `tests/cluster_integration.rs`).
+//! `job.topology.replicas` data-parallel engine replicas — with the
+//! topology's scripted fault plan and per-replica tool-latency skew —
+//! and the classic single-engine path is simply its N=1 healthy case
+//! (bit-identical to the pre-cluster driver — see
+//! `tests/cluster_integration.rs`).
 
 use crate::agent::{Agent, WorkloadGenerator};
-use crate::cluster::{make_router, ClusterCoordinator};
-use crate::config::{JobConfig, RouterKind};
+use crate::cluster::{make_router, ClusterCoordinator, FaultStats};
+use crate::config::{FaultPlan, JobConfig, RouterKind};
 use crate::coordinator::{make_controller, Controller};
-use crate::core::{Micros, Result};
+use crate::core::{AgentId, Micros, Result};
 use crate::engine::{EngineCounters, SimEngine};
 use crate::metrics::{Breakdown, Histogram, Phase, TimeSeries};
+
+/// One finished agent's completion record (in finish order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AgentOutcome {
+    /// Which agent.
+    pub agent: AgentId,
+    /// Tokens it generated over its whole trajectory.
+    pub gen_tokens: u64,
+    /// Simulation time its final step completed.
+    pub finished_at: Micros,
+}
 
 /// Everything measured over one job run.
 pub struct RunResult {
@@ -46,6 +59,13 @@ pub struct RunResult {
     pub replicas: usize,
     /// Routing policy name (`"single"` for one-replica runs).
     pub router: String,
+    /// Fault/drain/migration telemetry (all zero for healthy runs).
+    pub faults: FaultStats,
+    /// Admissible (routable) replica count over time: one point at t=0,
+    /// plus one per fault-plan transition and drain refill.
+    pub alive_series: TimeSeries,
+    /// Per-agent completion records, in finish order.
+    pub per_agent: Vec<AgentOutcome>,
 }
 
 impl RunResult {
@@ -162,8 +182,9 @@ pub fn run_jobs_parallel_with(
 }
 
 /// Run with an explicit engine (used by repro harnesses that customize
-/// it, e.g. shrunken pools for unit-scale studies).  This is the N=1 case
-/// of [`crate::cluster::run_sharded`]; the router never fires.
+/// it, e.g. shrunken pools for unit-scale studies).  This is the N=1
+/// healthy case of [`crate::cluster::run_sharded`] — no faults, uniform
+/// tool latency; the router never fires.
 pub fn run_with(
     engine: &mut SimEngine,
     agents: Vec<Agent>,
@@ -175,6 +196,8 @@ pub fn run_with(
         router.as_mut(),
         agents,
         controller,
+        &FaultPlan::none(),
+        &[],
     )
 }
 
@@ -246,11 +269,31 @@ mod tests {
     #[test]
     fn replicated_job_runs_through_the_cluster_path() {
         let mut job = small_job(SchedulerKind::Concur(AimdParams::default()));
-        job.topology = TopologyConfig { replicas: 2, router: RouterKind::CacheAffinity };
+        job.topology = TopologyConfig {
+            replicas: 2,
+            router: RouterKind::CacheAffinity,
+            ..TopologyConfig::default()
+        };
         let r = run_job(&job).unwrap();
         assert_eq!(r.agents_finished, 8);
         assert_eq!(r.replicas, 2);
         assert_eq!(r.router, "cache-affinity");
+    }
+
+    #[test]
+    fn per_agent_records_cover_the_fleet() {
+        let r = run_job(&small_job(SchedulerKind::Uncontrolled)).unwrap();
+        assert_eq!(r.per_agent.len(), 8);
+        let mut ids: Vec<u64> = r.per_agent.iter().map(|o| o.agent.0).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<u64>>());
+        // Finish order is chronological and the sum of per-agent tokens
+        // is the job total.
+        for w in r.per_agent.windows(2) {
+            assert!(w[0].finished_at <= w[1].finished_at);
+        }
+        let total: u64 = r.per_agent.iter().map(|o| o.gen_tokens).sum();
+        assert_eq!(total, r.total_gen_tokens);
     }
 
     #[test]

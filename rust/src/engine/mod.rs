@@ -9,6 +9,13 @@
 //! continuous-batching iteration (admission → prefill chunks → decode one
 //! token per running sequence) and returns the simulated duration from the
 //! [`CostModel`] roofline plus what finished.  The driver owns the clock.
+//!
+//! After every iteration the engine exposes the paper's control signals
+//! via [`SimEngine::signals`]: `U_t`-style usage ([`SimEngine::kv_usage`],
+//! working set only — paper §4.2) and the windowed prefix hit rate `H_t`
+//! that feeds the AIMD law (§4.3).  For the cluster layer it additionally
+//! exports a per-agent cache-heat stamp ([`SimEngine::agent_heat`]) and a
+//! crash/refill primitive ([`SimEngine::clear_state`]).
 
 pub mod kvpool;
 pub mod radix;
@@ -21,7 +28,7 @@ pub use request::{Request, RunningSeq, SeqPhase};
 use std::collections::VecDeque;
 
 use crate::config::{EngineConfig, EvictionMode};
-use crate::core::{AgentId, Bytes, Micros, RequestId, Token};
+use crate::core::{AgentId, Bytes, FxHashMap, Micros, RequestId, Token};
 use crate::costmodel::{CostModel, PcieLink, StepWork};
 use crate::metrics::{Breakdown, LifetimeRatio, Phase, WindowedRatio};
 
@@ -132,6 +139,11 @@ pub struct SimEngine {
     congested: bool,
     /// Last failed head-of-line admission attempt (see [`AdmitBlock`]).
     admit_block: Option<AdmitBlock>,
+    /// Per-agent cache heat: when each agent last completed a generation
+    /// step here (stamped in `collect_finished`, one O(1) insert per
+    /// finished request).  Exported via [`SimEngine::agent_heat`] for the
+    /// cluster's cold-first rebalancing router.
+    heat: FxHashMap<AgentId, Micros>,
 }
 
 impl SimEngine {
@@ -157,6 +169,7 @@ impl SimEngine {
             policy,
             congested: false,
             admit_block: None,
+            heat: FxHashMap::default(),
             cfg,
             cost,
         }
@@ -226,6 +239,34 @@ impl SimEngine {
 
     pub fn tree(&self) -> &RadixTree {
         &self.tree
+    }
+
+    /// Cache-heat signal: when `agent` last completed a generation step
+    /// on this replica (`None` = never, or the state was wiped).  Age
+    /// correlates with LRU eviction depth — the staler the stamp, the
+    /// less of the agent's radix path is likely still GPU-resident — so
+    /// time-since-last-decode ranks agents coldest-first for migration
+    /// (`cluster::router::RebalanceRouter`).
+    pub fn agent_heat(&self, agent: AgentId) -> Option<Micros> {
+        self.heat.get(&agent).copied()
+    }
+
+    /// Wipe all serving state — KV pool, radix cache, request queues,
+    /// hit window, host link, heat stamps — as a replica crash or a
+    /// drain-refill does.  Cumulative telemetry (counters, breakdown,
+    /// lifetime hits) survives: the work happened and the fleet harvests
+    /// it at the end of the run.  In-flight and queued requests are
+    /// dropped; the caller owns re-queueing their agents.
+    pub fn clear_state(&mut self) {
+        self.pool = KvPool::new(self.pool.capacity(), self.cfg.page_size);
+        self.tree = RadixTree::new();
+        self.pcie = PcieLink::new(self.cost.cluster.agg_pcie_bw());
+        self.running.clear();
+        self.waiting.clear();
+        self.hit_window = WindowedRatio::new(self.cfg.hit_window);
+        self.congested = false;
+        self.admit_block = None;
+        self.heat.clear();
     }
 
     /// Debug invariant: pool usage equals tree-resident plus per-request
@@ -593,6 +634,7 @@ impl SimEngine {
             }
             let seq = self.running.remove(i);
             self.congested = false; // capacity released: admissions may resume
+            self.heat.insert(seq.req.agent, now);
             self.tree.unlock_path(&seq.locked_path);
             // Full sequence (prompt + output) becomes reusable prefix
             // state; inserted straight from the two slices — no O(context)
@@ -807,6 +849,45 @@ mod tests {
         // signal returns to ~0 while raw pool usage stays high.
         assert!(e.pool_usage() > 0.45, "pool={}", e.pool_usage());
         assert!(e.kv_usage() < 0.05, "working={}", e.kv_usage());
+    }
+
+    #[test]
+    fn heat_stamps_follow_finished_steps() {
+        let mut e = tiny_engine(100_000);
+        assert_eq!(e.agent_heat(AgentId(1)), None);
+        e.submit(mk_req(1, 1, (0..500).collect(), 20, 0));
+        e.submit(mk_req(2, 2, (10_000..10_500).collect(), 40, 0));
+        drive(&mut e, 200);
+        let h1 = e.agent_heat(AgentId(1)).expect("agent 1 decoded");
+        let h2 = e.agent_heat(AgentId(2)).expect("agent 2 decoded");
+        // Agent 2 generates more tokens, so it finishes (and stamps) later.
+        assert!(h2 > h1, "h1={h1} h2={h2}");
+        assert_eq!(e.agent_heat(AgentId(3)), None);
+    }
+
+    #[test]
+    fn clear_state_wipes_serving_state_but_keeps_telemetry() {
+        let mut e = tiny_engine(100_000);
+        e.submit(mk_req(1, 1, (0..1000).collect(), 50, 0));
+        drive(&mut e, 100);
+        e.submit(mk_req(2, 2, (50_000..51_000).collect(), 50, 0));
+        let finished_before = e.counters.finished;
+        assert!(e.has_work());
+        assert!(e.pool().used() > 0);
+
+        e.clear_state();
+        assert!(!e.has_work(), "queued work must be dropped");
+        assert_eq!(e.pool().used(), 0);
+        assert_eq!(e.pool().capacity(), 100_000, "capacity survives the wipe");
+        assert_eq!(e.tree().gpu_tokens(), 0);
+        assert_eq!(e.agent_heat(AgentId(1)), None, "heat stamps are wiped");
+        assert_eq!(e.counters.finished, finished_before, "telemetry survives");
+        e.check_invariants().unwrap();
+
+        // The engine serves fresh work normally after the wipe.
+        e.submit(mk_req(3, 3, (80_000..81_000).collect(), 20, 0));
+        let done = drive(&mut e, 100);
+        assert_eq!(done.len(), 1);
     }
 
     #[test]

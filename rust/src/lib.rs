@@ -23,7 +23,10 @@
 //! * [`coordinator`] — the paper's system contribution: CONCUR AIMD
 //!                     admission control plus all evaluated baselines.
 //! * [`cluster`]     — data-parallel serving fleet: N engine replicas,
-//!                     cache-affine routing, aggregated control signals.
+//!                     cache-affine + cold-first rebalancing routing,
+//!                     aggregated control signals, scripted replica
+//!                     faults (kill / drain-and-refill / revive) and
+//!                     per-replica tool-latency skew.
 //! * [`driver`]      — glue that runs a full agentic batch job end-to-end.
 //! * [`runtime`]     — PJRT bridge: loads `artifacts/*.hlo.txt` (lowered
 //!                     from the L2 JAX model + L1 Pallas kernels) and

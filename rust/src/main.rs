@@ -64,7 +64,8 @@ const USAGE: &str = "\
 concur — congestion-based agent-level admission control (paper reproduction)
 
 USAGE:
-  concur repro <fig1|fig3|table1|table2|fig5|fig6|table3|cluster|all> [--csv DIR]
+  concur repro <fig1|fig3|table1|table2|fig5|fig6|table3|cluster|cluster_faults|all>
+               [--csv DIR]
   concur sim --config FILE
   concur serve [--batch N] [--requests N] [--max-new N] [--prompt TEXT]
                [--artifacts DIR] [--temperature T]

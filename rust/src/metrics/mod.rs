@@ -2,6 +2,13 @@
 //!
 //! Every repro harness reports through these types so the paper's tables
 //! and figures can be regenerated as text (`concur repro ...`) and CSV.
+//!
+//! Two of these instruments double as *control* state, not just
+//! telemetry: [`WindowedRatio`] is the engine's `H_t` hit-rate window
+//! (paper §4.2 — its observation count also weighs a replica's vote in
+//! fleet-level aggregation), and [`TimeSeries`] carries the per-run
+//! `U_t`/`H_t`/window/admissible-replica trajectories that the Fig. 5
+//! style plots and the fault study read back.
 
 pub mod breakdown;
 pub mod histogram;

@@ -51,7 +51,7 @@ pub fn sweep_jobs() -> Vec<JobConfig> {
                 engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
                 workload: presets::qwen3_workload(SWEEP_AGENTS),
                 scheduler: SchedulerKind::Concur(AimdParams::default()),
-                topology: TopologyConfig { replicas, router },
+                topology: TopologyConfig { replicas, router, ..TopologyConfig::default() },
             })
         })
         .collect()

@@ -1,0 +1,256 @@
+//! Fault-tolerance study (`concur repro cluster_faults`): throughput,
+//! hit rate and continuity under replica loss, across routing policies.
+//!
+//! Not a paper artifact — this opens the fault/skew realism axis the
+//! ROADMAP calls for.  A fixed offered load (96 Qwen3-class agents,
+//! CONCUR admission, 4 TP2 replicas) is disrupted four ways:
+//!
+//! * `healthy`      — control row, no faults;
+//! * `kill`         — replica 0 dies mid-run and stays dead;
+//! * `kill-revive`  — replica 0 dies mid-run and rejoins (empty) later;
+//! * `drain`        — replica 0 drains mid-run, then refills.
+//!
+//! Each disruption runs under least-loaded, cache-affinity and rebalance
+//! routing on bit-identical fault timelines (instants are anchored to
+//! the shortest healthy makespan so "mid-run" stays mid-run for every
+//! router).  The question the grid answers is the KVFlow/Continuum one
+//! extended to failures: *which* agents keep cache residency through a
+//! disruption dominates recovery throughput, so cold-first re-homing
+//! (rebalance) should beat load-only balancing (least-loaded) once a
+//! replica dies — `tests/faults_integration.rs` pins that claim.
+//!
+//! The sweep also writes `BENCH_faults.json` (override the path with
+//! `BENCH_FAULTS_PATH`) so the nightly CI job can archive the
+//! fault-recovery trajectory next to `BENCH_cluster.json`.
+
+use std::collections::BTreeMap;
+
+use crate::config::presets;
+use crate::config::{
+    AimdParams, EngineConfig, FaultEvent, FaultPlan, JobConfig, RouterKind, SchedulerKind,
+    TopologyConfig,
+};
+use crate::core::json::Value;
+use crate::core::{Micros, Result};
+use crate::driver::RunResult;
+use crate::metrics::Table;
+
+use super::{run_systems, ExpOutput};
+
+/// Routers compared on every disruption.
+pub const ROUTERS: [RouterKind; 3] =
+    [RouterKind::LeastLoaded, RouterKind::CacheAffinity, RouterKind::Rebalance];
+
+/// Disruption scenarios, in table order.
+pub const SCENARIOS: [&str; 4] = ["healthy", "kill", "kill-revive", "drain"];
+
+/// Replicas in the fleet (replica 0 is the disrupted one).
+pub const REPLICAS: usize = 4;
+
+/// Offered load held fixed across the grid.
+pub const SWEEP_AGENTS: usize = 96;
+
+/// One grid cell: a (scenario, router) pair and its run.
+pub struct FaultCell {
+    pub scenario: &'static str,
+    pub router: RouterKind,
+    pub result: RunResult,
+}
+
+/// The repro-standard job for one router (healthy topology).
+pub fn base_job(router: RouterKind, agents: usize) -> JobConfig {
+    JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+        workload: presets::qwen3_workload(agents),
+        scheduler: SchedulerKind::Concur(AimdParams::default()),
+        topology: TopologyConfig { replicas: REPLICAS, router, ..TopologyConfig::default() },
+    }
+}
+
+/// Build the fault plan for a scenario, anchored to a healthy makespan:
+/// kill/drain fire at 40% of it, the revive at 70%.  Anchoring keeps the
+/// disruption mid-run as the workload evolves, and using one shared
+/// anchor gives every router the identical failure timeline.
+pub fn plan_for(scenario: &str, anchor: Micros, replica: usize) -> FaultPlan {
+    let at = |f: f64| Micros((anchor.0 as f64 * f) as u64);
+    match scenario {
+        "healthy" => FaultPlan::none(),
+        "kill" => FaultPlan::new(vec![FaultEvent::kill(replica, at(0.4))]),
+        "kill-revive" => FaultPlan::new(vec![
+            FaultEvent::kill(replica, at(0.4)),
+            FaultEvent::revive(replica, at(0.7)),
+        ]),
+        "drain" => FaultPlan::new(vec![FaultEvent::drain(replica, at(0.4))]),
+        other => panic!("unknown fault scenario '{other}'"),
+    }
+}
+
+/// Run the whole grid: healthy probes first (they double as the
+/// `healthy` row and provide the anchor), then the disruptions, fanned
+/// out across cores.
+pub fn run_sweep(agents: usize) -> Result<Vec<FaultCell>> {
+    let healthy = run_systems(ROUTERS.iter().map(|&r| base_job(r, agents)).collect())?;
+    let anchor = healthy.iter().map(|r| r.total_time).min().expect("non-empty grid");
+
+    let mut cells: Vec<FaultCell> = ROUTERS
+        .iter()
+        .zip(healthy)
+        .map(|(&router, result)| FaultCell { scenario: "healthy", router, result })
+        .collect();
+
+    let mut labels = Vec::new();
+    let mut jobs = Vec::new();
+    for &scenario in SCENARIOS.iter().skip(1) {
+        for &router in &ROUTERS {
+            let mut job = base_job(router, agents);
+            job.topology.fault_plan = plan_for(scenario, anchor, 0);
+            labels.push((scenario, router));
+            jobs.push(job);
+        }
+    }
+    for ((scenario, router), result) in labels.into_iter().zip(run_systems(jobs)?) {
+        cells.push(FaultCell { scenario, router, result });
+    }
+    Ok(cells)
+}
+
+/// Machine-readable sweep dump (`BENCH_faults.json`): one entry per
+/// cell, keyed `{scenario}/{router}`.
+pub fn bench_json(cells: &[FaultCell]) -> Value {
+    let mut map: BTreeMap<String, Value> = BTreeMap::new();
+    for c in cells {
+        let mut entry: BTreeMap<String, Value> = BTreeMap::new();
+        entry.insert("latency_s".into(), Value::Number(c.result.total_time.as_secs_f64()));
+        entry.insert("throughput_tps".into(), Value::Number(c.result.throughput_tps));
+        entry.insert("hit_rate".into(), Value::Number(c.result.hit_rate));
+        entry.insert("kills".into(), Value::Number(c.result.faults.kills as f64));
+        entry.insert("refills".into(), Value::Number(c.result.faults.refills as f64));
+        entry.insert(
+            "requeued_agents".into(),
+            Value::Number(c.result.faults.requeued_agents as f64),
+        );
+        entry.insert("migrations".into(), Value::Number(c.result.faults.migrations as f64));
+        map.insert(format!("{}/{}", c.scenario, c.router.name()), Value::Object(entry));
+    }
+    Value::Object(map)
+}
+
+fn cell<'a>(cells: &'a [FaultCell], scenario: &str, router: RouterKind) -> &'a RunResult {
+    &cells
+        .iter()
+        .find(|c| c.scenario == scenario && c.router == router)
+        .expect("complete grid")
+        .result
+}
+
+/// Render the grid as a repro table with recovery notes.
+pub fn output_from(cells: &[FaultCell]) -> ExpOutput {
+    let mut table = Table::new(
+        "Fault tolerance: throughput (tok/s) and lifetime hit rate (%) \
+         across disruption x router",
+    )
+    .header(&[
+        "Scenario",
+        "ll tok/s",
+        "ll hit%",
+        "ca tok/s",
+        "ca hit%",
+        "rb tok/s",
+        "rb hit%",
+    ]);
+
+    for &scenario in &SCENARIOS {
+        let ll = cell(cells, scenario, RouterKind::LeastLoaded);
+        let ca = cell(cells, scenario, RouterKind::CacheAffinity);
+        let rb = cell(cells, scenario, RouterKind::Rebalance);
+        table.row(vec![
+            scenario.to_string(),
+            format!("{:.0}", ll.throughput_tps),
+            format!("{:.1}", ll.hit_rate * 100.0),
+            format!("{:.0}", ca.throughput_tps),
+            format!("{:.1}", ca.hit_rate * 100.0),
+            format!("{:.0}", rb.throughput_tps),
+            format!("{:.1}", rb.hit_rate * 100.0),
+        ]);
+    }
+
+    let rb_kill = cell(cells, "kill", RouterKind::Rebalance);
+    let ll_kill = cell(cells, "kill", RouterKind::LeastLoaded);
+    let rb_drain = cell(cells, "drain", RouterKind::Rebalance);
+    let notes = vec![
+        format!(
+            "under a mid-run kill, cold-first re-homing (rebalance) delivers \
+             {:.2}x the throughput of least-loaded balancing ({:.0} vs {:.0} \
+             tok/s): pins survive on the {} healthy replicas and only \
+             stale-cache agents carry the rebalancing",
+            rb_kill.throughput_tps / ll_kill.throughput_tps,
+            rb_kill.throughput_tps,
+            ll_kill.throughput_tps,
+            REPLICAS - 1
+        ),
+        format!(
+            "drain-and-refill preserves continuity: {} agents requeued \
+             (vs {} on the kill row) and the drained replica refilled {} \
+             time(s)",
+            rb_drain.faults.requeued_agents,
+            rb_kill.faults.requeued_agents,
+            rb_drain.faults.refills
+        ),
+        "disruptions hit replica 0 on identical timelines for every \
+         router (anchored to the shortest healthy makespan)"
+            .into(),
+    ];
+
+    ExpOutput {
+        name: "cluster_faults",
+        title: "Fault-tolerant fleet: disruption x router".into(),
+        table,
+        figures: vec![],
+        notes,
+    }
+}
+
+/// Run the study and write `BENCH_faults.json` (path overridable via
+/// `BENCH_FAULTS_PATH`).
+pub fn run() -> Result<ExpOutput> {
+    let cells = run_sweep(SWEEP_AGENTS)?;
+    let path = std::env::var("BENCH_FAULTS_PATH")
+        .unwrap_or_else(|_| "BENCH_faults.json".to_string());
+    std::fs::write(&path, format!("{}\n", bench_json(&cells).to_string_pretty()))?;
+    let mut out = output_from(&cells);
+    out.notes.push(format!("machine-readable results written to {path}"));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_jobs_validate_for_every_router() {
+        for &router in &ROUTERS {
+            base_job(router, SWEEP_AGENTS).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn plans_validate_against_the_fleet() {
+        let anchor = Micros(600_000_000);
+        for &scenario in &SCENARIOS {
+            let plan = plan_for(scenario, anchor, 0);
+            plan.validate(REPLICAS).unwrap();
+            assert_eq!(plan.is_empty(), scenario == "healthy");
+        }
+        let kr = plan_for("kill-revive", anchor, 0);
+        assert_eq!(kr.events().len(), 2);
+        assert_eq!(kr.events()[0].at, Micros(240_000_000));
+        assert_eq!(kr.events()[1].at, Micros(420_000_000));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown fault scenario")]
+    fn unknown_scenario_panics() {
+        plan_for("meteor", Micros(1), 0);
+    }
+}

@@ -10,9 +10,11 @@
 //! Run via `concur repro <table1|table2|table3|fig1|fig3|fig5|fig6|all>`
 //! or `cargo bench --bench paper_tables` / `paper_figures`.  Beyond the
 //! paper, `concur repro cluster` runs the data-parallel replica-scaling
-//! study (see [`cluster_scaling`]).
+//! study (see [`cluster_scaling`]) and `concur repro cluster_faults` the
+//! fault-tolerance study (see [`faults`] — emits `BENCH_faults.json`).
 
 pub mod cluster_scaling;
+pub mod faults;
 pub mod fig1;
 pub mod fig3;
 pub mod fig5;
@@ -104,7 +106,8 @@ pub fn run_systems(jobs: Vec<JobConfig>) -> Result<Vec<RunResult>> {
 }
 
 /// All paper experiments in paper order ("all" runs these; the `cluster`
-/// scaling study is dispatched by name — it is ours, not the paper's).
+/// scaling and `cluster_faults` studies are dispatched by name — they
+/// are ours, not the paper's).
 pub const ALL: [&str; 7] =
     ["fig1", "fig3", "table1", "table2", "fig5", "fig6", "table3"];
 
@@ -115,6 +118,7 @@ pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
     for n in names {
         match n {
             "cluster" => out.push(cluster_scaling::run()?),
+            "cluster_faults" | "faults" => out.push(faults::run()?),
             "fig1" => out.extend(fig1::run()?),
             "fig3" => out.push(fig3::run()?),
             "fig5" => out.push(fig5::run()?),
@@ -124,8 +128,8 @@ pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
             "table3" => out.push(table3::run()?),
             other => {
                 return Err(crate::core::ConcurError::config(format!(
-                    "unknown experiment '{other}' (known: {ALL:?}, 'cluster' \
-                     or 'all')"
+                    "unknown experiment '{other}' (known: {ALL:?}, 'cluster', \
+                     'cluster_faults' or 'all')"
                 )))
             }
         }

@@ -14,21 +14,24 @@
 
 use concur::config::presets;
 use concur::config::{
-    AimdParams, EngineConfig, EvictionMode, JobConfig, RouterKind, SchedulerKind,
-    TopologyConfig, WorkloadConfig,
+    AimdParams, EngineConfig, EvictionMode, FaultPlan, JobConfig, RouterKind,
+    SchedulerKind, TopologyConfig, WorkloadConfig,
 };
 use concur::core::Rng;
 use concur::driver::{run_job, RunResult};
 use concur::metrics::ALL_PHASES;
 
 /// Pre-refactor driver, embedded verbatim as the behavioral oracle (only
-/// the `crate::` paths and the RunResult's new replica fields adapted).
+/// the `crate::` paths and the RunResult's new replica/fault fields
+/// adapted — a single-engine run has no faults and one always-admissible
+/// replica).
 mod reference {
     use concur::agent::Agent;
+    use concur::cluster::FaultStats;
     use concur::coordinator::slots::BoundaryDecision;
     use concur::coordinator::{ControlInputs, Controller, SlotManager};
     use concur::core::{AgentId, Micros, RequestId};
-    use concur::driver::RunResult;
+    use concur::driver::{AgentOutcome, RunResult};
     use concur::engine::SimEngine;
     use concur::metrics::{Histogram, Phase, TimeSeries};
     use concur::sim::{EventQueue, SimClock};
@@ -66,6 +69,9 @@ mod reference {
         let mut active_series = TimeSeries::new("active_agents");
         let mut window_series = TimeSeries::new("window");
         let mut agent_latency = Histogram::new("agent_e2e_latency");
+        let mut alive_series = TimeSeries::new("admissible_replicas");
+        alive_series.record(Micros::ZERO, 1.0);
+        let mut per_agent: Vec<AgentOutcome> = Vec::with_capacity(agents_total);
 
         let mut finished_agents = 0usize;
         let mut engine_steps = 0u64;
@@ -118,6 +124,11 @@ mod reference {
                             finished_agents += 1;
                             let start = a.started_at.unwrap_or(Micros::ZERO);
                             agent_latency.record(after.saturating_sub(start));
+                            per_agent.push(AgentOutcome {
+                                agent: fin.agent,
+                                gen_tokens: a.total_gen_tokens(),
+                                finished_at: after,
+                            });
                         }
                     }
                 }
@@ -173,6 +184,9 @@ mod reference {
             resumes: slots.resumes,
             replicas: 1,
             router: "single".into(),
+            faults: FaultStats::default(),
+            alive_series,
+            per_agent,
         }
     }
 }
@@ -207,11 +221,14 @@ fn assert_bit_identical(a: &RunResult, b: &RunResult, ctx: &str) {
     for p in ALL_PHASES {
         assert_eq!(a.breakdown.get(p), b.breakdown.get(p), "{ctx}: breakdown {}", p.name());
     }
+    assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
+    assert_eq!(a.per_agent, b.per_agent, "{ctx}: per-agent records");
     for (name, sa, sb) in [
         ("usage", &a.usage_series, &b.usage_series),
         ("hit", &a.hit_series, &b.hit_series),
         ("active", &a.active_series, &b.active_series),
         ("window", &a.window_series, &b.window_series),
+        ("alive", &a.alive_series, &b.alive_series),
     ] {
         assert_eq!(sa.len(), sb.len(), "{ctx}: {name} series length");
         for (pa, pb) in sa.points().iter().zip(sb.points()) {
@@ -264,7 +281,9 @@ fn random_jobs(n: usize) -> Vec<JobConfig> {
 
 /// PROPERTY (differential): the N=1 cluster path is bit-identical to the
 /// pre-refactor single-engine driver on random jobs, whichever router the
-/// topology names (routing must short-circuit at one replica).
+/// topology names (routing must short-circuit at one replica), and an
+/// explicit `FaultPlan::none()` with identity tool skew changes nothing —
+/// the fault/skew machinery must be invisible until configured.
 #[test]
 fn n1_cluster_matches_prerefactor_driver_bitwise() {
     for (i, base) in random_jobs(8).iter().enumerate() {
@@ -273,12 +292,23 @@ fn n1_cluster_matches_prerefactor_driver_bitwise() {
             RouterKind::RoundRobin,
             RouterKind::LeastLoaded,
             RouterKind::CacheAffinity,
+            RouterKind::Rebalance,
         ] {
             let mut job = base.clone();
-            job.topology = TopologyConfig { replicas: 1, router };
+            job.topology = TopologyConfig { replicas: 1, router, ..TopologyConfig::default() };
             let got = run_job(&job).unwrap();
             assert_bit_identical(&got, &want, &format!("job {i} via {router:?}"));
         }
+        // Explicit no-fault plan + identity skew: still the oracle.
+        let mut job = base.clone();
+        job.topology = TopologyConfig {
+            replicas: 1,
+            router: RouterKind::CacheAffinity,
+            fault_plan: FaultPlan::none(),
+            tool_skew: vec![1.0],
+        };
+        let got = run_job(&job).unwrap();
+        assert_bit_identical(&got, &want, &format!("job {i} with explicit no-fault topology"));
     }
 }
 
@@ -294,7 +324,7 @@ fn routing_job(replicas: usize, router: RouterKind) -> JobConfig {
         },
         // No admission control: isolates pure routing effects (no pauses).
         scheduler: SchedulerKind::Uncontrolled,
-        topology: TopologyConfig { replicas, router },
+        topology: TopologyConfig { replicas, router, ..TopologyConfig::default() },
     }
 }
 
@@ -307,6 +337,7 @@ fn n4_cluster_runs_are_deterministic() {
         RouterKind::RoundRobin,
         RouterKind::LeastLoaded,
         RouterKind::CacheAffinity,
+        RouterKind::Rebalance,
     ] {
         let job = routing_job(4, router);
         let a = run_job(&job).unwrap();

@@ -1,0 +1,223 @@
+//! Fault-layer integration tests: replica kill, drain-and-refill,
+//! cold-first rebalancing and per-replica tool skew.
+//!
+//! Fault instants are always anchored to a healthy probe run of the same
+//! job: the healthy and faulted runs are event-identical up to the fault
+//! instant, and the healthy run still has unfinished agents at any
+//! fraction of its makespan — so an anchored fault is *guaranteed* to
+//! fire mid-run, for any seed.
+
+use concur::config::presets;
+use concur::config::{
+    AimdParams, EngineConfig, FaultEvent, FaultPlan, JobConfig, RouterKind,
+    SchedulerKind, TopologyConfig, WorkloadConfig,
+};
+use concur::core::Micros;
+use concur::driver::{run_job, RunResult};
+
+fn fleet_job(replicas: usize, router: RouterKind, n_agents: usize) -> JobConfig {
+    JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+        workload: WorkloadConfig {
+            n_agents,
+            steps_min: 4,
+            steps_max: 6,
+            ..WorkloadConfig::default()
+        },
+        // No admission control by default: every agent is active, so a
+        // mid-run fault always has in-flight work to disrupt.
+        scheduler: SchedulerKind::Uncontrolled,
+        topology: TopologyConfig { replicas, router, ..TopologyConfig::default() },
+    }
+}
+
+fn frac(t: Micros, f: f64) -> Micros {
+    Micros((t.0 as f64 * f) as u64)
+}
+
+/// Sorted (id, generated tokens) — the finished-set fingerprint.
+fn finished_set(r: &RunResult) -> Vec<(u64, u64)> {
+    let mut v: Vec<(u64, u64)> =
+        r.per_agent.iter().map(|o| (o.agent.0, o.gen_tokens)).collect();
+    v.sort_unstable();
+    v
+}
+
+/// A mid-run replica kill never loses agents: every router finishes the
+/// full fleet, dead-replica work re-enters the admission queue, and the
+/// admissible-replica series records the loss.
+#[test]
+fn kill_mid_run_preserves_completion_under_every_router() {
+    let mut total_requeued = 0;
+    for router in [
+        RouterKind::RoundRobin,
+        RouterKind::LeastLoaded,
+        RouterKind::CacheAffinity,
+        RouterKind::Rebalance,
+    ] {
+        let base = fleet_job(3, router, 24);
+        let healthy = run_job(&base).unwrap();
+        let mut job = base.clone();
+        job.topology.fault_plan =
+            FaultPlan::new(vec![FaultEvent::kill(0, frac(healthy.total_time, 0.5))]);
+        let r = run_job(&job).unwrap();
+        assert_eq!(r.agents_finished, 24, "{router:?} lost agents after the kill");
+        assert_eq!(r.faults.kills, 1, "{router:?}");
+        assert_eq!(finished_set(&r), finished_set(&healthy), "{router:?} finished set");
+        assert_eq!(r.alive_series.points().last().unwrap().1, 2.0, "{router:?}");
+        total_requeued += r.faults.requeued_agents;
+    }
+    // Across four mid-run kills of a fully-active fleet, at least one
+    // agent must have had a step in flight on the dying replica.
+    assert!(total_requeued > 0, "no agent was ever requeued by a mid-run kill");
+}
+
+/// Kill + revive runs are deterministic end to end: identical totals,
+/// counters, fault telemetry and per-agent records across repeats.
+#[test]
+fn kill_and_revive_runs_are_deterministic() {
+    let base = fleet_job(3, RouterKind::Rebalance, 24);
+    let healthy = run_job(&base).unwrap();
+    // Kill at 35% of the healthy makespan, revive at 55%: the faulted
+    // run is event-identical to healthy until the kill, and the healthy
+    // fleet still has ~65% of its makespan of work left there — on two
+    // surviving replicas that cannot be done by 55%, so the revive is
+    // guaranteed to fire mid-run.
+    let mut job = base.clone();
+    job.topology.fault_plan = FaultPlan::new(vec![
+        FaultEvent::kill(1, frac(healthy.total_time, 0.35)),
+        FaultEvent::revive(1, frac(healthy.total_time, 0.55)),
+    ]);
+    let a = run_job(&job).unwrap();
+    let b = run_job(&job).unwrap();
+    assert_eq!(a.total_time, b.total_time);
+    assert_eq!(a.counters, b.counters);
+    assert_eq!(a.hit_rate.to_bits(), b.hit_rate.to_bits());
+    assert_eq!(a.engine_steps, b.engine_steps);
+    assert_eq!(a.faults, b.faults);
+    assert_eq!(a.per_agent, b.per_agent);
+    assert_eq!(a.faults.kills, 1);
+    assert_eq!(a.faults.revives, 1);
+    // After the revive the full fleet is admissible again.
+    assert_eq!(a.alive_series.points().last().unwrap().1, 3.0);
+    assert_eq!(a.agents_finished, 24);
+}
+
+/// PROPERTY (satellite): drain-then-refill with no concurrent faults
+/// finishes the same set of agents (by id and generated-output length)
+/// as an undisturbed run at the same seed — drains disturb placement and
+/// timing, never completion.  Checked across seeds and two routers.
+#[test]
+fn drain_then_refill_preserves_finished_set_across_seeds() {
+    for &seed in &[1u64, 7, 23, 101, 555] {
+        for router in [RouterKind::CacheAffinity, RouterKind::Rebalance] {
+            let mut base = fleet_job(3, router, 18);
+            base.workload.seed = seed;
+            let healthy = run_job(&base).unwrap();
+            let mut job = base.clone();
+            job.topology.fault_plan =
+                FaultPlan::new(vec![FaultEvent::drain(0, frac(healthy.total_time, 0.4))]);
+            let drained = run_job(&job).unwrap();
+            assert_eq!(
+                finished_set(&healthy),
+                finished_set(&drained),
+                "seed {seed} {router:?}: drain changed the finished set"
+            );
+            assert_eq!(drained.faults.drains, 1, "seed {seed} {router:?}");
+            assert_eq!(
+                drained.faults.refills, 1,
+                "seed {seed} {router:?}: drained replica never refilled"
+            );
+            assert_eq!(drained.faults.requeued_agents, 0, "drain must not requeue");
+            // Back to a fully admissible fleet after the refill.
+            assert_eq!(drained.alive_series.points().last().unwrap().1, 3.0);
+        }
+    }
+}
+
+/// ACCEPTANCE: under a mid-run replica kill, the cold-first rebalancing
+/// router out-delivers pure least-loaded balancing on throughput — the
+/// point of migrating cold agents first is that the surviving replicas
+/// keep their warm working sets.
+#[test]
+fn rebalance_beats_least_loaded_under_mid_run_kill() {
+    // Paper-shaped scenario scaled down for tier-1: CONCUR admission,
+    // 4 replicas, fixed offered load, one replica dies mid-run.
+    let job_for = |router: RouterKind| JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+        workload: WorkloadConfig {
+            n_agents: 32,
+            steps_min: 5,
+            steps_max: 7,
+            ..WorkloadConfig::default()
+        },
+        scheduler: SchedulerKind::Concur(AimdParams::default()),
+        topology: TopologyConfig { replicas: 4, router, ..TopologyConfig::default() },
+    };
+    // One shared anchor so both routers face the identical kill.
+    let anchor = run_job(&job_for(RouterKind::LeastLoaded)).unwrap().total_time;
+    let kill = FaultPlan::new(vec![FaultEvent::kill(0, frac(anchor, 0.45))]);
+
+    let mut ll = job_for(RouterKind::LeastLoaded);
+    ll.topology.fault_plan = kill.clone();
+    let mut rb = job_for(RouterKind::Rebalance);
+    rb.topology.fault_plan = kill;
+
+    let ll = run_job(&ll).unwrap();
+    let rb = run_job(&rb).unwrap();
+    assert_eq!(ll.agents_finished, 32);
+    assert_eq!(rb.agents_finished, 32);
+    assert!(
+        rb.throughput_tps > ll.throughput_tps,
+        "rebalance {:.0} tok/s did not beat least-loaded {:.0} tok/s under a kill",
+        rb.throughput_tps,
+        ll.throughput_tps
+    );
+    assert!(
+        rb.hit_rate > ll.hit_rate,
+        "rebalance hit rate {:.3} did not beat least-loaded {:.3}",
+        rb.hit_rate,
+        ll.hit_rate
+    );
+}
+
+/// Per-replica tool skew: agents homed on the slow-tool replica finish
+/// strictly later than in the unskewed fleet (their tool waits are on
+/// their own critical path), other cohorts are broadly unaffected, and
+/// skewed runs stay deterministic.
+#[test]
+fn tool_skew_slows_the_skewed_cohort_deterministically() {
+    let base = fleet_job(3, RouterKind::CacheAffinity, 24);
+    let even = run_job(&base).unwrap();
+    let mut skewed = base.clone();
+    skewed.topology.tool_skew = vec![1.0, 1.0, 4.0];
+    let a = run_job(&skewed).unwrap();
+    let b = run_job(&skewed).unwrap();
+    assert_eq!(a.total_time, b.total_time, "skewed runs must be deterministic");
+    assert_eq!(a.counters, b.counters);
+    assert_eq!(a.agents_finished, 24);
+    assert_eq!(finished_set(&a), finished_set(&even));
+
+    let finish_of = |r: &RunResult| {
+        let mut m = vec![Micros::ZERO; 24];
+        for o in &r.per_agent {
+            m[o.agent.0 as usize] = o.finished_at;
+        }
+        m
+    };
+    let (fe, fs) = (finish_of(&even), finish_of(&a));
+    // Cache-affinity homes are id % replicas: ids = 2 (mod 3) live on the
+    // 4x-skewed replica 2.  Every one of them finishes strictly later.
+    for id in (2..24).step_by(3) {
+        assert!(
+            fs[id] > fe[id],
+            "agent {id} on the skewed replica finished at {} vs {} unskewed",
+            fs[id],
+            fe[id]
+        );
+    }
+    // The fleet as a whole can only get slower.
+    assert!(a.total_time >= even.total_time);
+}
