@@ -6,6 +6,10 @@
 //!
 //! * [`router`] decides which replica an agent's next generation step
 //!   lands on (round-robin / least-loaded / cache-affinity / rebalance);
+//! * [`prefix`] is the optional cross-replica shared-prefix broadcast
+//!   tier: hot shared prompt prefixes are shipped to every admissible
+//!   replica and pinned read-only, recovering the cross-agent hits that
+//!   sharding splits (off by default and inert when off);
 //! * [`run_sharded`] is the fleet event loop: per-replica iteration
 //!   timelines, one global [`Controller`] regulating admission for the
 //!   whole fleet, and the scripted [`FaultPlan`] lifecycle (kill /
@@ -38,6 +42,8 @@
 //!   cache and rejoins ("refill").  Unlike kill, agents keep their slots
 //!   and simply route elsewhere at their next step boundary.
 //! * **revive** — a killed replica rejoins the admissible fleet, empty.
+//!   With the broadcast tier enabled, hot shared prefixes are re-shipped
+//!   to revived and refilled replicas at the same instant they rejoin.
 //!
 //! ## Timing semantics (and the N=1 contract)
 //!
@@ -57,14 +63,16 @@
 //! by insertion order, so cluster runs are deterministic for any N, any
 //! fault plan and any skew vector.
 
+pub mod prefix;
 pub mod router;
 
+pub use prefix::{PrefixTierStats, SharedPrefixTier};
 pub use router::{
     make_router, CacheAffinityRouter, RebalanceRouter, ReplicaLoad, RouteCtx, Router,
 };
 
 use crate::agent::{Agent, AgentPhase};
-use crate::config::{FaultKind, FaultPlan, JobConfig};
+use crate::config::{FaultKind, FaultPlan, JobConfig, PrefixTierConfig};
 use crate::coordinator::{slots::BoundaryDecision, ControlInputs, Controller};
 use crate::core::{AgentId, ConcurError, Micros, RequestId, Result};
 use crate::costmodel::CostModel;
@@ -111,6 +119,7 @@ pub struct ClusterCoordinator {
     router: Box<dyn Router>,
     faults: FaultPlan,
     tool_skew: Vec<f64>,
+    prefix_tier: PrefixTierConfig,
 }
 
 impl ClusterCoordinator {
@@ -126,6 +135,7 @@ impl ClusterCoordinator {
             router: make_router(job.topology.router),
             faults: job.topology.fault_plan.clone(),
             tool_skew: job.topology.tool_skew.clone(),
+            prefix_tier: job.topology.prefix_tier,
         }
     }
 
@@ -147,6 +157,7 @@ impl ClusterCoordinator {
             controller,
             &self.faults,
             &self.tool_skew,
+            &self.prefix_tier,
         )
     }
 }
@@ -243,6 +254,7 @@ fn route_to(
     current: Option<usize>,
     aid: AgentId,
     ctx: u64,
+    broadcast_prefix: u64,
     now: Micros,
 ) -> usize {
     if engines.len() == 1 {
@@ -255,7 +267,7 @@ fn route_to(
         admissible: st == ReplicaState::Alive,
     }));
     let heat = current.and_then(|r| engines[r].agent_heat(aid));
-    let rctx = RouteCtx { agent: aid, ctx_tokens: ctx, current, now, heat };
+    let rctx = RouteCtx { agent: aid, ctx_tokens: ctx, current, now, heat, broadcast_prefix };
     let r = router.route(&rctx, loads);
     assert!(r < engines.len(), "router returned out-of-range replica {r}");
     assert!(state[r] == ReplicaState::Alive, "router chose non-admissible replica {r}");
@@ -281,7 +293,10 @@ fn scale_latency(lat: Micros, skew: f64) -> Micros {
 /// `faults` scripts replica kills / drains / revivals (see the module
 /// docs for semantics) and must validate against `engines.len()`;
 /// `tool_skew` is either empty (uniform 1.0) or one positive multiplier
-/// per replica, applied to the tool latency of every step served there.
+/// per replica, applied to the tool latency of every step served there;
+/// `prefix_tier` configures the cross-replica shared-prefix broadcast
+/// tier (see [`prefix`] — disabled by default, and **inert** when
+/// disabled: the tier-off path is bit-identical to the pre-tier loop).
 ///
 /// # Examples
 ///
@@ -291,7 +306,8 @@ fn scale_latency(lat: Micros, skew: f64) -> Micros {
 /// ```
 /// use concur::agent::WorkloadGenerator;
 /// use concur::cluster::{make_router, run_sharded};
-/// use concur::config::{presets, EngineConfig, FaultPlan, RouterKind, WorkloadConfig};
+/// use concur::config::{presets, EngineConfig, FaultPlan, PrefixTierConfig, RouterKind,
+///                      WorkloadConfig};
 /// use concur::coordinator::concur_default;
 /// use concur::costmodel::CostModel;
 /// use concur::engine::SimEngine;
@@ -310,6 +326,7 @@ fn scale_latency(lat: Micros, skew: f64) -> Micros {
 ///     concur_default(),
 ///     &FaultPlan::none(),
 ///     &[],
+///     &PrefixTierConfig::default(),
 /// )
 /// .unwrap();
 /// assert_eq!(result.agents_finished, 4);
@@ -322,6 +339,7 @@ pub fn run_sharded(
     mut controller: Box<dyn Controller>,
     faults: &FaultPlan,
     tool_skew: &[f64],
+    prefix_tier: &PrefixTierConfig,
 ) -> Result<RunResult> {
     assert!(!engines.is_empty(), "cluster needs at least one replica");
     let n = engines.len();
@@ -387,6 +405,16 @@ pub fn run_sharded(
     let mut fstats = FaultStats::default();
     let mut next_fault = 0usize;
 
+    // Shared-prefix broadcast tier: absent unless configured, so the
+    // tier-off path carries zero extra work (bit-identity differential).
+    prefix_tier.validate()?;
+    let mut tier: Option<SharedPrefixTier> =
+        if prefix_tier.enabled { Some(SharedPrefixTier::new(*prefix_tier, n)) } else { None };
+    let mut broadcast_series = TimeSeries::new("broadcast_shipped_tokens");
+    let mut broadcast_time = Micros::ZERO;
+    // Scratch for the tier's alive-replica view (reused, never reallocated).
+    let mut alive_scratch: Vec<bool> = Vec::with_capacity(n);
+
     loop {
         let now = clock.now();
 
@@ -419,6 +447,11 @@ pub fn run_sharded(
                     }
                     footprint[r] = 0;
                     engines[r].clear_state();
+                    if let Some(t) = tier.as_mut() {
+                        // The broadcast pins died with the radix tree; a
+                        // revive re-ships on the next maintenance pass.
+                        t.on_replica_wiped(r);
+                    }
                     state[r] = ReplicaState::Dead;
                     fstats.kills += 1;
                 }
@@ -501,6 +534,9 @@ pub fn run_sharded(
                 && !engines[r].has_work()
             {
                 engines[r].clear_state();
+                if let Some(t) = tier.as_mut() {
+                    t.on_replica_wiped(r); // re-shipped below, same instant
+                }
                 state[r] = ReplicaState::Alive;
                 fstats.refills += 1;
                 alive_series.record(now, admissible_count(&state) as f64);
@@ -515,9 +551,11 @@ pub fn run_sharded(
                 let ctx = a.context_len() as u64;
                 let req = a.make_request(RequestId(next_req), now);
                 next_req += 1;
+                let bp = tier.as_mut().map_or(0, |t| t.observe(aid, &req.prompt, now));
                 let cur = assignment[aid.0 as usize];
-                let tgt =
-                    route_to(router, engines, &state, &footprint, &mut loads, cur, aid, ctx, now);
+                let tgt = route_to(
+                    router, engines, &state, &footprint, &mut loads, cur, aid, ctx, bp, now,
+                );
                 match cur {
                     Some(old) if old == tgt => {}
                     Some(old) => {
@@ -547,15 +585,31 @@ pub fn run_sharded(
             let ctx = a.context_len() as u64;
             let req = a.make_request(RequestId(next_req), now);
             next_req += 1;
+            let bp = tier.as_mut().map_or(0, |t| t.observe(aid, &req.prompt, now));
             let cur = assignment[aid.0 as usize];
-            let tgt =
-                route_to(router, engines, &state, &footprint, &mut loads, cur, aid, ctx, now);
+            let tgt = route_to(
+                router, engines, &state, &footprint, &mut loads, cur, aid, ctx, bp, now,
+            );
             if cur.is_some_and(|old| old != tgt) {
                 fstats.migrations += 1;
             }
             assignment[aid.0 as usize] = Some(tgt);
             footprint[tgt] += ctx;
             engines[tgt].submit(req);
+        }
+
+        // 3b. Shared-prefix tier maintenance: promote ripe candidates,
+        //     demote cooled prefixes, and install hot prefixes on alive
+        //     replicas lacking them (covers freshly refilled/revived
+        //     replicas at this same instant, before their next iteration).
+        if let Some(t) = tier.as_mut() {
+            alive_scratch.clear();
+            alive_scratch.extend(state.iter().map(|s| *s == ReplicaState::Alive));
+            let (shipped, transfer) = t.maintain(engines, &alive_scratch, now);
+            if shipped > 0 {
+                broadcast_series.record(now, shipped as f64);
+            }
+            broadcast_time += transfer;
         }
 
         // 4. Start an iteration on every idle live replica with queued
@@ -634,6 +688,7 @@ pub fn run_sharded(
         breakdown.merge(&std::mem::take(&mut e.breakdown));
     }
     breakdown.add(Phase::ToolWait, toolwait);
+    breakdown.add(Phase::Broadcast, broadcast_time);
     let mut counters = EngineCounters::default();
     let mut hits = LifetimeRatio::default();
     for e in engines.iter() {
@@ -669,6 +724,8 @@ pub fn run_sharded(
         faults: fstats,
         alive_series,
         per_agent,
+        prefix_tier: tier.as_ref().map(|t| t.stats()).unwrap_or_default(),
+        broadcast_series,
     })
 }
 
@@ -786,6 +843,25 @@ mod tests {
         assert_eq!(scale_latency(lat, 1.0), lat);
         assert_eq!(scale_latency(lat, 2.0), Micros(2_469_134));
         assert_eq!(scale_latency(Micros(1_000), 0.5), Micros(500));
+    }
+
+    #[test]
+    fn tier_enabled_fleet_ships_and_finishes() {
+        use crate::config::PrefixTierConfig;
+        let mut job = cluster_job(3, RouterKind::CacheAffinity);
+        job.workload.n_agents = 18;
+        job.workload.task_families = 5; // coprime with 3: every family splits
+        job.topology.prefix_tier = PrefixTierConfig::on();
+        let r = run(&job);
+        assert_eq!(r.agents_finished, 18);
+        assert!(r.prefix_tier.hot_prefixes > 0, "family prefixes must go hot");
+        assert!(r.prefix_tier.ships > 0, "hot prefixes must ship");
+        assert!(r.counters.broadcast_hit_tokens > 0, "shipped prefixes must be hit");
+        assert_eq!(r.prefix_tier.reships, 0, "healthy fleets never re-ship");
+        // Disabled tier reports all-zero telemetry.
+        let off = run(&cluster_job(3, RouterKind::CacheAffinity));
+        assert_eq!(off.prefix_tier, PrefixTierStats::default());
+        assert!(off.broadcast_series.is_empty());
     }
 
     #[test]

@@ -1,0 +1,569 @@
+//! Cross-replica shared-prefix broadcast tier.
+//!
+//! Sharding (cluster/) splits cross-agent prefix reuse: every replica
+//! re-prefills the same family system prompt once, so the aggregate hit
+//! rate `H_t` the admission controller feeds on is structurally depressed
+//! at N>1 (the "lost shared-prefix hits" ROADMAP item).  [`SharedPrefixTier`]
+//! recovers those hits the KVFlow way — by *shipping* hot shared prefixes
+//! instead of re-computing them:
+//!
+//! 1. **Detect.**  Every submitted prompt is [`observe`]d.  Prompt heads
+//!    are tracked as candidates; when two prompts overlap by at least
+//!    `min_prefix_tokens`, the candidate shrinks to their exact common
+//!    prefix (the LCP), so candidates converge onto true shared prefixes
+//!    (family system prompts and anything beyond).  Reuse is counted per
+//!    *distinct* agent — an agent extending its own history is not
+//!    sharing.
+//! 2. **Promote.**  A candidate reused by `hot_after` distinct agents is
+//!    promoted to the broadcast tier, within a token budget; promotion
+//!    past the budget demotes the stalest hot prefix first.
+//! 3. **Ship.**  Once some alive replica holds the full prefix
+//!    GPU-resident (the source — broadcasts move KV, they do not invent
+//!    it), the tier installs it on every alive replica that lacks it:
+//!    [`SimEngine::install_broadcast_prefix`] materialises the tokens,
+//!    charges the simulated interconnect transfer, and **broadcast-pins**
+//!    the radix path so per-replica LRU eviction can never drop it while
+//!    it stays hot.  Replicas wiped by a kill or a drain-refill are
+//!    re-shipped when they rejoin ([`on_replica_wiped`] clears the
+//!    install, the next maintenance pass restores it).
+//! 4. **Demote.**  A hot prefix not reused for `cool_after` is demoted on
+//!    every replica: the KV stays cached but becomes ordinary evictable
+//!    state.
+//!
+//! Everything is deterministic — candidate order, promotion order and
+//! install order follow insertion and replica index — and the whole tier
+//! is inert unless `TopologyConfig::prefix_tier.enabled` is set: the
+//! tier-off cluster path is differential-tested bit-identical to the
+//! pre-tier loop.
+//!
+//! [`observe`]: SharedPrefixTier::observe
+//! [`on_replica_wiped`]: SharedPrefixTier::on_replica_wiped
+//! [`SimEngine::install_broadcast_prefix`]: crate::engine::SimEngine::install_broadcast_prefix
+
+use crate::config::PrefixTierConfig;
+use crate::core::{AgentId, Micros, Token};
+use crate::engine::radix::NodeId;
+use crate::engine::SimEngine;
+
+/// Detection cap: a candidate registers at most this many tokens of a
+/// prompt head; the true shared prefix is recovered by LCP shrinking, so
+/// the cap only bounds detection memory, not what can be shared.
+const MAX_CANDIDATE_TOKENS: usize = 4096;
+
+/// Bound on simultaneously tracked candidates (≈ distinct prompt
+/// families in flight); a new head arriving at a full table replaces
+/// the stalest candidate, so detection keeps adapting.
+const MAX_CANDIDATES: usize = 64;
+
+/// Tier telemetry for one run (all zero with the tier disabled).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixTierStats {
+    /// Shared prefixes promoted to the broadcast tier.
+    pub hot_prefixes: u64,
+    /// First-time installs of a hot prefix onto a replica.
+    pub ships: u64,
+    /// Re-installs onto a replica whose copy died (kill / drain-refill).
+    pub reships: u64,
+    /// Tokens actually moved over the interconnect by installs.
+    pub shipped_tokens: u64,
+    /// Hot prefixes demoted (cooled off, or displaced by the budget).
+    pub demotions: u64,
+    /// Installs skipped because a replica could not free enough pool.
+    pub skipped_installs: u64,
+}
+
+/// A tracked prompt head that may converge onto a shared prefix.
+struct Candidate {
+    tokens: Vec<Token>,
+    /// Distinct agents that have presented this prefix (capped at
+    /// `hot_after` — beyond that the candidate is already ripe).
+    seen: Vec<AgentId>,
+    /// Last observation instant (aging: when the table is full, the
+    /// stalest candidate is replaced, so one-off prompt heads cannot
+    /// permanently lock out future detection).
+    last_seen: Micros,
+}
+
+/// A promoted (hot) prefix and its per-replica install state.
+struct HotPrefix {
+    tokens: Vec<Token>,
+    last_reuse: Micros,
+    /// Broadcast-pinned radix path per replica (`None` = not installed —
+    /// never shipped yet, or the replica's state was wiped since).
+    installed: Vec<Option<Vec<NodeId>>>,
+    /// Replicas that ever held this prefix (distinguishes re-ships).
+    ever_installed: Vec<bool>,
+}
+
+fn lcp(a: &[Token], b: &[Token]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Is `h` installed on every replica that was alive at the last
+/// maintenance pass?  Dead replicas are excused — requiring an install
+/// on a killed, never-revived replica would disable the routing hint
+/// fleet-wide for the rest of the run.
+fn fully_installed(alive: &[bool], h: &HotPrefix) -> bool {
+    h.installed.iter().zip(alive).all(|(slot, &a)| !a || slot.is_some())
+}
+
+/// The cluster-owned broadcast tier (see the module docs).
+pub struct SharedPrefixTier {
+    cfg: PrefixTierConfig,
+    replicas: usize,
+    candidates: Vec<Candidate>,
+    hot: Vec<HotPrefix>,
+    /// Σ tokens of hot prefixes (per-replica pinned budget).
+    budget_used: u64,
+    /// Alive view from the last maintenance pass (all-true before the
+    /// first); scopes the install-everywhere gate of the routing hint.
+    last_alive: Vec<bool>,
+    stats: PrefixTierStats,
+}
+
+impl SharedPrefixTier {
+    pub fn new(cfg: PrefixTierConfig, replicas: usize) -> SharedPrefixTier {
+        debug_assert!(cfg.enabled, "tier constructed while disabled");
+        SharedPrefixTier {
+            cfg,
+            replicas,
+            candidates: Vec::new(),
+            hot: Vec::new(),
+            budget_used: 0,
+            last_alive: vec![true; replicas],
+            stats: PrefixTierStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> PrefixTierStats {
+        self.stats
+    }
+
+    /// Tokens of `prompt` covered by a hot prefix that is currently
+    /// **installed on every alive replica** (0 = none).  Feeds the
+    /// routers' prefix-awareness — the free-mover premise is "the prefix
+    /// is resident wherever I land", so a merely-promoted prefix with no
+    /// installs yet (or with installs lost to a kill/refill and not yet
+    /// re-shipped) must not loosen routing.  Dead replicas don't count
+    /// against the gate (they can't receive work), and the alive view is
+    /// the last maintenance pass's — at most one fleet instant stale, on
+    /// the conservative side.
+    pub fn broadcast_prefix_len(&self, prompt: &[Token]) -> u64 {
+        self.hot
+            .iter()
+            .filter(|h| fully_installed(&self.last_alive, h) && prompt.starts_with(&h.tokens))
+            .map(|h| h.tokens.len() as u64)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Observe one submitted prompt: refresh hot-prefix reuse stamps and
+    /// advance shared-prefix detection.  Pure bookkeeping — never touches
+    /// an engine, so the disabled tier (which is simply never observed)
+    /// and an enabled-but-idle tier leave replicas byte-identical.
+    ///
+    /// Returns the routing hint for this prompt — the same value as
+    /// [`broadcast_prefix_len`](SharedPrefixTier::broadcast_prefix_len),
+    /// computed in the pass this method already makes over the hot set
+    /// so the per-request path scans it once, not twice.
+    pub fn observe(&mut self, agent: AgentId, prompt: &[Token], now: Micros) -> u64 {
+        // Any hot coverage (installed or not) stops candidate tracking —
+        // re-registering an already-promoted prefix would duplicate it —
+        // but only everywhere-installed coverage feeds the routing hint.
+        let mut covered_by_hot = false;
+        let mut hint = 0u64;
+        for h in &mut self.hot {
+            if prompt.starts_with(&h.tokens) {
+                h.last_reuse = now;
+                covered_by_hot = true;
+                if fully_installed(&self.last_alive, h) {
+                    hint = hint.max(h.tokens.len() as u64);
+                }
+            }
+        }
+        let minp = (self.cfg.min_prefix_tokens as usize).max(1);
+        if prompt.len() < minp || covered_by_hot {
+            return hint;
+        }
+        // Longest-overlap candidate wins (ties → lowest index).
+        let mut best: Option<(usize, usize)> = None;
+        for (i, c) in self.candidates.iter().enumerate() {
+            let l = lcp(&c.tokens, prompt);
+            if l >= minp && best.is_none_or(|(_, bl)| l > bl) {
+                best = Some((i, l));
+            }
+        }
+        match best {
+            Some((i, l)) => {
+                let c = &mut self.candidates[i];
+                if l < c.tokens.len() {
+                    // The prompts diverge inside the candidate: the true
+                    // shared prefix is exactly their common part.
+                    c.tokens.truncate(l);
+                }
+                // Genuinely distinct-agent counting (the hot_after knob's
+                // documented meaning); capped at hot_after — beyond that
+                // the candidate is already ripe.
+                if c.seen.len() < self.cfg.hot_after as usize && !c.seen.contains(&agent) {
+                    c.seen.push(agent);
+                }
+                c.last_seen = now;
+            }
+            None => {
+                let cap = prompt.len().min(MAX_CANDIDATE_TOKENS);
+                let cand = Candidate {
+                    tokens: prompt[..cap].to_vec(),
+                    seen: vec![agent],
+                    last_seen: now,
+                };
+                if self.candidates.len() < MAX_CANDIDATES {
+                    self.candidates.push(cand);
+                } else if let Some(victim) = (0..self.candidates.len())
+                    .min_by_key(|&i| (self.candidates[i].last_seen, i))
+                {
+                    // Table full: replace the stalest candidate so a
+                    // burst of one-off prompt heads cannot permanently
+                    // lock out future shared-prefix detection.
+                    self.candidates[victim] = cand;
+                }
+            }
+        }
+        0 // not covered by any hot prefix, so no routing hint either
+    }
+
+    /// A replica's serving state was wiped (kill, or drain-refill): its
+    /// installs are gone with the radix tree.  The next [`maintain`] pass
+    /// re-ships everything hot once the replica is admissible again.
+    ///
+    /// [`maintain`]: SharedPrefixTier::maintain
+    pub fn on_replica_wiped(&mut self, replica: usize) {
+        for h in &mut self.hot {
+            h.installed[replica] = None;
+        }
+    }
+
+    /// One tier maintenance pass: demote cooled prefixes, promote ripe
+    /// candidates (displacing the stalest hot prefix when the budget
+    /// overflows), and install hot prefixes on alive replicas lacking
+    /// them — gated on a live source replica holding the full prefix
+    /// GPU-resident, because broadcasts move KV rather than invent it.
+    /// Returns `(tokens shipped, summed simulated transfer latency)`.
+    pub fn maintain(
+        &mut self,
+        engines: &mut [SimEngine],
+        alive: &[bool],
+        now: Micros,
+    ) -> (u64, Micros) {
+        debug_assert_eq!(engines.len(), self.replicas);
+        debug_assert_eq!(alive.len(), self.replicas);
+        self.last_alive.clear();
+        self.last_alive.extend_from_slice(alive);
+        let mut shipped = 0u64;
+        let mut transfer = Micros::ZERO;
+
+        // 1. Cool-down demotions.
+        let mut i = 0;
+        while i < self.hot.len() {
+            if now.saturating_sub(self.hot[i].last_reuse) >= self.cfg.cool_after {
+                self.demote_at(i, engines);
+            } else {
+                i += 1;
+            }
+        }
+
+        // 2. Promote ripe candidates (in registration order).
+        let mut c = 0;
+        while c < self.candidates.len() {
+            if self.candidates[c].seen.len() >= self.cfg.hot_after as usize {
+                let cand = self.candidates.remove(c);
+                self.promote(cand, engines, now);
+            } else {
+                c += 1;
+            }
+        }
+
+        // 3. Install hot prefixes where they are missing.  (Indexed
+        // loops: the body splits borrows between `self.hot`, `self.stats`
+        // and `engines`, which an iterator over `self.hot` cannot.)
+        #[allow(clippy::needless_range_loop)]
+        for h_idx in 0..self.hot.len() {
+            let full = self.hot[h_idx].tokens.len() as u64;
+            let missing_any =
+                (0..self.replicas).any(|r| alive[r] && self.hot[h_idx].installed[r].is_none());
+            if !missing_any {
+                continue;
+            }
+            let have_source = (0..self.replicas).any(|r| {
+                alive[r]
+                    && (self.hot[h_idx].installed[r].is_some()
+                        || engines[r].tree().peek_prefix(&self.hot[h_idx].tokens).0 >= full)
+            });
+            if !have_source {
+                continue;
+            }
+            for r in 0..self.replicas {
+                if !alive[r] || self.hot[h_idx].installed[r].is_some() {
+                    continue;
+                }
+                let Some(out) = engines[r].install_broadcast_prefix(&self.hot[h_idx].tokens, now)
+                else {
+                    self.stats.skipped_installs += 1;
+                    continue;
+                };
+                let moved = out.installed_tokens + out.reloaded_tokens;
+                shipped += moved;
+                self.stats.shipped_tokens += moved;
+                transfer += out.transfer_done.saturating_sub(now);
+                if self.hot[h_idx].ever_installed[r] {
+                    self.stats.reships += 1;
+                } else {
+                    self.stats.ships += 1;
+                    self.hot[h_idx].ever_installed[r] = true;
+                }
+                self.hot[h_idx].installed[r] = Some(out.path);
+            }
+        }
+        (shipped, transfer)
+    }
+
+    fn promote(&mut self, mut cand: Candidate, engines: &mut [SimEngine], now: Micros) {
+        // A shared prefix longer than the whole budget is truncated, not
+        // dropped: a budget-length head is still a valid shared prefix,
+        // and dropping would let the candidate re-register and churn
+        // through detect/drop forever (validation guarantees
+        // budget_tokens >= min_prefix_tokens).
+        if cand.tokens.len() as u64 > self.cfg.budget_tokens {
+            cand.tokens.truncate(self.cfg.budget_tokens as usize);
+        }
+        let len = cand.tokens.len() as u64;
+        while self.budget_used + len > self.cfg.budget_tokens {
+            // Displace the stalest hot prefix (ties → oldest promotion).
+            let Some(victim) = (0..self.hot.len()).min_by_key(|&i| (self.hot[i].last_reuse, i))
+            else {
+                break;
+            };
+            self.demote_at(victim, engines);
+        }
+        debug_assert!(self.budget_used + len <= self.cfg.budget_tokens);
+        self.budget_used += len;
+        self.stats.hot_prefixes += 1;
+        self.hot.push(HotPrefix {
+            tokens: cand.tokens,
+            last_reuse: now,
+            installed: vec![None; self.replicas],
+            ever_installed: vec![false; self.replicas],
+        });
+    }
+
+    fn demote_at(&mut self, i: usize, engines: &mut [SimEngine]) {
+        let h = self.hot.remove(i);
+        for (r, slot) in h.installed.into_iter().enumerate() {
+            if let Some(path) = slot {
+                engines[r].demote_broadcast_prefix(&path);
+            }
+        }
+        self.budget_used -= h.tokens.len() as u64;
+        self.stats.demotions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::core::RequestId;
+    use crate::costmodel::CostModel;
+    use crate::engine::Request;
+
+    fn tier(replicas: usize) -> SharedPrefixTier {
+        SharedPrefixTier::new(PrefixTierConfig::on(), replicas)
+    }
+
+    fn engines(n: usize) -> Vec<SimEngine> {
+        (0..n)
+            .map(|_| {
+                let mut e = SimEngine::new(
+                    EngineConfig::default(),
+                    CostModel::new(crate::config::presets::qwen3_cluster(2)),
+                );
+                e.shrink_pool_for_tests(100_000);
+                e
+            })
+            .collect()
+    }
+
+    fn prompt(family: u32, agent: u32) -> Vec<Token> {
+        let mut p: Vec<Token> = (family * 512..family * 512 + 512).collect();
+        p.extend(1_000_000 + agent * 10_000..1_000_000 + agent * 10_000 + 400);
+        p
+    }
+
+    /// Serve one request so `prompt` lands in the replica's radix cache
+    /// through the normal finish path (pool accounting included) — the
+    /// replica becomes a legitimate broadcast source.
+    fn seed(e: &mut SimEngine, prompt: Vec<Token>) {
+        e.submit(Request {
+            id: RequestId(9_999),
+            agent: AgentId(9_999),
+            prompt,
+            gen: vec![42_000_000],
+            prev_ctx: 0,
+            submitted_at: Micros::ZERO,
+        });
+        let mut now = Micros::ZERO;
+        for _ in 0..200 {
+            if !e.has_work() {
+                break;
+            }
+            let out = e.step(now);
+            now += out.duration + Micros(1);
+        }
+        assert!(!e.has_work(), "seed request did not finish");
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn candidates_converge_on_the_shared_prefix() {
+        let mut t = tier(2);
+        t.observe(AgentId(0), &prompt(0, 0), Micros(1));
+        t.observe(AgentId(1), &prompt(0, 1), Micros(2));
+        // Two observers sharing 512 tokens: one candidate, shrunk to the LCP.
+        assert_eq!(t.candidates.len(), 1);
+        assert_eq!(t.candidates[0].tokens.len(), 512);
+        assert_eq!(t.candidates[0].seen.len(), 2);
+        // A different family registers its own candidate.
+        t.observe(AgentId(2), &prompt(3, 2), Micros(3));
+        assert_eq!(t.candidates.len(), 2);
+        // The same agent re-observing does not count as sharing...
+        t.observe(AgentId(2), &prompt(3, 2), Micros(4));
+        assert_eq!(t.candidates[1].seen.len(), 1);
+        // ...and neither does alternation: A,B,A is two distinct reusers,
+        // not three (the hot_after knob's documented meaning).
+        t.observe(AgentId(0), &prompt(0, 0), Micros(5));
+        assert_eq!(t.candidates[0].seen.len(), 2);
+    }
+
+    #[test]
+    fn hot_prefix_ships_only_once_a_source_exists() {
+        let mut t = tier(2);
+        let mut eng = engines(2);
+        let alive = vec![true, true];
+        for a in 0..3u32 {
+            t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
+        }
+        // Hot, but no replica holds the prefix yet: nothing ships.
+        let (shipped, _) = t.maintain(&mut eng, &alive, Micros(10));
+        assert_eq!(shipped, 0);
+        assert_eq!(t.stats().ships, 0);
+        assert_eq!(t.stats().hot_prefixes, 1);
+        // Replica 0 serves family traffic: its cache becomes the source.
+        seed(&mut eng[0], prompt(0, 9));
+        let (shipped, transfer) = t.maintain(&mut eng, &alive, Micros(12));
+        assert_eq!(shipped, 512, "only replica 1 lacked the 512-token prefix");
+        assert!(transfer > Micros::ZERO);
+        assert_eq!(t.stats().ships, 2, "pin on the source + install on the peer");
+        assert_eq!(eng[1].tree().broadcast_tokens(), 512);
+        assert_eq!(eng[0].tree().broadcast_tokens(), 512, "source copy is pinned too");
+        for e in &eng {
+            e.check_invariants().unwrap();
+        }
+        // Steady state: nothing further to do.
+        assert_eq!(t.maintain(&mut eng, &alive, Micros(13)).0, 0);
+    }
+
+    #[test]
+    fn wiped_replicas_are_reshipped() {
+        let mut t = tier(2);
+        let mut eng = engines(2);
+        let alive = vec![true, true];
+        for a in 0..3u32 {
+            t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
+        }
+        seed(&mut eng[0], prompt(0, 9));
+        t.maintain(&mut eng, &alive, Micros(6));
+        assert_eq!(t.stats().ships, 2);
+        // Replica 1 dies and rejoins empty.
+        eng[1].clear_state();
+        t.on_replica_wiped(1);
+        // While replica 1 is down, the routing hint must survive on the
+        // alive remainder: a dead replica's missing install is excused.
+        t.maintain(&mut eng, &[true, false], Micros(7));
+        assert_eq!(t.broadcast_prefix_len(&prompt(0, 7)), 512, "dead replica excused");
+        // Revive: the wiped install is restored (a re-ship, not a ship).
+        let (shipped, _) = t.maintain(&mut eng, &alive, Micros(8));
+        assert_eq!(shipped, 512);
+        assert_eq!(t.stats().reships, 1, "rejoin must restore the tier");
+        assert_eq!(eng[1].tree().broadcast_tokens(), 512);
+        assert_eq!(t.broadcast_prefix_len(&prompt(0, 7)), 512);
+    }
+
+    #[test]
+    fn cooled_prefixes_are_demoted_everywhere() {
+        let mut cfg = PrefixTierConfig::on();
+        cfg.cool_after = Micros(100);
+        let mut t = SharedPrefixTier::new(cfg, 2);
+        let mut eng = engines(2);
+        let alive = vec![true, true];
+        for a in 0..3u32 {
+            t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
+        }
+        seed(&mut eng[0], prompt(0, 9));
+        t.maintain(&mut eng, &alive, Micros(6));
+        assert_eq!(eng[1].tree().broadcast_tokens(), 512);
+        // No reuse for >= cool_after: demoted on both replicas.
+        t.maintain(&mut eng, &alive, Micros(200));
+        assert_eq!(t.stats().demotions, 1);
+        assert_eq!(eng[0].tree().broadcast_tokens(), 0);
+        assert_eq!(eng[1].tree().broadcast_tokens(), 0);
+        for e in &eng {
+            e.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn budget_displaces_the_stalest_prefix() {
+        let mut cfg = PrefixTierConfig::on();
+        cfg.budget_tokens = 800; // fits one 512-token prefix, not two
+        let mut t = SharedPrefixTier::new(cfg, 1);
+        let mut eng = engines(1);
+        let alive = vec![true];
+        for a in 0..3u32 {
+            t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
+        }
+        seed(&mut eng[0], prompt(0, 9));
+        t.maintain(&mut eng, &alive, Micros(6));
+        assert_eq!(t.stats().hot_prefixes, 1);
+        // A second family goes hot: the budget displaces the first.
+        for a in 10..13u32 {
+            t.observe(AgentId(a as u64), &prompt(1, a), Micros(a as u64 + 10));
+        }
+        seed(&mut eng[0], prompt(1, 9));
+        t.maintain(&mut eng, &alive, Micros(31));
+        assert_eq!(t.stats().hot_prefixes, 2);
+        assert_eq!(t.stats().demotions, 1, "budget must displace the stalest");
+        assert_eq!(t.hot.len(), 1);
+        assert!(prompt(1, 0).starts_with(&t.hot[0].tokens));
+        eng[0].check_invariants().unwrap();
+    }
+
+    #[test]
+    fn broadcast_prefix_len_reports_only_installed_coverage() {
+        let mut t = tier(1);
+        let mut eng = engines(1);
+        for a in 0..3u32 {
+            t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
+        }
+        assert_eq!(t.broadcast_prefix_len(&prompt(0, 7)), 0, "not hot yet");
+        // Promoted but unshipped (no source): still no routing hint —
+        // the free-mover premise needs the prefix resident everywhere.
+        t.maintain(&mut eng, &[true], Micros(4));
+        assert_eq!(t.stats().hot_prefixes, 1);
+        assert_eq!(t.broadcast_prefix_len(&prompt(0, 7)), 0, "hot-but-unshipped");
+        assert_eq!(t.observe(AgentId(9), &prompt(0, 9), Micros(5)), 0);
+        seed(&mut eng[0], prompt(0, 9));
+        t.maintain(&mut eng, &[true], Micros(6));
+        assert_eq!(t.broadcast_prefix_len(&prompt(0, 7)), 512);
+        assert_eq!(t.observe(AgentId(9), &prompt(0, 9), Micros(7)), 512);
+        assert_eq!(t.broadcast_prefix_len(&prompt(2, 7)), 0);
+    }
+}

@@ -66,6 +66,24 @@ pub struct RouteCtx {
     /// its replica).  Staleness correlates with LRU eviction depth, so
     /// time-since-last-decode ranks agents coldest-first for migration.
     pub heat: Option<Micros>,
+    /// Tokens of the agent's prompt covered by a cluster-wide broadcast
+    /// prefix (0 = none, or the shared-prefix tier is off).  A covered
+    /// agent whose private suffix has gone cold loses almost nothing by
+    /// moving — the broadcast prefix is resident on every replica — so
+    /// prefix-aware policies may migrate it more eagerly.
+    pub broadcast_prefix: u64,
+}
+
+/// An agent whose remaining reuse is only the broadcast prefix is *free
+/// to move*: the prefix is pinned on every admissible replica, and the
+/// private suffix on its current replica is cold enough (no decode there
+/// within `cold_after`, or none ever) to have been LRU-evicted already.
+fn broadcast_free(ctx: &RouteCtx, cold_after: Micros) -> bool {
+    ctx.broadcast_prefix > 0
+        && match ctx.heat {
+            None => true,
+            Some(last) => ctx.now.saturating_sub(last) >= cold_after,
+        }
 }
 
 /// A routing policy: picks the replica for one agent's next request.
@@ -205,6 +223,14 @@ pub struct CacheAffinityRouter {
     /// ... and footprint > `pressure` × pool capacity (an imbalanced but
     /// mostly-empty fleet has no reason to give up cache locality).
     pub pressure: f64,
+    /// Prefix-awareness (shared-prefix tier): an agent whose prompt is
+    /// covered by a broadcast prefix and whose last decode on its current
+    /// replica is at least this stale is a *free mover* — it spills on
+    /// the first overloaded instant instead of waiting out `spill_after`
+    /// (its private suffix is likely evicted, the shared prefix is
+    /// resident everywhere, so the spill costs no warm state).  Inert
+    /// while the tier is off (`broadcast_prefix` is then always 0).
+    pub free_move_cold_after: Micros,
     streaks: OverloadStreaks,
     /// Requests routed away from their home (telemetry).
     pub spills: u64,
@@ -216,6 +242,7 @@ impl Default for CacheAffinityRouter {
             spill_after: 8,
             imbalance: 1.5,
             pressure: 0.75,
+            free_move_cold_after: Micros(3_000_000),
             streaks: OverloadStreaks::default(),
             spills: 0,
         }
@@ -250,7 +277,9 @@ impl Router for CacheAffinityRouter {
             }
             unreachable!("no admissible replica offered to router");
         }
-        if self.streaks.get(home) >= self.spill_after {
+        let spill_after =
+            if broadcast_free(ctx, self.free_move_cold_after) { 1 } else { self.spill_after };
+        if self.streaks.get(home) >= spill_after {
             let target = least_loaded(replicas);
             if target != home {
                 self.spills += 1;
@@ -337,7 +366,13 @@ impl Router for RebalanceRouter {
             self.rehomes += 1;
             return target;
         }
-        if self.streaks.get(home) >= self.spill_after && self.is_cold(ctx) {
+        // Prefix-awareness: a cold agent covered by a broadcast prefix
+        // only has migratable state left (the shared prefix is resident
+        // everywhere), so it re-homes on the first overloaded instant
+        // instead of waiting out the full streak.  Inert with the tier
+        // off (`broadcast_prefix` is then always 0).
+        let spill_after = if ctx.broadcast_prefix > 0 { 1 } else { self.spill_after };
+        if self.streaks.get(home) >= spill_after && self.is_cold(ctx) {
             let target = least_loaded(replicas);
             if target != home {
                 self.homes.insert(ctx.agent.0, target);
@@ -377,6 +412,7 @@ mod tests {
             current,
             now: Micros(t),
             heat: None,
+            broadcast_prefix: 0,
         }
     }
 
@@ -484,6 +520,44 @@ mod tests {
         assert_eq!(r.route(&ctx(1, Some(fallback_a), 3), &l), fallback_a, "fallback is stable");
         // Other homes are untouched.
         assert_eq!(r.route(&ctx(2, Some(2), 4), &l), 2);
+    }
+
+    #[test]
+    fn affinity_free_movers_spill_on_first_overloaded_instant() {
+        let mut r = CacheAffinityRouter::default();
+        let hot = loads(&[95, 10, 10, 10], 100);
+        // Broadcast-covered agent with no private heat on its home: one
+        // overloaded instant suffices (no spill_after streak).
+        let free = RouteCtx { broadcast_prefix: 512, ..ctx(0, Some(0), 1) };
+        assert_eq!(r.route(&free, &hot), 1);
+        assert_eq!(r.spills, 1);
+        // A *warm* covered agent is not a free mover: it still rides out
+        // the imbalance like any pinned agent.
+        let warm = RouteCtx { broadcast_prefix: 512, heat: Some(Micros(2)), ..ctx(4, Some(0), 2) };
+        assert_eq!(r.route(&warm, &hot), 0);
+        // Without broadcast coverage nothing changed (tier-off parity).
+        let plain = ctx(8, Some(0), 3);
+        assert_eq!(r.route(&plain, &hot), 0);
+        assert_eq!(r.spills, 1);
+    }
+
+    #[test]
+    fn rebalance_free_movers_rehome_without_the_full_streak() {
+        const SEC: u64 = 1_000_000;
+        let mut r = RebalanceRouter::default();
+        let hot = loads(&[95, 10, 10, 10], 100);
+        // One overloaded instant: a cold, broadcast-covered agent moves...
+        let cold = RouteCtx { broadcast_prefix: 512, ..ctx(0, Some(0), SEC) };
+        assert_eq!(r.route(&cold, &hot), 1);
+        assert_eq!(r.rehomes, 1);
+        // ...a cold but *uncovered* agent still waits out spill_after.
+        let plain = ctx(4, Some(0), 2 * SEC);
+        assert_eq!(r.route(&plain, &hot), 0);
+        // ...and a covered but *hot* agent stays (cold gate still applies).
+        let fresh = Some(Micros(3 * SEC));
+        let warm = RouteCtx { broadcast_prefix: 512, heat: fresh, ..ctx(8, Some(0), 3 * SEC) };
+        assert_eq!(r.route(&warm, &hot), 0);
+        assert_eq!(r.rehomes, 1);
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod presets;
 pub use faults::{FaultEvent, FaultKind, FaultPlan};
 
 use crate::core::json::Value;
-use crate::core::{ConcurError, Result};
+use crate::core::{ConcurError, Micros, Result};
 use crate::costmodel::{ClusterSpec, GpuSpec, ModelSpec};
 
 /// Which admission scheduler fronts the engine (§6 of DESIGN.md).
@@ -67,6 +67,77 @@ impl RouterKind {
     }
 }
 
+/// Cross-replica shared-prefix broadcast tier (`cluster::prefix`).  When
+/// enabled, the cluster detects hot shared prompt prefixes (family system
+/// prompts and beyond) from the request stream, ships them to every
+/// admissible replica over the simulated interconnect, and pins them as
+/// read-only radix paths so per-replica eviction never drops them while
+/// they stay hot.  Disabled by default: the tier must be **invisible**
+/// unless asked for (the tier-off path is differential-tested
+/// bit-identical to the pre-tier cluster).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixTierConfig {
+    pub enabled: bool,
+    /// Distinct-agent reuse count at which a detected shared prefix is
+    /// promoted to the broadcast tier ("hotness threshold").
+    pub hot_after: u32,
+    /// Total tokens the tier may keep broadcast-pinned per replica;
+    /// promoting past the budget demotes the stalest prefix first.
+    pub budget_tokens: u64,
+    /// Shortest shared prefix worth tracking, in tokens (two prompts
+    /// overlapping less than this are considered unrelated).
+    pub min_prefix_tokens: u32,
+    /// Demote a broadcast prefix that has not been reused for this long.
+    pub cool_after: Micros,
+}
+
+impl Default for PrefixTierConfig {
+    fn default() -> PrefixTierConfig {
+        PrefixTierConfig {
+            enabled: false,
+            hot_after: 3,
+            budget_tokens: 32_768,
+            min_prefix_tokens: 64,
+            cool_after: Micros(300_000_000), // 300 s of simulated cold
+        }
+    }
+}
+
+impl PrefixTierConfig {
+    /// The default configuration with the tier switched on.
+    pub fn on() -> PrefixTierConfig {
+        PrefixTierConfig { enabled: true, ..PrefixTierConfig::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if self.hot_after < 2 {
+            return Err(ConcurError::config(
+                "prefix_tier.hot_after must be >= 2 (a prefix shared by one \
+                 agent is not shared)",
+            ));
+        }
+        if self.min_prefix_tokens == 0 {
+            return Err(ConcurError::config("prefix_tier.min_prefix_tokens must be > 0"));
+        }
+        if self.budget_tokens < self.min_prefix_tokens as u64 {
+            return Err(ConcurError::config(
+                "prefix_tier.budget_tokens cannot fit even one minimal prefix",
+            ));
+        }
+        if self.cool_after == Micros::ZERO {
+            return Err(ConcurError::config(
+                "prefix_tier.cool_after must be > 0 (zero demotes every \
+                 prefix the instant after it ships, churning the tier \
+                 forever)",
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Data-parallel serving topology: how many engine replicas a job runs on
 /// (each with its own KV pool and radix cache), how agents are routed
 /// between them, which replica faults are scripted, and how tool latency
@@ -83,6 +154,8 @@ pub struct TopologyConfig {
     /// means uniform 1.0; otherwise the length must equal `replicas` and
     /// every multiplier must be finite and positive.
     pub tool_skew: Vec<f64>,
+    /// Cross-replica shared-prefix broadcast tier (off by default).
+    pub prefix_tier: PrefixTierConfig,
 }
 
 impl Default for TopologyConfig {
@@ -92,6 +165,7 @@ impl Default for TopologyConfig {
             router: RouterKind::CacheAffinity,
             fault_plan: FaultPlan::none(),
             tool_skew: Vec::new(),
+            prefix_tier: PrefixTierConfig::default(),
         }
     }
 }
@@ -117,6 +191,7 @@ impl TopologyConfig {
                 ));
             }
         }
+        self.prefix_tier.validate()?;
         Ok(())
     }
 }
@@ -410,6 +485,26 @@ impl JobConfig {
         if let Some(plan) = t.get("fault_plan").as_array() {
             topology.fault_plan = FaultPlan::from_json_events(plan)?;
         }
+        let pt = t.get("prefix_tier");
+        if let Some(b) = pt.get("enabled").as_bool() {
+            topology.prefix_tier.enabled = b;
+        }
+        if let Some(x) = pt.get("hot_after").as_u64() {
+            topology.prefix_tier.hot_after = u32::try_from(x).map_err(|_| {
+                ConcurError::config("prefix_tier.hot_after out of range (u32)")
+            })?;
+        }
+        if let Some(x) = pt.get("budget_tokens").as_u64() {
+            topology.prefix_tier.budget_tokens = x;
+        }
+        if let Some(x) = pt.get("min_prefix_tokens").as_u64() {
+            topology.prefix_tier.min_prefix_tokens = u32::try_from(x).map_err(|_| {
+                ConcurError::config("prefix_tier.min_prefix_tokens out of range (u32)")
+            })?;
+        }
+        if let Some(x) = pt.get("cool_after_s").as_f64() {
+            topology.prefix_tier.cool_after = Micros::from_secs_f64(x);
+        }
 
         let scheduler = match v.get("scheduler").as_str().unwrap_or("concur") {
             "sglang" | "uncontrolled" => SchedulerKind::Uncontrolled,
@@ -588,6 +683,62 @@ mod tests {
         assert!(t.validate().is_err(), "non-positive skew must be rejected");
         t.tool_skew = vec![1.0, f64::NAN];
         assert!(t.validate().is_err(), "non-finite skew must be rejected");
+    }
+
+    #[test]
+    fn prefix_tier_defaults_off_and_validates() {
+        let t = TopologyConfig::default();
+        assert!(!t.prefix_tier.enabled, "the tier must be opt-in");
+        t.validate().unwrap();
+        // Disabled configs never fail validation, whatever the knobs say.
+        let weird = TopologyConfig {
+            prefix_tier: PrefixTierConfig {
+                hot_after: 0,
+                min_prefix_tokens: 0,
+                ..PrefixTierConfig::default()
+            },
+            ..TopologyConfig::default()
+        };
+        weird.validate().unwrap();
+        // Enabled configs are checked.
+        let mut on =
+            TopologyConfig { prefix_tier: PrefixTierConfig::on(), ..TopologyConfig::default() };
+        on.validate().unwrap();
+        on.prefix_tier.hot_after = 1;
+        assert!(on.validate().is_err(), "hot_after < 2 must be rejected");
+        on.prefix_tier = PrefixTierConfig { budget_tokens: 8, ..PrefixTierConfig::on() };
+        assert!(on.validate().is_err(), "budget below one minimal prefix");
+    }
+
+    #[test]
+    fn json_config_parses_prefix_tier() {
+        let text = r#"{
+            "model": "qwen3-32b", "tp": 2,
+            "topology": {
+                "replicas": 4,
+                "prefix_tier": {"enabled": true, "hot_after": 5,
+                                 "budget_tokens": 8192,
+                                 "min_prefix_tokens": 128,
+                                 "cool_after_s": 60}
+            }
+        }"#;
+        let job = JobConfig::from_json(&Value::parse(text).unwrap()).unwrap();
+        let pt = job.topology.prefix_tier;
+        assert!(pt.enabled);
+        assert_eq!(pt.hot_after, 5);
+        assert_eq!(pt.budget_tokens, 8192);
+        assert_eq!(pt.min_prefix_tokens, 128);
+        assert_eq!(pt.cool_after, Micros(60_000_000));
+
+        // Validation runs inside from_json.
+        let bad = r#"{"topology": {"prefix_tier": {"enabled": true, "hot_after": 1}}}"#;
+        assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
+        // Out-of-range u32 knobs are rejected, not silently wrapped.
+        let wrap = r#"{"topology": {"prefix_tier": {"hot_after": 4294967298}}}"#;
+        assert!(JobConfig::from_json(&Value::parse(wrap).unwrap()).is_err());
+        // A zero cool-down would churn the tier forever; rejected.
+        let churn = r#"{"topology": {"prefix_tier": {"enabled": true, "cool_after_s": 0}}}"#;
+        assert!(JobConfig::from_json(&Value::parse(churn).unwrap()).is_err());
     }
 
     #[test]

@@ -14,8 +14,8 @@
 //! `tests/cluster_integration.rs`).
 
 use crate::agent::{Agent, WorkloadGenerator};
-use crate::cluster::{make_router, ClusterCoordinator, FaultStats};
-use crate::config::{FaultPlan, JobConfig, RouterKind};
+use crate::cluster::{make_router, ClusterCoordinator, FaultStats, PrefixTierStats};
+use crate::config::{FaultPlan, JobConfig, PrefixTierConfig, RouterKind};
 use crate::coordinator::{make_controller, Controller};
 use crate::core::{AgentId, Micros, Result};
 use crate::engine::{EngineCounters, SimEngine};
@@ -66,6 +66,12 @@ pub struct RunResult {
     pub alive_series: TimeSeries,
     /// Per-agent completion records, in finish order.
     pub per_agent: Vec<AgentOutcome>,
+    /// Shared-prefix broadcast tier telemetry (all zero with the tier
+    /// off — the default).
+    pub prefix_tier: PrefixTierStats,
+    /// Tokens shipped by broadcast installs over time: one point per
+    /// tier maintenance pass that moved data (empty with the tier off).
+    pub broadcast_series: TimeSeries,
 }
 
 impl RunResult {
@@ -198,6 +204,7 @@ pub fn run_with(
         controller,
         &FaultPlan::none(),
         &[],
+        &PrefixTierConfig::default(),
     )
 }
 

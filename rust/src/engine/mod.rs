@@ -58,6 +58,20 @@ pub struct StepOutcome {
     pub reload_time: Micros,
 }
 
+/// What one broadcast-prefix install did on a replica (cluster
+/// shared-prefix tier; see [`SimEngine::install_broadcast_prefix`]).
+#[derive(Debug, Clone)]
+pub struct BroadcastInstall {
+    /// Tokens newly materialised on GPU by the install.
+    pub installed_tokens: u64,
+    /// CPU-tier tokens promoted back to GPU by the install.
+    pub reloaded_tokens: u64,
+    /// Broadcast-pinned radix path (the tier's demotion handle).
+    pub path: Vec<radix::NodeId>,
+    /// When the simulated interconnect transfer completes.
+    pub transfer_done: Micros,
+}
+
 /// Cumulative engine counters (telemetry / tables).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EngineCounters {
@@ -72,6 +86,11 @@ pub struct EngineCounters {
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
     pub stalled_decode_steps: u64,
+    /// Tokens materialised on this replica by broadcast-prefix installs
+    /// (cluster shared-prefix tier; zero with the tier off).
+    pub broadcast_installed_tokens: u64,
+    /// Prompt tokens that hit a broadcast-pinned radix path at admission.
+    pub broadcast_hit_tokens: u64,
 }
 
 impl EngineCounters {
@@ -88,6 +107,8 @@ impl EngineCounters {
         self.prefill_tokens += other.prefill_tokens;
         self.decode_tokens += other.decode_tokens;
         self.stalled_decode_steps += other.stalled_decode_steps;
+        self.broadcast_installed_tokens += other.broadcast_installed_tokens;
+        self.broadcast_hit_tokens += other.broadcast_hit_tokens;
     }
 }
 
@@ -305,6 +326,82 @@ impl SimEngine {
         self.cpu_tier_limit = capacity_tokens * 4;
     }
 
+    // -- broadcast prefix tier ----------------------------------------------
+
+    /// Materialise `tokens` in this replica's radix cache as a read-only
+    /// broadcast prefix (cluster shared-prefix tier): any part not yet
+    /// GPU-resident is allocated from the pool (evicting as needed),
+    /// CPU-tier parts are promoted, and the whole path is broadcast-pinned
+    /// so per-replica eviction can never drop it while it stays hot.  The
+    /// shipped bytes occupy this replica's host link (delaying later
+    /// HiCache reloads, as real interconnect traffic would).
+    ///
+    /// Returns `None` — installing nothing — when the pool cannot free
+    /// enough room; the tier retries on a later pass.
+    pub fn install_broadcast_prefix(
+        &mut self,
+        tokens: &[Token],
+        now: Micros,
+    ) -> Option<BroadcastInstall> {
+        if tokens.is_empty() {
+            return None;
+        }
+        // Size the allocation by a read-only peek; eviction inside
+        // `ensure_free` may drop part of the matched prefix, so re-derive
+        // until the estimate is stable (GPU coverage only shrinks).
+        let mut needed;
+        loop {
+            let (gpu, _) = self.tree.peek_prefix(tokens);
+            needed = tokens.len() as u64 - gpu;
+            if self.pool.can_alloc(needed) {
+                break;
+            }
+            // Feasibility precheck, mirroring admission's free+evictable
+            // guard: never evict for an install that cannot fit anyway.
+            // A failed install is retried on every tier maintenance pass,
+            // and a destructive retry loop would evict (and force the
+            // re-prefill of) the running agents' reclaimable cache each
+            // pass — strictly worse than having no tier at all.
+            if self.pool.free() + self.tree.evictable_gpu_tokens() < needed {
+                return None;
+            }
+            if !self.ensure_free(needed, now) {
+                return None;
+            }
+            let (gpu_after, _) = self.tree.peek_prefix(tokens);
+            if tokens.len() as u64 - gpu_after == needed {
+                break; // estimate stable and ensure_free succeeded
+            }
+        }
+        if needed > 0 {
+            self.pool.alloc(needed).expect("install sized by peek");
+        }
+        let ins = self.tree.insert(tokens, now);
+        let reloaded =
+            if ins.cpu_tokens > 0 { self.tree.reload_path(&ins.path, now) } else { 0 };
+        debug_assert_eq!(ins.new_gpu_tokens + reloaded, needed);
+        self.tree.pin_broadcast(&ins.path);
+        let moved = ins.new_gpu_tokens + reloaded;
+        self.counters.broadcast_installed_tokens += moved;
+        self.counters.reloaded_tokens += reloaded;
+        let transfer_done =
+            if moved > 0 { self.pcie.transfer(now, self.kv_bytes(moved)) } else { now };
+        Some(BroadcastInstall {
+            installed_tokens: ins.new_gpu_tokens,
+            reloaded_tokens: reloaded,
+            path: ins.path,
+            transfer_done,
+        })
+    }
+
+    /// Release a broadcast pin taken by
+    /// [`install_broadcast_prefix`](SimEngine::install_broadcast_prefix)
+    /// (tier demotion: the prefix cooled or was displaced by the budget).
+    /// The KV stays cached but becomes ordinary evictable state.
+    pub fn demote_broadcast_prefix(&mut self, path: &[radix::NodeId]) {
+        self.tree.demote_broadcast(path);
+    }
+
     // -- memory helpers ------------------------------------------------------
 
     /// Make room for `tokens`; evicts LRU cache entries if needed.
@@ -486,6 +583,11 @@ impl SimEngine {
             };
             self.hit_window.record(hits, prompt_len.max(1));
             self.lifetime_hits.record(hits, prompt_len.max(1));
+            // Broadcast short-circuit accounting: prompt tokens covered by
+            // a pinned broadcast prefix were never at eviction risk and
+            // skip prefill like any other hit — this counter sizes how
+            // much of the hit volume the tier is carrying.
+            self.counters.broadcast_hit_tokens += m.broadcast_tokens;
 
             let _ = gen_len;
             self.tree.lock_path(&m.path);
@@ -888,6 +990,51 @@ mod tests {
         e.submit(mk_req(3, 3, (80_000..81_000).collect(), 20, 0));
         let done = drive(&mut e, 100);
         assert_eq!(done.len(), 1);
+    }
+
+    #[test]
+    fn broadcast_install_pins_and_counts_hits() {
+        let mut e = tiny_engine(100_000);
+        let shared: Vec<Token> = (0..512).collect();
+        let out = e.install_broadcast_prefix(&shared, Micros::ZERO).expect("room");
+        assert_eq!(out.installed_tokens, 512);
+        assert_eq!(out.reloaded_tokens, 0);
+        assert_eq!(e.pool().used(), 512, "install allocates its pool slots");
+        assert_eq!(e.tree().broadcast_tokens(), 512);
+        assert_eq!(e.counters.broadcast_installed_tokens, 512);
+        e.check_invariants().unwrap();
+
+        // A request whose prompt extends the prefix hits it (short-circuit)
+        // and the hit is tagged as broadcast-carried.
+        let mut p = shared.clone();
+        p.extend(10_000..10_400u32);
+        e.submit(mk_req(1, 1, p, 20, 0));
+        drive(&mut e, 200);
+        assert_eq!(e.counters.broadcast_hit_tokens, 512);
+        assert_eq!(e.lifetime_hits.num, 512);
+
+        // Re-installing an already-resident prefix moves nothing.
+        let again = e.install_broadcast_prefix(&shared, Micros(1)).expect("no-op");
+        assert_eq!(again.installed_tokens + again.reloaded_tokens, 0);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn broadcast_prefix_survives_pressure_until_demoted() {
+        let mut e = tiny_engine(3_000);
+        let shared: Vec<Token> = (0..512).collect();
+        let install = e.install_broadcast_prefix(&shared, Micros::ZERO).expect("room");
+        // Flood the pool: everything else churns, the pinned prefix stays.
+        e.submit(mk_req(1, 1, (100_000..102_200).collect(), 20, 0));
+        drive(&mut e, 300);
+        assert_eq!(e.tree().peek_prefix(&shared).0, 512, "pinned prefix evicted");
+        // Demote: the prefix becomes ordinary cache and pressure can take it.
+        e.demote_broadcast_prefix(&install.path);
+        assert_eq!(e.tree().broadcast_tokens(), 0);
+        e.submit(mk_req(2, 2, (200_000..202_200).collect(), 20, 0));
+        drive(&mut e, 300);
+        assert!(e.tree().peek_prefix(&shared).0 < 512, "demoted prefix still pinned");
+        e.check_invariants().unwrap();
     }
 
     #[test]

@@ -63,6 +63,13 @@ struct Node {
     /// A node with `pin_count > 0` lies on a root→locked path and cannot
     /// be reclaimed; maintained incrementally by lock/unlock walks.
     pin_count: u32,
+    /// Broadcast registrations covering this node (cluster shared-prefix
+    /// tier).  A node with `broadcast_pins > 0` is a read-only broadcast
+    /// prefix: it never enters the LRU candidate list (so per-replica
+    /// eviction can neither discard nor offload it) and `trim_cpu` skips
+    /// it.  Maintained by `pin_broadcast`/`demote_broadcast` walks; edge
+    /// splits inherit it so coverage stays contiguous root→deepest.
+    broadcast_pins: u32,
     /// Children currently GPU-resident; 0 ⇒ this node is a *GPU leaf*
     /// (its subtree holds no other GPU memory) and may be evicted.
     gpu_children: u32,
@@ -153,6 +160,9 @@ pub struct MatchResult {
     pub gpu_tokens: u64,
     /// Matched tokens resident in the CPU tier (must be reloaded).
     pub cpu_tokens: u64,
+    /// Matched tokens lying on broadcast-pinned nodes (a subset of the
+    /// totals above) — the engine's broadcast-hit accounting.
+    pub broadcast_tokens: u64,
 }
 
 impl MatchResult {
@@ -202,6 +212,9 @@ pub struct RadixTree {
     cpu_tokens: u64,
     /// GPU tokens pinned by locked paths (incremental; see `pin_count`).
     pinned_gpu_tokens: u64,
+    /// Tokens covered by broadcast registrations (incremental; per-node,
+    /// counted once however many registrations overlap a node).
+    broadcast_tokens: u64,
     /// Live nodes excluding the root (incremental).
     live_nodes: usize,
     /// Bumped on every structural or content mutation (insert, split,
@@ -225,6 +238,7 @@ impl RadixTree {
             parent: ROOT,
             ref_count: 1, // the root is never evictable
             pin_count: 0,
+            broadcast_pins: 0,
             gpu_children: 0,
             last_access: Micros::ZERO,
             version: 0,
@@ -241,6 +255,7 @@ impl RadixTree {
             gpu_tokens: 0,
             cpu_tokens: 0,
             pinned_gpu_tokens: 0,
+            broadcast_tokens: 0,
             live_nodes: 0,
             epoch: 0,
             lru_head: NIL,
@@ -275,6 +290,51 @@ impl RadixTree {
     /// append-only, so this bounds resident slab memory).
     pub fn arena_len(&self) -> usize {
         self.arena.len()
+    }
+
+    /// Tokens currently covered by broadcast registrations (each node
+    /// counted once however many registrations overlap it).  O(1).
+    pub fn broadcast_tokens(&self) -> u64 {
+        self.broadcast_tokens
+    }
+
+    /// Read-only longest-prefix probe: how many of `tokens` are matchable
+    /// right now, as `(gpu, cpu)` token counts — without touching
+    /// recency, splitting edges or bumping the epoch.  The cluster's
+    /// shared-prefix tier uses this to test replica residency before
+    /// shipping a broadcast prefix (a mutating `match_prefix` would
+    /// perturb LRU aging just by looking).
+    pub fn peek_prefix(&self, tokens: &[Token]) -> (u64, u64) {
+        let (mut gpu, mut cpu) = (0u64, 0u64);
+        let mut cur = ROOT;
+        let mut pos = 0usize;
+        while pos < tokens.len() {
+            let Some(&child) = self.nodes[cur].children.get(&tokens[pos]) else {
+                break;
+            };
+            let n = &self.nodes[child];
+            let key = &self.arena[n.off..n.off + n.len];
+            let maxcmp = key.len().min(tokens.len() - pos);
+            let probe = &tokens[pos..pos + maxcmp];
+            let same = if key[..maxcmp] == *probe {
+                maxcmp
+            } else {
+                key.iter().zip(probe).take_while(|(a, b)| a == b).count()
+            };
+            if same == 0 {
+                break;
+            }
+            match n.residency {
+                Residency::Gpu => gpu += same as u64,
+                Residency::Cpu => cpu += same as u64,
+            }
+            pos += same;
+            cur = child;
+            if same < key.len() {
+                break; // diverged (or ended) inside the edge
+            }
+        }
+        (gpu, cpu)
     }
 
     // -- allocation ---------------------------------------------------------
@@ -384,6 +444,7 @@ impl RadixTree {
         if n.alive
             && !n.in_lru
             && n.ref_count == 0
+            && n.broadcast_pins == 0
             && n.residency == Residency::Gpu
             && n.gpu_children == 0
         {
@@ -406,6 +467,7 @@ impl RadixTree {
         // link.  Copying the ref here would leak it when the locker later
         // unlocks the lower node.
         let lower_pins = self.nodes[id].pin_count;
+        let lower_bcast = self.nodes[id].broadcast_pins;
         let upper = self.alloc_node(Node {
             off,
             len: at,
@@ -413,8 +475,12 @@ impl RadixTree {
             parent,
             ref_count: 0,
             // The upper half sits on every root→locked path the lower half
-            // is on; pinned-token totals are unchanged by the split.
+            // is on; pinned-token totals are unchanged by the split.  The
+            // same holds for broadcast coverage: the upper half carries
+            // `at` of the lower's tokens, so the per-node token sum behind
+            // `broadcast_tokens` is unchanged too.
             pin_count: lower_pins,
+            broadcast_pins: lower_bcast,
             // The lower half is the upper's only child and shares its
             // residency.
             gpu_children: if residency == Residency::Gpu { 1 } else { 0 },
@@ -478,9 +544,13 @@ impl RadixTree {
                 child
             };
             self.touch(matched_node, now);
-            match self.nodes[matched_node].residency {
+            let n = &self.nodes[matched_node];
+            match n.residency {
                 Residency::Gpu => result.gpu_tokens += same as u64,
                 Residency::Cpu => result.cpu_tokens += same as u64,
+            }
+            if n.broadcast_pins > 0 {
+                result.broadcast_tokens += same as u64;
             }
             result.path.push(matched_node);
             pos += same;
@@ -540,6 +610,7 @@ impl RadixTree {
                 parent: cur,
                 ref_count: 0,
                 pin_count: 0,
+                broadcast_pins: 0,
                 gpu_children: 0,
                 last_access: now,
                 version: 0,
@@ -612,6 +683,59 @@ impl RadixTree {
         }
     }
 
+    // -- broadcast pinning ------------------------------------------------------
+
+    /// Register `path` (a full root→deepest node path, as returned by
+    /// `insert`/`insert_parts`) as a **read-only broadcast prefix**: the
+    /// covered nodes leave the LRU candidate list and can be neither
+    /// discarded nor offloaded until a matching [`demote_broadcast`]
+    /// releases them.  Internally this also takes a regular path lock, so
+    /// `evictable_gpu_tokens` excludes the covered tokens exactly as it
+    /// excludes request-locked paths.  Registrations nest: overlapping
+    /// pins are counted per node and coverage survives later edge splits
+    /// (the split upper half inherits the count).
+    ///
+    /// [`demote_broadcast`]: RadixTree::demote_broadcast
+    pub fn pin_broadcast(&mut self, path: &[NodeId]) {
+        self.lock_path(path);
+        if let Some(&last) = path.last() {
+            let mut id = last;
+            while id != ROOT {
+                if self.nodes[id].in_lru {
+                    self.lru_remove(id);
+                }
+                let n = &mut self.nodes[id];
+                n.broadcast_pins += 1;
+                if n.broadcast_pins == 1 {
+                    self.broadcast_tokens += n.len as u64;
+                }
+                id = n.parent;
+            }
+        }
+    }
+
+    /// Release a previous [`pin_broadcast`] registration.  The covered
+    /// nodes become ordinary cache again; like an unlock, only the
+    /// deepest node re-enters LRU candidacy immediately (ancestors re-arm
+    /// on their next `push_candidate`, mirroring the heap-parity rule).
+    ///
+    /// [`pin_broadcast`]: RadixTree::pin_broadcast
+    pub fn demote_broadcast(&mut self, path: &[NodeId]) {
+        if let Some(&last) = path.last() {
+            let mut id = last;
+            while id != ROOT {
+                let n = &mut self.nodes[id];
+                debug_assert!(n.broadcast_pins > 0, "demote of non-broadcast node");
+                n.broadcast_pins -= 1;
+                if n.broadcast_pins == 0 {
+                    self.broadcast_tokens -= n.len as u64;
+                }
+                id = n.parent;
+            }
+        }
+        self.unlock_path(path);
+    }
+
     // -- eviction ---------------------------------------------------------------
 
     /// GPU tokens that could be freed right now (unlocked subtrees).
@@ -669,7 +793,8 @@ impl RadixTree {
             // currently-valid candidate.
             debug_assert!({
                 let n = &self.nodes[id];
-                n.alive && n.ref_count == 0 && n.residency == Residency::Gpu
+                n.alive && n.ref_count == 0 && n.broadcast_pins == 0
+                    && n.residency == Residency::Gpu
             } && self.is_gpu_leaf(id));
             self.lru_remove(id);
             // Discard may only remove fully childless nodes; a GPU node
@@ -716,6 +841,7 @@ impl RadixTree {
 
     fn remove_leaf(&mut self, id: NodeId) {
         debug_assert!(self.nodes[id].children.is_empty());
+        debug_assert_eq!(self.nodes[id].broadcast_pins, 0, "broadcast node removed");
         if self.nodes[id].in_lru {
             self.lru_remove(id);
         }
@@ -752,6 +878,7 @@ impl RadixTree {
                     && n.residency == Residency::Cpu
                     && n.children.is_empty()
                     && n.ref_count == 0
+                    && n.broadcast_pins == 0
             })
             .map(|(id, n)| (n.last_access, id))
             .collect();
@@ -810,12 +937,21 @@ impl RadixTree {
     pub fn check_invariants(&self) -> std::result::Result<(), String> {
         let mut gpu = 0u64;
         let mut cpu = 0u64;
+        let mut bcast = 0u64;
         let mut live = 0usize;
         for (id, n) in self.nodes.iter().enumerate() {
             if !n.alive || id == ROOT {
                 continue;
             }
             live += 1;
+            if n.broadcast_pins > 0 {
+                bcast += n.tokens();
+                if n.pin_count == 0 {
+                    return Err(format!(
+                        "broadcast node {id} lost its lock pin (pin_count 0)"
+                    ));
+                }
+            }
             if n.off + n.len > self.arena.len() {
                 return Err(format!("node {id} range escapes the arena"));
             }
@@ -842,6 +978,12 @@ impl RadixTree {
         }
         if live != self.live_nodes {
             return Err(format!("live nodes {live} != counter {}", self.live_nodes));
+        }
+        if bcast != self.broadcast_tokens {
+            return Err(format!(
+                "broadcast tokens {bcast} != counter {}",
+                self.broadcast_tokens
+            ));
         }
         // Incremental GPU-child counters vs reality.
         for (id, n) in self.nodes.iter().enumerate() {
@@ -874,6 +1016,7 @@ impl RadixTree {
             }
             if !(n.alive
                 && n.ref_count == 0
+                && n.broadcast_pins == 0
                 && n.residency == Residency::Gpu
                 && n.gpu_children == 0)
             {
@@ -905,6 +1048,29 @@ impl RadixTree {
             ));
         }
         Ok(())
+    }
+
+    // -- test support -----------------------------------------------------------
+
+    /// Head→tail snapshot of the intrusive LRU candidate list.  Test
+    /// support: the stale-re-entry regression test compares this against
+    /// the slow `(last_access, version, id)` sort so the planned
+    /// ordered-index swap (ROADMAP) has a safety net.
+    pub fn lru_order_for_tests(&self) -> Vec<NodeId> {
+        let mut order = Vec::new();
+        let mut cur = self.lru_head;
+        while cur != NIL {
+            order.push(cur);
+            cur = self.nodes[cur].lru_next;
+            assert!(order.len() <= self.nodes.len(), "lru cycle");
+        }
+        order
+    }
+
+    /// The `(last_access, version, id)` eviction key of a node (test
+    /// support for the slow-order comparison).
+    pub fn lru_key_for_tests(&self, id: NodeId) -> (Micros, u64, NodeId) {
+        self.lru_key(id)
     }
 }
 
@@ -1154,6 +1320,99 @@ mod tests {
         let ev = t.evict(u64::MAX, EvictPolicy::OffloadToCpu);
         assert_eq!(ev.offloaded_tokens, 100);
         assert!(t.epoch() > e1, "eviction must bump the epoch");
+    }
+
+    #[test]
+    fn broadcast_pin_survives_eviction_in_both_policies() {
+        for policy in [EvictPolicy::Discard, EvictPolicy::OffloadToCpu] {
+            let mut t = RadixTree::new();
+            let shared = toks(0..512);
+            let other = toks(9_000..9_400);
+            let ins = t.insert(&shared, Micros(1));
+            t.insert(&other, Micros(2));
+            t.pin_broadcast(&ins.path);
+            assert_eq!(t.broadcast_tokens(), 512);
+            assert_eq!(t.evictable_gpu_tokens(), 400, "pin must leave the aggregate");
+            let ev = t.evict(u64::MAX, policy);
+            assert_eq!(ev.freed_gpu_tokens, 400, "{policy:?}: only the other leaf moves");
+            let m = t.match_prefix(&shared, Micros(3));
+            assert_eq!(m.gpu_tokens, 512, "{policy:?}: broadcast prefix must stay GPU");
+            assert_eq!(m.broadcast_tokens, 512);
+            t.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn demote_broadcast_restores_evictability() {
+        let mut t = RadixTree::new();
+        let shared = toks(0..256);
+        let ins = t.insert(&shared, Micros(1));
+        t.pin_broadcast(&ins.path);
+        assert_eq!(t.evict(u64::MAX, EvictPolicy::Discard).freed_gpu_tokens, 0);
+        t.demote_broadcast(&ins.path);
+        assert_eq!(t.broadcast_tokens(), 0);
+        assert_eq!(t.evictable_gpu_tokens(), 256);
+        // The demoted deepest node re-armed as a candidate (unlock rule).
+        assert_eq!(t.evict(u64::MAX, EvictPolicy::Discard).freed_gpu_tokens, 256);
+        assert_eq!(t.gpu_tokens(), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn broadcast_coverage_survives_edge_splits() {
+        let mut t = RadixTree::new();
+        let shared = toks(0..512);
+        let ins = t.insert(&shared, Micros(1));
+        t.pin_broadcast(&ins.path);
+        // A partial match splits the broadcast edge; both halves stay
+        // covered and the token total is unchanged.
+        let m = t.match_prefix(&toks(0..100), Micros(2));
+        assert_eq!(m.broadcast_tokens, 100);
+        assert_eq!(t.broadcast_tokens(), 512);
+        assert_eq!(t.evict(u64::MAX, EvictPolicy::Discard).freed_gpu_tokens, 0);
+        t.check_invariants().unwrap();
+        // Demoting via the original path releases both halves.
+        t.demote_broadcast(&ins.path);
+        assert_eq!(t.broadcast_tokens(), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn overlapping_broadcast_pins_nest() {
+        let mut t = RadixTree::new();
+        let a = toks(0..128);
+        let ia = t.insert(&a, Micros(1));
+        t.pin_broadcast(&ia.path);
+        let ib = t.insert(&a, Micros(2)); // same path, second registration
+        t.pin_broadcast(&ib.path);
+        assert_eq!(t.broadcast_tokens(), 128, "per-node, not per-registration");
+        t.demote_broadcast(&ia.path);
+        assert_eq!(t.broadcast_tokens(), 128, "still covered by the second pin");
+        assert_eq!(t.evict(u64::MAX, EvictPolicy::Discard).freed_gpu_tokens, 0);
+        t.demote_broadcast(&ib.path);
+        assert_eq!(t.broadcast_tokens(), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peek_prefix_is_read_only() {
+        let mut t = RadixTree::new();
+        t.insert(&toks(0..100), Micros(1));
+        let epoch = t.epoch();
+        let nodes = t.node_count();
+        // Peek a partial prefix: no split, no epoch bump, exact count.
+        assert_eq!(t.peek_prefix(&toks(0..40)), (40, 0));
+        assert_eq!(t.peek_prefix(&toks(0..100)), (100, 0));
+        assert_eq!(t.peek_prefix(&toks(50..90)), (0, 0));
+        assert_eq!(t.node_count(), nodes, "peek must not split edges");
+        assert_eq!(t.epoch(), epoch, "peek must not bump the epoch");
+        // Residency split: offload, then peek reports the CPU tier.
+        let m = t.match_prefix(&toks(0..100), Micros(2));
+        t.lock_path(&m.path);
+        t.unlock_path(&m.path);
+        t.evict(u64::MAX, EvictPolicy::OffloadToCpu);
+        assert_eq!(t.peek_prefix(&toks(0..100)), (0, 100));
+        t.check_invariants().unwrap();
     }
 
     #[test]

@@ -25,8 +25,9 @@
 //! * [`cluster`]     — data-parallel serving fleet: N engine replicas,
 //!                     cache-affine + cold-first rebalancing routing,
 //!                     aggregated control signals, scripted replica
-//!                     faults (kill / drain-and-refill / revive) and
-//!                     per-replica tool-latency skew.
+//!                     faults (kill / drain-and-refill / revive),
+//!                     per-replica tool-latency skew, and an optional
+//!                     cross-replica shared-prefix broadcast tier.
 //! * [`driver`]      — glue that runs a full agentic batch job end-to-end.
 //! * [`runtime`]     — PJRT bridge: loads `artifacts/*.hlo.txt` (lowered
 //!                     from the L2 JAX model + L1 Pallas kernels) and

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! concur repro <exp|all> [--csv DIR]     regenerate paper tables/figures
+//!                                        (+ cluster / cluster_faults /
+//!                                         prefix_sharing studies)
 //! concur sim --config FILE               run a custom simulated job
 //! concur serve [--batch N] [--prompt S] [--max-new N] [--requests N]
 //!                                        serve the real tiny model (PJRT)
@@ -64,8 +66,8 @@ const USAGE: &str = "\
 concur — congestion-based agent-level admission control (paper reproduction)
 
 USAGE:
-  concur repro <fig1|fig3|table1|table2|fig5|fig6|table3|cluster|cluster_faults|all>
-               [--csv DIR]
+  concur repro <fig1|fig3|table1|table2|fig5|fig6|table3|cluster|cluster_faults
+               |prefix_sharing|all> [--csv DIR]
   concur sim --config FILE
   concur serve [--batch N] [--requests N] [--max-new N] [--prompt TEXT]
                [--artifacts DIR] [--temperature T]

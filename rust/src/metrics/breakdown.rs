@@ -18,15 +18,19 @@ pub enum Phase {
     Decode,
     /// KV reload over the host link (HiCache tier).
     Offload,
+    /// Broadcast-prefix shipping over the interconnect (cluster
+    /// shared-prefix tier; zero with the tier off).
+    Broadcast,
     /// Engine idle while every running agent waits on tools.
     ToolWait,
 }
 
-pub const ALL_PHASES: [Phase; 5] = [
+pub const ALL_PHASES: [Phase; 6] = [
     Phase::Prefill,
     Phase::Recompute,
     Phase::Decode,
     Phase::Offload,
+    Phase::Broadcast,
     Phase::ToolWait,
 ];
 
@@ -37,6 +41,7 @@ impl Phase {
             Phase::Recompute => "recompute",
             Phase::Decode => "decode",
             Phase::Offload => "offload",
+            Phase::Broadcast => "broadcast",
             Phase::ToolWait => "tool_wait",
         }
     }
@@ -49,6 +54,7 @@ pub struct Breakdown {
     recompute: u64,
     decode: u64,
     offload: u64,
+    broadcast: u64,
     tool_wait: u64,
 }
 
@@ -70,6 +76,7 @@ impl Breakdown {
             Phase::Recompute => self.recompute += t.0,
             Phase::Decode => self.decode += t.0,
             Phase::Offload => self.offload += t.0,
+            Phase::Broadcast => self.broadcast += t.0,
             Phase::ToolWait => self.tool_wait += t.0,
         }
     }
@@ -80,12 +87,20 @@ impl Breakdown {
             Phase::Recompute => self.recompute,
             Phase::Decode => self.decode,
             Phase::Offload => self.offload,
+            Phase::Broadcast => self.broadcast,
             Phase::ToolWait => self.tool_wait,
         })
     }
 
     pub fn total(&self) -> Micros {
-        Micros(self.prefill + self.recompute + self.decode + self.offload + self.tool_wait)
+        Micros(
+            self.prefill
+                + self.recompute
+                + self.decode
+                + self.offload
+                + self.broadcast
+                + self.tool_wait,
+        )
     }
 
     /// Fraction of total time in `phase` (0 when empty).

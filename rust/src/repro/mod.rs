@@ -10,8 +10,10 @@
 //! Run via `concur repro <table1|table2|table3|fig1|fig3|fig5|fig6|all>`
 //! or `cargo bench --bench paper_tables` / `paper_figures`.  Beyond the
 //! paper, `concur repro cluster` runs the data-parallel replica-scaling
-//! study (see [`cluster_scaling`]) and `concur repro cluster_faults` the
-//! fault-tolerance study (see [`faults`] — emits `BENCH_faults.json`).
+//! study (see [`cluster_scaling`]), `concur repro cluster_faults` the
+//! fault-tolerance study (see [`faults`] — emits `BENCH_faults.json`),
+//! and `concur repro prefix_sharing` the shared-prefix tier study (see
+//! [`prefix_sharing`] — emits `BENCH_prefix.json`).
 
 pub mod cluster_scaling;
 pub mod faults;
@@ -19,6 +21,7 @@ pub mod fig1;
 pub mod fig3;
 pub mod fig5;
 pub mod fig6;
+pub mod prefix_sharing;
 pub mod table1;
 pub mod table2;
 pub mod table3;
@@ -119,6 +122,7 @@ pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
         match n {
             "cluster" => out.push(cluster_scaling::run()?),
             "cluster_faults" | "faults" => out.push(faults::run()?),
+            "prefix_sharing" | "prefix" => out.push(prefix_sharing::run()?),
             "fig1" => out.extend(fig1::run()?),
             "fig3" => out.push(fig3::run()?),
             "fig5" => out.push(fig5::run()?),
@@ -129,7 +133,7 @@ pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
             other => {
                 return Err(crate::core::ConcurError::config(format!(
                     "unknown experiment '{other}' (known: {ALL:?}, 'cluster', \
-                     'cluster_faults' or 'all')"
+                     'cluster_faults', 'prefix_sharing' or 'all')"
                 )))
             }
         }

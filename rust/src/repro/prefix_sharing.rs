@@ -1,0 +1,247 @@
+//! Shared-prefix tier study (`concur repro prefix_sharing`): does the
+//! broadcast tier recover the cross-agent prefix hits that data-parallel
+//! sharding splits?
+//!
+//! Not a paper artifact — this closes the "lost shared-prefix hits"
+//! ROADMAP item the cluster sweeps exposed: at N>1 every replica
+//! re-prefills the same family system prompt once, structurally
+//! depressing the aggregate hit rate `H_t` the CONCUR controller feeds
+//! on.  The grid holds the offered load fixed (128 Qwen3-class agents,
+//! CONCUR admission, cache-affinity routing) and sweeps
+//! {1, 2, 4, 8} replicas × {tier off, tier on} on **anchored timelines**:
+//! every cell runs the bit-identical workload (same seed, same
+//! trajectories, same tool latencies), so the tier is the only moving
+//! part.  The workload uses 5 task families — coprime with every swept
+//! replica count, so each family's prefix genuinely splits across all
+//! replicas under id-hashed affinity homes (4 families would align with
+//! N ∈ {2, 4} and hide the effect).
+//!
+//! Expected headline: `H_t` at N=8 with the tier on recovers toward the
+//! N=1 level, and tier-on throughput is at least tier-off at every N>1
+//! (the tier only removes prefill/recompute work).  At N=1 the single
+//! replica is its own source, so nothing ships — but the pins still
+//! shield the family prefixes from LRU churn under thrashing, so even
+//! the N=1 pair is not exactly tied.
+//!
+//! The sweep writes `BENCH_prefix.json` (override the path with
+//! `BENCH_PREFIX_PATH`) so the nightly CI job can archive the
+//! prefix-recovery trajectory next to the cluster and fault artifacts.
+
+use std::collections::BTreeMap;
+
+use crate::config::presets;
+use crate::config::{
+    AimdParams, EngineConfig, JobConfig, PrefixTierConfig, RouterKind, SchedulerKind,
+    TopologyConfig,
+};
+use crate::core::json::Value;
+use crate::core::Result;
+use crate::driver::RunResult;
+use crate::metrics::Table;
+
+use super::{run_systems, ExpOutput};
+
+/// Replica counts swept (the N=1 column is the control and the tier
+/// no-op case).
+pub const REPLICAS: [usize; 4] = [1, 2, 4, 8];
+
+/// Offered load held fixed across the grid.
+pub const SWEEP_AGENTS: usize = 128;
+
+/// Task families in the sweep workload: coprime with every swept replica
+/// count so affinity homes split every family across all replicas.
+pub const TASK_FAMILIES: u32 = 5;
+
+/// The tier configuration the "on" cells run (defaults, switched on).
+pub fn tier_config() -> PrefixTierConfig {
+    PrefixTierConfig::on()
+}
+
+/// One grid cell: a (replica count, tier on/off) pair and its run.
+pub struct PrefixCell {
+    pub replicas: usize,
+    pub tier_on: bool,
+    pub result: RunResult,
+}
+
+/// The repro-standard job for one cell.
+pub fn base_job(replicas: usize, tier_on: bool) -> JobConfig {
+    let mut workload = presets::qwen3_workload(SWEEP_AGENTS);
+    workload.task_families = TASK_FAMILIES;
+    JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+        workload,
+        scheduler: SchedulerKind::Concur(AimdParams::default()),
+        topology: TopologyConfig {
+            replicas,
+            router: RouterKind::CacheAffinity,
+            prefix_tier: if tier_on { tier_config() } else { PrefixTierConfig::default() },
+            ..TopologyConfig::default()
+        },
+    }
+}
+
+/// Run the whole grid, row-major (replicas outer, off before on), fanned
+/// out across cores.
+pub fn run_sweep() -> Result<Vec<PrefixCell>> {
+    let labels: Vec<(usize, bool)> =
+        REPLICAS.iter().flat_map(|&n| [(n, false), (n, true)]).collect();
+    let jobs = labels.iter().map(|&(n, on)| base_job(n, on)).collect();
+    Ok(labels
+        .into_iter()
+        .zip(run_systems(jobs)?)
+        .map(|((replicas, tier_on), result)| PrefixCell { replicas, tier_on, result })
+        .collect())
+}
+
+/// Machine-readable sweep dump (`BENCH_prefix.json`): one entry per
+/// cell, keyed `r{replicas}/tier-{on|off}`.
+pub fn bench_json(cells: &[PrefixCell]) -> Value {
+    let mut map: BTreeMap<String, Value> = BTreeMap::new();
+    for c in cells {
+        let mut entry: BTreeMap<String, Value> = BTreeMap::new();
+        entry.insert("latency_s".into(), Value::Number(c.result.total_time.as_secs_f64()));
+        entry.insert("throughput_tps".into(), Value::Number(c.result.throughput_tps));
+        entry.insert("hit_rate".into(), Value::Number(c.result.hit_rate));
+        let t = &c.result.prefix_tier;
+        entry.insert("hot_prefixes".into(), Value::Number(t.hot_prefixes as f64));
+        entry.insert("ships".into(), Value::Number(t.ships as f64));
+        entry.insert("reships".into(), Value::Number(t.reships as f64));
+        entry.insert("shipped_tokens".into(), Value::Number(t.shipped_tokens as f64));
+        entry.insert("demotions".into(), Value::Number(t.demotions as f64));
+        entry.insert(
+            "broadcast_hit_tokens".into(),
+            Value::Number(c.result.counters.broadcast_hit_tokens as f64),
+        );
+        let key = format!("r{}/tier-{}", c.replicas, if c.tier_on { "on" } else { "off" });
+        map.insert(key, Value::Object(entry));
+    }
+    Value::Object(map)
+}
+
+fn cell(cells: &[PrefixCell], replicas: usize, tier_on: bool) -> &RunResult {
+    &cells
+        .iter()
+        .find(|c| c.replicas == replicas && c.tier_on == tier_on)
+        .expect("complete grid")
+        .result
+}
+
+/// Render the grid as a repro table with recovery notes.
+pub fn output_from(cells: &[PrefixCell]) -> ExpOutput {
+    let mut table = Table::new(
+        "Shared-prefix tier: throughput (tok/s) and lifetime hit rate (%) \
+         across replicas x tier",
+    )
+    .header(&[
+        "Replicas",
+        "off tok/s",
+        "off hit%",
+        "on tok/s",
+        "on hit%",
+        "ships",
+        "shipped tok",
+    ]);
+
+    for &n in &REPLICAS {
+        let off = cell(cells, n, false);
+        let on = cell(cells, n, true);
+        table.row(vec![
+            n.to_string(),
+            format!("{:.0}", off.throughput_tps),
+            format!("{:.1}", off.hit_rate * 100.0),
+            format!("{:.0}", on.throughput_tps),
+            format!("{:.1}", on.hit_rate * 100.0),
+            on.prefix_tier.ships.to_string(),
+            on.prefix_tier.shipped_tokens.to_string(),
+        ]);
+    }
+
+    let max_n = REPLICAS[REPLICAS.len() - 1];
+    let base = cell(cells, 1, false);
+    let off8 = cell(cells, max_n, false);
+    let on8 = cell(cells, max_n, true);
+    let gap_off = (base.hit_rate - off8.hit_rate) * 100.0;
+    let gap_on = (base.hit_rate - on8.hit_rate) * 100.0;
+    let notes = vec![
+        format!(
+            "sharding costs {gap_off:+.2} hit points at N={max_n} without the \
+             tier; with it the gap narrows to {gap_on:+.2} points \
+             (H_t {:.2}% off vs {:.2}% on, N=1 anchor {:.2}%)",
+            off8.hit_rate * 100.0,
+            on8.hit_rate * 100.0,
+            base.hit_rate * 100.0
+        ),
+        format!(
+            "tier-on throughput at N={max_n}: {:.0} vs {:.0} tok/s off \
+             ({:+.2}%) — broadcast installs replace per-replica re-prefill \
+             of {} shipped tokens",
+            on8.throughput_tps,
+            off8.throughput_tps,
+            (on8.throughput_tps / off8.throughput_tps - 1.0) * 100.0,
+            on8.prefix_tier.shipped_tokens
+        ),
+        "all cells run the bit-identical workload (anchored timelines): \
+         the tier flag is the only difference between paired rows"
+            .into(),
+    ];
+
+    ExpOutput {
+        name: "prefix_sharing",
+        title: "Cross-replica shared-prefix tier (replicas x tier)".into(),
+        table,
+        figures: vec![],
+        notes,
+    }
+}
+
+/// Run the study and write `BENCH_prefix.json` (path overridable via
+/// `BENCH_PREFIX_PATH`).
+pub fn run() -> Result<ExpOutput> {
+    let cells = run_sweep()?;
+    let path =
+        std::env::var("BENCH_PREFIX_PATH").unwrap_or_else(|_| "BENCH_prefix.json".to_string());
+    std::fs::write(&path, format!("{}\n", bench_json(&cells).to_string_pretty()))?;
+    let mut out = output_from(&cells);
+    out.notes.push(format!("machine-readable results written to {path}"));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_jobs_validate() {
+        for &n in &REPLICAS {
+            for on in [false, true] {
+                let job = base_job(n, on);
+                job.validate().unwrap();
+                assert_eq!(job.topology.prefix_tier.enabled, on);
+                assert_eq!(job.workload.task_families, TASK_FAMILIES);
+            }
+        }
+    }
+
+    #[test]
+    fn families_are_coprime_with_every_swept_replica_count() {
+        fn gcd(a: u32, b: u32) -> u32 {
+            if b == 0 { a } else { gcd(b, a % b) }
+        }
+        for &n in &REPLICAS {
+            assert_eq!(
+                gcd(TASK_FAMILIES, n as u32),
+                1,
+                "family count must split every family across all {n} replicas"
+            );
+        }
+    }
+
+    #[test]
+    fn tier_config_is_the_enabled_default() {
+        let t = tier_config();
+        assert!(t.enabled);
+        t.validate().unwrap();
+    }
+}

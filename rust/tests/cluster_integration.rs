@@ -14,8 +14,8 @@
 
 use concur::config::presets;
 use concur::config::{
-    AimdParams, EngineConfig, EvictionMode, FaultPlan, JobConfig, RouterKind,
-    SchedulerKind, TopologyConfig, WorkloadConfig,
+    AimdParams, EngineConfig, EvictionMode, FaultPlan, JobConfig, PrefixTierConfig,
+    RouterKind, SchedulerKind, TopologyConfig, WorkloadConfig,
 };
 use concur::core::Rng;
 use concur::driver::{run_job, RunResult};
@@ -27,7 +27,7 @@ use concur::metrics::ALL_PHASES;
 /// replica).
 mod reference {
     use concur::agent::Agent;
-    use concur::cluster::FaultStats;
+    use concur::cluster::{FaultStats, PrefixTierStats};
     use concur::coordinator::slots::BoundaryDecision;
     use concur::coordinator::{ControlInputs, Controller, SlotManager};
     use concur::core::{AgentId, Micros, RequestId};
@@ -187,6 +187,8 @@ mod reference {
             faults: FaultStats::default(),
             alive_series,
             per_agent,
+            prefix_tier: PrefixTierStats::default(),
+            broadcast_series: TimeSeries::new("broadcast_shipped_tokens"),
         }
     }
 }
@@ -222,6 +224,7 @@ fn assert_bit_identical(a: &RunResult, b: &RunResult, ctx: &str) {
         assert_eq!(a.breakdown.get(p), b.breakdown.get(p), "{ctx}: breakdown {}", p.name());
     }
     assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
+    assert_eq!(a.prefix_tier, b.prefix_tier, "{ctx}: prefix-tier stats");
     assert_eq!(a.per_agent, b.per_agent, "{ctx}: per-agent records");
     for (name, sa, sb) in [
         ("usage", &a.usage_series, &b.usage_series),
@@ -229,6 +232,7 @@ fn assert_bit_identical(a: &RunResult, b: &RunResult, ctx: &str) {
         ("active", &a.active_series, &b.active_series),
         ("window", &a.window_series, &b.window_series),
         ("alive", &a.alive_series, &b.alive_series),
+        ("broadcast", &a.broadcast_series, &b.broadcast_series),
     ] {
         assert_eq!(sa.len(), sb.len(), "{ctx}: {name} series length");
         for (pa, pb) in sa.points().iter().zip(sb.points()) {
@@ -306,9 +310,22 @@ fn n1_cluster_matches_prerefactor_driver_bitwise() {
             router: RouterKind::CacheAffinity,
             fault_plan: FaultPlan::none(),
             tool_skew: vec![1.0],
+            prefix_tier: PrefixTierConfig::default(),
         };
         let got = run_job(&job).unwrap();
         assert_bit_identical(&got, &want, &format!("job {i} with explicit no-fault topology"));
+        // An explicitly *disabled* prefix tier — whatever its other knobs
+        // say — must also be the oracle: the enable flag gates everything.
+        let mut job = base.clone();
+        job.topology.prefix_tier = PrefixTierConfig {
+            enabled: false,
+            hot_after: 2,
+            budget_tokens: 1_000_000,
+            min_prefix_tokens: 1,
+            ..PrefixTierConfig::default()
+        };
+        let got = run_job(&job).unwrap();
+        assert_bit_identical(&got, &want, &format!("job {i} with disabled prefix tier"));
     }
 }
 
@@ -345,6 +362,66 @@ fn n4_cluster_runs_are_deterministic() {
         assert_bit_identical(&a, &b, &format!("repeat {router:?} N=4"));
         assert_eq!(a.replicas, 4);
     }
+}
+
+/// PROPERTY (differential, tier satellite): with the tier disabled — the
+/// default — `run_sharded` output at N=4 is bit-identical to the
+/// pre-tier cluster, whatever the disabled tier's other knobs say.  Any
+/// tier bookkeeping that leaks into the disabled path (an observe, a
+/// maintenance pass, a routing hint) breaks this immediately.
+#[test]
+fn n4_tier_off_machinery_is_invisible() {
+    for router in [RouterKind::CacheAffinity, RouterKind::Rebalance, RouterKind::LeastLoaded] {
+        let plain = routing_job(4, router);
+        let want = run_job(&plain).unwrap();
+        let mut weird = plain.clone();
+        weird.topology.prefix_tier = PrefixTierConfig {
+            enabled: false,
+            hot_after: 2,
+            budget_tokens: 999_999,
+            min_prefix_tokens: 1,
+            ..PrefixTierConfig::default()
+        };
+        let got = run_job(&weird).unwrap();
+        assert_bit_identical(&got, &want, &format!("{router:?} N=4 disabled tier"));
+        assert_eq!(got.prefix_tier, Default::default(), "disabled tier must report zeros");
+        assert!(got.broadcast_series.is_empty());
+    }
+}
+
+/// ACCEPTANCE (tier): in the thrashing regime — where LRU pressure
+/// repeatedly evicts and re-prefills whole family subtrees — the
+/// broadcast tier's pins keep the shared prefixes resident on every
+/// replica, recovering cross-agent hits the tier-off fleet structurally
+/// loses.  N=4 with 5 task families (coprime: every family splits across
+/// all replicas) at paper-depth trajectories, a scaled-down cell of the
+/// `prefix_sharing` sweep the nightly bench runs at N∈{1,2,4,8}.
+#[test]
+fn tier_on_recovers_shared_prefix_hits_under_thrashing() {
+    let mut off = routing_job(4, RouterKind::CacheAffinity);
+    // Paper-depth contexts: ~16 agents/replica at ~22k final tokens
+    // overflow the TP2 pool (~253k slots), so the run genuinely thrashes.
+    off.workload = presets::qwen3_workload(64);
+    off.workload.task_families = 5;
+    off.scheduler = SchedulerKind::Concur(AimdParams::default());
+    let mut on = off.clone();
+    on.topology.prefix_tier = PrefixTierConfig::on();
+
+    let off = run_job(&off).unwrap();
+    let on = run_job(&on).unwrap();
+    assert_eq!(off.agents_finished, 64);
+    assert_eq!(on.agents_finished, 64);
+    assert!(off.counters.evicted_tokens > 0, "scenario must actually thrash");
+    assert!(on.prefix_tier.hot_prefixes > 0, "family prefixes must go hot");
+    assert!(on.prefix_tier.ships > 0, "hot prefixes must ship");
+    assert!(on.counters.broadcast_hit_tokens > 0, "shipped prefixes must be hit");
+    assert!(
+        on.hit_rate > off.hit_rate,
+        "tier on {:.4} must beat tier off {:.4} on lifetime hit rate at N=4",
+        on.hit_rate,
+        off.hit_rate
+    );
+    assert_eq!(off.prefix_tier, Default::default());
 }
 
 /// The routing claim itself: once agents have warm prefixes to lose,

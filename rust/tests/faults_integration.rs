@@ -9,8 +9,8 @@
 
 use concur::config::presets;
 use concur::config::{
-    AimdParams, EngineConfig, FaultEvent, FaultPlan, JobConfig, RouterKind,
-    SchedulerKind, TopologyConfig, WorkloadConfig,
+    AimdParams, EngineConfig, FaultEvent, FaultPlan, JobConfig, PrefixTierConfig,
+    RouterKind, SchedulerKind, TopologyConfig, WorkloadConfig,
 };
 use concur::core::Micros;
 use concur::driver::{run_job, RunResult};
@@ -181,6 +181,94 @@ fn rebalance_beats_least_loaded_under_mid_run_kill() {
         rb.hit_rate,
         ll.hit_rate
     );
+}
+
+/// `fleet_job` with the shared-prefix broadcast tier switched on (and a
+/// family count coprime with the replica count, so every family's prefix
+/// genuinely splits across replicas and the tier has work to do).
+fn tier_fleet_job(replicas: usize, router: RouterKind, n_agents: usize) -> JobConfig {
+    let mut job = fleet_job(replicas, router, n_agents);
+    job.workload.task_families = 5;
+    job.topology.prefix_tier = PrefixTierConfig::on();
+    job
+}
+
+/// Fault × tier (satellite): killing a replica destroys its broadcast
+/// pins with its radix tree; on revive, the tier must re-ship the hot
+/// prefixes to the rejoining replica — and the fleet still finishes.
+#[test]
+fn kill_then_revive_reships_the_broadcast_tier() {
+    let base = tier_fleet_job(3, RouterKind::CacheAffinity, 24);
+    let healthy = run_job(&base).unwrap();
+    assert!(healthy.prefix_tier.ships > 0, "tier idle in the healthy probe");
+    assert_eq!(healthy.prefix_tier.reships, 0, "healthy fleets never re-ship");
+
+    let mut job = base.clone();
+    job.topology.fault_plan = FaultPlan::new(vec![
+        FaultEvent::kill(0, frac(healthy.total_time, 0.35)),
+        FaultEvent::revive(0, frac(healthy.total_time, 0.55)),
+    ]);
+    let r = run_job(&job).unwrap();
+    assert_eq!(r.agents_finished, 24);
+    assert_eq!(r.faults.kills, 1);
+    assert_eq!(r.faults.revives, 1);
+    assert!(
+        r.prefix_tier.reships > 0,
+        "revived replica must get the broadcast tier re-shipped"
+    );
+    assert_eq!(finished_set(&r), finished_set(&healthy));
+}
+
+/// Fault × tier (satellite): a drained replica wipes its cache at the
+/// refill, so it rejoins with the tier re-shipped; continuity holds (no
+/// requeues, same finished set as the undisturbed tier-on run).
+#[test]
+fn drain_and_refill_rejoins_with_the_tier_restored() {
+    let base = tier_fleet_job(3, RouterKind::Rebalance, 18);
+    let healthy = run_job(&base).unwrap();
+    assert!(healthy.prefix_tier.ships > 0);
+
+    let mut job = base.clone();
+    job.topology.fault_plan =
+        FaultPlan::new(vec![FaultEvent::drain(0, frac(healthy.total_time, 0.4))]);
+    let r = run_job(&job).unwrap();
+    assert_eq!(r.faults.drains, 1);
+    assert_eq!(r.faults.refills, 1, "drained replica never refilled");
+    assert_eq!(r.faults.requeued_agents, 0, "drain must not requeue");
+    assert!(
+        r.prefix_tier.reships > 0,
+        "refilled replica must get the broadcast tier re-shipped"
+    );
+    assert_eq!(finished_set(&r), finished_set(&healthy));
+}
+
+/// Fault × tier (satellite): kill + revive with the tier on is
+/// deterministic end to end — totals, counters, fault *and* tier
+/// telemetry replay bit-identically.
+#[test]
+fn kill_and_revive_with_tier_on_is_deterministic() {
+    let base = tier_fleet_job(3, RouterKind::Rebalance, 24);
+    let healthy = run_job(&base).unwrap();
+    let mut job = base.clone();
+    job.topology.fault_plan = FaultPlan::new(vec![
+        FaultEvent::kill(1, frac(healthy.total_time, 0.35)),
+        FaultEvent::revive(1, frac(healthy.total_time, 0.55)),
+    ]);
+    let a = run_job(&job).unwrap();
+    let b = run_job(&job).unwrap();
+    assert_eq!(a.total_time, b.total_time);
+    assert_eq!(a.counters, b.counters);
+    assert_eq!(a.hit_rate.to_bits(), b.hit_rate.to_bits());
+    assert_eq!(a.engine_steps, b.engine_steps);
+    assert_eq!(a.faults, b.faults);
+    assert_eq!(a.per_agent, b.per_agent);
+    assert_eq!(a.prefix_tier, b.prefix_tier, "tier telemetry must replay");
+    assert_eq!(a.broadcast_series.len(), b.broadcast_series.len());
+    for (pa, pb) in a.broadcast_series.points().iter().zip(b.broadcast_series.points()) {
+        assert_eq!(pa.0, pb.0);
+        assert_eq!(pa.1.to_bits(), pb.1.to_bits());
+    }
+    assert_eq!(a.agents_finished, 24);
 }
 
 /// Per-replica tool skew: agents homed on the slow-tool replica finish

@@ -91,6 +91,198 @@ fn radix_invariants_under_random_ops() {
     }
 }
 
+/// PROPERTY (satellite): the radix tree's invariants hold under long
+/// random interleavings of *every* public mutator — `match_prefix`,
+/// `insert_parts`, `lock_path`/`unlock_path`, `evict` (both policies),
+/// `trim_cpu`, `reload_path` — **including the broadcast pin/demote ops**
+/// of the shared-prefix tier.  `check_invariants()` runs after every op,
+/// and a broadcast-pinned sequence must stay fully matchable (GPU or
+/// CPU, never dropped) until its demotion.  Fixed seed set (12 ≥ 8), so
+/// the CI run is deterministic.
+#[test]
+fn radix_invariants_with_broadcast_ops() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(7000 + seed);
+        let mut tree = RadixTree::new();
+        let mut locked: Vec<Vec<usize>> = Vec::new();
+        let mut broadcast: Vec<(Vec<usize>, Vec<Token>)> = Vec::new();
+        let mut clockv = 0u64;
+        for op in 0..250 {
+            clockv += 1;
+            let now = Micros(clockv);
+            match rng.gen_range(0, 12) {
+                0..=2 => {
+                    let seq = random_seq(&mut rng, 300);
+                    let cut = rng.gen_range(0, seq.len() as u64 + 1) as usize;
+                    let ins = tree.insert_parts(&seq[..cut], &seq[cut..], now);
+                    if rng.chance(0.3) && !ins.path.is_empty() {
+                        tree.lock_path(&ins.path);
+                        locked.push(ins.path);
+                    }
+                }
+                3 => {
+                    // Broadcast-pin a freshly inserted sequence (the tier's
+                    // install flow: insert, then pin the returned path).
+                    if broadcast.len() < 6 {
+                        let seq = random_seq(&mut rng, 300);
+                        let ins = tree.insert(&seq, now);
+                        assert!(!ins.path.is_empty());
+                        tree.pin_broadcast(&ins.path);
+                        broadcast.push((ins.path, seq));
+                    }
+                }
+                4..=5 => {
+                    let seq = random_seq(&mut rng, 300);
+                    let m = tree.match_prefix(&seq, now);
+                    assert!(m.total() <= seq.len() as u64);
+                    assert!(m.broadcast_tokens <= m.total());
+                }
+                6 => {
+                    if let Some(path) = locked.pop() {
+                        tree.unlock_path(&path);
+                    }
+                }
+                7 => {
+                    // Demote in random order, not just LIFO.
+                    if !broadcast.is_empty() {
+                        let i = rng.gen_range(0, broadcast.len() as u64) as usize;
+                        let (path, _) = broadcast.remove(i);
+                        tree.demote_broadcast(&path);
+                    }
+                }
+                8..=9 => {
+                    let want = rng.gen_range(1, 2_000);
+                    let policy = if rng.chance(0.5) {
+                        EvictPolicy::Discard
+                    } else {
+                        EvictPolicy::OffloadToCpu
+                    };
+                    tree.evict(want, policy);
+                }
+                10 => {
+                    tree.trim_cpu(rng.gen_range(0, 2_000));
+                }
+                _ => {
+                    let seq = random_seq(&mut rng, 300);
+                    let m = tree.match_prefix(&seq, now);
+                    if m.cpu_tokens > 0 {
+                        tree.reload_path(&m.path, now);
+                    }
+                }
+            }
+            tree.check_invariants().unwrap_or_else(|e| {
+                panic!("seed {seed} op {op}: invariant violated: {e}")
+            });
+            // Every pinned broadcast sequence must still fully match —
+            // eviction and trimming may never touch covered nodes.
+            for (_, seq) in &broadcast {
+                clockv += 1;
+                let m = tree.match_prefix(seq, Micros(clockv));
+                assert_eq!(
+                    m.total(),
+                    seq.len() as u64,
+                    "seed {seed} op {op}: broadcast-pinned sequence lost cache"
+                );
+            }
+        }
+        // Tear-down: demote and unlock everything, then the tree must be
+        // fully reclaimable again.
+        while let Some((path, _)) = broadcast.pop() {
+            tree.demote_broadcast(&path);
+        }
+        while let Some(path) = locked.pop() {
+            tree.unlock_path(&path);
+        }
+        assert_eq!(tree.broadcast_tokens(), 0, "seed {seed}: coverage must drain");
+        tree.evict(u64::MAX, EvictPolicy::Discard);
+        tree.check_invariants().unwrap_or_else(|e| {
+            panic!("seed {seed}: invariant violated after teardown: {e}")
+        });
+    }
+}
+
+/// Slow-path reference for the intrusive LRU: the list must equal its
+/// own contents sorted by the `(last_access, version, id)` eviction key.
+/// Set-equality plus this sortedness pins the exact eviction order the
+/// lazy-heap predecessor produced — the safety net for the planned
+/// ordered-index swap (ROADMAP "LRU stale re-entry cost").
+fn assert_lru_matches_slow_order(tree: &RadixTree, ctx: &str) {
+    let order = tree.lru_order_for_tests();
+    let mut sorted = order.clone();
+    sorted.sort_unstable_by_key(|&id| tree.lru_key_for_tests(id));
+    assert_eq!(order, sorted, "{ctx}: intrusive LRU order != (stamp, version, id) sort");
+}
+
+/// PROPERTY (satellite, ROADMAP item): under a pause-heavy workload —
+/// many paths locked for long stretches while fresher work churns, then
+/// unlocked in random order so their stale stamps re-enter through
+/// `lru_insert`'s backward walk — the eviction order always equals the
+/// `(stamp, version, id)` order computed by the slow path.  This is the
+/// regression net for swapping the backward walk for an ordered index.
+#[test]
+fn lru_stale_reentry_matches_slow_path_order() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(8000 + seed);
+        let mut tree = RadixTree::new();
+        let mut held: Vec<Vec<usize>> = Vec::new();
+        let mut clockv = 0u64;
+        for op in 0..400 {
+            clockv += 1;
+            match rng.gen_range(0, 10) {
+                0..=3 => {
+                    let seq = random_seq(&mut rng, 200);
+                    let ins = tree.insert(&seq, Micros(clockv));
+                    // Lock aggressively: locked paths are the paused
+                    // agents whose stamps go stale.
+                    if rng.chance(0.6) && !ins.path.is_empty() {
+                        tree.lock_path(&ins.path);
+                        held.push(ins.path);
+                    }
+                }
+                4..=6 => {
+                    // Unlock a *random* held path: its stamp is now far
+                    // behind the tail, forcing the backward walk deep.
+                    if !held.is_empty() {
+                        let i = rng.gen_range(0, held.len() as u64) as usize;
+                        let path = held.remove(i);
+                        tree.unlock_path(&path);
+                    }
+                }
+                7 => {
+                    let seq = random_seq(&mut rng, 200);
+                    tree.match_prefix(&seq, Micros(clockv));
+                }
+                8 => {
+                    tree.evict(rng.gen_range(1, 500), EvictPolicy::Discard);
+                }
+                _ => {
+                    // A long tool call: jump the clock so subsequently
+                    // touched nodes are *much* fresher than held stamps.
+                    clockv += 50_000;
+                }
+            }
+            assert_lru_matches_slow_order(&tree, &format!("seed {seed} op {op}"));
+            tree.check_invariants().unwrap_or_else(|e| {
+                panic!("seed {seed} op {op}: invariant violated: {e}")
+            });
+        }
+        // Release everything and drain: the head must stay the slow-path
+        // minimum through the whole eviction sequence.
+        while let Some(path) = held.pop() {
+            tree.unlock_path(&path);
+            assert_lru_matches_slow_order(&tree, &format!("seed {seed} final unlock"));
+        }
+        loop {
+            assert_lru_matches_slow_order(&tree, &format!("seed {seed} drain"));
+            if tree.lru_order_for_tests().is_empty() {
+                break;
+            }
+            tree.evict(1, EvictPolicy::Discard);
+        }
+        tree.check_invariants().unwrap();
+    }
+}
+
 /// PROPERTY: matched prefix length is exactly the longest common prefix
 /// with some previously inserted sequence.
 #[test]
