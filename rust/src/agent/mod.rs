@@ -154,8 +154,10 @@ impl Agent {
         self.plan.iter().map(|s| s.gen.len() as u64).sum()
     }
 
-    /// Read-only view of the accumulated context (tests/tracing only).
-    pub fn history_for_tests(&self) -> &[Token] {
+    /// Read-only view of the accumulated context.  The cluster's drain
+    /// handoff snapshots the resident head of this to checkpoint an
+    /// agent's warm KV across replicas; tests and tracing read it too.
+    pub fn context(&self) -> &[Token] {
         &self.history
     }
 }

@@ -182,9 +182,9 @@ mod tests {
         // Agents 0 and 2 are family 0; their first `system_prompt_tokens`
         // match; agent 1 (family 1) differs.
         let sys = cfg.system_prompt_tokens as usize;
-        let h0 = agents[0].history_for_tests();
-        let h2 = agents[2].history_for_tests();
-        let h1 = agents[1].history_for_tests();
+        let h0 = agents[0].context();
+        let h2 = agents[2].context();
+        let h1 = agents[1].context();
         assert_eq!(h0[..sys], h2[..sys]);
         assert_ne!(h0[..sys], h1[..sys]);
         // Beyond the system prompt, content is unique.

@@ -10,6 +10,11 @@
 //!   tier: hot shared prompt prefixes are shipped to every admissible
 //!   replica and pinned read-only, recovering the cross-agent hits that
 //!   sharding splits (off by default and inert when off);
+//! * [`transport`] is the optional asynchronous interconnect: all
+//!   cross-replica KV movement becomes link-occupying transfers with
+//!   completion-time visibility (delayed broadcast installs, per-target
+//!   delta shipping, KV handoff on planned drains — off by default and
+//!   inert when off: shipping then teleports exactly as before);
 //! * [`run_sharded`] is the fleet event loop: per-replica iteration
 //!   timelines, one global [`Controller`] regulating admission for the
 //!   whole fleet, and the scripted [`FaultPlan`] lifecycle (kill /
@@ -65,14 +70,16 @@
 
 pub mod prefix;
 pub mod router;
+pub mod transport;
 
 pub use prefix::{PrefixTierStats, SharedPrefixTier};
 pub use router::{
     make_router, CacheAffinityRouter, RebalanceRouter, ReplicaLoad, RouteCtx, Router,
 };
+pub use transport::{Transfer, TransferKind, TransferPayload, Transport, TransportStats};
 
 use crate::agent::{Agent, AgentPhase};
-use crate::config::{FaultKind, FaultPlan, JobConfig, PrefixTierConfig};
+use crate::config::{FaultKind, FaultPlan, JobConfig, PrefixTierConfig, TransportConfig};
 use crate::coordinator::{slots::BoundaryDecision, ControlInputs, Controller};
 use crate::core::{AgentId, ConcurError, Micros, RequestId, Result};
 use crate::costmodel::CostModel;
@@ -99,6 +106,14 @@ pub struct FaultStats {
     /// Step-boundary migrations: an agent's next step was routed to a
     /// different replica than the one its state sat on.
     pub migrations: u64,
+    /// Agents whose warm context a draining replica checkpointed through
+    /// the transport to their re-homed replica (zero with the
+    /// transport's `drain_handoff` off).
+    pub handoff_agents: u64,
+    /// Σ tokens those handoffs moved over the interconnect (heads
+    /// already resident at the destination — e.g. its broadcast-pinned
+    /// copy of a shared prefix — are excluded: they never travel).
+    pub handoff_tokens: u64,
 }
 
 /// Replica lifecycle state inside one `run_sharded` invocation.
@@ -120,6 +135,7 @@ pub struct ClusterCoordinator {
     faults: FaultPlan,
     tool_skew: Vec<f64>,
     prefix_tier: PrefixTierConfig,
+    transport: TransportConfig,
 }
 
 impl ClusterCoordinator {
@@ -136,6 +152,7 @@ impl ClusterCoordinator {
             faults: job.topology.fault_plan.clone(),
             tool_skew: job.topology.tool_skew.clone(),
             prefix_tier: job.topology.prefix_tier,
+            transport: job.topology.transport,
         }
     }
 
@@ -158,6 +175,7 @@ impl ClusterCoordinator {
             &self.faults,
             &self.tool_skew,
             &self.prefix_tier,
+            &self.transport,
         )
     }
 }
@@ -240,9 +258,13 @@ fn fleet_usage(footprint: &[u64], engines: &[SimEngine], state: &[ReplicaState])
 /// into the caller's reused scratch buffer — no per-request allocation)
 /// and the agent's cache heat on its current replica.  The caller moves
 /// the agent's footprint ledger entry if the choice migrates it.
+/// `incoming` is an optional per-replica load bias (empty = none): the
+/// drain handoff folds the tokens it has already shipped this drain into
+/// what the router sees, so a burst of same-instant decisions spreads
+/// instead of herding onto one snapshot's least-loaded replica.
 /// Single-replica fleets skip the router entirely (the N=1 path carries
 /// zero routing overhead).
-// Private twice-used helper: the arg list IS the routing context; a
+// Private thrice-used helper: the arg list IS the routing context; a
 // one-off params struct would only rename it.
 #[allow(clippy::too_many_arguments)]
 fn route_to(
@@ -250,6 +272,7 @@ fn route_to(
     engines: &[SimEngine],
     state: &[ReplicaState],
     footprint: &[u64],
+    incoming: &[u64],
     loads: &mut Vec<ReplicaLoad>,
     current: Option<usize>,
     aid: AgentId,
@@ -261,11 +284,13 @@ fn route_to(
         return 0;
     }
     loads.clear();
-    loads.extend(engines.iter().zip(footprint).zip(state).map(|((e, &fp), &st)| ReplicaLoad {
-        active_footprint: fp,
-        capacity: e.pool().capacity(),
-        admissible: st == ReplicaState::Alive,
-    }));
+    loads.extend(engines.iter().zip(footprint).zip(state).enumerate().map(
+        |(i, ((e, &fp), &st))| ReplicaLoad {
+            active_footprint: fp + incoming.get(i).copied().unwrap_or(0),
+            capacity: e.pool().capacity(),
+            admissible: st == ReplicaState::Alive,
+        },
+    ));
     let heat = current.and_then(|r| engines[r].agent_heat(aid));
     let rctx = RouteCtx { agent: aid, ctx_tokens: ctx, current, now, heat, broadcast_prefix };
     let r = router.route(&rctx, loads);
@@ -296,7 +321,11 @@ fn scale_latency(lat: Micros, skew: f64) -> Micros {
 /// per replica, applied to the tool latency of every step served there;
 /// `prefix_tier` configures the cross-replica shared-prefix broadcast
 /// tier (see [`prefix`] — disabled by default, and **inert** when
-/// disabled: the tier-off path is bit-identical to the pre-tier loop).
+/// disabled: the tier-off path is bit-identical to the pre-tier loop);
+/// `transport_cfg` configures the asynchronous cross-replica KV
+/// [`transport`] (also disabled by default and equally inert: shipping
+/// then keeps the legacy instantaneous semantics and drains drop their
+/// cache).
 ///
 /// # Examples
 ///
@@ -307,7 +336,7 @@ fn scale_latency(lat: Micros, skew: f64) -> Micros {
 /// use concur::agent::WorkloadGenerator;
 /// use concur::cluster::{make_router, run_sharded};
 /// use concur::config::{presets, EngineConfig, FaultPlan, PrefixTierConfig, RouterKind,
-///                      WorkloadConfig};
+///                      TransportConfig, WorkloadConfig};
 /// use concur::coordinator::concur_default;
 /// use concur::costmodel::CostModel;
 /// use concur::engine::SimEngine;
@@ -327,11 +356,13 @@ fn scale_latency(lat: Micros, skew: f64) -> Micros {
 ///     &FaultPlan::none(),
 ///     &[],
 ///     &PrefixTierConfig::default(),
+///     &TransportConfig::default(),
 /// )
 /// .unwrap();
 /// assert_eq!(result.agents_finished, 4);
 /// assert_eq!(result.faults.kills, 0);
 /// ```
+#[allow(clippy::too_many_arguments)]
 pub fn run_sharded(
     engines: &mut [SimEngine],
     router: &mut dyn Router,
@@ -340,6 +371,7 @@ pub fn run_sharded(
     faults: &FaultPlan,
     tool_skew: &[f64],
     prefix_tier: &PrefixTierConfig,
+    transport_cfg: &TransportConfig,
 ) -> Result<RunResult> {
     assert!(!engines.is_empty(), "cluster needs at least one replica");
     let n = engines.len();
@@ -415,6 +447,16 @@ pub fn run_sharded(
     // Scratch for the tier's alive-replica view (reused, never reallocated).
     let mut alive_scratch: Vec<bool> = Vec::with_capacity(n);
 
+    // Asynchronous KV transport: absent unless configured, so the
+    // transport-off path keeps the legacy teleport semantics bit-exactly.
+    transport_cfg.validate()?;
+    let mut transport: Option<Transport> = if transport_cfg.enabled {
+        Some(Transport::new(*transport_cfg, engines[0].cost.cluster.model.kv_bytes_per_token()))
+    } else {
+        None
+    };
+    let mut handoff_time = Micros::ZERO;
+
     loop {
         let now = clock.now();
 
@@ -452,12 +494,111 @@ pub fn run_sharded(
                         // revive re-ships on the next maintenance pass.
                         t.on_replica_wiped(r);
                     }
+                    if let Some(tp) = transport.as_mut() {
+                        // In-flight transfers to the dead replica have
+                        // nowhere to land.
+                        tp.cancel_dst(r);
+                    }
                     state[r] = ReplicaState::Dead;
                     fstats.kills += 1;
                 }
                 FaultKind::Drain => {
                     state[r] = ReplicaState::Draining;
                     fstats.drains += 1;
+                    // KV handoff: before the drain's eventual refill wipes
+                    // this replica, checkpoint its hottest agents' warm
+                    // contexts through the transport to the replica each
+                    // agent is re-homed to, so they resume warm instead of
+                    // re-prefilling from scratch (heat-ranked, budget- and
+                    // agent-capped).  Routing the handoff *now* both picks
+                    // and — for stateful routers — pins the destination,
+                    // so the agent's next step boundary follows its KV.
+                    if transport.as_ref().is_some_and(|tp| tp.cfg.drain_handoff) {
+                        let tp = transport.as_mut().expect("checked above");
+                        let mut cands: Vec<(AgentId, Micros, u64)> = Vec::new();
+                        for (i, slot) in assignment.iter().enumerate() {
+                            if *slot != Some(r) || fleet[i].is_done() {
+                                continue;
+                            }
+                            let (gpu, cpu) = engines[r].tree().peek_prefix(fleet[i].context());
+                            let warm = gpu + cpu;
+                            if warm > 0 {
+                                let heat = engines[r].agent_heat(fleet[i].id);
+                                cands.push((fleet[i].id, heat.unwrap_or(Micros::ZERO), warm));
+                            }
+                        }
+                        // Hottest first (most recently decoded = most KV
+                        // still worth moving); ties break on agent id.
+                        cands.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                        let mut budget = tp.cfg.handoff_budget_tokens;
+                        let mut agents_left = tp.cfg.handoff_max_agents;
+                        // Tokens already shipped per destination this
+                        // drain: folded into the loads the router sees, so
+                        // one drain does not herd its whole cohort onto
+                        // the replica that was least loaded at the first
+                        // decision (the normal step-boundary path gets
+                        // this for free from footprint updates).
+                        let mut incoming: Vec<u64> = vec![0; n];
+                        for (aid, _, warm) in cands {
+                            if agents_left == 0 || budget == 0 {
+                                break;
+                            }
+                            if warm > budget {
+                                continue; // a smaller context may still fit
+                            }
+                            let a = &fleet[aid.0 as usize];
+                            let context = a.context()[..warm as usize].to_vec();
+                            let bp =
+                                tier.as_ref().map_or(0, |t| t.broadcast_prefix_len(&context));
+                            let ctx_len = a.context_len() as u64;
+                            let dst = route_to(
+                                router, engines, &state, &footprint, &incoming, &mut loads,
+                                Some(r), aid, ctx_len, bp, now,
+                            );
+                            // Only what the destination lacks entirely
+                            // crosses the wire: its broadcast-pinned copy
+                            // of the shared prefix (and any other resident
+                            // head) stays put, exactly like delta
+                            // shipping.  Its CPU-tier coverage reloads
+                            // locally — off the fabric, but the write-in
+                            // leg below still pays for the promotion
+                            // (nothing about a handoff is free).
+                            let (dgpu, dcpu) = engines[dst].tree().peek_prefix(&context);
+                            let wire = warm.saturating_sub(dgpu + dcpu);
+                            // Host-link legs at issue: the drainer reads
+                            // out what leaves it; the target writes in
+                            // everything it must materialise (wire + its
+                            // own CPU-tier promotions).  Fabric inside
+                            // `ship_*`.
+                            let src_done = engines[r].charge_link_transfer(wire, now);
+                            let dst_write = warm.saturating_sub(dgpu);
+                            let dst_done = engines[dst].charge_link_transfer(dst_write, now);
+                            let host_done = src_done.max(dst_done);
+                            budget -= warm;
+                            agents_left -= 1;
+                            incoming[dst] += warm;
+                            fstats.handoff_agents += 1;
+                            fstats.handoff_tokens += wire;
+                            if wire > 0 && tp.cfg.delayed_visibility {
+                                tp.ship_handoff(r, dst, wire, host_done, now, aid, context);
+                            } else {
+                                // Instantaneous visibility — or nothing to
+                                // move over the fabric at all (the state
+                                // is already node-local at the target):
+                                // the landing happens now, the link time
+                                // above is still paid.
+                                if wire > 0 {
+                                    let k = TransferKind::Handoff;
+                                    let done =
+                                        tp.ship_instant(k, r, dst, wire, host_done, now);
+                                    handoff_time += done.saturating_sub(now);
+                                } else {
+                                    handoff_time += host_done.saturating_sub(now);
+                                }
+                                engines[dst].install_handoff_context(aid, &context, now);
+                            }
+                        }
+                    }
                 }
                 FaultKind::Revive => {
                     // State was wiped at the kill; just rejoin.
@@ -537,9 +678,37 @@ pub fn run_sharded(
                 if let Some(t) = tier.as_mut() {
                     t.on_replica_wiped(r); // re-shipped below, same instant
                 }
+                if let Some(tp) = transport.as_mut() {
+                    tp.cancel_dst(r); // in-flight payloads died with the wipe
+                }
                 state[r] = ReplicaState::Alive;
                 fstats.refills += 1;
                 alive_series.record(now, admissible_count(&state) as f64);
+            }
+        }
+
+        // 1c. Land transport completions due now: commit delayed
+        //     broadcast installs (the prefix becomes matchable and
+        //     routing-visible from this instant) and deliver drained
+        //     replicas' KV handoffs.  Pop order is (done, id) —
+        //     deterministic for any schedule.
+        if let Some(tp) = transport.as_mut() {
+            for xfer in tp.pop_due(now) {
+                match &xfer.payload {
+                    TransferPayload::Broadcast => {
+                        if let Some(t) = tier.as_mut() {
+                            let committed = t.on_transfer_done(&xfer, engines, now);
+                            if committed > 0 {
+                                broadcast_series.record(now, committed as f64);
+                            }
+                        }
+                        broadcast_time += xfer.done.saturating_sub(xfer.issued);
+                    }
+                    TransferPayload::Handoff { agent, context } => {
+                        engines[xfer.dst].install_handoff_context(*agent, context, now);
+                        handoff_time += xfer.done.saturating_sub(xfer.issued);
+                    }
+                }
             }
         }
 
@@ -554,7 +723,7 @@ pub fn run_sharded(
                 let bp = tier.as_mut().map_or(0, |t| t.observe(aid, &req.prompt, now));
                 let cur = assignment[aid.0 as usize];
                 let tgt = route_to(
-                    router, engines, &state, &footprint, &mut loads, cur, aid, ctx, bp, now,
+                    router, engines, &state, &footprint, &[], &mut loads, cur, aid, ctx, bp, now,
                 );
                 match cur {
                     Some(old) if old == tgt => {}
@@ -588,7 +757,7 @@ pub fn run_sharded(
             let bp = tier.as_mut().map_or(0, |t| t.observe(aid, &req.prompt, now));
             let cur = assignment[aid.0 as usize];
             let tgt = route_to(
-                router, engines, &state, &footprint, &mut loads, cur, aid, ctx, bp, now,
+                router, engines, &state, &footprint, &[], &mut loads, cur, aid, ctx, bp, now,
             );
             if cur.is_some_and(|old| old != tgt) {
                 fstats.migrations += 1;
@@ -605,7 +774,7 @@ pub fn run_sharded(
         if let Some(t) = tier.as_mut() {
             alive_scratch.clear();
             alive_scratch.extend(state.iter().map(|s| *s == ReplicaState::Alive));
-            let (shipped, transfer) = t.maintain(engines, &alive_scratch, now);
+            let (shipped, transfer) = t.maintain(engines, &alive_scratch, now, transport.as_mut());
             if shipped > 0 {
                 broadcast_series.record(now, shipped as f64);
             }
@@ -648,18 +817,17 @@ pub fn run_sharded(
         }
 
         // 5. Advance to the earliest of: an iteration boundary, a
-        //    scripted fault instant, or (when the whole fleet is idle)
-        //    the next tool completion.  Idle gaps count as tool wait.
+        //    scripted fault instant, a transport completion, or (when the
+        //    whole fleet is idle) the next tool completion.  Idle gaps
+        //    count as tool wait.
         if finished_agents == agents_total {
-            break; // done; trailing fault events are moot
+            break; // done; trailing fault events and transfers are moot
         }
         let next_boundary = inflight.iter().flatten().map(|f| f.done_at).min();
         let next_fault_t = faults.events().get(next_fault).map(|e| e.at);
+        let next_xfer = transport.as_ref().and_then(|t| t.next_completion());
         let idle = next_boundary.is_none();
-        let mut target = match (next_boundary, next_fault_t) {
-            (Some(a), Some(b)) => Some(a.min(b)),
-            (a, b) => a.or(b),
-        };
+        let mut target = [next_boundary, next_fault_t, next_xfer].into_iter().flatten().min();
         if idle {
             if let Some(t) = events.peek_time() {
                 target = Some(target.map_or(t, |x| x.min(t)));
@@ -689,6 +857,7 @@ pub fn run_sharded(
     }
     breakdown.add(Phase::ToolWait, toolwait);
     breakdown.add(Phase::Broadcast, broadcast_time);
+    breakdown.add(Phase::Handoff, handoff_time);
     let mut counters = EngineCounters::default();
     let mut hits = LifetimeRatio::default();
     for e in engines.iter() {
@@ -726,6 +895,7 @@ pub fn run_sharded(
         per_agent,
         prefix_tier: tier.as_ref().map(|t| t.stats()).unwrap_or_default(),
         broadcast_series,
+        transport: transport.as_ref().map(|t| t.stats()).unwrap_or_default(),
     })
 }
 
@@ -780,7 +950,8 @@ mod tests {
             assert_eq!(r.replicas, 3);
             assert_eq!(r.router, router.name());
             assert!(r.total_time.0 > 0);
-            assert_eq!(r.faults, FaultStats { migrations: r.faults.migrations, ..Default::default() });
+            let want = FaultStats { migrations: r.faults.migrations, ..Default::default() };
+            assert_eq!(r.faults, want);
             assert_eq!(r.per_agent.len(), 12);
         }
     }

@@ -25,7 +25,12 @@
 //!    the radix path so per-replica LRU eviction can never drop it while
 //!    it stays hot.  Replicas wiped by a kill or a drain-refill are
 //!    re-shipped when they rejoin ([`on_replica_wiped`] clears the
-//!    install, the next maintenance pass restores it).
+//!    install, the next maintenance pass restores it).  With the cluster
+//!    transport on, the install is a real [`Transfer`] over the shared
+//!    fabric: per-target delta sizing (`delta_ship`) and — under
+//!    `delayed_visibility` — a reserve/commit pair, where the pending
+//!    install matches zero tokens and feeds no routing hint until its
+//!    transfer's completion pops ([`on_transfer_done`]).
 //! 4. **Demote.**  A hot prefix not reused for `cool_after` is demoted on
 //!    every replica: the KV stays cached but becomes ordinary evictable
 //!    state.
@@ -38,8 +43,10 @@
 //!
 //! [`observe`]: SharedPrefixTier::observe
 //! [`on_replica_wiped`]: SharedPrefixTier::on_replica_wiped
+//! [`on_transfer_done`]: SharedPrefixTier::on_transfer_done
 //! [`SimEngine::install_broadcast_prefix`]: crate::engine::SimEngine::install_broadcast_prefix
 
+use crate::cluster::transport::{Transfer, TransferKind, Transport};
 use crate::config::PrefixTierConfig;
 use crate::core::{AgentId, Micros, Token};
 use crate::engine::radix::NodeId;
@@ -84,13 +91,25 @@ struct Candidate {
     last_seen: Micros,
 }
 
+/// Per-replica install state of a hot prefix.
+#[derive(Debug)]
+enum InstallState {
+    /// The install's transfer is in flight (transport delayed
+    /// visibility): pool capacity is reserved on the replica, but the
+    /// prefix matches zero tokens and feeds no routing hint until the
+    /// transfer with this id completes.
+    Pending { transfer: u64, reserved: u64 },
+    /// Broadcast-pinned radix path (the tier's demotion handle).
+    Ready(Vec<NodeId>),
+}
+
 /// A promoted (hot) prefix and its per-replica install state.
 struct HotPrefix {
     tokens: Vec<Token>,
     last_reuse: Micros,
-    /// Broadcast-pinned radix path per replica (`None` = not installed —
-    /// never shipped yet, or the replica's state was wiped since).
-    installed: Vec<Option<Vec<NodeId>>>,
+    /// Install state per replica (`None` = not installed — never shipped
+    /// yet, or the replica's state was wiped since).
+    installed: Vec<Option<InstallState>>,
     /// Replicas that ever held this prefix (distinguishes re-ships).
     ever_installed: Vec<bool>,
 }
@@ -99,12 +118,17 @@ fn lcp(a: &[Token], b: &[Token]) -> usize {
     a.iter().zip(b).take_while(|(x, y)| x == y).count()
 }
 
-/// Is `h` installed on every replica that was alive at the last
-/// maintenance pass?  Dead replicas are excused — requiring an install
-/// on a killed, never-revived replica would disable the routing hint
-/// fleet-wide for the rest of the run.
+/// Is `h` installed — transfer landed, pin live — on every replica that
+/// was alive at the last maintenance pass?  Dead replicas are excused —
+/// requiring an install on a killed, never-revived replica would disable
+/// the routing hint fleet-wide for the rest of the run.  Pending
+/// installs do **not** count: the free-mover premise is "the prefix is
+/// resident wherever I land", and an in-flight transfer is not resident.
 fn fully_installed(alive: &[bool], h: &HotPrefix) -> bool {
-    h.installed.iter().zip(alive).all(|(slot, &a)| !a || slot.is_some())
+    h.installed
+        .iter()
+        .zip(alive)
+        .all(|(slot, &a)| !a || matches!(slot, Some(InstallState::Ready(_))))
 }
 
 /// The cluster-owned broadcast tier (see the module docs).
@@ -232,8 +256,11 @@ impl SharedPrefixTier {
     }
 
     /// A replica's serving state was wiped (kill, or drain-refill): its
-    /// installs are gone with the radix tree.  The next [`maintain`] pass
-    /// re-ships everything hot once the replica is admissible again.
+    /// installs — landed pins and in-flight reservations alike — are
+    /// gone with the pool and radix tree (the caller cancels the
+    /// in-flight transfers themselves via `Transport::cancel_dst`).  The
+    /// next [`maintain`] pass re-ships everything hot once the replica
+    /// is admissible again.
     ///
     /// [`maintain`]: SharedPrefixTier::maintain
     pub fn on_replica_wiped(&mut self, replica: usize) {
@@ -247,12 +274,27 @@ impl SharedPrefixTier {
     /// overflows), and install hot prefixes on alive replicas lacking
     /// them — gated on a live source replica holding the full prefix
     /// GPU-resident, because broadcasts move KV rather than invent it.
-    /// Returns `(tokens shipped, summed simulated transfer latency)`.
+    ///
+    /// With no `transport` the install is the legacy teleport (charged on
+    /// the target's host link, usable the same instant).  With one, the
+    /// install becomes a [`Transfer`] over the shared fabric: committed
+    /// at issue when visibility is instantaneous, or reserved now
+    /// (`SimEngine::reserve_broadcast_prefix`) and committed when the
+    /// transfer's completion pops ([`on_transfer_done`]) under delayed
+    /// visibility.  `delta_ship` sizes the wire by the target's missing
+    /// suffix instead of the full prefix.
+    ///
+    /// Returns `(tokens shipped and visible now, summed transfer
+    /// latency accounted now)` — delayed installs report both at their
+    /// completion instead.
+    ///
+    /// [`on_transfer_done`]: SharedPrefixTier::on_transfer_done
     pub fn maintain(
         &mut self,
         engines: &mut [SimEngine],
         alive: &[bool],
         now: Micros,
+        mut transport: Option<&mut Transport>,
     ) -> (u64, Micros) {
         debug_assert_eq!(engines.len(), self.replicas);
         debug_assert_eq!(alive.len(), self.replicas);
@@ -293,37 +335,177 @@ impl SharedPrefixTier {
             if !missing_any {
                 continue;
             }
-            let have_source = (0..self.replicas).any(|r| {
+            // The source replica: a landed install, or organic coverage.
+            let src = (0..self.replicas).find(|&r| {
                 alive[r]
-                    && (self.hot[h_idx].installed[r].is_some()
+                    && (matches!(self.hot[h_idx].installed[r], Some(InstallState::Ready(_)))
                         || engines[r].tree().peek_prefix(&self.hot[h_idx].tokens).0 >= full)
             });
-            if !have_source {
-                continue;
-            }
+            let Some(src) = src else { continue };
             for r in 0..self.replicas {
                 if !alive[r] || self.hot[h_idx].installed[r].is_some() {
                     continue;
                 }
-                let Some(out) = engines[r].install_broadcast_prefix(&self.hot[h_idx].tokens, now)
-                else {
-                    self.stats.skipped_installs += 1;
-                    continue;
-                };
-                let moved = out.installed_tokens + out.reloaded_tokens;
-                shipped += moved;
-                self.stats.shipped_tokens += moved;
-                transfer += out.transfer_done.saturating_sub(now);
-                if self.hot[h_idx].ever_installed[r] {
-                    self.stats.reships += 1;
-                } else {
-                    self.stats.ships += 1;
-                    self.hot[h_idx].ever_installed[r] = true;
+                match transport.as_deref_mut() {
+                    None => {
+                        // Legacy teleport: charged and usable this instant.
+                        let Some(out) =
+                            engines[r].install_broadcast_prefix(&self.hot[h_idx].tokens, now)
+                        else {
+                            self.stats.skipped_installs += 1;
+                            continue;
+                        };
+                        shipped += self.record_install(h_idx, r, &out);
+                        transfer += out.transfer_done.saturating_sub(now);
+                    }
+                    Some(tp) if !tp.cfg.delayed_visibility => {
+                        // Fabric modeled, visibility still instantaneous.
+                        let Some(out) =
+                            engines[r].install_broadcast_prefix(&self.hot[h_idx].tokens, now)
+                        else {
+                            self.stats.skipped_installs += 1;
+                            continue;
+                        };
+                        // The source pins its own copy without a transfer;
+                        // delta targets receive only what was resident
+                        // nowhere on their node — sized from what the
+                        // install actually materialised from remote KV
+                        // (`installed_tokens` excludes local CPU-tier
+                        // reloads, and is exact even when freeing room
+                        // evicted part of the previously-cached coverage
+                        // a pre-install peek would have counted).
+                        let wire = if r == src {
+                            0
+                        } else if tp.cfg.delta_ship {
+                            out.installed_tokens
+                        } else {
+                            full
+                        };
+                        let done = if wire > 0 {
+                            // The source pays the read-out leg of every
+                            // outbound copy on its own host link.
+                            let src_done = engines[src].charge_link_transfer(wire, now);
+                            let host = out.transfer_done.max(src_done);
+                            tp.ship_instant(TransferKind::Broadcast, src, r, wire, host, now)
+                        } else {
+                            out.transfer_done // pure pin: nothing crossed the fabric
+                        };
+                        shipped += self.record_install(h_idx, r, &out);
+                        transfer += done.saturating_sub(now);
+                    }
+                    Some(tp) => {
+                        // Delayed visibility: reserve now, commit at the
+                        // transfer's completion.
+                        let Some(res) =
+                            engines[r].reserve_broadcast_prefix(&self.hot[h_idx].tokens, now)
+                        else {
+                            self.stats.skipped_installs += 1;
+                            continue;
+                        };
+                        // The source pins its own copy without a transfer;
+                        // delta targets receive only what is resident
+                        // nowhere on their node (CPU-tier parts reload
+                        // locally, they never cross the fabric).
+                        let wire = if r == src {
+                            0
+                        } else if tp.cfg.delta_ship {
+                            res.uncached
+                        } else {
+                            full
+                        };
+                        if wire == 0 {
+                            // Nothing crosses the fabric (source self-pin,
+                            // or a delta target whose missing part sits in
+                            // its own CPU tier): the install lands this
+                            // instant, paying only its host-link leg —
+                            // accounted here, exactly as the instant and
+                            // legacy branches account theirs.
+                            let committed = engines[r].commit_broadcast_prefix(
+                                &self.hot[h_idx].tokens,
+                                res.reserved,
+                                now,
+                            );
+                            match committed {
+                                Some(out) => shipped += self.record_install(h_idx, r, &out),
+                                None => self.stats.skipped_installs += 1,
+                            }
+                            transfer += res.host_done.saturating_sub(now);
+                            continue;
+                        }
+                        // The source pays the read-out leg of every
+                        // outbound copy on its own host link.
+                        let src_done = engines[src].charge_link_transfer(wire, now);
+                        let host_done = res.host_done.max(src_done);
+                        let (id, _done) = tp.ship_broadcast(src, r, wire, host_done, now);
+                        self.hot[h_idx].installed[r] = Some(InstallState::Pending {
+                            transfer: id,
+                            reserved: res.reserved,
+                        });
+                    }
                 }
-                self.hot[h_idx].installed[r] = Some(out.path);
             }
         }
         (shipped, transfer)
+    }
+
+    /// Mark an install landed on `r` and fold its stats in; returns the
+    /// tokens it moved (the `broadcast_series` contribution).
+    fn record_install(
+        &mut self,
+        h_idx: usize,
+        r: usize,
+        out: &crate::engine::BroadcastInstall,
+    ) -> u64 {
+        let moved = out.installed_tokens + out.reloaded_tokens;
+        self.stats.shipped_tokens += moved;
+        if self.hot[h_idx].ever_installed[r] {
+            self.stats.reships += 1;
+        } else {
+            self.stats.ships += 1;
+            self.hot[h_idx].ever_installed[r] = true;
+        }
+        self.hot[h_idx].installed[r] = Some(InstallState::Ready(out.path.clone()));
+        moved
+    }
+
+    /// A broadcast transfer completed: commit the reserved install it
+    /// was carrying.  Returns the tokens materialised (the
+    /// `broadcast_series` contribution at this instant) — 0 when the
+    /// completion is stale (the prefix was demoted or the replica wiped
+    /// since; the reservation was already released at that point) or the
+    /// commit no longer fits (reservation released, install retried on a
+    /// later maintenance pass).
+    pub fn on_transfer_done(
+        &mut self,
+        xfer: &Transfer,
+        engines: &mut [SimEngine],
+        now: Micros,
+    ) -> u64 {
+        debug_assert_eq!(xfer.kind(), TransferKind::Broadcast);
+        let dst = xfer.dst;
+        // Indexed loop: the body splits borrows between `self.hot`,
+        // `self.stats` and `engines` (same shape as `maintain`).
+        #[allow(clippy::needless_range_loop)]
+        for h_idx in 0..self.hot.len() {
+            let (transfer, reserved) = match &self.hot[h_idx].installed[dst] {
+                Some(InstallState::Pending { transfer, reserved }) => (*transfer, *reserved),
+                _ => continue,
+            };
+            if transfer != xfer.id {
+                continue;
+            }
+            let committed =
+                engines[dst].commit_broadcast_prefix(&self.hot[h_idx].tokens, reserved, now);
+            match committed {
+                Some(out) => return self.record_install(h_idx, dst, &out),
+                None => {
+                    self.hot[h_idx].installed[dst] = None;
+                    self.stats.skipped_installs += 1;
+                    return 0;
+                }
+            }
+        }
+        0 // stale: demoted or wiped while the transfer was in flight
     }
 
     fn promote(&mut self, mut cand: Candidate, engines: &mut [SimEngine], now: Micros) {
@@ -358,8 +540,16 @@ impl SharedPrefixTier {
     fn demote_at(&mut self, i: usize, engines: &mut [SimEngine]) {
         let h = self.hot.remove(i);
         for (r, slot) in h.installed.into_iter().enumerate() {
-            if let Some(path) = slot {
-                engines[r].demote_broadcast_prefix(&path);
+            match slot {
+                Some(InstallState::Ready(path)) => engines[r].demote_broadcast_prefix(&path),
+                // In-flight install of a now-demoted prefix: release the
+                // reservation; the orphaned transfer still completes (the
+                // wire time was spent) but its commit finds no pending
+                // state and lands as a no-op.
+                Some(InstallState::Pending { reserved, .. }) => {
+                    engines[r].abort_broadcast_reserve(reserved)
+                }
+                None => {}
             }
         }
         self.budget_used -= h.tokens.len() as u64;
@@ -452,13 +642,13 @@ mod tests {
             t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
         }
         // Hot, but no replica holds the prefix yet: nothing ships.
-        let (shipped, _) = t.maintain(&mut eng, &alive, Micros(10));
+        let (shipped, _) = t.maintain(&mut eng, &alive, Micros(10), None);
         assert_eq!(shipped, 0);
         assert_eq!(t.stats().ships, 0);
         assert_eq!(t.stats().hot_prefixes, 1);
         // Replica 0 serves family traffic: its cache becomes the source.
         seed(&mut eng[0], prompt(0, 9));
-        let (shipped, transfer) = t.maintain(&mut eng, &alive, Micros(12));
+        let (shipped, transfer) = t.maintain(&mut eng, &alive, Micros(12), None);
         assert_eq!(shipped, 512, "only replica 1 lacked the 512-token prefix");
         assert!(transfer > Micros::ZERO);
         assert_eq!(t.stats().ships, 2, "pin on the source + install on the peer");
@@ -468,7 +658,7 @@ mod tests {
             e.check_invariants().unwrap();
         }
         // Steady state: nothing further to do.
-        assert_eq!(t.maintain(&mut eng, &alive, Micros(13)).0, 0);
+        assert_eq!(t.maintain(&mut eng, &alive, Micros(13), None).0, 0);
     }
 
     #[test]
@@ -480,17 +670,17 @@ mod tests {
             t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
         }
         seed(&mut eng[0], prompt(0, 9));
-        t.maintain(&mut eng, &alive, Micros(6));
+        t.maintain(&mut eng, &alive, Micros(6), None);
         assert_eq!(t.stats().ships, 2);
         // Replica 1 dies and rejoins empty.
         eng[1].clear_state();
         t.on_replica_wiped(1);
         // While replica 1 is down, the routing hint must survive on the
         // alive remainder: a dead replica's missing install is excused.
-        t.maintain(&mut eng, &[true, false], Micros(7));
+        t.maintain(&mut eng, &[true, false], Micros(7), None);
         assert_eq!(t.broadcast_prefix_len(&prompt(0, 7)), 512, "dead replica excused");
         // Revive: the wiped install is restored (a re-ship, not a ship).
-        let (shipped, _) = t.maintain(&mut eng, &alive, Micros(8));
+        let (shipped, _) = t.maintain(&mut eng, &alive, Micros(8), None);
         assert_eq!(shipped, 512);
         assert_eq!(t.stats().reships, 1, "rejoin must restore the tier");
         assert_eq!(eng[1].tree().broadcast_tokens(), 512);
@@ -508,10 +698,10 @@ mod tests {
             t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
         }
         seed(&mut eng[0], prompt(0, 9));
-        t.maintain(&mut eng, &alive, Micros(6));
+        t.maintain(&mut eng, &alive, Micros(6), None);
         assert_eq!(eng[1].tree().broadcast_tokens(), 512);
         // No reuse for >= cool_after: demoted on both replicas.
-        t.maintain(&mut eng, &alive, Micros(200));
+        t.maintain(&mut eng, &alive, Micros(200), None);
         assert_eq!(t.stats().demotions, 1);
         assert_eq!(eng[0].tree().broadcast_tokens(), 0);
         assert_eq!(eng[1].tree().broadcast_tokens(), 0);
@@ -531,19 +721,153 @@ mod tests {
             t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
         }
         seed(&mut eng[0], prompt(0, 9));
-        t.maintain(&mut eng, &alive, Micros(6));
+        t.maintain(&mut eng, &alive, Micros(6), None);
         assert_eq!(t.stats().hot_prefixes, 1);
         // A second family goes hot: the budget displaces the first.
         for a in 10..13u32 {
             t.observe(AgentId(a as u64), &prompt(1, a), Micros(a as u64 + 10));
         }
         seed(&mut eng[0], prompt(1, 9));
-        t.maintain(&mut eng, &alive, Micros(31));
+        t.maintain(&mut eng, &alive, Micros(31), None);
         assert_eq!(t.stats().hot_prefixes, 2);
         assert_eq!(t.stats().demotions, 1, "budget must displace the stalest");
         assert_eq!(t.hot.len(), 1);
         assert!(prompt(1, 0).starts_with(&t.hot[0].tokens));
         eng[0].check_invariants().unwrap();
+    }
+
+    fn delayed_transport(eng: &[SimEngine]) -> Transport {
+        let mut cfg = crate::config::TransportConfig::on();
+        cfg.delayed_visibility = true;
+        Transport::new(cfg, eng[0].cost.cluster.model.kv_bytes_per_token())
+    }
+
+    #[test]
+    fn delayed_install_is_invisible_until_its_transfer_lands() {
+        let mut t = tier(2);
+        let mut eng = engines(2);
+        let alive = vec![true, true];
+        let mut tp = delayed_transport(&eng);
+        for a in 0..3u32 {
+            t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
+        }
+        seed(&mut eng[0], prompt(0, 9));
+        let (shipped, _) = t.maintain(&mut eng, &alive, Micros(10), Some(&mut tp));
+        // The source pins its own copy instantly (nothing crosses the
+        // fabric); the peer's install is reserved but in flight.
+        assert_eq!(shipped, 0, "nothing is visible-shipped yet");
+        assert_eq!(eng[0].tree().broadcast_tokens(), 512, "source pin is immediate");
+        assert_eq!(eng[1].tree().broadcast_tokens(), 0, "peer install is pending");
+        assert_eq!(eng[1].tree().peek_prefix(&prompt(0, 7)).0, 0, "matches zero tokens");
+        assert_eq!(eng[1].pool().used(), 512, "capacity is reserved at issue");
+        assert_eq!(t.stats().ships, 1, "only the source pin landed");
+        assert_eq!(t.broadcast_prefix_len(&prompt(0, 7)), 0, "no routing hint while pending");
+        // A second maintenance pass must not double-ship the pending slot.
+        t.maintain(&mut eng, &alive, Micros(11), Some(&mut tp));
+        assert_eq!(tp.stats().broadcast_transfers, 1);
+        // The transfer lands: commit makes the prefix matchable + hinted.
+        let done = tp.next_completion().expect("one transfer in flight");
+        let due = tp.pop_due(done);
+        assert_eq!(due.len(), 1);
+        let committed = t.on_transfer_done(&due[0], &mut eng, done);
+        assert_eq!(committed, 512);
+        assert_eq!(eng[1].tree().broadcast_tokens(), 512);
+        assert_eq!(t.stats().ships, 2);
+        assert_eq!(t.broadcast_prefix_len(&prompt(0, 7)), 512);
+        for e in &eng {
+            e.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn wiped_pending_install_is_reshipped_cleanly() {
+        let mut t = tier(2);
+        let mut eng = engines(2);
+        let alive = vec![true, true];
+        let mut tp = delayed_transport(&eng);
+        for a in 0..3u32 {
+            t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
+        }
+        seed(&mut eng[0], prompt(0, 9));
+        // Round 1: the peer install lands normally.
+        t.maintain(&mut eng, &alive, Micros(10), Some(&mut tp));
+        let done = tp.next_completion().expect("install in flight");
+        let due = tp.pop_due(done);
+        assert_eq!(t.on_transfer_done(&due[0], &mut eng, done), 512);
+        assert_eq!(t.stats().ships, 2, "source pin + first peer install");
+        // The peer dies; a re-ship goes out, and the peer dies AGAIN with
+        // that re-ship still in flight — the transfer is voided.
+        eng[1].clear_state();
+        t.on_replica_wiped(1);
+        tp.cancel_dst(1);
+        assert_eq!(tp.stats().cancelled, 0, "nothing was in flight at the first wipe");
+        t.maintain(&mut eng, &alive, Micros(20), Some(&mut tp));
+        eng[1].clear_state();
+        t.on_replica_wiped(1);
+        tp.cancel_dst(1);
+        assert_eq!(tp.stats().cancelled, 1, "in-flight re-ship voided by the wipe");
+        assert_eq!(tp.next_completion(), None);
+        // Final rejoin: the next attempt lands and counts as the re-ship.
+        t.maintain(&mut eng, &alive, Micros(30), Some(&mut tp));
+        let done = tp.next_completion().expect("re-ship in flight");
+        let due = tp.pop_due(done);
+        assert_eq!(t.on_transfer_done(&due[0], &mut eng, done), 512);
+        assert_eq!(t.stats().ships, 2, "landed first installs are not recounted");
+        assert_eq!(t.stats().reships, 1, "rejoin restores the tier");
+        eng[1].check_invariants().unwrap();
+    }
+
+    #[test]
+    fn demoted_pending_install_releases_its_reservation() {
+        let mut cfg = PrefixTierConfig::on();
+        cfg.cool_after = Micros(5);
+        let mut t = SharedPrefixTier::new(cfg, 2);
+        let mut eng = engines(2);
+        let alive = vec![true, true];
+        let mut tp = delayed_transport(&eng);
+        for a in 0..3u32 {
+            t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
+        }
+        seed(&mut eng[0], prompt(0, 9));
+        t.maintain(&mut eng, &alive, Micros(4), Some(&mut tp));
+        assert_eq!(eng[1].pool().used(), 512, "reservation held");
+        // The prefix cools before the transfer lands: demotion aborts the
+        // reservation; the orphaned completion commits nothing.
+        t.maintain(&mut eng, &alive, Micros(1_000), Some(&mut tp));
+        assert_eq!(t.stats().demotions, 1);
+        assert_eq!(eng[1].pool().used(), 0, "reservation released at demotion");
+        let done = tp.next_completion().expect("orphan still in flight");
+        let due = tp.pop_due(done);
+        assert_eq!(t.on_transfer_done(&due[0], &mut eng, done), 0, "stale commit is a no-op");
+        for e in &eng {
+            e.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn delta_shipping_moves_only_the_missing_suffix() {
+        let mut t = tier(2);
+        let mut eng = engines(2);
+        let alive = vec![true, true];
+        let mut cfg = crate::config::TransportConfig::on();
+        cfg.delayed_visibility = true;
+        cfg.delta_ship = true;
+        let mut tp = Transport::new(cfg, eng[0].cost.cluster.model.kv_bytes_per_token());
+        for a in 0..3u32 {
+            t.observe(AgentId(a as u64), &prompt(0, a), Micros(a as u64 + 1));
+        }
+        // Both replicas served family traffic; replica 1 holds a partial
+        // head (first 256 tokens) from a shorter organic request.
+        seed(&mut eng[0], prompt(0, 9));
+        seed(&mut eng[1], prompt(0, 8)[..256].to_vec());
+        t.maintain(&mut eng, &alive, Micros(10), Some(&mut tp));
+        // Delta: only the 256 missing tokens cross the fabric.
+        assert_eq!(tp.stats().wire_tokens, 256);
+        let done = tp.next_completion().expect("delta transfer in flight");
+        let due = tp.pop_due(done);
+        assert_eq!(t.on_transfer_done(&due[0], &mut eng, done), 256);
+        assert_eq!(eng[1].tree().broadcast_tokens(), 512, "whole prefix ends pinned");
+        eng[1].check_invariants().unwrap();
     }
 
     #[test]
@@ -556,12 +880,12 @@ mod tests {
         assert_eq!(t.broadcast_prefix_len(&prompt(0, 7)), 0, "not hot yet");
         // Promoted but unshipped (no source): still no routing hint —
         // the free-mover premise needs the prefix resident everywhere.
-        t.maintain(&mut eng, &[true], Micros(4));
+        t.maintain(&mut eng, &[true], Micros(4), None);
         assert_eq!(t.stats().hot_prefixes, 1);
         assert_eq!(t.broadcast_prefix_len(&prompt(0, 7)), 0, "hot-but-unshipped");
         assert_eq!(t.observe(AgentId(9), &prompt(0, 9), Micros(5)), 0);
         seed(&mut eng[0], prompt(0, 9));
-        t.maintain(&mut eng, &[true], Micros(6));
+        t.maintain(&mut eng, &[true], Micros(6), None);
         assert_eq!(t.broadcast_prefix_len(&prompt(0, 7)), 512);
         assert_eq!(t.observe(AgentId(9), &prompt(0, 9), Micros(7)), 512);
         assert_eq!(t.broadcast_prefix_len(&prompt(2, 7)), 0);

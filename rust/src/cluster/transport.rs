@@ -1,0 +1,356 @@
+//! Asynchronous cross-replica KV transport.
+//!
+//! The paper's whole argument is that KV movement is never free — the
+//! Fig. 1c offload collapse is a *bandwidth* pathology — yet cross-replica
+//! features naturally grow "teleport" semantics: a broadcast prefix
+//! install that charges a link but is usable the same instant, a drain
+//! that drops a replica's warm cache because migrating it would need a
+//! transfer model.  [`Transport`] is that model: every cross-replica KV
+//! movement becomes a [`Transfer`] record with an issue instant and a
+//! completion instant, scheduled over one shared inter-replica fabric
+//! link ([`PcieLink`] semantics: FIFO serialization plus queue-depth
+//! congestion) *in addition to* the endpoint host links the engine
+//! already charges.  `cluster::run_sharded` drains completions on its
+//! event clock, so effects land at deterministic instants:
+//!
+//! * **Broadcast installs** (shared-prefix tier) reserve pool capacity on
+//!   the target at issue and **commit** — materialise, pin, become
+//!   matchable and routing-visible — only at `done` when
+//!   `delayed_visibility` is on (`SimEngine::reserve_broadcast_prefix` /
+//!   `commit_broadcast_prefix`).  With `delta_ship` the fabric carries
+//!   only the per-target un-cached suffix; otherwise the source blasts
+//!   the full prefix to every target.
+//! * **Drain handoffs** snapshot a draining replica's hottest agents'
+//!   warm contexts at the drain instant and install them on the replica
+//!   each agent is re-homed to, so drain-and-refill no longer re-enters
+//!   those agents cold.
+//!
+//! Transfers whose destination is wiped (kill, drain-refill) are
+//! [cancelled](Transport::cancel_dst) — the payload has nowhere to land.
+//! A transfer whose *source* dies mid-flight still completes: the bytes
+//! were read out at issue.  Completions pop in `(done, id)` order, so
+//! runs are deterministic for any schedule.
+
+use crate::config::TransportConfig;
+use crate::core::{AgentId, Bytes, Micros, Token};
+use crate::costmodel::PcieLink;
+
+/// What a completed transfer delivers.
+#[derive(Debug, Clone)]
+pub enum TransferPayload {
+    /// A broadcast-prefix install; the shared-prefix tier resolves the
+    /// pending reservation by transfer id.
+    Broadcast,
+    /// A drained replica's agent context; the destination engine inserts
+    /// it as ordinary (evictable) warm cache.
+    Handoff { agent: AgentId, context: Vec<Token> },
+}
+
+/// Transfer kind (telemetry / dispatch label for [`TransferPayload`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferKind {
+    Broadcast,
+    Handoff,
+}
+
+impl TransferPayload {
+    fn kind(&self) -> TransferKind {
+        match self {
+            TransferPayload::Broadcast => TransferKind::Broadcast,
+            TransferPayload::Handoff { .. } => TransferKind::Handoff,
+        }
+    }
+}
+
+/// One cross-replica KV movement in flight.
+#[derive(Debug, Clone)]
+pub struct Transfer {
+    /// Unique, monotonically increasing (the completion tie-breaker).
+    pub id: u64,
+    /// Source replica (where the KV was read out).
+    pub src: usize,
+    /// Destination replica (where the payload lands at `done`).
+    pub dst: usize,
+    /// Tokens carried over the shared fabric link.
+    pub tokens: u64,
+    /// Issue instant.
+    pub issued: Micros,
+    /// Completion instant: `max` of the endpoint host-link completions
+    /// and the fabric completion.  Effects land here.
+    pub done: Micros,
+    /// What lands at `done`.
+    pub payload: TransferPayload,
+}
+
+impl Transfer {
+    pub fn kind(&self) -> TransferKind {
+        self.payload.kind()
+    }
+}
+
+/// Transport telemetry for one run (all zero with the transport off).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Transfers issued (instantaneous-mode transfers included).
+    pub transfers: u64,
+    /// Broadcast-install transfers issued.
+    pub broadcast_transfers: u64,
+    /// Drain-handoff transfers issued.
+    pub handoff_transfers: u64,
+    /// Σ tokens carried over the fabric.
+    pub wire_tokens: u64,
+    /// Σ bytes carried over the fabric.
+    pub wire_bytes: u64,
+    /// Σ transfer latency (`done − issued`) over all issued transfers.
+    pub wire_time: Micros,
+    /// In-flight transfers voided because their destination was wiped.
+    pub cancelled: u64,
+}
+
+/// The cluster's asynchronous interconnect (see the module docs).
+pub struct Transport {
+    pub cfg: TransportConfig,
+    fabric: PcieLink,
+    kv_bytes_per_token: u64,
+    /// In-flight delayed transfers, in issue order (ids ascend).
+    inflight: Vec<Transfer>,
+    next_id: u64,
+    stats: TransportStats,
+}
+
+impl Transport {
+    pub fn new(cfg: TransportConfig, kv_bytes_per_token: u64) -> Transport {
+        debug_assert!(cfg.enabled, "transport constructed while disabled");
+        Transport {
+            fabric: PcieLink::new(cfg.fabric_gbps),
+            kv_bytes_per_token,
+            inflight: Vec::new(),
+            next_id: 0,
+            stats: TransportStats::default(),
+            cfg,
+        }
+    }
+
+    pub fn stats(&self) -> TransportStats {
+        self.stats
+    }
+
+    /// Bytes the shared fabric has actually carried (conservation check:
+    /// must equal `stats().wire_bytes` at all times).
+    pub fn fabric_bytes_moved(&self) -> u64 {
+        self.fabric.bytes_moved
+    }
+
+    fn kv_bytes(&self, tokens: u64) -> Bytes {
+        Bytes(tokens * self.kv_bytes_per_token)
+    }
+
+    /// Charge the fabric for `tokens` at `now` and fold the endpoint
+    /// host-link completion in; returns the transfer's completion
+    /// instant.  Zero-token transfers skip the fabric entirely.
+    fn schedule(
+        &mut self,
+        kind: TransferKind,
+        tokens: u64,
+        host_done: Micros,
+        now: Micros,
+    ) -> Micros {
+        let fabric_done =
+            if tokens > 0 { self.fabric.transfer(now, self.kv_bytes(tokens)) } else { now };
+        let done = host_done.max(fabric_done);
+        self.stats.transfers += 1;
+        match kind {
+            TransferKind::Broadcast => self.stats.broadcast_transfers += 1,
+            TransferKind::Handoff => self.stats.handoff_transfers += 1,
+        }
+        self.stats.wire_tokens += tokens;
+        self.stats.wire_bytes += self.kv_bytes(tokens).0;
+        self.stats.wire_time += done.saturating_sub(now);
+        done
+    }
+
+    /// Record an *instantaneous* transfer: the fabric and stats are
+    /// charged, but the effects landed at issue (legacy visibility).
+    /// Returns the completion instant for the caller's accounting.
+    pub fn ship_instant(
+        &mut self,
+        kind: TransferKind,
+        _src: usize,
+        _dst: usize,
+        tokens: u64,
+        host_done: Micros,
+        now: Micros,
+    ) -> Micros {
+        self.schedule(kind, tokens, host_done, now)
+    }
+
+    /// Schedule a delayed broadcast-install transfer; the tier resolves
+    /// the reservation by the returned id when the completion pops.
+    pub fn ship_broadcast(
+        &mut self,
+        src: usize,
+        dst: usize,
+        tokens: u64,
+        host_done: Micros,
+        now: Micros,
+    ) -> (u64, Micros) {
+        self.ship_delayed(src, dst, tokens, host_done, now, TransferPayload::Broadcast)
+    }
+
+    /// Schedule a delayed drain-handoff transfer carrying `context`.
+    /// `wire_tokens` is what actually crosses the fabric — the payload
+    /// may be longer (the destination-resident head travels as metadata
+    /// only, so the landing can re-walk the full radix path).
+    #[allow(clippy::too_many_arguments)]
+    pub fn ship_handoff(
+        &mut self,
+        src: usize,
+        dst: usize,
+        wire_tokens: u64,
+        host_done: Micros,
+        now: Micros,
+        agent: AgentId,
+        context: Vec<Token>,
+    ) -> (u64, Micros) {
+        debug_assert!(wire_tokens <= context.len() as u64);
+        self.ship_delayed(src, dst, wire_tokens, host_done, now, TransferPayload::Handoff {
+            agent,
+            context,
+        })
+    }
+
+    fn ship_delayed(
+        &mut self,
+        src: usize,
+        dst: usize,
+        tokens: u64,
+        host_done: Micros,
+        now: Micros,
+        payload: TransferPayload,
+    ) -> (u64, Micros) {
+        debug_assert!(tokens > 0, "zero-token transfers must commit at issue");
+        let done = self.schedule(payload.kind(), tokens, host_done, now);
+        // `PcieLink::transfer` adds a positive sync overhead, so a
+        // non-empty transfer always completes strictly after `now` — the
+        // clock below never has to advance to its own instant.
+        debug_assert!(done > now);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.inflight.push(Transfer { id, src, dst, tokens, issued: now, done, payload });
+        (id, done)
+    }
+
+    /// Earliest in-flight completion (the cluster clock's next transport
+    /// stop), if any.
+    pub fn next_completion(&self) -> Option<Micros> {
+        self.inflight.iter().map(|t| t.done).min()
+    }
+
+    /// Remove and return every transfer due at `now`, in `(done, id)`
+    /// order — the deterministic delivery order.
+    pub fn pop_due(&mut self, now: Micros) -> Vec<Transfer> {
+        let mut due: Vec<Transfer> = Vec::new();
+        let mut i = 0;
+        while i < self.inflight.len() {
+            if self.inflight[i].done <= now {
+                due.push(self.inflight.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        due.sort_by_key(|t| (t.done, t.id));
+        due
+    }
+
+    /// Void every in-flight transfer destined for `replica` (its serving
+    /// state was wiped — the payload has nowhere to land).  The wire time
+    /// was genuinely spent; only the delivery is dropped.
+    pub fn cancel_dst(&mut self, replica: usize) {
+        let before = self.inflight.len();
+        self.inflight.retain(|t| t.dst != replica);
+        self.stats.cancelled += (before - self.inflight.len()) as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KVB: u64 = 100_000; // bytes/token: big enough for visible wire time
+
+    fn transport() -> Transport {
+        let mut cfg = TransportConfig::on();
+        cfg.delayed_visibility = true;
+        Transport::new(cfg, KVB)
+    }
+
+    #[test]
+    fn fabric_serializes_and_completions_are_monotone() {
+        let mut t = transport();
+        let mut last = Micros::ZERO;
+        for i in 0..5u64 {
+            let (_, done) = t.ship_broadcast(0, 1, 4096, Micros::ZERO, Micros(i));
+            assert!(done > last, "fabric completions must be non-decreasing");
+            last = done;
+        }
+        assert_eq!(t.stats().transfers, 5);
+        assert_eq!(t.stats().wire_tokens, 5 * 4096);
+    }
+
+    #[test]
+    fn wire_bytes_are_conserved() {
+        let mut t = transport();
+        t.ship_broadcast(0, 1, 1000, Micros::ZERO, Micros::ZERO);
+        t.ship_handoff(1, 0, 3, Micros::ZERO, Micros(5), AgentId(7), vec![1, 2, 3]);
+        assert_eq!(t.stats().wire_bytes, t.fabric_bytes_moved());
+        assert_eq!(t.stats().wire_bytes, (1000 + 3) * KVB);
+    }
+
+    #[test]
+    fn completion_folds_in_the_host_link() {
+        let mut t = transport();
+        let far = Micros(1_000_000_000);
+        let (_, done) = t.ship_broadcast(0, 1, 16, far, Micros::ZERO);
+        assert_eq!(done, far, "a slow host link dominates the completion");
+    }
+
+    #[test]
+    fn pop_due_delivers_in_done_id_order_and_only_when_due() {
+        let mut t = transport();
+        let (id_a, done_a) = t.ship_broadcast(0, 1, 1 << 20, Micros::ZERO, Micros::ZERO);
+        let (id_b, done_b) = t.ship_broadcast(0, 2, 16, Micros::ZERO, Micros::ZERO);
+        assert!(done_b > Micros::ZERO);
+        assert_eq!(t.next_completion(), Some(done_a.min(done_b)));
+        assert!(t.pop_due(Micros::ZERO).is_empty(), "nothing is due at issue");
+        let all = t.pop_due(done_a.max(done_b));
+        assert_eq!(all.len(), 2);
+        assert!(all.windows(2).all(|w| (w[0].done, w[0].id) < (w[1].done, w[1].id)));
+        assert_eq!(all[0].id.min(all[1].id), id_a.min(id_b));
+        assert_eq!(t.next_completion(), None);
+    }
+
+    #[test]
+    fn cancel_dst_voids_only_that_replica() {
+        let mut t = transport();
+        let (_, d1) = t.ship_broadcast(0, 1, 64, Micros::ZERO, Micros::ZERO);
+        let (_, d2) =
+            t.ship_handoff(0, 2, 64, Micros::ZERO, Micros::ZERO, AgentId(1), vec![9; 64]);
+        t.cancel_dst(1);
+        assert_eq!(t.stats().cancelled, 1);
+        let due = t.pop_due(d1.max(d2));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].dst, 2);
+        assert_eq!(due[0].kind(), TransferKind::Handoff);
+    }
+
+    #[test]
+    fn instant_transfers_never_queue() {
+        let mut t = transport();
+        let done =
+            t.ship_instant(TransferKind::Broadcast, 0, 1, 512, Micros::ZERO, Micros::ZERO);
+        assert!(done > Micros::ZERO);
+        assert_eq!(t.next_completion(), None, "instant transfers are accounting-only");
+        assert_eq!(t.stats().broadcast_transfers, 1);
+        assert!(t.stats().wire_time >= done);
+    }
+}

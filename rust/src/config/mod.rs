@@ -138,6 +138,94 @@ impl PrefixTierConfig {
     }
 }
 
+/// Asynchronous cross-replica KV transport (`cluster::transport`).  All
+/// cross-replica KV movement — broadcast prefix installs and drain
+/// handoffs — is modeled as transfers over a shared inter-replica fabric
+/// link plus the endpoints' host (PCIe) links.  Disabled by default:
+/// shipping then behaves exactly as before this subsystem existed
+/// (instantaneous visibility, no fabric modeled, drains drop their
+/// cache), and the off path is differential-tested bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransportConfig {
+    /// Model the interconnect explicitly.  Off = the legacy teleport:
+    /// installs are usable the instant they are charged and drains drop
+    /// warm state on the floor.
+    pub enabled: bool,
+    /// Broadcast installs (and handoffs) become visible only at their
+    /// transfer's completion instant: the radix pin is reserved at issue,
+    /// matches zero tokens and feeds no routing hint until the transfer
+    /// lands.  Off = transfers are charged but commit at issue.
+    pub delayed_visibility: bool,
+    /// Ship only the per-target un-cached suffix over the fabric (the
+    /// tier peeks each target's radix tree for the longest cached prefix
+    /// of the candidate).  Off = the source blasts the full prefix to
+    /// every target, target-oblivious.
+    pub delta_ship: bool,
+    /// On a planned drain, checkpoint the draining replica's hottest
+    /// agents' contexts through the transport to the replica each agent
+    /// will be re-homed to, instead of dropping the warm cache at refill.
+    pub drain_handoff: bool,
+    /// Shared inter-replica fabric bandwidth in GB/s (one link for the
+    /// whole fleet — simultaneous transfers contend).
+    pub fabric_gbps: f64,
+    /// Max context tokens one drain may hand off (hottest agents first).
+    pub handoff_budget_tokens: u64,
+    /// Max agents one drain may hand off.
+    pub handoff_max_agents: usize,
+}
+
+impl Default for TransportConfig {
+    fn default() -> TransportConfig {
+        TransportConfig {
+            enabled: false,
+            delayed_visibility: false,
+            delta_ship: false,
+            drain_handoff: false,
+            fabric_gbps: 50.0,
+            handoff_budget_tokens: 262_144,
+            handoff_max_agents: 16,
+        }
+    }
+}
+
+impl TransportConfig {
+    /// The default configuration with the transport switched on (fabric
+    /// modeled; visibility still instantaneous, full-ship, drop-on-drain
+    /// until the feature flags say otherwise).
+    pub fn on() -> TransportConfig {
+        TransportConfig { enabled: true, ..TransportConfig::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            if self.delayed_visibility || self.delta_ship || self.drain_handoff {
+                return Err(ConcurError::config(
+                    "transport features (delayed_visibility / delta_ship / \
+                     drain_handoff) require transport.enabled — silently \
+                     ignoring them would misreport the model being run",
+                ));
+            }
+            return Ok(());
+        }
+        if !self.fabric_gbps.is_finite() || self.fabric_gbps <= 0.0 {
+            return Err(ConcurError::config("transport.fabric_gbps must be finite and > 0"));
+        }
+        if self.drain_handoff {
+            if self.handoff_budget_tokens == 0 {
+                return Err(ConcurError::config(
+                    "transport.handoff_budget_tokens must be > 0 with drain_handoff on",
+                ));
+            }
+            if self.handoff_max_agents == 0 {
+                return Err(ConcurError::config(
+                    "transport.handoff_max_agents must be > 0 with drain_handoff on",
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Data-parallel serving topology: how many engine replicas a job runs on
 /// (each with its own KV pool and radix cache), how agents are routed
 /// between them, which replica faults are scripted, and how tool latency
@@ -156,6 +244,9 @@ pub struct TopologyConfig {
     pub tool_skew: Vec<f64>,
     /// Cross-replica shared-prefix broadcast tier (off by default).
     pub prefix_tier: PrefixTierConfig,
+    /// Asynchronous cross-replica KV transport (off by default = legacy
+    /// instantaneous shipping and drop-on-drain).
+    pub transport: TransportConfig,
 }
 
 impl Default for TopologyConfig {
@@ -166,6 +257,7 @@ impl Default for TopologyConfig {
             fault_plan: FaultPlan::none(),
             tool_skew: Vec::new(),
             prefix_tier: PrefixTierConfig::default(),
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -192,6 +284,7 @@ impl TopologyConfig {
             }
         }
         self.prefix_tier.validate()?;
+        self.transport.validate()?;
         Ok(())
     }
 }
@@ -505,6 +598,30 @@ impl JobConfig {
         if let Some(x) = pt.get("cool_after_s").as_f64() {
             topology.prefix_tier.cool_after = Micros::from_secs_f64(x);
         }
+        let tr = t.get("transport");
+        if let Some(b) = tr.get("enabled").as_bool() {
+            topology.transport.enabled = b;
+        }
+        if let Some(b) = tr.get("delayed_visibility").as_bool() {
+            topology.transport.delayed_visibility = b;
+        }
+        if let Some(b) = tr.get("delta_ship").as_bool() {
+            topology.transport.delta_ship = b;
+        }
+        if let Some(b) = tr.get("drain_handoff").as_bool() {
+            topology.transport.drain_handoff = b;
+        }
+        if let Some(x) = tr.get("fabric_gbps").as_f64() {
+            topology.transport.fabric_gbps = x;
+        }
+        if let Some(x) = tr.get("handoff_budget_tokens").as_u64() {
+            topology.transport.handoff_budget_tokens = x;
+        }
+        if let Some(x) = tr.get("handoff_max_agents").as_u64() {
+            topology.transport.handoff_max_agents = usize::try_from(x).map_err(|_| {
+                ConcurError::config("transport.handoff_max_agents out of range (usize)")
+            })?;
+        }
 
         let scheduler = match v.get("scheduler").as_str().unwrap_or("concur") {
             "sglang" | "uncontrolled" => SchedulerKind::Uncontrolled,
@@ -739,6 +856,71 @@ mod tests {
         // A zero cool-down would churn the tier forever; rejected.
         let churn = r#"{"topology": {"prefix_tier": {"enabled": true, "cool_after_s": 0}}}"#;
         assert!(JobConfig::from_json(&Value::parse(churn).unwrap()).is_err());
+    }
+
+    #[test]
+    fn transport_defaults_off_and_validates() {
+        let t = TopologyConfig::default();
+        assert!(!t.transport.enabled, "the transport must be opt-in");
+        t.validate().unwrap();
+        // Disabled transport with non-flag knobs changed is still valid
+        // (the knobs are dormant, not contradictory)...
+        let dormant = TopologyConfig {
+            transport: TransportConfig {
+                fabric_gbps: 1.0,
+                handoff_budget_tokens: 7,
+                handoff_max_agents: 1,
+                ..TransportConfig::default()
+            },
+            ..TopologyConfig::default()
+        };
+        dormant.validate().unwrap();
+        // ...but feature flags without `enabled` are rejected loudly.
+        for bad in [
+            TransportConfig { delayed_visibility: true, ..TransportConfig::default() },
+            TransportConfig { delta_ship: true, ..TransportConfig::default() },
+            TransportConfig { drain_handoff: true, ..TransportConfig::default() },
+        ] {
+            assert!(bad.validate().is_err(), "feature flag must require enabled");
+        }
+        // Enabled configs are checked.
+        TransportConfig::on().validate().unwrap();
+        let mut on = TransportConfig::on();
+        on.fabric_gbps = 0.0;
+        assert!(on.validate().is_err(), "zero fabric bandwidth must be rejected");
+        let mut on = TransportConfig::on();
+        on.drain_handoff = true;
+        on.handoff_budget_tokens = 0;
+        assert!(on.validate().is_err(), "handoff with zero budget must be rejected");
+        let mut on = TransportConfig::on();
+        on.drain_handoff = true;
+        on.handoff_max_agents = 0;
+        assert!(on.validate().is_err(), "handoff with zero agents must be rejected");
+    }
+
+    #[test]
+    fn json_config_parses_transport() {
+        let text = r#"{
+            "model": "qwen3-32b", "tp": 2,
+            "topology": {
+                "replicas": 4,
+                "transport": {"enabled": true, "delayed_visibility": true,
+                               "delta_ship": true, "drain_handoff": true,
+                               "fabric_gbps": 25.0,
+                               "handoff_budget_tokens": 4096,
+                               "handoff_max_agents": 3}
+            }
+        }"#;
+        let job = JobConfig::from_json(&Value::parse(text).unwrap()).unwrap();
+        let tr = job.topology.transport;
+        assert!(tr.enabled && tr.delayed_visibility && tr.delta_ship && tr.drain_handoff);
+        assert_eq!(tr.fabric_gbps, 25.0);
+        assert_eq!(tr.handoff_budget_tokens, 4096);
+        assert_eq!(tr.handoff_max_agents, 3);
+
+        // Validation runs inside from_json: features without `enabled`.
+        let bad = r#"{"topology": {"transport": {"delta_ship": true}}}"#;
+        assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -78,10 +78,19 @@ impl PcieLink {
         done
     }
 
-    /// Latency (not completion time) a transfer issued at `now` would see.
+    /// Latency (not completion time) a transfer issued at `now` would
+    /// see, using the same queue-depth-degraded effective bandwidth
+    /// [`transfer`](PcieLink::transfer) applies — the estimate and the
+    /// realized completion agree exactly for a queued transfer (raw
+    /// `wire_time` here would under-estimate congested links).
     pub fn latency_at(&self, now: Micros, bytes: Bytes) -> Micros {
         let queue = self.busy_until.saturating_sub(now);
-        queue + self.wire_time(bytes) + self.sync_overhead
+        // Same depth `transfer` would observe: completions after `now`
+        // (read-only — `queue_depth` pops, this must not).
+        let depth = self.inflight.iter().filter(|&&t| t > now).count();
+        let eff_bw = self.bandwidth_gbps / (1.0 + self.gamma * depth as f64);
+        let wire = Micros::from_secs_f64(bytes.0 as f64 / (eff_bw * 1e9));
+        queue + wire + self.sync_overhead
     }
 
     pub fn reset(&mut self) {
@@ -160,6 +169,25 @@ mod tests {
             assert!(worst > last);
             last = worst;
         }
+    }
+
+    #[test]
+    fn latency_estimate_matches_realized_completion_when_queued() {
+        // Regression: `latency_at` used raw `wire_time` while `transfer`
+        // applies queue-depth-degraded effective bandwidth, so estimates
+        // under-predicted congested links.  Pin estimate == realized for
+        // a transfer queued behind two in-flight ones.
+        let mut link = PcieLink::new(50.0);
+        let b = Bytes::from_gb(1.0);
+        link.transfer(Micros::ZERO, b);
+        link.transfer(Micros::ZERO, b);
+        // The old formula: queue drain + raw wire time + sync.
+        let naive = link.busy_until + link.wire_time(b) + link.sync_overhead;
+        let estimate = link.latency_at(Micros::ZERO, b);
+        // Issued at t=0, so the completion time IS the latency.
+        let realized = link.transfer(Micros::ZERO, b);
+        assert_eq!(estimate, realized, "estimate must equal realized completion");
+        assert!(estimate > naive, "depth-degraded wire time must exceed the raw one");
     }
 
     #[test]

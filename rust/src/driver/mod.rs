@@ -14,8 +14,8 @@
 //! `tests/cluster_integration.rs`).
 
 use crate::agent::{Agent, WorkloadGenerator};
-use crate::cluster::{make_router, ClusterCoordinator, FaultStats, PrefixTierStats};
-use crate::config::{FaultPlan, JobConfig, PrefixTierConfig, RouterKind};
+use crate::cluster::{make_router, ClusterCoordinator, FaultStats, PrefixTierStats, TransportStats};
+use crate::config::{FaultPlan, JobConfig, PrefixTierConfig, RouterKind, TransportConfig};
 use crate::coordinator::{make_controller, Controller};
 use crate::core::{AgentId, Micros, Result};
 use crate::engine::{EngineCounters, SimEngine};
@@ -70,8 +70,13 @@ pub struct RunResult {
     /// off — the default).
     pub prefix_tier: PrefixTierStats,
     /// Tokens shipped by broadcast installs over time: one point per
-    /// tier maintenance pass that moved data (empty with the tier off).
+    /// tier maintenance pass that moved data (empty with the tier off),
+    /// plus — under delayed transport visibility — one per install
+    /// commit at its transfer's completion instant.
     pub broadcast_series: TimeSeries,
+    /// Asynchronous-transport telemetry (all zero with the transport
+    /// off — the default).
+    pub transport: TransportStats,
 }
 
 impl RunResult {
@@ -205,6 +210,7 @@ pub fn run_with(
         &FaultPlan::none(),
         &[],
         &PrefixTierConfig::default(),
+        &TransportConfig::default(),
     )
 }
 

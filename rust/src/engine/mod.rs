@@ -72,6 +72,22 @@ pub struct BroadcastInstall {
     pub transfer_done: Micros,
 }
 
+/// Pool capacity reserved for an in-flight broadcast install (delayed
+/// transport visibility; see [`SimEngine::reserve_broadcast_prefix`]).
+#[derive(Debug, Clone, Copy)]
+pub struct BroadcastReserve {
+    /// Pool slots reserved — the tokens the transfer will materialise,
+    /// sized against this replica's coverage at issue (CPU-tier parts
+    /// included: their promotion needs GPU slots too).
+    pub reserved: u64,
+    /// Tokens that genuinely have to cross the wire — neither GPU- nor
+    /// CPU-resident here (CPU-tier parts reload over the local host
+    /// link, they never leave the node).  Delta shipping's fabric size.
+    pub uncached: u64,
+    /// When this replica's host-link leg of the transfer completes.
+    pub host_done: Micros,
+}
+
 /// Cumulative engine counters (telemetry / tables).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EngineCounters {
@@ -91,6 +107,9 @@ pub struct EngineCounters {
     pub broadcast_installed_tokens: u64,
     /// Prompt tokens that hit a broadcast-pinned radix path at admission.
     pub broadcast_hit_tokens: u64,
+    /// Tokens materialised on this replica by drain handoffs (cluster
+    /// transport; zero with the transport off).
+    pub handoff_installed_tokens: u64,
 }
 
 impl EngineCounters {
@@ -109,6 +128,7 @@ impl EngineCounters {
         self.stalled_decode_steps += other.stalled_decode_steps;
         self.broadcast_installed_tokens += other.broadcast_installed_tokens;
         self.broadcast_hit_tokens += other.broadcast_hit_tokens;
+        self.handoff_installed_tokens += other.handoff_installed_tokens;
     }
 }
 
@@ -165,6 +185,10 @@ pub struct SimEngine {
     /// finished request).  Exported via [`SimEngine::agent_heat`] for the
     /// cluster's cold-first rebalancing router.
     heat: FxHashMap<AgentId, Micros>,
+    /// Pool slots held by in-flight broadcast installs (reserved at
+    /// transfer issue, consumed or released at commit/abort).  Zero
+    /// unless the cluster transport runs with delayed visibility.
+    broadcast_reserved: u64,
 }
 
 impl SimEngine {
@@ -191,6 +215,7 @@ impl SimEngine {
             congested: false,
             admit_block: None,
             heat: FxHashMap::default(),
+            broadcast_reserved: 0,
             cfg,
             cost,
         }
@@ -288,6 +313,9 @@ impl SimEngine {
         self.congested = false;
         self.admit_block = None;
         self.heat.clear();
+        // In-flight reservations died with the pool; the transport
+        // cancels the transfers themselves (`Transport::cancel_dst`).
+        self.broadcast_reserved = 0;
     }
 
     /// Debug invariant: pool usage equals tree-resident plus per-request
@@ -295,12 +323,13 @@ impl SimEngine {
     pub fn check_invariants(&self) -> std::result::Result<(), String> {
         self.tree.check_invariants()?;
         let private: u64 = self.running.iter().map(|s| s.private_tokens).sum();
-        let expect = self.tree.gpu_tokens() + private;
+        let expect = self.tree.gpu_tokens() + private + self.broadcast_reserved;
         if expect != self.pool.used() {
             return Err(format!(
-                "pool used {} != tree {} + private {private}",
+                "pool used {} != tree {} + private {private} + reserved {}",
                 self.pool.used(),
-                self.tree.gpu_tokens()
+                self.tree.gpu_tokens(),
+                self.broadcast_reserved
             ));
         }
         Ok(())
@@ -346,33 +375,7 @@ impl SimEngine {
         if tokens.is_empty() {
             return None;
         }
-        // Size the allocation by a read-only peek; eviction inside
-        // `ensure_free` may drop part of the matched prefix, so re-derive
-        // until the estimate is stable (GPU coverage only shrinks).
-        let mut needed;
-        loop {
-            let (gpu, _) = self.tree.peek_prefix(tokens);
-            needed = tokens.len() as u64 - gpu;
-            if self.pool.can_alloc(needed) {
-                break;
-            }
-            // Feasibility precheck, mirroring admission's free+evictable
-            // guard: never evict for an install that cannot fit anyway.
-            // A failed install is retried on every tier maintenance pass,
-            // and a destructive retry loop would evict (and force the
-            // re-prefill of) the running agents' reclaimable cache each
-            // pass — strictly worse than having no tier at all.
-            if self.pool.free() + self.tree.evictable_gpu_tokens() < needed {
-                return None;
-            }
-            if !self.ensure_free(needed, now) {
-                return None;
-            }
-            let (gpu_after, _) = self.tree.peek_prefix(tokens);
-            if tokens.len() as u64 - gpu_after == needed {
-                break; // estimate stable and ensure_free succeeded
-            }
-        }
+        let needed = self.free_for_prefix(tokens, now)?;
         if needed > 0 {
             self.pool.alloc(needed).expect("install sized by peek");
         }
@@ -400,6 +403,168 @@ impl SimEngine {
     /// The KV stays cached but becomes ordinary evictable state.
     pub fn demote_broadcast_prefix(&mut self, path: &[radix::NodeId]) {
         self.tree.demote_broadcast(path);
+    }
+
+    /// Reserve pool capacity for a broadcast-prefix install whose
+    /// transfer is still in flight (transport delayed visibility).  The
+    /// slots for the not-yet-resident part of `tokens` are allocated and
+    /// held outside the radix tree, so nothing becomes matchable — the
+    /// prefix "matches zero tokens" until
+    /// [`commit_broadcast_prefix`](SimEngine::commit_broadcast_prefix)
+    /// lands it — while the capacity is committed (it counts as working
+    /// set, exactly like a locked path).  The replica's host-link leg of
+    /// the transfer is charged here; `host_done` is its completion.
+    ///
+    /// Returns `None` — reserving nothing — when the pool cannot free
+    /// enough room (same feasibility guard as the immediate install).
+    pub fn reserve_broadcast_prefix(
+        &mut self,
+        tokens: &[Token],
+        now: Micros,
+    ) -> Option<BroadcastReserve> {
+        if tokens.is_empty() {
+            return None;
+        }
+        let needed = self.free_for_prefix(tokens, now)?;
+        let (_, cpu) = self.tree.peek_prefix(tokens);
+        if needed > 0 {
+            self.pool.alloc(needed).expect("reserve sized by peek");
+        }
+        self.broadcast_reserved += needed;
+        let host_done =
+            if needed > 0 { self.pcie.transfer(now, self.kv_bytes(needed)) } else { now };
+        Some(BroadcastReserve { reserved: needed, uncached: needed.saturating_sub(cpu), host_done })
+    }
+
+    /// Land a reserved broadcast install: materialise `tokens`, promote
+    /// CPU-tier parts, broadcast-pin the path.  Coverage may have moved
+    /// since the reservation — grown (another agent re-prefilled the
+    /// family prefix: the surplus reservation is released) or shrunk
+    /// (eviction took the previously-resident part: the shortfall is
+    /// allocated here, with the same no-destructive-eviction guard).
+    ///
+    /// Returns `None` when the shortfall cannot be freed; the
+    /// reservation is released and the tier retries on a later pass.
+    pub fn commit_broadcast_prefix(
+        &mut self,
+        tokens: &[Token],
+        reserved: u64,
+        now: Micros,
+    ) -> Option<BroadcastInstall> {
+        debug_assert!(self.broadcast_reserved >= reserved, "commit without reservation");
+        let Some(needed) = self.free_for_prefix_with(tokens, now, reserved) else {
+            self.abort_broadcast_reserve(reserved);
+            return None;
+        };
+        if needed > reserved {
+            self.pool.alloc(needed - reserved).expect("commit sized by peek");
+        } else if needed < reserved {
+            self.pool.release(reserved - needed);
+        }
+        self.broadcast_reserved -= reserved;
+        let ins = self.tree.insert(tokens, now);
+        let reloaded =
+            if ins.cpu_tokens > 0 { self.tree.reload_path(&ins.path, now) } else { 0 };
+        debug_assert_eq!(ins.new_gpu_tokens + reloaded, needed);
+        self.tree.pin_broadcast(&ins.path);
+        self.counters.broadcast_installed_tokens += ins.new_gpu_tokens + reloaded;
+        self.counters.reloaded_tokens += reloaded;
+        Some(BroadcastInstall {
+            installed_tokens: ins.new_gpu_tokens,
+            reloaded_tokens: reloaded,
+            path: ins.path,
+            transfer_done: now,
+        })
+    }
+
+    /// Release a reservation whose transfer will never commit (the hot
+    /// prefix was demoted, or the commit could not fit).
+    pub fn abort_broadcast_reserve(&mut self, reserved: u64) {
+        debug_assert!(self.broadcast_reserved >= reserved, "abort without reservation");
+        self.pool.release(reserved);
+        self.broadcast_reserved -= reserved;
+    }
+
+    /// Install a drained replica's handed-off agent context as ordinary
+    /// **evictable** warm cache (no broadcast pin — this is private agent
+    /// state), stamping the agent's cache heat so cold-first routing
+    /// treats it as freshly warm here.  The link charges happened at
+    /// transfer issue; this is the landing.  Returns tokens materialised
+    /// (0 when the pool cannot fit the context — the handoff is dropped,
+    /// exactly what drop-on-drain would have done).
+    pub fn install_handoff_context(
+        &mut self,
+        agent: AgentId,
+        tokens: &[Token],
+        now: Micros,
+    ) -> u64 {
+        if tokens.is_empty() {
+            return 0;
+        }
+        let Some(needed) = self.free_for_prefix(tokens, now) else { return 0 };
+        if needed > 0 {
+            self.pool.alloc(needed).expect("handoff sized by peek");
+        }
+        let ins = self.tree.insert(tokens, now);
+        let reloaded =
+            if ins.cpu_tokens > 0 { self.tree.reload_path(&ins.path, now) } else { 0 };
+        debug_assert_eq!(ins.new_gpu_tokens + reloaded, needed);
+        self.counters.handoff_installed_tokens += ins.new_gpu_tokens + reloaded;
+        self.counters.reloaded_tokens += reloaded;
+        self.heat.insert(agent, now);
+        needed
+    }
+
+    /// Charge this replica's host link with a `tokens`-sized KV movement
+    /// (the read-out/write-in leg of a cross-replica transfer); returns
+    /// its completion instant.
+    pub fn charge_link_transfer(&mut self, tokens: u64, now: Micros) -> Micros {
+        if tokens == 0 {
+            return now;
+        }
+        self.pcie.transfer(now, self.kv_bytes(tokens))
+    }
+
+    /// Make the not-yet-GPU-resident part of `tokens` allocatable,
+    /// evicting as needed but never destructively (the admission-style
+    /// free+evictable feasibility guard).  Returns the stable token count
+    /// to allocate, or `None` when it cannot fit.  Factored out of
+    /// [`install_broadcast_prefix`](SimEngine::install_broadcast_prefix)
+    /// so reserve/commit/handoff size their allocations identically.
+    fn free_for_prefix(&mut self, tokens: &[Token], now: Micros) -> Option<u64> {
+        self.free_for_prefix_with(tokens, now, 0)
+    }
+
+    /// [`free_for_prefix`](SimEngine::free_for_prefix) with `held` slots
+    /// already allocated to this operation (a commit's reservation).
+    fn free_for_prefix_with(&mut self, tokens: &[Token], now: Micros, held: u64) -> Option<u64> {
+        // Size the allocation by a read-only peek; eviction inside
+        // `ensure_free` may drop part of the matched prefix, so re-derive
+        // until the estimate is stable (GPU coverage only shrinks).
+        loop {
+            let (gpu, _) = self.tree.peek_prefix(tokens);
+            let needed = tokens.len() as u64 - gpu;
+            let shortfall = needed.saturating_sub(held);
+            if self.pool.can_alloc(shortfall) {
+                return Some(needed);
+            }
+            // Feasibility precheck, mirroring admission's free+evictable
+            // guard: never evict for an install that cannot fit anyway.
+            // A failed install is retried on every tier maintenance pass,
+            // and a destructive retry loop would evict (and force the
+            // re-prefill of) the running agents' reclaimable cache each
+            // pass — strictly worse than having no tier at all.
+            if self.pool.free() + self.tree.evictable_gpu_tokens() < shortfall {
+                return None;
+            }
+            if !self.ensure_free(shortfall, now) {
+                return None;
+            }
+            let (gpu_after, _) = self.tree.peek_prefix(tokens);
+            if tokens.len() as u64 - gpu_after == needed {
+                return Some(needed); // estimate stable and ensure_free succeeded
+            }
+        }
     }
 
     // -- memory helpers ------------------------------------------------------
@@ -1035,6 +1200,97 @@ mod tests {
         drive(&mut e, 300);
         assert!(e.tree().peek_prefix(&shared).0 < 512, "demoted prefix still pinned");
         e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reserved_prefix_matches_zero_tokens_until_commit() {
+        let mut e = tiny_engine(100_000);
+        let shared: Vec<Token> = (0..512).collect();
+        let res = e.reserve_broadcast_prefix(&shared, Micros::ZERO).expect("room");
+        assert_eq!(res.reserved, 512);
+        assert_eq!(e.pool().used(), 512, "capacity is committed at reserve");
+        assert_eq!(e.tree().gpu_tokens(), 0, "nothing matchable yet");
+        assert_eq!(e.tree().peek_prefix(&shared).0, 0);
+        e.check_invariants().unwrap();
+
+        // A request overlapping the in-flight prefix gets zero hits and
+        // prefills from scratch — the KV has not arrived.
+        let mut p = shared.clone();
+        p.extend(10_000..10_400u32);
+        e.submit(mk_req(1, 1, p, 20, 0));
+        drive(&mut e, 200);
+        assert_eq!(e.counters.broadcast_hit_tokens, 0);
+        assert_eq!(e.lifetime_hits.num, 0);
+
+        // Commit: the prefix lands, pinned; the duplicate coverage the
+        // request inserted meanwhile shrinks the materialisation.
+        let out = e.commit_broadcast_prefix(&shared, res.reserved, Micros(10)).expect("lands");
+        assert_eq!(out.installed_tokens, 0, "request already re-prefilled the prefix");
+        assert_eq!(e.tree().broadcast_tokens(), 512);
+        e.check_invariants().unwrap();
+
+        // Post-commit requests hit the pinned path normally.
+        let mut p2 = shared.clone();
+        p2.extend(20_000..20_400u32);
+        e.submit(mk_req(2, 2, p2, 20, 0));
+        drive(&mut e, 200);
+        assert_eq!(e.counters.broadcast_hit_tokens, 512);
+    }
+
+    #[test]
+    fn commit_on_untouched_tree_materialises_the_reservation() {
+        let mut e = tiny_engine(100_000);
+        let shared: Vec<Token> = (0..512).collect();
+        let res = e.reserve_broadcast_prefix(&shared, Micros::ZERO).expect("room");
+        let out = e.commit_broadcast_prefix(&shared, res.reserved, Micros(5)).expect("lands");
+        assert_eq!(out.installed_tokens, 512);
+        assert_eq!(e.pool().used(), 512);
+        assert_eq!(e.counters.broadcast_installed_tokens, 512);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn aborted_reservation_releases_the_pool() {
+        let mut e = tiny_engine(100_000);
+        let shared: Vec<Token> = (0..512).collect();
+        let res = e.reserve_broadcast_prefix(&shared, Micros::ZERO).expect("room");
+        e.abort_broadcast_reserve(res.reserved);
+        assert_eq!(e.pool().used(), 0);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn infeasible_reserve_is_refused_without_eviction() {
+        let mut e = tiny_engine(1_000);
+        // A prefix larger than the whole pool can never fit.
+        let huge: Vec<Token> = (0..2_000).collect();
+        assert!(e.reserve_broadcast_prefix(&huge, Micros::ZERO).is_none());
+        assert_eq!(e.pool().used(), 0);
+        assert_eq!(e.counters.evictions, 0, "refusal must not evict");
+    }
+
+    #[test]
+    fn handoff_context_installs_as_evictable_warm_cache() {
+        let mut e = tiny_engine(100_000);
+        let ctx: Vec<Token> = (0..1_000).collect();
+        let moved = e.install_handoff_context(AgentId(7), &ctx, Micros(3));
+        assert_eq!(moved, 1_000);
+        assert_eq!(e.counters.handoff_installed_tokens, 1_000);
+        assert_eq!(e.tree().broadcast_tokens(), 0, "handoff state is not pinned");
+        assert_eq!(e.agent_heat(AgentId(7)), Some(Micros(3)), "agent is warm here now");
+        e.check_invariants().unwrap();
+
+        // The agent's next step hits the shipped context.
+        let mut next = ctx.clone();
+        next.extend(5_000_000..5_000_100u32);
+        e.submit(mk_req(1, 7, next, 20, 1_000));
+        drive(&mut e, 200);
+        assert_eq!(e.lifetime_hits.num, 1_000);
+
+        // An infeasible handoff is dropped, not forced.
+        let mut tight = tiny_engine(500);
+        assert_eq!(tight.install_handoff_context(AgentId(1), &ctx, Micros(1)), 0);
+        assert_eq!(tight.pool().used(), 0);
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! ```text
 //! concur repro <exp|all> [--csv DIR]     regenerate paper tables/figures
 //!                                        (+ cluster / cluster_faults /
-//!                                         prefix_sharing studies)
+//!                                         prefix_sharing / transport
+//!                                         studies)
 //! concur sim --config FILE               run a custom simulated job
 //! concur serve [--batch N] [--prompt S] [--max-new N] [--requests N]
 //!                                        serve the real tiny model (PJRT)
@@ -52,28 +53,35 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("trace") => cmd_trace(&args[1..]),
         Some("info") => cmd_info(),
         Some("--help" | "-h" | "help") | None => {
-            print!("{}", USAGE);
+            print!("{}", usage());
             Ok(())
         }
         Some(other) => {
-            eprint!("unknown command '{other}'\n\n{}", USAGE);
+            eprint!("unknown command '{other}'\n\n{}", usage());
             Err(concur::core::ConcurError::config("unknown command"))
         }
     }
 }
 
-const USAGE: &str = "\
+/// Usage text; the `repro` experiment list is generated from the same
+/// table (`repro::EXPERIMENTS`) that drives dispatch and its
+/// unknown-name error, so the three can never drift apart.
+fn usage() -> String {
+    format!(
+        "\
 concur — congestion-based agent-level admission control (paper reproduction)
 
 USAGE:
-  concur repro <fig1|fig3|table1|table2|fig5|fig6|table3|cluster|cluster_faults
-               |prefix_sharing|all> [--csv DIR]
+  concur repro <{}> [--csv DIR]
   concur sim --config FILE
   concur serve [--batch N] [--requests N] [--max-new N] [--prompt TEXT]
                [--artifacts DIR] [--temperature T]
   concur trace --out FILE [--agents N] [--seed S]
   concur info
-";
+",
+        repro::cli_name_list()
+    )
+}
 
 fn cmd_repro(args: &[String]) -> Result<()> {
     let name = args

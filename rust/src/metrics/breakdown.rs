@@ -21,16 +21,20 @@ pub enum Phase {
     /// Broadcast-prefix shipping over the interconnect (cluster
     /// shared-prefix tier; zero with the tier off).
     Broadcast,
+    /// Drain-handoff KV migration over the interconnect (cluster
+    /// transport; zero with the transport off).
+    Handoff,
     /// Engine idle while every running agent waits on tools.
     ToolWait,
 }
 
-pub const ALL_PHASES: [Phase; 6] = [
+pub const ALL_PHASES: [Phase; 7] = [
     Phase::Prefill,
     Phase::Recompute,
     Phase::Decode,
     Phase::Offload,
     Phase::Broadcast,
+    Phase::Handoff,
     Phase::ToolWait,
 ];
 
@@ -42,6 +46,7 @@ impl Phase {
             Phase::Decode => "decode",
             Phase::Offload => "offload",
             Phase::Broadcast => "broadcast",
+            Phase::Handoff => "handoff",
             Phase::ToolWait => "tool_wait",
         }
     }
@@ -55,6 +60,7 @@ pub struct Breakdown {
     decode: u64,
     offload: u64,
     broadcast: u64,
+    handoff: u64,
     tool_wait: u64,
 }
 
@@ -77,6 +83,7 @@ impl Breakdown {
             Phase::Decode => self.decode += t.0,
             Phase::Offload => self.offload += t.0,
             Phase::Broadcast => self.broadcast += t.0,
+            Phase::Handoff => self.handoff += t.0,
             Phase::ToolWait => self.tool_wait += t.0,
         }
     }
@@ -88,6 +95,7 @@ impl Breakdown {
             Phase::Decode => self.decode,
             Phase::Offload => self.offload,
             Phase::Broadcast => self.broadcast,
+            Phase::Handoff => self.handoff,
             Phase::ToolWait => self.tool_wait,
         })
     }
@@ -99,6 +107,7 @@ impl Breakdown {
                 + self.decode
                 + self.offload
                 + self.broadcast
+                + self.handoff
                 + self.tool_wait,
         )
     }

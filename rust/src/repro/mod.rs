@@ -12,8 +12,11 @@
 //! paper, `concur repro cluster` runs the data-parallel replica-scaling
 //! study (see [`cluster_scaling`]), `concur repro cluster_faults` the
 //! fault-tolerance study (see [`faults`] — emits `BENCH_faults.json`),
-//! and `concur repro prefix_sharing` the shared-prefix tier study (see
-//! [`prefix_sharing`] — emits `BENCH_prefix.json`).
+//! `concur repro prefix_sharing` the shared-prefix tier study (see
+//! [`prefix_sharing`] — emits `BENCH_prefix.json`), and `concur repro
+//! transport` the asynchronous-transport study (see [`transport`] —
+//! emits `BENCH_transport.json`).  The full experiment index lives in
+//! one table ([`EXPERIMENTS`]) shared with the CLI usage string.
 
 pub mod cluster_scaling;
 pub mod faults;
@@ -25,6 +28,7 @@ pub mod prefix_sharing;
 pub mod table1;
 pub mod table2;
 pub mod table3;
+pub mod transport;
 
 use crate::config::{EngineConfig, EvictionMode, JobConfig, SchedulerKind, WorkloadConfig};
 use crate::core::Result;
@@ -108,21 +112,78 @@ pub fn run_systems(jobs: Vec<JobConfig>) -> Result<Vec<RunResult>> {
     crate::driver::run_jobs_parallel(&jobs).into_iter().collect()
 }
 
-/// All paper experiments in paper order ("all" runs these; the `cluster`
-/// scaling and `cluster_faults` studies are dispatched by name — they
-/// are ours, not the paper's).
-pub const ALL: [&str; 7] =
-    ["fig1", "fig3", "table1", "table2", "fig5", "fig6", "table3"];
+/// One dispatchable experiment: the canonical CLI name, accepted
+/// aliases, and whether it is a paper artifact (`"all"` runs those in
+/// table order).  This table is the **single source of truth** shared by
+/// the `concur` usage string, [`run`]'s dispatch and its unknown-name
+/// error — they can no longer drift apart.
+pub struct Experiment {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub paper: bool,
+}
 
-/// Dispatch by name ("all" runs everything).
+/// Every experiment, paper artifacts first (in paper order), then our
+/// studies.
+pub const EXPERIMENTS: [Experiment; 11] = [
+    Experiment { name: "fig1", aliases: &[], paper: true },
+    Experiment { name: "fig3", aliases: &[], paper: true },
+    Experiment { name: "table1", aliases: &[], paper: true },
+    Experiment { name: "table2", aliases: &[], paper: true },
+    Experiment { name: "fig5", aliases: &[], paper: true },
+    Experiment { name: "fig6", aliases: &[], paper: true },
+    Experiment { name: "table3", aliases: &[], paper: true },
+    Experiment { name: "cluster", aliases: &[], paper: false },
+    Experiment { name: "cluster_faults", aliases: &["faults"], paper: false },
+    Experiment { name: "prefix_sharing", aliases: &["prefix"], paper: false },
+    Experiment { name: "transport", aliases: &[], paper: false },
+];
+
+/// Canonical names, in table order — what the usage string and the
+/// unknown-name error list (plus the `all` meta-name).
+pub fn experiment_names() -> impl Iterator<Item = &'static str> {
+    EXPERIMENTS.iter().map(|e| e.name)
+}
+
+/// The `<exp>` alternatives for the CLI usage line: every canonical
+/// name plus `all`.
+pub fn cli_name_list() -> String {
+    let mut names: Vec<&str> = experiment_names().collect();
+    names.push("all");
+    names.join("|")
+}
+
+/// Resolve a user-supplied name (canonical or alias) to its canonical
+/// form.
+fn canonical(name: &str) -> Option<&'static str> {
+    EXPERIMENTS
+        .iter()
+        .find(|e| e.name == name || e.aliases.contains(&name))
+        .map(|e| e.name)
+}
+
+/// Dispatch by name ("all" runs every paper artifact).
 pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
-    let names: Vec<&str> = if name == "all" { ALL.to_vec() } else { vec![name] };
+    let names: Vec<&str> = if name == "all" {
+        EXPERIMENTS.iter().filter(|e| e.paper).map(|e| e.name).collect()
+    } else {
+        match canonical(name) {
+            Some(n) => vec![n],
+            None => {
+                return Err(crate::core::ConcurError::config(format!(
+                    "unknown experiment '{name}' (known: {})",
+                    cli_name_list()
+                )))
+            }
+        }
+    };
     let mut out = Vec::new();
     for n in names {
         match n {
             "cluster" => out.push(cluster_scaling::run()?),
-            "cluster_faults" | "faults" => out.push(faults::run()?),
-            "prefix_sharing" | "prefix" => out.push(prefix_sharing::run()?),
+            "cluster_faults" => out.push(faults::run()?),
+            "prefix_sharing" => out.push(prefix_sharing::run()?),
+            "transport" => out.push(transport::run()?),
             "fig1" => out.extend(fig1::run()?),
             "fig3" => out.push(fig3::run()?),
             "fig5" => out.push(fig5::run()?),
@@ -130,12 +191,7 @@ pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
             "table1" => out.push(table1::run()?),
             "table2" => out.push(table2::run()?),
             "table3" => out.push(table3::run()?),
-            other => {
-                return Err(crate::core::ConcurError::config(format!(
-                    "unknown experiment '{other}' (known: {ALL:?}, 'cluster', \
-                     'cluster_faults', 'prefix_sharing' or 'all')"
-                )))
-            }
+            other => unreachable!("experiment '{other}' is in the table but not dispatched"),
         }
     }
     Ok(out)
@@ -150,6 +206,30 @@ pub(crate) fn cell_latency(seconds: f64, baseline: f64) -> String {
 mod tests {
     #[test]
     fn unknown_experiment_is_an_error() {
-        assert!(super::run("fig99").is_err());
+        let err = super::run("fig99").unwrap_err().to_string();
+        // The error lists every valid name from the shared table, so it
+        // cannot drift from the usage string or the dispatch.
+        for name in super::experiment_names() {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+        assert!(err.contains("all"));
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_names() {
+        assert_eq!(super::canonical("faults"), Some("cluster_faults"));
+        assert_eq!(super::canonical("prefix"), Some("prefix_sharing"));
+        assert_eq!(super::canonical("transport"), Some("transport"));
+        assert_eq!(super::canonical("meteor"), None);
+    }
+
+    #[test]
+    fn cli_name_list_covers_the_table() {
+        let list = super::cli_name_list();
+        for e in &super::EXPERIMENTS {
+            assert!(list.contains(e.name));
+        }
+        assert!(list.ends_with("|all"));
+        assert_eq!(super::EXPERIMENTS.iter().filter(|e| e.paper).count(), 7);
     }
 }

@@ -15,7 +15,7 @@
 use concur::config::presets;
 use concur::config::{
     AimdParams, EngineConfig, EvictionMode, FaultPlan, JobConfig, PrefixTierConfig,
-    RouterKind, SchedulerKind, TopologyConfig, WorkloadConfig,
+    RouterKind, SchedulerKind, TopologyConfig, TransportConfig, WorkloadConfig,
 };
 use concur::core::Rng;
 use concur::driver::{run_job, RunResult};
@@ -27,7 +27,7 @@ use concur::metrics::ALL_PHASES;
 /// replica).
 mod reference {
     use concur::agent::Agent;
-    use concur::cluster::{FaultStats, PrefixTierStats};
+    use concur::cluster::{FaultStats, PrefixTierStats, TransportStats};
     use concur::coordinator::slots::BoundaryDecision;
     use concur::coordinator::{ControlInputs, Controller, SlotManager};
     use concur::core::{AgentId, Micros, RequestId};
@@ -189,6 +189,7 @@ mod reference {
             per_agent,
             prefix_tier: PrefixTierStats::default(),
             broadcast_series: TimeSeries::new("broadcast_shipped_tokens"),
+            transport: TransportStats::default(),
         }
     }
 }
@@ -225,6 +226,7 @@ fn assert_bit_identical(a: &RunResult, b: &RunResult, ctx: &str) {
     }
     assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
     assert_eq!(a.prefix_tier, b.prefix_tier, "{ctx}: prefix-tier stats");
+    assert_eq!(a.transport, b.transport, "{ctx}: transport stats");
     assert_eq!(a.per_agent, b.per_agent, "{ctx}: per-agent records");
     for (name, sa, sb) in [
         ("usage", &a.usage_series, &b.usage_series),
@@ -311,6 +313,7 @@ fn n1_cluster_matches_prerefactor_driver_bitwise() {
             fault_plan: FaultPlan::none(),
             tool_skew: vec![1.0],
             prefix_tier: PrefixTierConfig::default(),
+            transport: TransportConfig::default(),
         };
         let got = run_job(&job).unwrap();
         assert_bit_identical(&got, &want, &format!("job {i} with explicit no-fault topology"));
@@ -326,6 +329,18 @@ fn n1_cluster_matches_prerefactor_driver_bitwise() {
         };
         let got = run_job(&job).unwrap();
         assert_bit_identical(&got, &want, &format!("job {i} with disabled prefix tier"));
+        // A disabled transport with its dormant knobs changed must also
+        // be the oracle: the legacy teleport path is untouched.
+        let mut job = base.clone();
+        job.topology.transport = TransportConfig {
+            enabled: false,
+            fabric_gbps: 1.0,
+            handoff_budget_tokens: 3,
+            handoff_max_agents: 1,
+            ..TransportConfig::default()
+        };
+        let got = run_job(&job).unwrap();
+        assert_bit_identical(&got, &want, &format!("job {i} with disabled transport"));
     }
 }
 
@@ -386,6 +401,31 @@ fn n4_tier_off_machinery_is_invisible() {
         assert_bit_identical(&got, &want, &format!("{router:?} N=4 disabled tier"));
         assert_eq!(got.prefix_tier, Default::default(), "disabled tier must report zeros");
         assert!(got.broadcast_series.is_empty());
+    }
+}
+
+/// PROPERTY (differential, transport satellite): with `TransportConfig`
+/// at defaults — instantaneous visibility, full-ship, drop-on-drain —
+/// `run_sharded` output at N=4 is bit-identical to the pre-transport
+/// cluster, dormant knobs notwithstanding.  Any transport bookkeeping
+/// leaking into the disabled path (a fabric charge, a completion clock
+/// stop, a handoff) breaks this immediately.
+#[test]
+fn n4_transport_off_machinery_is_invisible() {
+    for router in [RouterKind::CacheAffinity, RouterKind::Rebalance] {
+        let plain = routing_job(4, router);
+        let want = run_job(&plain).unwrap();
+        let mut dormant = plain.clone();
+        dormant.topology.transport = TransportConfig {
+            enabled: false,
+            fabric_gbps: 0.001,
+            handoff_budget_tokens: 1,
+            handoff_max_agents: 1,
+            ..TransportConfig::default()
+        };
+        let got = run_job(&dormant).unwrap();
+        assert_bit_identical(&got, &want, &format!("{router:?} N=4 disabled transport"));
+        assert_eq!(got.transport, Default::default(), "disabled transport must report zeros");
     }
 }
 

@@ -1,0 +1,257 @@
+//! Asynchronous-transport integration tests.
+//!
+//! The load-bearing properties: (1) conservation — every fabric byte a
+//! transfer claims is a byte the shared link actually carried; (2)
+//! causality — nothing a transfer ships is matchable, hittable or
+//! routing-visible before its `done` instant; (3) determinism — full
+//! cluster runs with the tier, delayed visibility, delta shipping and
+//! drain handoff all enabled are bit-identical across repeats, for
+//! several seeds; and (4) the acceptance claim — on one anchored
+//! drained workload, KV handoff yields a strictly higher post-drain
+//! aggregate hit rate than drop-on-drain.
+
+use concur::agent::WorkloadGenerator;
+use concur::cluster::{SharedPrefixTier, Transport};
+use concur::config::{
+    presets, AimdParams, EngineConfig, FaultEvent, FaultPlan, JobConfig, PrefixTierConfig,
+    RouterKind, SchedulerKind, TopologyConfig, TransportConfig, WorkloadConfig,
+};
+use concur::core::{AgentId, Micros, RequestId, Token};
+use concur::costmodel::CostModel;
+use concur::driver::{run_job, RunResult};
+use concur::engine::{Request, SimEngine};
+
+fn engines(n: usize) -> Vec<SimEngine> {
+    (0..n)
+        .map(|_| {
+            let mut e = SimEngine::new(
+                EngineConfig::default(),
+                CostModel::new(presets::qwen3_cluster(2)),
+            );
+            e.shrink_pool_for_tests(100_000);
+            e
+        })
+        .collect()
+}
+
+fn family_prompt(agent: u32) -> Vec<Token> {
+    let mut p: Vec<Token> = (0..512).collect();
+    p.extend(1_000_000 + agent * 10_000..1_000_000 + agent * 10_000 + 400);
+    p
+}
+
+/// Drive one request to completion so the prompt lands in the replica's
+/// radix cache through the normal finish path.
+fn serve(e: &mut SimEngine, id: u64, agent: u64, prompt: Vec<Token>) {
+    e.submit(Request {
+        id: RequestId(id),
+        agent: AgentId(agent),
+        prompt,
+        gen: vec![90_000_000 + id as Token],
+        prev_ctx: 0,
+        submitted_at: Micros::ZERO,
+    });
+    let mut now = Micros::ZERO;
+    for _ in 0..300 {
+        if !e.has_work() {
+            break;
+        }
+        let out = e.step(now);
+        now = now + out.duration + Micros(1);
+    }
+    assert!(!e.has_work(), "request did not finish");
+}
+
+/// PROPERTY (causality + accounting): with delayed visibility on, a
+/// request admitted while the install's transfer is in flight accrues
+/// **zero** broadcast hit tokens; the first request after the commit
+/// hits the full prefix.  Fabric bytes are conserved throughout.
+#[test]
+fn no_broadcast_hits_accrue_before_the_install_lands() {
+    let mut eng = engines(2);
+    let mut tier = SharedPrefixTier::new(PrefixTierConfig::on(), 2);
+    let mut cfg = TransportConfig::on();
+    cfg.delayed_visibility = true;
+    let mut tp = Transport::new(cfg, eng[0].cost.cluster.model.kv_bytes_per_token());
+    let alive = vec![true, true];
+
+    // Three distinct agents make the family prefix hot; replica 0 serves
+    // one of them and becomes the broadcast source.
+    for a in 0..3u32 {
+        tier.observe(AgentId(a as u64), &family_prompt(a), Micros(a as u64 + 1));
+    }
+    serve(&mut eng[0], 900, 900, family_prompt(9));
+    tier.maintain(&mut eng, &alive, Micros(10), Some(&mut tp));
+    let done = tp.next_completion().expect("peer install must be in flight");
+    assert!(done > Micros(10), "completion lands strictly after issue");
+
+    // A family request served by replica 1 BEFORE the transfer lands:
+    // the pending prefix matches zero tokens — no broadcast hits, full
+    // re-prefill, exactly as if the tier had not shipped yet.
+    serve(&mut eng[1], 901, 50, family_prompt(50));
+    assert_eq!(eng[1].counters.broadcast_hit_tokens, 0, "no hits before done");
+
+    // The transfer lands; the commit pins whatever the early request
+    // did not already re-create, and from now on requests hit it.
+    for xfer in tp.pop_due(done) {
+        tier.on_transfer_done(&xfer, &mut eng, done);
+    }
+    assert_eq!(eng[1].tree().broadcast_tokens(), 512);
+    serve(&mut eng[1], 902, 51, family_prompt(51));
+    assert_eq!(eng[1].counters.broadcast_hit_tokens, 512, "post-commit requests hit");
+
+    // Conservation: claimed wire bytes == bytes the fabric carried.
+    assert_eq!(tp.stats().wire_bytes, tp.fabric_bytes_moved());
+    for e in &eng {
+        e.check_invariants().unwrap();
+    }
+}
+
+fn transport_job(seed: u64, transport: TransportConfig) -> JobConfig {
+    JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+        workload: WorkloadConfig {
+            n_agents: 24,
+            steps_min: 3,
+            steps_max: 5,
+            task_families: 5,
+            seed,
+            ..WorkloadConfig::default()
+        },
+        scheduler: SchedulerKind::Concur(AimdParams::default()),
+        topology: TopologyConfig {
+            replicas: 3,
+            router: RouterKind::Rebalance,
+            prefix_tier: PrefixTierConfig::on(),
+            transport,
+            ..TopologyConfig::default()
+        },
+    }
+}
+
+fn assert_runs_match(a: &RunResult, b: &RunResult, ctx: &str) {
+    assert_eq!(a.total_time, b.total_time, "{ctx}: total_time");
+    assert_eq!(a.counters, b.counters, "{ctx}: counters");
+    assert_eq!(a.hit_rate.to_bits(), b.hit_rate.to_bits(), "{ctx}: hit_rate");
+    assert_eq!(a.engine_steps, b.engine_steps, "{ctx}: engine_steps");
+    assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
+    assert_eq!(a.prefix_tier, b.prefix_tier, "{ctx}: prefix-tier stats");
+    assert_eq!(a.transport, b.transport, "{ctx}: transport stats");
+    assert_eq!(a.per_agent, b.per_agent, "{ctx}: per-agent records");
+    assert_eq!(a.broadcast_series.len(), b.broadcast_series.len(), "{ctx}: broadcast series");
+}
+
+/// PROPERTY (determinism): the full stack — tier + delayed visibility +
+/// delta shipping + drain handoff under a mid-run drain — reproduces
+/// bit-identically across repeats, for 5 seeds.  Transfer completion
+/// instants are part of the event clock, so any nondeterminism in their
+/// scheduling or delivery order would surface here.
+#[test]
+fn delayed_transport_runs_are_deterministic_across_seeds() {
+    for seed in [11u64, 22, 33, 44, 55] {
+        let mut cfg = TransportConfig::on();
+        cfg.delayed_visibility = true;
+        cfg.delta_ship = true;
+        cfg.drain_handoff = true;
+        let mut job = transport_job(seed, cfg);
+        // Anchor a drain mid-run off a healthy probe of the same cell.
+        let probe = run_job(&job).unwrap();
+        job.topology.fault_plan =
+            FaultPlan::new(vec![FaultEvent::drain(0, Micros(probe.total_time.0 * 2 / 5))]);
+        let a = run_job(&job).unwrap();
+        let b = run_job(&job).unwrap();
+        assert_runs_match(&a, &b, &format!("seed {seed}"));
+        assert_eq!(a.agents_finished, 24, "seed {seed} must finish");
+        assert_eq!(a.faults.drains, 1);
+        // The full stack genuinely engaged: transfers flowed.
+        assert!(a.transport.transfers > 0, "seed {seed}: no transfers flowed");
+    }
+}
+
+/// Every transport corner completes the fleet (smoke across the cube).
+#[test]
+fn every_transport_mode_completes_under_a_drain() {
+    for &(delayed, delta, handoff) in &[
+        (false, false, true),
+        (false, true, false),
+        (true, false, false),
+        (true, true, true),
+    ] {
+        let cfg = TransportConfig {
+            enabled: true,
+            delayed_visibility: delayed,
+            delta_ship: delta,
+            drain_handoff: handoff,
+            ..TransportConfig::default()
+        };
+        let mut job = transport_job(7, cfg);
+        job.topology.fault_plan =
+            FaultPlan::new(vec![FaultEvent::drain(1, Micros(40_000_000))]);
+        let r = run_job(&job).unwrap();
+        assert_eq!(
+            r.agents_finished, 24,
+            "mode delayed={delayed} delta={delta} handoff={handoff} lost agents"
+        );
+    }
+}
+
+/// ACCEPTANCE (tentpole): on one anchored workload with a mid-run drain
+/// of replica 0, KV handoff yields a strictly higher post-drain
+/// aggregate hit rate than drop-on-drain.  N=2 so every displaced agent
+/// (and its handed-off context) must land on replica 1 — the benefit is
+/// causal, not a routing accident — and the router is `rebalance`, whose
+/// stored pins keep the handed-off agents on the replica their KV was
+/// shipped to (a stateless rehash would walk them back to the refilled,
+/// cold replica).  The pool (TP4) comfortably fits the displaced working
+/// set, so the shipped contexts survive to be hit.
+#[test]
+fn drain_handoff_beats_drop_on_post_drain_hit_rate() {
+    let base = |transport: TransportConfig| JobConfig {
+        cluster: presets::qwen3_cluster(4),
+        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+        workload: presets::qwen3_workload(32),
+        // No admission control: isolates the handoff's cache effect.
+        scheduler: SchedulerKind::Uncontrolled,
+        topology: TopologyConfig {
+            replicas: 2,
+            router: RouterKind::Rebalance,
+            transport,
+            ..TopologyConfig::default()
+        },
+    };
+    let drop_cfg = TransportConfig::on();
+    let mut hand_cfg = TransportConfig::on();
+    hand_cfg.drain_handoff = true;
+
+    // Anchor the drain at 40% of the healthy makespan: both runs are
+    // identical up to that instant, so the drain is guaranteed mid-run
+    // and the pre-drain history is shared.
+    let healthy = run_job(&base(drop_cfg)).unwrap();
+    let drain_at = Micros((healthy.total_time.0 as f64 * 0.4) as u64);
+    let plan = FaultPlan::new(vec![FaultEvent::drain(0, drain_at)]);
+
+    let mut drop_job = base(drop_cfg);
+    drop_job.topology.fault_plan = plan.clone();
+    let mut hand_job = base(hand_cfg);
+    hand_job.topology.fault_plan = plan;
+
+    let dropped = run_job(&drop_job).unwrap();
+    let handed = run_job(&hand_job).unwrap();
+    assert_eq!(dropped.agents_finished, 32);
+    assert_eq!(handed.agents_finished, 32);
+    assert_eq!(dropped.faults.refills, 1, "the drain must refill");
+    assert_eq!(dropped.faults.handoff_agents, 0);
+    assert!(handed.faults.handoff_agents > 0, "warm agents must be checkpointed");
+    assert!(handed.faults.handoff_tokens > 0);
+    assert!(handed.counters.handoff_installed_tokens > 0, "contexts must land");
+
+    let window_end = |r: &RunResult| r.total_time + Micros(1);
+    let post_drop = dropped.hit_series.mean_in(drain_at, window_end(&dropped));
+    let post_hand = handed.hit_series.mean_in(drain_at, window_end(&handed));
+    assert!(
+        post_hand > post_drop,
+        "post-drain aggregate hit rate: handoff {post_hand:.4} must strictly beat \
+         drop-on-drain {post_drop:.4}"
+    );
+}
