@@ -1,0 +1,177 @@
+//! Open-loop session arrival process.
+//!
+//! Closed-batch runs start every agent at t=0 and drain the fleet;
+//! production traffic does not work that way.  This module turns a
+//! generated fleet into an *open-loop* session population: each
+//! multi-turn session gets a seeded Poisson arrival instant (with a
+//! diurnal rate curve — thinning against the peak rate), a tenant
+//! priority class, a patience bound after which a stalled turn makes the
+//! session abandon, and an extra lognormal *think time* idled between
+//! turns on top of the tool latency.  Sessions return to the admission
+//! queue after every think — warm if their KV survived the interim,
+//! cold if eviction or a fault took it, exactly as the cache decides.
+//!
+//! Everything is drawn from forked streams of `OpenLoopConfig::seed`,
+//! independent of the workload seed: the same session population can be
+//! replayed under different traffic timings, and a fixed seed replays
+//! bit-identically.
+
+use crate::config::{OpenLoopConfig, WorkloadConfig};
+use crate::core::{Micros, Rng};
+
+use super::{Agent, Priority, WorkloadGenerator};
+
+/// Exponential inter-event gap with the given rate (events per second).
+fn exp_gap(rng: &mut Rng, rate_per_s: f64) -> f64 {
+    // 1 - u is in (0, 1], so the log is finite and non-positive.
+    -(1.0 - rng.next_f64()).ln() / rate_per_s
+}
+
+/// Generate the open-loop session population: the workload's fleet with
+/// arrival instants, priority classes, patience and think times filled
+/// in.  Arrival instants are non-decreasing in agent id, so the fleet
+/// doubles as the arrival schedule.
+pub fn open_loop_fleet(workload: &WorkloadConfig, ol: &OpenLoopConfig) -> Vec<Agent> {
+    assert!(ol.enabled, "open_loop_fleet needs open_loop.enabled");
+    let mut agents = WorkloadGenerator::new(workload.clone()).generate();
+    let mut root = Rng::new(ol.seed);
+    let mut arr = root.fork(1);
+    let mut class = root.fork(2);
+    let mut think = root.fork(3);
+
+    let lambda = ol.arrival_rate_per_s;
+    let amp = ol.diurnal_amplitude;
+    let lam_max = lambda * (1.0 + amp);
+    let patience = if ol.patience_s > 0.0 {
+        Some(Micros::from_secs_f64(ol.patience_s))
+    } else {
+        None
+    };
+
+    let mut t = 0.0f64; // seconds
+    for a in agents.iter_mut() {
+        // Inhomogeneous Poisson by thinning: draw candidate gaps at the
+        // peak rate, accept each candidate with probability
+        // rate(t)/λmax where rate(t) = λ·(1 + A·sin(2πt/P)).
+        loop {
+            t += exp_gap(&mut arr, lam_max);
+            if amp == 0.0 {
+                break; // homogeneous: every candidate is real
+            }
+            let phase = (2.0 * std::f64::consts::PI * t) / ol.diurnal_period_s;
+            let rate = lambda * (1.0 + amp * phase.sin());
+            if arr.next_f64() * lam_max < rate {
+                break;
+            }
+        }
+        a.arrival_at = Micros::from_secs_f64(t);
+        a.priority = if class.chance(ol.high_priority_share) {
+            Priority::High
+        } else {
+            Priority::Low
+        };
+        a.patience = patience;
+        // Think time between turns: the session idles after each tool
+        // observation before issuing its next turn.  The final step has
+        // no tool wait (the trajectory ends at its completion).
+        for step in a.plan.iter_mut() {
+            if !step.tool_tokens.is_empty() {
+                let idle = think.lognormal(ol.think_mu, ol.think_sigma);
+                step.tool_latency = step.tool_latency + Micros::from_secs_f64(idle);
+            }
+        }
+    }
+    agents
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OpenLoopConfig, WorkloadConfig};
+
+    fn small() -> WorkloadConfig {
+        WorkloadConfig { n_agents: 40, steps_min: 2, steps_max: 4, ..WorkloadConfig::default() }
+    }
+
+    #[test]
+    fn fixed_seed_replays_bit_identically() {
+        let ol = OpenLoopConfig::on();
+        let a = open_loop_fleet(&small(), &ol);
+        let b = open_loop_fleet(&small(), &ol);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_at, y.arrival_at);
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.patience, y.patience);
+            let lx: Vec<_> = x.plan_for_stats().iter().map(|s| s.tool_latency).collect();
+            let ly: Vec<_> = y.plan_for_stats().iter().map(|s| s.tool_latency).collect();
+            assert_eq!(lx, ly);
+        }
+        // A different traffic seed moves arrivals without touching the
+        // session population itself.
+        let c = open_loop_fleet(&small(), &OpenLoopConfig { seed: 99, ..ol });
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival_at != y.arrival_at));
+        assert_eq!(a[0].context_len(), c[0].context_len());
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_roughly_match_the_rate() {
+        let mut ol = OpenLoopConfig::on();
+        ol.arrival_rate_per_s = 2.0;
+        ol.diurnal_amplitude = 0.0;
+        let fleet = open_loop_fleet(&small(), &ol);
+        let times: Vec<Micros> = fleet.iter().map(|a| a.arrival_at).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "arrivals must be sorted");
+        assert!(times[0] > Micros::ZERO);
+        // 40 sessions at λ=2/s should span roughly 20 s (generously
+        // bounded: the variance of a 40-sample Poisson horizon is small).
+        let span = times.last().unwrap().as_secs_f64();
+        assert!((10.0..40.0).contains(&span), "span={span}");
+    }
+
+    #[test]
+    fn diurnal_modulation_shifts_mass_toward_the_peak() {
+        // One full period covering the fleet: more arrivals land in the
+        // first half-period (sin > 0, boosted rate) than the second.
+        let mut ol = OpenLoopConfig::on();
+        ol.arrival_rate_per_s = 4.0;
+        ol.diurnal_amplitude = 0.9;
+        ol.diurnal_period_s = 20.0;
+        let mut w = small();
+        w.n_agents = 64;
+        let fleet = open_loop_fleet(&w, &ol);
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for a in &fleet {
+            let s = a.arrival_at.as_secs_f64() % ol.diurnal_period_s;
+            if s < ol.diurnal_period_s / 2.0 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(peak > trough, "peak={peak} trough={trough}");
+    }
+
+    #[test]
+    fn classes_patience_and_think_time_are_assigned() {
+        let mut ol = OpenLoopConfig::on();
+        ol.high_priority_share = 0.5;
+        let fleet = open_loop_fleet(&small(), &ol);
+        let high = fleet.iter().filter(|a| a.priority == Priority::High).count();
+        assert!(high > 0 && high < fleet.len(), "both classes must appear");
+        assert!(fleet.iter().all(|a| a.patience == Some(Micros(60_000_000))));
+        // Think time strictly inflates every non-final turn's idle gap
+        // relative to the closed-batch plan.
+        let closed = WorkloadGenerator::new(small()).generate();
+        for (o, c) in fleet.iter().zip(&closed) {
+            for (so, sc) in o.plan_for_stats().iter().zip(c.plan_for_stats()) {
+                if !so.tool_tokens.is_empty() {
+                    assert!(so.tool_latency > sc.tool_latency);
+                }
+            }
+        }
+        // Patience 0 means infinitely patient.
+        ol.patience_s = 0.0;
+        let fleet = open_loop_fleet(&small(), &ol);
+        assert!(fleet.iter().all(|a| a.patience.is_none()));
+    }
+}

@@ -11,13 +11,24 @@
 //! content, step count, tool latencies) so that every scheduler is compared
 //! on bit-identical work.
 
+pub mod arrivals;
 pub mod trace;
 pub mod workload;
 
+pub use arrivals::open_loop_fleet;
 pub use workload::{WorkloadGenerator, WorkloadStats};
 
 use crate::core::{AgentId, Micros, RequestId, Token};
 use crate::engine::Request;
+
+/// Tenant priority class of an open-loop session.  Closed-batch agents
+/// default to `High`, which is inert: priority only matters under the
+/// open-loop admission path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    High,
+    Low,
+}
 
 /// Where an agent is in its lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,6 +71,14 @@ pub struct Agent {
     pub finished_at: Option<Micros>,
     /// First submission time (for end-to-end agent latency).
     pub started_at: Option<Micros>,
+    /// Open-loop arrival instant (ZERO for closed-batch agents, which
+    /// are all present when the run starts).
+    pub arrival_at: Micros,
+    /// Tenant priority class (inert `High` for closed-batch agents).
+    pub priority: Priority,
+    /// Open-loop patience: the session abandons when one of its turns
+    /// has waited longer than this without completing (`None` = never).
+    pub patience: Option<Micros>,
 }
 
 impl Agent {
@@ -74,6 +93,9 @@ impl Agent {
             prev_ctx: 0,
             finished_at: None,
             started_at: None,
+            arrival_at: Micros::ZERO,
+            priority: Priority::High,
+            patience: None,
         }
     }
 
@@ -152,6 +174,13 @@ impl Agent {
     /// Total tokens this agent will ever generate (for progress metrics).
     pub fn total_gen_tokens(&self) -> u64 {
         self.plan.iter().map(|s| s.gen.len() as u64).sum()
+    }
+
+    /// Tokens actually generated so far — the open-loop throughput and
+    /// goodput accounting for sessions that were shed or abandoned
+    /// mid-trajectory (equals [`Self::total_gen_tokens`] once done).
+    pub fn gen_tokens_done(&self) -> u64 {
+        self.plan[..self.step].iter().map(|s| s.gen.len() as u64).sum()
     }
 
     /// Read-only view of the accumulated context.  The cluster's drain

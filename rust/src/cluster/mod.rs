@@ -19,6 +19,18 @@
 //!   timelines, one global [`Controller`] regulating admission for the
 //!   whole fleet, and the scripted [`FaultPlan`] lifecycle (kill /
 //!   drain-and-refill / revive);
+//! * **open-loop traffic** (`TopologyConfig::open_loop`, off by
+//!   default): sessions *arrive* over a seeded Poisson process instead
+//!   of all being present at t=0, idle between turns, carry a tenant
+//!   priority class, abandon when a turn out-waits their patience, and
+//!   can be shed at the door by a hysteretic overload governor — with
+//!   TTFT / per-turn latency percentiles and goodput-under-SLO
+//!   accounting (see [`OpenLoopStats`]);
+//! * **stochastic faults** (`TopologyConfig::fault_rates`, off by
+//!   default): a seeded per-replica MTBF/MTTR process injects
+//!   kill+revive and drain events beside (or instead of) the scripted
+//!   plan, deterministically from its seed — fixed seed, bit-identical
+//!   replay;
 //! * [`ClusterCoordinator`] packages both behind `driver::run_job`.
 //!
 //! ## Signal flow (paper §4.2-§4.3)
@@ -50,6 +62,14 @@
 //!   With the broadcast tier enabled, hot shared prefixes are re-shipped
 //!   to revived and refilled replicas at the same instant they rejoin.
 //!
+//! Stochastic (MTBF/MTTR-sampled) events apply the **same transitions
+//! through the same code path** as scripted ones.  A sampled fault that
+//! would leave the fleet unroutable (fewer than one admissible replica)
+//! or that lands on a replica already down or draining is *suppressed* —
+//! counted in `FaultStats::stochastic_suppressed`, never applied — and
+//! the replica's stream simply redraws its next instant, so the process
+//! stays deterministic whatever the fleet state.
+//!
 //! ## Timing semantics (and the N=1 contract)
 //!
 //! The cluster clock stops at replica iteration boundaries, at scripted
@@ -78,10 +98,15 @@ pub use router::{
 };
 pub use transport::{Transfer, TransferKind, TransferPayload, Transport, TransportStats};
 
-use crate::agent::{Agent, AgentPhase};
-use crate::config::{FaultKind, FaultPlan, JobConfig, PrefixTierConfig, TransportConfig};
-use crate::coordinator::{slots::BoundaryDecision, ControlInputs, Controller};
-use crate::core::{AgentId, ConcurError, Micros, RequestId, Result};
+use crate::agent::{Agent, AgentPhase, Priority};
+use crate::config::{
+    FaultKind, FaultPlan, FaultRateConfig, JobConfig, OpenLoopConfig, PrefixTierConfig,
+    TransportConfig,
+};
+use crate::coordinator::{
+    slots::BoundaryDecision, ControlInputs, Controller, OverloadGovernor, SlotManager,
+};
+use crate::core::{AgentId, ConcurError, Micros, RequestId, Result, Rng};
 use crate::costmodel::CostModel;
 use crate::driver::{AgentOutcome, RunResult};
 use crate::engine::{EngineCounters, EngineSignals, FinishedReq, SimEngine};
@@ -114,6 +139,42 @@ pub struct FaultStats {
     /// already resident at the destination — e.g. its broadcast-pinned
     /// copy of a shared prefix — are excluded: they never travel).
     pub handoff_tokens: u64,
+    /// Stochastic (MTBF/MTTR-sampled) fault events actually applied;
+    /// these are included in the kill/drain/revive counts above.
+    pub stochastic_injected: u64,
+    /// Stochastic events suppressed instead of applied: the draw landed
+    /// on a replica that was already down or draining, or applying it
+    /// would have left the fleet without an admissible replica.
+    pub stochastic_suppressed: u64,
+}
+
+/// Open-loop traffic telemetry for one run (all zero for closed-batch
+/// runs, where every agent is present at t=0 and none is ever shed).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpenLoopStats {
+    /// Sessions that arrived (equals `agents_total` once the arrival
+    /// schedule has drained).
+    pub arrived: u64,
+    /// Low-priority sessions rejected by the overload governor — at the
+    /// door on arrival, or swept out of the queue when it trips.
+    pub shed: u64,
+    /// Sessions that gave up after a turn out-waited their patience.
+    pub abandoned: u64,
+    /// Turns whose latency exceeded the applicable SLO bound (TTFT for
+    /// a session's first turn, the per-step bound afterwards).
+    pub turn_violations: u64,
+    /// Times the governor tripped into the shedding state.
+    pub governor_trips: u64,
+    /// Σ generated tokens of high-priority sessions that completed with
+    /// every turn inside SLO — goodput-under-SLO, the paper-style
+    /// "useful" throughput that shedding is meant to protect.
+    pub goodput_high: u64,
+    /// Goodput-under-SLO of low-priority sessions.
+    pub goodput_low: u64,
+    /// High-priority sessions that ran to completion.
+    pub finished_high: u64,
+    /// Low-priority sessions that ran to completion.
+    pub finished_low: u64,
 }
 
 /// Replica lifecycle state inside one `run_sharded` invocation.
@@ -128,6 +189,108 @@ fn admissible_count(state: &[ReplicaState]) -> usize {
     state.iter().filter(|s| **s == ReplicaState::Alive).count()
 }
 
+/// Exponential draw in microseconds with the given mean (seconds),
+/// clamped to ≥ 1µs so consecutive events never collapse onto one
+/// instant.
+fn exp_micros(rng: &mut Rng, mean_s: f64) -> Micros {
+    // 1 - u ∈ (0, 1], so the log is finite and non-positive.
+    let secs = -mean_s * (1.0 - rng.next_f64()).ln();
+    Micros((secs * 1e6).round().max(1.0) as u64)
+}
+
+/// Seeded per-replica MTBF/MTTR fault process.  Each replica owns an
+/// independent forked RNG stream and a single pending instant: while up,
+/// the next failure (kill with probability `1 - drain_share`, else a
+/// drain) lands one Exp(MTBF) gap out; a kill holds the replica down for
+/// Exp(MTTR) before its revive.  Draw counts per event are fixed, so a
+/// given seed yields one immutable event tape — bit-identical replay —
+/// and suppression only redraws the *next* gap, never rewinds a stream.
+struct FaultSampler {
+    mtbf_s: f64,
+    mttr_s: f64,
+    drain_share: f64,
+    per: Vec<SampledReplica>,
+}
+
+struct SampledReplica {
+    rng: Rng,
+    next_at: Micros,
+    /// Set while this sampler holds the replica killed (revive pending).
+    down: bool,
+}
+
+impl FaultSampler {
+    fn new(cfg: &FaultRateConfig, n: usize) -> FaultSampler {
+        let mut root = Rng::new(cfg.seed);
+        let per = (0..n)
+            .map(|r| {
+                let mut rng = root.fork(r as u64 + 1);
+                let next_at = exp_micros(&mut rng, cfg.mtbf_s);
+                SampledReplica { rng, next_at, down: false }
+            })
+            .collect();
+        FaultSampler {
+            mtbf_s: cfg.mtbf_s,
+            mttr_s: cfg.mttr_s,
+            drain_share: cfg.drain_share,
+            per,
+        }
+    }
+
+    /// Earliest pending instant across all replica streams (for the
+    /// clock-advance candidates).
+    fn next_event_at(&self) -> Option<Micros> {
+        self.per.iter().map(|p| p.next_at).min()
+    }
+
+    /// Pop replica `r`'s next applicable event at or before `now`, or
+    /// `None` once its stream is past `now`.  Suppressed draws (counted
+    /// in `fstats`) are skipped internally, so the caller applies every
+    /// returned event.
+    fn next_due(
+        &mut self,
+        r: usize,
+        now: Micros,
+        state: &[ReplicaState],
+        fstats: &mut FaultStats,
+    ) -> Option<FaultKind> {
+        loop {
+            let p = &mut self.per[r];
+            if p.next_at > now {
+                return None;
+            }
+            if p.down {
+                // MTTR elapsed: the held-down replica comes back.
+                p.down = false;
+                p.next_at = p.next_at + exp_micros(&mut p.rng, self.mtbf_s);
+                if state[r] == ReplicaState::Dead {
+                    fstats.stochastic_injected += 1;
+                    return Some(FaultKind::Revive);
+                }
+                // A scripted event already revived it out from under us.
+                fstats.stochastic_suppressed += 1;
+                continue;
+            }
+            let drain = p.rng.chance(self.drain_share);
+            let survivable = state[r] == ReplicaState::Alive && admissible_count(state) >= 2;
+            if !survivable {
+                fstats.stochastic_suppressed += 1;
+                p.next_at = p.next_at + exp_micros(&mut p.rng, self.mtbf_s);
+                continue;
+            }
+            fstats.stochastic_injected += 1;
+            return if drain {
+                p.next_at = p.next_at + exp_micros(&mut p.rng, self.mtbf_s);
+                Some(FaultKind::Drain)
+            } else {
+                p.down = true;
+                p.next_at = p.next_at + exp_micros(&mut p.rng, self.mttr_s);
+                Some(FaultKind::Kill)
+            };
+        }
+    }
+}
+
 /// Owns the replica fleet, its router and its fault script for one job.
 pub struct ClusterCoordinator {
     engines: Vec<SimEngine>,
@@ -136,6 +299,8 @@ pub struct ClusterCoordinator {
     tool_skew: Vec<f64>,
     prefix_tier: PrefixTierConfig,
     transport: TransportConfig,
+    open_loop: OpenLoopConfig,
+    fault_rates: FaultRateConfig,
 }
 
 impl ClusterCoordinator {
@@ -153,6 +318,8 @@ impl ClusterCoordinator {
             tool_skew: job.topology.tool_skew.clone(),
             prefix_tier: job.topology.prefix_tier,
             transport: job.topology.transport,
+            open_loop: job.topology.open_loop,
+            fault_rates: job.topology.fault_rates,
         }
     }
 
@@ -176,6 +343,8 @@ impl ClusterCoordinator {
             &self.tool_skew,
             &self.prefix_tier,
             &self.transport,
+            &self.open_loop,
+            &self.fault_rates,
         )
     }
 }
@@ -310,6 +479,179 @@ fn scale_latency(lat: Micros, skew: f64) -> Micros {
     }
 }
 
+/// Apply one fault transition to replica `r` — the single code path
+/// shared by the scripted [`FaultPlan`] and the stochastic
+/// [`FaultSampler`], so both produce identical kill / drain / revive
+/// semantics (see the module docs).  The caller records the
+/// admissible-replica series after each application.
+// Private twice-used helper: the arg list IS the fleet state; a one-off
+// params struct would only rename it.
+#[allow(clippy::too_many_arguments)]
+fn apply_fault_event(
+    kind: FaultKind,
+    r: usize,
+    now: Micros,
+    engines: &mut [SimEngine],
+    router: &mut dyn Router,
+    state: &mut [ReplicaState],
+    fleet: &mut [Agent],
+    assignment: &mut [Option<usize>],
+    footprint: &mut [u64],
+    slots: &mut SlotManager,
+    inflight: &mut [Option<InFlight>],
+    stagnant: &mut [u32],
+    tier: &mut Option<SharedPrefixTier>,
+    transport: &mut Option<Transport>,
+    loads: &mut Vec<ReplicaLoad>,
+    fstats: &mut FaultStats,
+    handoff_time: &mut Micros,
+) {
+    match kind {
+        FaultKind::Kill => {
+            // The iteration in flight dies with the replica.
+            inflight[r] = None;
+            stagnant[r] = 0;
+            for (i, slot) in assignment.iter_mut().enumerate() {
+                if *slot != Some(r) {
+                    continue;
+                }
+                // Replica pin cleared for everyone who lived here.
+                *slot = None;
+                let a = &mut fleet[i];
+                if a.phase == AgentPhase::Generating {
+                    // Step in flight lost: back to Ready, slot
+                    // revoked, re-enter the admission queue cold.
+                    a.on_replica_failed();
+                    slots.requeue(a.id);
+                    fstats.requeued_agents += 1;
+                }
+            }
+            footprint[r] = 0;
+            engines[r].clear_state();
+            if let Some(t) = tier.as_mut() {
+                // The broadcast pins died with the radix tree; a
+                // revive re-ships on the next maintenance pass.
+                t.on_replica_wiped(r);
+            }
+            if let Some(tp) = transport.as_mut() {
+                // In-flight transfers to the dead replica have
+                // nowhere to land...
+                tp.cancel_dst(r);
+                // ...and a replica killed mid-drain also severs the
+                // handoff checkpoints it was still streaming out: the
+                // source died with the payloads.  The agents involved
+                // were requeued cold above, so nothing is lost — they
+                // just re-prefill wherever admission lands them next.
+                tp.cancel_src_handoffs(r);
+            }
+            state[r] = ReplicaState::Dead;
+            fstats.kills += 1;
+        }
+        FaultKind::Drain => {
+            state[r] = ReplicaState::Draining;
+            fstats.drains += 1;
+            // KV handoff: before the drain's eventual refill wipes
+            // this replica, checkpoint its hottest agents' warm
+            // contexts through the transport to the replica each
+            // agent is re-homed to, so they resume warm instead of
+            // re-prefilling from scratch (heat-ranked, budget- and
+            // agent-capped).  Routing the handoff *now* both picks
+            // and — for stateful routers — pins the destination,
+            // so the agent's next step boundary follows its KV.
+            if transport.as_ref().is_some_and(|tp| tp.cfg.drain_handoff) {
+                let n = engines.len();
+                let tp = transport.as_mut().expect("checked above");
+                let mut cands: Vec<(AgentId, Micros, u64)> = Vec::new();
+                for (i, slot) in assignment.iter().enumerate() {
+                    if *slot != Some(r) || fleet[i].is_done() {
+                        continue;
+                    }
+                    let (gpu, cpu) = engines[r].tree().peek_prefix(fleet[i].context());
+                    let warm = gpu + cpu;
+                    if warm > 0 {
+                        let heat = engines[r].agent_heat(fleet[i].id);
+                        cands.push((fleet[i].id, heat.unwrap_or(Micros::ZERO), warm));
+                    }
+                }
+                // Hottest first (most recently decoded = most KV
+                // still worth moving); ties break on agent id.
+                cands.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                let mut budget = tp.cfg.handoff_budget_tokens;
+                let mut agents_left = tp.cfg.handoff_max_agents;
+                // Tokens already shipped per destination this
+                // drain: folded into the loads the router sees, so
+                // one drain does not herd its whole cohort onto
+                // the replica that was least loaded at the first
+                // decision (the normal step-boundary path gets
+                // this for free from footprint updates).
+                let mut incoming: Vec<u64> = vec![0; n];
+                for (aid, _, warm) in cands {
+                    if agents_left == 0 || budget == 0 {
+                        break;
+                    }
+                    if warm > budget {
+                        continue; // a smaller context may still fit
+                    }
+                    let a = &fleet[aid.0 as usize];
+                    let context = a.context()[..warm as usize].to_vec();
+                    let bp = tier.as_ref().map_or(0, |t| t.broadcast_prefix_len(&context));
+                    let ctx_len = a.context_len() as u64;
+                    let dst = route_to(
+                        router, engines, state, footprint, &incoming, loads, Some(r), aid,
+                        ctx_len, bp, now,
+                    );
+                    // Only what the destination lacks entirely
+                    // crosses the wire: its broadcast-pinned copy
+                    // of the shared prefix (and any other resident
+                    // head) stays put, exactly like delta
+                    // shipping.  Its CPU-tier coverage reloads
+                    // locally — off the fabric, but the write-in
+                    // leg below still pays for the promotion
+                    // (nothing about a handoff is free).
+                    let (dgpu, dcpu) = engines[dst].tree().peek_prefix(&context);
+                    let wire = warm.saturating_sub(dgpu + dcpu);
+                    // Host-link legs at issue: the drainer reads
+                    // out what leaves it; the target writes in
+                    // everything it must materialise (wire + its
+                    // own CPU-tier promotions).  Fabric inside
+                    // `ship_*`.
+                    let src_done = engines[r].charge_link_transfer(wire, now);
+                    let dst_write = warm.saturating_sub(dgpu);
+                    let dst_done = engines[dst].charge_link_transfer(dst_write, now);
+                    let host_done = src_done.max(dst_done);
+                    budget -= warm;
+                    agents_left -= 1;
+                    incoming[dst] += warm;
+                    fstats.handoff_agents += 1;
+                    fstats.handoff_tokens += wire;
+                    if wire > 0 && tp.cfg.delayed_visibility {
+                        tp.ship_handoff(r, dst, wire, host_done, now, aid, context);
+                    } else {
+                        // Instantaneous visibility — or nothing to
+                        // move over the fabric at all (the state
+                        // is already node-local at the target):
+                        // the landing happens now, the link time
+                        // above is still paid.
+                        if wire > 0 {
+                            let k = TransferKind::Handoff;
+                            let done = tp.ship_instant(k, r, dst, wire, host_done, now);
+                            *handoff_time += done.saturating_sub(now);
+                        } else {
+                            *handoff_time += host_done.saturating_sub(now);
+                        }
+                        engines[dst].install_handoff_context(aid, &context, now);
+                    }
+                }
+            }
+        }
+        FaultKind::Revive => {
+            // State was wiped at the kill; just rejoin.
+            state[r] = ReplicaState::Alive;
+            fstats.revives += 1;
+        }
+    }
+}
+
 /// Run a complete batch job over an explicit replica slice.  This is the
 /// one driver loop in the crate: `driver::run_with` calls it with a
 /// single-element slice, no faults and no skew; `driver::run_job` with
@@ -325,7 +667,11 @@ fn scale_latency(lat: Micros, skew: f64) -> Micros {
 /// `transport_cfg` configures the asynchronous cross-replica KV
 /// [`transport`] (also disabled by default and equally inert: shipping
 /// then keeps the legacy instantaneous semantics and drains drop their
-/// cache).
+/// cache); `open_loop` switches the fleet from closed-batch (everyone
+/// present at t=0) to open-loop session traffic with SLO accounting, and
+/// `fault_rates` adds the stochastic MTBF/MTTR fault process — both off
+/// by default and **inert** when off (differential-tested bit-identical
+/// in `tests/cluster_integration.rs`).
 ///
 /// # Examples
 ///
@@ -335,8 +681,8 @@ fn scale_latency(lat: Micros, skew: f64) -> Micros {
 /// ```
 /// use concur::agent::WorkloadGenerator;
 /// use concur::cluster::{make_router, run_sharded};
-/// use concur::config::{presets, EngineConfig, FaultPlan, PrefixTierConfig, RouterKind,
-///                      TransportConfig, WorkloadConfig};
+/// use concur::config::{presets, EngineConfig, FaultPlan, FaultRateConfig, OpenLoopConfig,
+///                      PrefixTierConfig, RouterKind, TransportConfig, WorkloadConfig};
 /// use concur::coordinator::concur_default;
 /// use concur::costmodel::CostModel;
 /// use concur::engine::SimEngine;
@@ -357,6 +703,8 @@ fn scale_latency(lat: Micros, skew: f64) -> Micros {
 ///     &[],
 ///     &PrefixTierConfig::default(),
 ///     &TransportConfig::default(),
+///     &OpenLoopConfig::default(),
+///     &FaultRateConfig::default(),
 /// )
 /// .unwrap();
 /// assert_eq!(result.agents_finished, 4);
@@ -372,10 +720,14 @@ pub fn run_sharded(
     tool_skew: &[f64],
     prefix_tier: &PrefixTierConfig,
     transport_cfg: &TransportConfig,
+    open_loop: &OpenLoopConfig,
+    fault_rates: &FaultRateConfig,
 ) -> Result<RunResult> {
     assert!(!engines.is_empty(), "cluster needs at least one replica");
     let n = engines.len();
     faults.validate(n)?;
+    open_loop.validate()?;
+    fault_rates.validate()?;
     assert!(
         tool_skew.is_empty() || tool_skew.len() == n,
         "tool_skew must be empty or one multiplier per replica"
@@ -391,17 +743,56 @@ pub fn run_sharded(
         }
     }
 
-    let mut slots = crate::coordinator::SlotManager::new();
+    let mut slots = SlotManager::new();
     let total_gen: u64 = agents.iter().map(|a| a.total_gen_tokens()).sum();
     let agents_total = agents.len();
+    let ol = open_loop.enabled;
     // Agent ids from the workload generator are dense 0..n — index by id
     // for O(1) access on the hot path.
     let mut fleet: Vec<Agent> = agents;
     fleet.sort_by_key(|a| a.id.0);
     for (i, a) in fleet.iter().enumerate() {
         assert_eq!(a.id.0 as usize, i, "driver requires dense agent ids");
-        slots.register(a.id);
+        if !ol {
+            // Closed batch: the whole fleet is present at t=0.  Open
+            // loop registers each session at its arrival instant.
+            slots.register(a.id);
+        }
     }
+    // Open-loop arrival schedule: (instant, id), chronological.
+    let arrivals: Vec<(Micros, AgentId)> = if ol {
+        let mut v: Vec<(Micros, AgentId)> = fleet.iter().map(|a| (a.arrival_at, a.id)).collect();
+        v.sort_unstable_by_key(|&(t, id)| (t, id.0));
+        v
+    } else {
+        Vec::new()
+    };
+    let mut next_arrival = 0usize;
+    // Per-session instant its current turn became ready (its arrival, or
+    // the latest tool completion): the base of TTFT / per-turn latency
+    // and of the patience clock.  A kill-requeue deliberately leaves it
+    // alone — the lost step's wait counts against the SLO.
+    let mut turn_ready: Vec<Micros> = vec![Micros::ZERO; agents_total];
+    let mut in_slo: Vec<bool> = vec![true; agents_total];
+    let mut olstats = OpenLoopStats::default();
+    // Sessions that left without finishing (shed + abandoned).
+    let mut terminated_early = 0usize;
+    let slo_ttft = Micros::from_secs_f64(open_loop.slo_ttft_s);
+    let slo_step = Micros::from_secs_f64(open_loop.slo_step_s);
+    let mut governor: Option<OverloadGovernor> = if ol && open_loop.shed {
+        Some(OverloadGovernor::new(open_loop.shed_on_ratio, open_loop.shed_off_ratio))
+    } else {
+        None
+    };
+    // Latency shards are recorded per serving replica and merged at
+    // assembly (`Histogram::merge` keeps percentiles exact because every
+    // histogram shares one bucket layout).
+    let mut ttft_shards: Vec<Histogram> =
+        if ol { (0..n).map(|_| Histogram::new("ttft")).collect() } else { Vec::new() };
+    let mut step_shards: Vec<Histogram> =
+        if ol { (0..n).map(|_| Histogram::new("step_latency")).collect() } else { Vec::new() };
+    let mut sampler: Option<FaultSampler> =
+        if fault_rates.enabled { Some(FaultSampler::new(fault_rates, n)) } else { None };
     fn agent(fleet: &mut [Agent], id: AgentId) -> &mut Agent {
         &mut fleet[id.0 as usize]
     }
@@ -460,153 +851,54 @@ pub fn run_sharded(
     loop {
         let now = clock.now();
 
+        // 0a. Open-loop arrivals due now join the admission queue — or,
+        //     for low-priority sessions while the governor is shedding,
+        //     are rejected at the door.
+        while let Some(&(at, aid)) = arrivals.get(next_arrival).filter(|e| e.0 <= now) {
+            next_arrival += 1;
+            olstats.arrived += 1;
+            let i = aid.0 as usize;
+            turn_ready[i] = at;
+            let low = fleet[i].priority == Priority::Low;
+            if low && governor.as_ref().is_some_and(|g| g.is_shedding()) {
+                olstats.shed += 1;
+                terminated_early += 1;
+            } else if low && open_loop.priority_admission {
+                slots.register_low(aid);
+            } else {
+                slots.register(aid);
+            }
+        }
+
         // 0. Apply scripted fault transitions due now.  Ties with an
         //    iteration completing at this instant resolve fault-first: a
         //    replica that dies at t loses an iteration finishing at t.
         while let Some(ev) = faults.events().get(next_fault).filter(|e| e.at <= now) {
             let ev = *ev;
             next_fault += 1;
-            let r = ev.replica;
-            match ev.kind {
-                FaultKind::Kill => {
-                    // The iteration in flight dies with the replica.
-                    inflight[r] = None;
-                    stagnant[r] = 0;
-                    for (i, slot) in assignment.iter_mut().enumerate() {
-                        if *slot != Some(r) {
-                            continue;
-                        }
-                        // Replica pin cleared for everyone who lived here.
-                        *slot = None;
-                        let a = &mut fleet[i];
-                        if a.phase == AgentPhase::Generating {
-                            // Step in flight lost: back to Ready, slot
-                            // revoked, re-enter the admission queue cold.
-                            a.on_replica_failed();
-                            slots.requeue(a.id);
-                            fstats.requeued_agents += 1;
-                        }
-                    }
-                    footprint[r] = 0;
-                    engines[r].clear_state();
-                    if let Some(t) = tier.as_mut() {
-                        // The broadcast pins died with the radix tree; a
-                        // revive re-ships on the next maintenance pass.
-                        t.on_replica_wiped(r);
-                    }
-                    if let Some(tp) = transport.as_mut() {
-                        // In-flight transfers to the dead replica have
-                        // nowhere to land.
-                        tp.cancel_dst(r);
-                    }
-                    state[r] = ReplicaState::Dead;
-                    fstats.kills += 1;
-                }
-                FaultKind::Drain => {
-                    state[r] = ReplicaState::Draining;
-                    fstats.drains += 1;
-                    // KV handoff: before the drain's eventual refill wipes
-                    // this replica, checkpoint its hottest agents' warm
-                    // contexts through the transport to the replica each
-                    // agent is re-homed to, so they resume warm instead of
-                    // re-prefilling from scratch (heat-ranked, budget- and
-                    // agent-capped).  Routing the handoff *now* both picks
-                    // and — for stateful routers — pins the destination,
-                    // so the agent's next step boundary follows its KV.
-                    if transport.as_ref().is_some_and(|tp| tp.cfg.drain_handoff) {
-                        let tp = transport.as_mut().expect("checked above");
-                        let mut cands: Vec<(AgentId, Micros, u64)> = Vec::new();
-                        for (i, slot) in assignment.iter().enumerate() {
-                            if *slot != Some(r) || fleet[i].is_done() {
-                                continue;
-                            }
-                            let (gpu, cpu) = engines[r].tree().peek_prefix(fleet[i].context());
-                            let warm = gpu + cpu;
-                            if warm > 0 {
-                                let heat = engines[r].agent_heat(fleet[i].id);
-                                cands.push((fleet[i].id, heat.unwrap_or(Micros::ZERO), warm));
-                            }
-                        }
-                        // Hottest first (most recently decoded = most KV
-                        // still worth moving); ties break on agent id.
-                        cands.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-                        let mut budget = tp.cfg.handoff_budget_tokens;
-                        let mut agents_left = tp.cfg.handoff_max_agents;
-                        // Tokens already shipped per destination this
-                        // drain: folded into the loads the router sees, so
-                        // one drain does not herd its whole cohort onto
-                        // the replica that was least loaded at the first
-                        // decision (the normal step-boundary path gets
-                        // this for free from footprint updates).
-                        let mut incoming: Vec<u64> = vec![0; n];
-                        for (aid, _, warm) in cands {
-                            if agents_left == 0 || budget == 0 {
-                                break;
-                            }
-                            if warm > budget {
-                                continue; // a smaller context may still fit
-                            }
-                            let a = &fleet[aid.0 as usize];
-                            let context = a.context()[..warm as usize].to_vec();
-                            let bp =
-                                tier.as_ref().map_or(0, |t| t.broadcast_prefix_len(&context));
-                            let ctx_len = a.context_len() as u64;
-                            let dst = route_to(
-                                router, engines, &state, &footprint, &incoming, &mut loads,
-                                Some(r), aid, ctx_len, bp, now,
-                            );
-                            // Only what the destination lacks entirely
-                            // crosses the wire: its broadcast-pinned copy
-                            // of the shared prefix (and any other resident
-                            // head) stays put, exactly like delta
-                            // shipping.  Its CPU-tier coverage reloads
-                            // locally — off the fabric, but the write-in
-                            // leg below still pays for the promotion
-                            // (nothing about a handoff is free).
-                            let (dgpu, dcpu) = engines[dst].tree().peek_prefix(&context);
-                            let wire = warm.saturating_sub(dgpu + dcpu);
-                            // Host-link legs at issue: the drainer reads
-                            // out what leaves it; the target writes in
-                            // everything it must materialise (wire + its
-                            // own CPU-tier promotions).  Fabric inside
-                            // `ship_*`.
-                            let src_done = engines[r].charge_link_transfer(wire, now);
-                            let dst_write = warm.saturating_sub(dgpu);
-                            let dst_done = engines[dst].charge_link_transfer(dst_write, now);
-                            let host_done = src_done.max(dst_done);
-                            budget -= warm;
-                            agents_left -= 1;
-                            incoming[dst] += warm;
-                            fstats.handoff_agents += 1;
-                            fstats.handoff_tokens += wire;
-                            if wire > 0 && tp.cfg.delayed_visibility {
-                                tp.ship_handoff(r, dst, wire, host_done, now, aid, context);
-                            } else {
-                                // Instantaneous visibility — or nothing to
-                                // move over the fabric at all (the state
-                                // is already node-local at the target):
-                                // the landing happens now, the link time
-                                // above is still paid.
-                                if wire > 0 {
-                                    let k = TransferKind::Handoff;
-                                    let done =
-                                        tp.ship_instant(k, r, dst, wire, host_done, now);
-                                    handoff_time += done.saturating_sub(now);
-                                } else {
-                                    handoff_time += host_done.saturating_sub(now);
-                                }
-                                engines[dst].install_handoff_context(aid, &context, now);
-                            }
-                        }
-                    }
-                }
-                FaultKind::Revive => {
-                    // State was wiped at the kill; just rejoin.
-                    state[r] = ReplicaState::Alive;
-                    fstats.revives += 1;
+            apply_fault_event(
+                ev.kind, ev.replica, now, engines, router, &mut state, &mut fleet,
+                &mut assignment, &mut footprint, &mut slots, &mut inflight, &mut stagnant,
+                &mut tier, &mut transport, &mut loads, &mut fstats, &mut handoff_time,
+            );
+            alive_series.record(now, admissible_count(&state) as f64);
+        }
+
+        // 0b. Stochastic faults due now, replicas in index order (after
+        //     the script: scripted events win same-instant ties, and the
+        //     sampler's viability check sees their outcome).
+        if let Some(fs) = sampler.as_mut() {
+            for r in 0..n {
+                while let Some(kind) = fs.next_due(r, now, &state, &mut fstats) {
+                    apply_fault_event(
+                        kind, r, now, engines, router, &mut state, &mut fleet,
+                        &mut assignment, &mut footprint, &mut slots, &mut inflight,
+                        &mut stagnant, &mut tier, &mut transport, &mut loads, &mut fstats,
+                        &mut handoff_time,
+                    );
+                    alive_series.record(now, admissible_count(&state) as f64);
                 }
             }
-            alive_series.record(now, admissible_count(&state) as f64);
         }
 
         // 1. Land replica iterations completing now: apply finished
@@ -619,9 +911,28 @@ pub fn run_sharded(
             let fin = slot.take().expect("checked above");
             debug_assert_eq!(fin.done_at, now, "completion skipped by the clock");
             for f in fin.finished {
+                let i = f.agent.0 as usize;
                 let a = agent(&mut fleet, f.agent);
                 let before = a.context_len() as u64;
-                let ar = assignment[f.agent.0 as usize].expect("agent never assigned");
+                let ar = assignment[i].expect("agent never assigned");
+                if ol {
+                    // Turn latency: ready (arrival / tool return) to the
+                    // step's completion — queueing, recompute and decode
+                    // all count against the SLO.  A session's first turn
+                    // is its TTFT; later turns meet the per-step bound.
+                    let lat = now.saturating_sub(turn_ready[i]);
+                    let first_turn = a.steps_done() == 0;
+                    let bound = if first_turn { slo_ttft } else { slo_step };
+                    if first_turn {
+                        ttft_shards[ar].record(lat);
+                    } else {
+                        step_shards[ar].record(lat);
+                    }
+                    if lat > bound {
+                        in_slo[i] = false;
+                        olstats.turn_violations += 1;
+                    }
+                }
                 match a.on_step_finished(&f.output, now) {
                     Some(tool_latency) => {
                         // Still active: account its context growth.
@@ -639,6 +950,25 @@ pub fn run_sharded(
                             gen_tokens: a.total_gen_tokens(),
                             finished_at: now,
                         });
+                        if ol {
+                            // Goodput-under-SLO: a completed session
+                            // counts only if every turn met its bound.
+                            let tokens = a.total_gen_tokens();
+                            match a.priority {
+                                Priority::High => {
+                                    olstats.finished_high += 1;
+                                    if in_slo[i] {
+                                        olstats.goodput_high += tokens;
+                                    }
+                                }
+                                Priority::Low => {
+                                    olstats.finished_low += 1;
+                                    if in_slo[i] {
+                                        olstats.goodput_low += tokens;
+                                    }
+                                }
+                            }
+                        }
                     }
                 }
             }
@@ -714,6 +1044,11 @@ pub fn run_sharded(
 
         // 2. Deliver due tool completions; paused agents wait for slots.
         while let Some((_, aid)) = events.pop_due(now) {
+            if ol {
+                // The session's next turn is ready from this instant:
+                // TTFT/step-latency and patience clocks restart here.
+                turn_ready[aid.0 as usize] = now;
+            }
             let a = agent(&mut fleet, aid);
             a.on_tool_done();
             if slots.on_step_boundary(aid, controller.window()) == BoundaryDecision::Continue {
@@ -746,6 +1081,33 @@ pub fn run_sharded(
             }
             // (Paused with no assignment: its ledger entry already went
             // down with the killed replica.)
+        }
+
+        // 2b. Open-loop patience: a waiting session whose current turn
+        //     has out-waited its patience abandons.  Only waiters can
+        //     expire — an in-flight step always completes (and its
+        //     latency is still recorded against the SLO above).
+        if ol {
+            let expired = slots.take_expired(|aid| {
+                let i = aid.0 as usize;
+                fleet[i].patience.is_some_and(|p| now > turn_ready[i] + p)
+            });
+            olstats.abandoned += expired.len() as u64;
+            terminated_early += expired.len();
+        }
+
+        // 2c. Overload governor: observe the admission backlog against
+        //     the window; on the trip into shedding, reject the queued
+        //     low-priority sessions wholesale (arrivals are then shed at
+        //     the door until it recovers — hysteresis in the governor).
+        if let Some(g) = governor.as_mut() {
+            let was_shedding = g.is_shedding();
+            if g.observe(slots.pending_count(), controller.window()) && !was_shedding {
+                olstats.governor_trips += 1;
+                let shed = slots.shed_low_fresh();
+                olstats.shed += shed.len() as u64;
+                terminated_early += shed.len();
+            }
         }
 
         // 3. Grant freed slots (resume paused LIFO, admit fresh FIFO).
@@ -817,17 +1179,22 @@ pub fn run_sharded(
         }
 
         // 5. Advance to the earliest of: an iteration boundary, a
-        //    scripted fault instant, a transport completion, or (when the
-        //    whole fleet is idle) the next tool completion.  Idle gaps
-        //    count as tool wait.
-        if finished_agents == agents_total {
+        //    scripted or sampled fault instant, an open-loop arrival, a
+        //    transport completion, or (when the whole fleet is idle) the
+        //    next tool completion.  Idle gaps count as tool wait.
+        if finished_agents + terminated_early == agents_total {
             break; // done; trailing fault events and transfers are moot
         }
         let next_boundary = inflight.iter().flatten().map(|f| f.done_at).min();
         let next_fault_t = faults.events().get(next_fault).map(|e| e.at);
+        let next_stoch = sampler.as_ref().and_then(|s| s.next_event_at());
+        let next_arr = arrivals.get(next_arrival).map(|e| e.0);
         let next_xfer = transport.as_ref().and_then(|t| t.next_completion());
         let idle = next_boundary.is_none();
-        let mut target = [next_boundary, next_fault_t, next_xfer].into_iter().flatten().min();
+        let mut target = [next_boundary, next_fault_t, next_stoch, next_arr, next_xfer]
+            .into_iter()
+            .flatten()
+            .min();
         if idle {
             if let Some(t) = events.peek_time() {
                 target = Some(target.map_or(t, |x| x.min(t)));
@@ -844,10 +1211,25 @@ pub fn run_sharded(
         }
     }
 
-    if finished_agents != agents_total {
+    if finished_agents + terminated_early != agents_total {
         return Err(ConcurError::engine(format!(
-            "run ended with {finished_agents}/{agents_total} agents finished"
+            "run ended with {finished_agents}/{agents_total} agents finished \
+             ({} shed, {} abandoned)",
+            olstats.shed, olstats.abandoned,
         )));
+    }
+    // Open-loop throughput counts what was actually generated: shed and
+    // abandoned sessions contribute the steps they completed, nothing
+    // more.  Closed batch keeps the exact upfront plan total.
+    let total_gen: u64 =
+        if ol { fleet.iter().map(|a| a.gen_tokens_done()).sum() } else { total_gen };
+    let mut ttft = Histogram::new("ttft");
+    let mut step_latency = Histogram::new("step_latency");
+    for h in &ttft_shards {
+        ttft.merge(h);
+    }
+    for h in &step_shards {
+        step_latency.merge(h);
     }
 
     let total_time = clock.now();
@@ -896,6 +1278,9 @@ pub fn run_sharded(
         prefix_tier: tier.as_ref().map(|t| t.stats()).unwrap_or_default(),
         broadcast_series,
         transport: transport.as_ref().map(|t| t.stats()).unwrap_or_default(),
+        ttft,
+        step_latency,
+        open_loop: olstats,
     })
 }
 
@@ -1033,6 +1418,73 @@ mod tests {
         let off = run(&cluster_job(3, RouterKind::CacheAffinity));
         assert_eq!(off.prefix_tier, PrefixTierStats::default());
         assert!(off.broadcast_series.is_empty());
+    }
+
+    #[test]
+    fn open_loop_run_serves_arrivals_and_reports_slo_stats() {
+        use crate::config::OpenLoopConfig;
+        let mut job = cluster_job(2, RouterKind::CacheAffinity);
+        job.topology.open_loop =
+            OpenLoopConfig { arrival_rate_per_s: 2.0, ..OpenLoopConfig::on() };
+        let agents =
+            crate::agent::open_loop_fleet(&job.workload, &job.topology.open_loop);
+        let controller = make_controller(&job.scheduler);
+        let r = ClusterCoordinator::new(&job).run(agents, controller).unwrap();
+        assert_eq!(r.open_loop.arrived, 12);
+        let gone = (r.open_loop.shed + r.open_loop.abandoned) as usize;
+        assert_eq!(r.agents_finished + gone, 12);
+        assert_eq!(
+            r.open_loop.finished_high + r.open_loop.finished_low,
+            r.agents_finished as u64
+        );
+        // Every finished session has exactly one TTFT sample (abandoned
+        // ones have one only if their first turn ever landed); later
+        // turns land in the step-latency histogram.
+        assert!(r.ttft.count() >= r.agents_finished as u64);
+        assert!(r.ttft.count() <= 12);
+        assert!(r.step_latency.count() > 0);
+        // The batch no longer starts whole: the first arrival is after
+        // t=0, so the makespan includes arrival spread.
+        assert!(r.total_time > Micros::ZERO);
+        // Closed-batch runs report the feature fully dormant.
+        let closed = run(&cluster_job(2, RouterKind::CacheAffinity));
+        assert_eq!(closed.open_loop, OpenLoopStats::default());
+        assert_eq!(closed.ttft.count(), 0);
+        assert_eq!(closed.step_latency.count(), 0);
+    }
+
+    #[test]
+    fn stochastic_faults_inject_and_replay_bit_identically() {
+        use crate::config::FaultRateConfig;
+        let mut job = cluster_job(3, RouterKind::Rebalance);
+        job.topology.fault_rates =
+            FaultRateConfig { mtbf_s: 3.0, mttr_s: 1.5, ..FaultRateConfig::on() };
+        let a = run(&job);
+        let b = run(&job);
+        assert_eq!(a.agents_finished, 12);
+        // MTBF far below the makespan: the sampler must have acted.
+        assert!(
+            a.faults.stochastic_injected + a.faults.stochastic_suppressed > 0,
+            "sampler never fired: {:?}",
+            a.faults
+        );
+        assert_eq!(a.faults.kills + a.faults.drains + a.faults.revives,
+                   a.faults.stochastic_injected);
+        // Fixed seed ⇒ bit-identical replay.
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.engine_steps, b.engine_steps);
+        assert!(a.hit_rate.to_bits() == b.hit_rate.to_bits());
+        // A different fault seed yields a different fault tape.
+        let mut job2 = job.clone();
+        job2.topology.fault_rates.seed = 777;
+        let c = run(&job2);
+        assert_eq!(c.agents_finished, 12);
+        assert_ne!(
+            (a.faults.kills, a.faults.drains, a.total_time),
+            (c.faults.kills, c.faults.drains, c.total_time),
+            "different fault seeds should perturb the run"
+        );
     }
 
     #[test]

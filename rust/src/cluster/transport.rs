@@ -27,8 +27,12 @@
 //!
 //! Transfers whose destination is wiped (kill, drain-refill) are
 //! [cancelled](Transport::cancel_dst) — the payload has nowhere to land.
-//! A transfer whose *source* dies mid-flight still completes: the bytes
-//! were read out at issue.  Completions pop in `(done, id)` order, so
+//! A *broadcast* whose source dies mid-flight still completes (the
+//! immutable prefix was read out at issue), but a **handoff** whose
+//! source is killed mid-drain is
+//! [cancelled](Transport::cancel_src_handoffs): the checkpoint dies with
+//! the replica and the displaced agent re-enters admission cold through
+//! the ordinary kill path.  Completions pop in `(done, id)` order, so
 //! runs are deterministic for any schedule.
 
 use crate::config::TransportConfig;
@@ -270,6 +274,22 @@ impl Transport {
         self.inflight.retain(|t| t.dst != replica);
         self.stats.cancelled += (before - self.inflight.len()) as u64;
     }
+
+    /// Void every in-flight **handoff** sourced from `replica`: a kill
+    /// landing on a replica mid drain-handoff tears down its DMA engines,
+    /// so a checkpoint still crossing the fabric never materialises at
+    /// the destination (delivering it would resurrect state the kill is
+    /// defined to destroy, and the displaced agent re-enters the
+    /// admission queue cold via the normal kill path — exactly once).
+    /// Broadcast installs are left alone: their payload is an immutable
+    /// shared prefix fully read out at issue, valid wherever it lands.
+    pub fn cancel_src_handoffs(&mut self, replica: usize) {
+        let before = self.inflight.len();
+        self.inflight.retain(|t| {
+            !(t.src == replica && t.kind() == TransferKind::Handoff)
+        });
+        self.stats.cancelled += (before - self.inflight.len()) as u64;
+    }
 }
 
 #[cfg(test)]
@@ -341,6 +361,22 @@ mod tests {
         assert_eq!(due.len(), 1);
         assert_eq!(due[0].dst, 2);
         assert_eq!(due[0].kind(), TransferKind::Handoff);
+    }
+
+    #[test]
+    fn cancel_src_handoffs_spares_broadcasts_and_other_sources() {
+        let mut t = transport();
+        let (_, d1) = t.ship_broadcast(0, 1, 64, Micros::ZERO, Micros::ZERO);
+        let (_, d2) =
+            t.ship_handoff(0, 2, 64, Micros::ZERO, Micros::ZERO, AgentId(1), vec![9; 64]);
+        let (_, d3) =
+            t.ship_handoff(1, 2, 64, Micros::ZERO, Micros::ZERO, AgentId(2), vec![8; 64]);
+        t.cancel_src_handoffs(0);
+        assert_eq!(t.stats().cancelled, 1, "only replica 0's handoff dies");
+        let due = t.pop_due(d1.max(d2).max(d3));
+        assert_eq!(due.len(), 2);
+        assert!(due.iter().any(|x| x.kind() == TransferKind::Broadcast && x.src == 0));
+        assert!(due.iter().any(|x| x.kind() == TransferKind::Handoff && x.src == 1));
     }
 
     #[test]

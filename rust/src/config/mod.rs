@@ -7,7 +7,7 @@
 pub mod faults;
 pub mod presets;
 
-pub use faults::{FaultEvent, FaultKind, FaultPlan};
+pub use faults::{FaultEvent, FaultKind, FaultPlan, FaultRateConfig};
 
 use crate::core::json::Value;
 use crate::core::{ConcurError, Micros, Result};
@@ -226,6 +226,148 @@ impl TransportConfig {
     }
 }
 
+/// Open-loop production traffic (`agent::arrivals` + the cluster loop).
+/// When enabled, the fleet of multi-turn sessions no longer starts as a
+/// closed batch: sessions *arrive* on a seeded Poisson process with a
+/// diurnal rate curve, idle a lognormal think time between turns (on top
+/// of tool latency), carry a tenant priority class, and **abandon** when
+/// a turn has waited longer than their patience.  Latency becomes
+/// first-class: TTFT and per-turn latency land in log-bucketed
+/// histograms, and sessions that finish with every turn inside the SLO
+/// count as goodput.  Overload shedding (with hysteresis) and
+/// priority-aware admission are governed here too.  Disabled by default
+/// and differential-tested inert: the closed-batch path is bit-identical
+/// to the pre-open-loop loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpenLoopConfig {
+    pub enabled: bool,
+    /// Mean session arrival rate λ (sessions per second of simulated
+    /// time), before diurnal modulation.
+    pub arrival_rate_per_s: f64,
+    /// Diurnal modulation amplitude A in [0,1]: the instantaneous rate is
+    /// `λ · (1 + A·sin(2πt/P))`.  0 = homogeneous Poisson.
+    pub diurnal_amplitude: f64,
+    /// Diurnal period P in seconds.
+    pub diurnal_period_s: f64,
+    /// Think time idled between a session's turns, lognormal(mu, sigma)
+    /// seconds added to each turn's tool latency.
+    pub think_mu: f64,
+    pub think_sigma: f64,
+    /// A session abandons when one of its turns has waited longer than
+    /// this (seconds) without completing.  0 = infinitely patient.
+    pub patience_s: f64,
+    /// Fraction of sessions drawn into the High priority class.
+    pub high_priority_share: f64,
+    /// SLO on time-to-first-token (arrival → first turn complete), secs.
+    pub slo_ttft_s: f64,
+    /// SLO on every later turn's latency (turn ready → complete), secs.
+    pub slo_step_s: f64,
+    /// Class-aware admission: High-priority sessions are admitted ahead
+    /// of Low-priority ones.  Off = plain FIFO arrival order (the
+    /// baseline the acceptance test compares against).
+    pub priority_admission: bool,
+    /// Overload shedding: when the admission backlog exceeds
+    /// `shed_on_ratio × window`, Low-priority sessions that have not yet
+    /// started are rejected until the backlog falls below
+    /// `shed_off_ratio × window` (hysteresis, so shedding does not flap
+    /// across fault/revive boundaries).
+    pub shed: bool,
+    pub shed_on_ratio: f64,
+    pub shed_off_ratio: f64,
+    /// Seed of the arrival/class/think draws (independent of the
+    /// workload seed, so traffic timing can be swept against a fixed
+    /// session population).
+    pub seed: u64,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> OpenLoopConfig {
+        OpenLoopConfig {
+            enabled: false,
+            arrival_rate_per_s: 1.0,
+            diurnal_amplitude: 0.5,
+            diurnal_period_s: 120.0,
+            think_mu: 0.5, // e^0.5 ≈ 1.6 s median think time
+            think_sigma: 0.6,
+            patience_s: 60.0,
+            high_priority_share: 0.25,
+            slo_ttft_s: 30.0,
+            slo_step_s: 45.0,
+            priority_admission: true,
+            shed: true,
+            shed_on_ratio: 2.0,
+            shed_off_ratio: 1.0,
+            seed: 11,
+        }
+    }
+}
+
+impl OpenLoopConfig {
+    /// The default configuration with open-loop traffic switched on.
+    pub fn on() -> OpenLoopConfig {
+        OpenLoopConfig { enabled: true, ..OpenLoopConfig::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(()); // dormant knobs are valid, whatever they say
+        }
+        if !self.arrival_rate_per_s.is_finite() || self.arrival_rate_per_s <= 0.0 {
+            return Err(ConcurError::config(
+                "open_loop.arrival_rate_per_s must be finite and > 0",
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.diurnal_amplitude) {
+            return Err(ConcurError::config("open_loop.diurnal_amplitude must be in [0,1]"));
+        }
+        if self.diurnal_amplitude > 0.0
+            && (!self.diurnal_period_s.is_finite() || self.diurnal_period_s <= 0.0)
+        {
+            return Err(ConcurError::config(
+                "open_loop.diurnal_period_s must be finite and > 0 when \
+                 diurnal_amplitude > 0",
+            ));
+        }
+        if !self.think_sigma.is_finite() || self.think_sigma < 0.0 {
+            return Err(ConcurError::config("open_loop.think_sigma must be finite and >= 0"));
+        }
+        if !self.patience_s.is_finite() || self.patience_s < 0.0 {
+            return Err(ConcurError::config(
+                "open_loop.patience_s must be finite and >= 0 (0 = infinitely patient)",
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.high_priority_share) {
+            return Err(ConcurError::config(
+                "open_loop.high_priority_share must be in [0,1]",
+            ));
+        }
+        for (name, v) in [("slo_ttft_s", self.slo_ttft_s), ("slo_step_s", self.slo_step_s)] {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(ConcurError::config(format!(
+                    "open_loop.{name} must be finite and > 0"
+                )));
+            }
+        }
+        if self.shed {
+            if !self.shed_on_ratio.is_finite() || self.shed_on_ratio <= 0.0 {
+                return Err(ConcurError::config(
+                    "open_loop.shed_on_ratio must be finite and > 0",
+                ));
+            }
+            if !self.shed_off_ratio.is_finite()
+                || self.shed_off_ratio < 0.0
+                || self.shed_off_ratio >= self.shed_on_ratio
+            {
+                return Err(ConcurError::config(
+                    "open_loop.shed_off_ratio must satisfy 0 <= off < on \
+                     (the gap is the hysteresis band)",
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Data-parallel serving topology: how many engine replicas a job runs on
 /// (each with its own KV pool and radix cache), how agents are routed
 /// between them, which replica faults are scripted, and how tool latency
@@ -247,6 +389,12 @@ pub struct TopologyConfig {
     /// Asynchronous cross-replica KV transport (off by default = legacy
     /// instantaneous shipping and drop-on-drain).
     pub transport: TransportConfig,
+    /// Open-loop arrival traffic with SLO/priority/shedding semantics
+    /// (off by default = closed batch, all sessions present at t=0).
+    pub open_loop: OpenLoopConfig,
+    /// Stochastic MTBF/MTTR fault injection beside the scripted plan
+    /// (off by default = only `fault_plan` events fire).
+    pub fault_rates: FaultRateConfig,
 }
 
 impl Default for TopologyConfig {
@@ -258,6 +406,8 @@ impl Default for TopologyConfig {
             tool_skew: Vec::new(),
             prefix_tier: PrefixTierConfig::default(),
             transport: TransportConfig::default(),
+            open_loop: OpenLoopConfig::default(),
+            fault_rates: FaultRateConfig::default(),
         }
     }
 }
@@ -285,6 +435,8 @@ impl TopologyConfig {
         }
         self.prefix_tier.validate()?;
         self.transport.validate()?;
+        self.open_loop.validate()?;
+        self.fault_rates.validate()?;
         Ok(())
     }
 }
@@ -622,6 +774,53 @@ impl JobConfig {
                 ConcurError::config("transport.handoff_max_agents out of range (usize)")
             })?;
         }
+        let ol = t.get("open_loop");
+        if let Some(b) = ol.get("enabled").as_bool() {
+            topology.open_loop.enabled = b;
+        }
+        if let Some(x) = ol.get("arrival_rate_per_s").as_f64() {
+            topology.open_loop.arrival_rate_per_s = x;
+        }
+        if let Some(x) = ol.get("diurnal_amplitude").as_f64() {
+            topology.open_loop.diurnal_amplitude = x;
+        }
+        if let Some(x) = ol.get("diurnal_period_s").as_f64() {
+            topology.open_loop.diurnal_period_s = x;
+        }
+        if let Some(x) = ol.get("think_mu").as_f64() {
+            topology.open_loop.think_mu = x;
+        }
+        if let Some(x) = ol.get("think_sigma").as_f64() {
+            topology.open_loop.think_sigma = x;
+        }
+        if let Some(x) = ol.get("patience_s").as_f64() {
+            topology.open_loop.patience_s = x;
+        }
+        if let Some(x) = ol.get("high_priority_share").as_f64() {
+            topology.open_loop.high_priority_share = x;
+        }
+        if let Some(x) = ol.get("slo_ttft_s").as_f64() {
+            topology.open_loop.slo_ttft_s = x;
+        }
+        if let Some(x) = ol.get("slo_step_s").as_f64() {
+            topology.open_loop.slo_step_s = x;
+        }
+        if let Some(b) = ol.get("priority_admission").as_bool() {
+            topology.open_loop.priority_admission = b;
+        }
+        if let Some(b) = ol.get("shed").as_bool() {
+            topology.open_loop.shed = b;
+        }
+        if let Some(x) = ol.get("shed_on_ratio").as_f64() {
+            topology.open_loop.shed_on_ratio = x;
+        }
+        if let Some(x) = ol.get("shed_off_ratio").as_f64() {
+            topology.open_loop.shed_off_ratio = x;
+        }
+        if let Some(x) = ol.get("seed").as_u64() {
+            topology.open_loop.seed = x;
+        }
+        topology.fault_rates = FaultRateConfig::from_json(t.get("fault_rates"))?;
 
         let scheduler = match v.get("scheduler").as_str().unwrap_or("concur") {
             "sglang" | "uncontrolled" => SchedulerKind::Uncontrolled,
@@ -921,6 +1120,101 @@ mod tests {
         // Validation runs inside from_json: features without `enabled`.
         let bad = r#"{"topology": {"transport": {"delta_ship": true}}}"#;
         assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn open_loop_defaults_off_and_validates() {
+        let t = TopologyConfig::default();
+        assert!(!t.open_loop.enabled, "open-loop traffic must be opt-in");
+        assert!(!t.fault_rates.enabled, "stochastic faults must be opt-in");
+        t.validate().unwrap();
+        // Dormant nonsense knobs are valid while disabled...
+        let weird = TopologyConfig {
+            open_loop: OpenLoopConfig {
+                arrival_rate_per_s: -3.0,
+                shed_on_ratio: 0.0,
+                high_priority_share: 9.0,
+                ..OpenLoopConfig::default()
+            },
+            ..TopologyConfig::default()
+        };
+        weird.validate().unwrap();
+        // ...and rejected once enabled.
+        let mut on = weird;
+        on.open_loop.enabled = true;
+        assert!(on.validate().is_err());
+        OpenLoopConfig::on().validate().unwrap();
+        let mut bad = OpenLoopConfig::on();
+        bad.shed_off_ratio = bad.shed_on_ratio; // no hysteresis band
+        assert!(bad.validate().is_err());
+        let mut bad = OpenLoopConfig::on();
+        bad.slo_ttft_s = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = OpenLoopConfig::on();
+        bad.diurnal_amplitude = 1.5;
+        assert!(bad.validate().is_err());
+        // Patience 0 is legal: infinitely patient sessions never abandon.
+        let mut ok = OpenLoopConfig::on();
+        ok.patience_s = 0.0;
+        ok.validate().unwrap();
+    }
+
+    #[test]
+    fn json_config_parses_open_loop_and_fault_rates() {
+        let text = r#"{
+            "model": "qwen3-32b", "tp": 2,
+            "topology": {
+                "replicas": 3, "router": "rebalance",
+                "open_loop": {"enabled": true, "arrival_rate_per_s": 2.5,
+                               "diurnal_amplitude": 0.3, "diurnal_period_s": 90,
+                               "patience_s": 40, "high_priority_share": 0.4,
+                               "slo_ttft_s": 20, "slo_step_s": 35,
+                               "priority_admission": false, "shed": false,
+                               "seed": 77},
+                "fault_rates": {"enabled": true, "mtbf_s": 200, "mttr_s": 30}
+            }
+        }"#;
+        let job = JobConfig::from_json(&Value::parse(text).unwrap()).unwrap();
+        let ol = job.topology.open_loop;
+        assert!(ol.enabled);
+        assert_eq!(ol.arrival_rate_per_s, 2.5);
+        assert_eq!(ol.diurnal_amplitude, 0.3);
+        assert_eq!(ol.patience_s, 40.0);
+        assert_eq!(ol.high_priority_share, 0.4);
+        assert!(!ol.priority_admission && !ol.shed);
+        assert_eq!(ol.seed, 77);
+        assert_eq!(ol.think_mu, OpenLoopConfig::default().think_mu, "default preserved");
+        let fr = job.topology.fault_rates;
+        assert!(fr.enabled);
+        assert_eq!(fr.mtbf_s, 200.0);
+        assert_eq!(fr.mttr_s, 30.0);
+        assert_eq!(fr.drain_share, FaultRateConfig::default().drain_share);
+
+        // Validation runs inside from_json.
+        let bad = r#"{"topology": {"open_loop": {"enabled": true, "arrival_rate_per_s": 0}}}"#;
+        assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
+        let bad = r#"{"topology": {"fault_rates": {"enabled": true, "mtbf_s": -5}}}"#;
+        assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
+    }
+
+    /// The checked-in broken fixture fails at load time, and the error
+    /// names the offending fault event (kind + replica + instant), not a
+    /// downstream replay symptom.
+    #[test]
+    fn bad_fault_plan_fixture_fails_at_load_naming_the_event() {
+        let path = std::path::Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../examples/configs/bad_fault_plan.json"
+        ));
+        let err = JobConfig::from_json_file(path).unwrap_err().to_string();
+        assert!(err.contains("drain replica 9"), "{err}");
+        assert!(err.contains("topology has 4 replicas"), "{err}");
+        // The good sibling fixture still loads cleanly.
+        let good = std::path::Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../examples/configs/faulty_cluster.json"
+        ));
+        JobConfig::from_json_file(good).unwrap();
     }
 
     #[test]

@@ -111,6 +111,58 @@ impl AimdController {
     }
 }
 
+/// Hysteretic overload detector for open-loop admission (SLO shedding).
+///
+/// The AIMD window tracks what the fleet can *execute*; under open-loop
+/// traffic the backlog of sessions waiting for a slot can still grow
+/// without bound when arrivals outpace service.  The governor watches the
+/// backlog-to-window ratio and flips into the shedding state when it
+/// exceeds `on_ratio`, staying there until the ratio falls below
+/// `off_ratio` — the hysteresis band prevents admission flapping around a
+/// single threshold while the backlog oscillates with the diurnal curve.
+/// While shedding, low-priority arrivals are rejected at the door so the
+/// waiting time saved accrues to high-priority sessions (graceful
+/// degradation rather than uniform SLO collapse).
+#[derive(Debug, Clone)]
+pub struct OverloadGovernor {
+    on_ratio: f64,
+    off_ratio: f64,
+    shedding: bool,
+    /// Counters for tests / reports.
+    pub trips: u64,
+    pub recoveries: u64,
+}
+
+impl OverloadGovernor {
+    pub fn new(on_ratio: f64, off_ratio: f64) -> OverloadGovernor {
+        assert!(
+            on_ratio.is_finite() && off_ratio.is_finite() && off_ratio < on_ratio,
+            "governor needs a hysteresis band: off_ratio {off_ratio} < on_ratio {on_ratio}"
+        );
+        OverloadGovernor { on_ratio, off_ratio, shedding: false, trips: 0, recoveries: 0 }
+    }
+
+    /// Feed one observation of the waiting backlog against the current
+    /// admission window; returns the (possibly updated) shedding state.
+    pub fn observe(&mut self, backlog: usize, window: usize) -> bool {
+        let ratio = backlog as f64 / window.max(1) as f64;
+        if self.shedding {
+            if ratio < self.off_ratio {
+                self.shedding = false;
+                self.recoveries += 1;
+            }
+        } else if ratio > self.on_ratio {
+            self.shedding = true;
+            self.trips += 1;
+        }
+        self.shedding
+    }
+
+    pub fn is_shedding(&self) -> bool {
+        self.shedding
+    }
+}
+
 impl Controller for AimdController {
     fn name(&self) -> String {
         "concur".into()
@@ -303,6 +355,27 @@ mod tests {
             step(&mut c, 0.35, 0.5);
         }
         assert_eq!(c.window_f(), w1);
+    }
+
+    #[test]
+    fn governor_hysteresis_prevents_flapping() {
+        let mut g = OverloadGovernor::new(2.0, 1.0);
+        assert!(!g.observe(10, 8)); // ratio 1.25: inside the band, stays off
+        assert!(g.observe(20, 8)); // ratio 2.5 > 2.0: trips
+        // Back inside the band: a plain threshold would flap here.
+        assert!(g.observe(12, 8)); // ratio 1.5: still shedding
+        assert!(g.observe(20, 8)); // re-exceeding while on is not a new trip
+        assert!(!g.observe(6, 8)); // ratio 0.75 < 1.0: recovers
+        assert!(!g.observe(12, 8)); // 1.5 again: off until > on_ratio
+        assert_eq!((g.trips, g.recoveries), (1, 1));
+        // A dead fleet (window 0) treats the backlog against window 1.
+        assert!(g.observe(3, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "hysteresis band")]
+    fn governor_rejects_inverted_band() {
+        OverloadGovernor::new(1.0, 2.0);
     }
 
     #[test]

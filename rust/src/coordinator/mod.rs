@@ -28,7 +28,7 @@
 pub mod aimd;
 pub mod slots;
 
-pub use aimd::AimdController;
+pub use aimd::{AimdController, OverloadGovernor};
 pub use slots::SlotManager;
 
 use crate::config::{AimdParams, SchedulerKind};

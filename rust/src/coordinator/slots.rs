@@ -27,6 +27,10 @@ pub struct SlotManager {
     paused: Vec<AgentId>,
     /// Never-admitted agents, FIFO.
     fresh: VecDeque<AgentId>,
+    /// Never-admitted low-priority agents (open-loop priority admission),
+    /// FIFO behind `fresh`.  Always empty in closed-batch runs, so the
+    /// closed admission order is untouched.
+    fresh_low: VecDeque<AgentId>,
     pub admissions: u64,
     pub pauses: u64,
     pub resumes: u64,
@@ -42,12 +46,18 @@ impl SlotManager {
         self.fresh.push_back(agent);
     }
 
+    /// Register a low-priority agent: admitted only once every paused
+    /// and regular fresh agent has a slot (open-loop priority admission).
+    pub fn register_low(&mut self, agent: AgentId) {
+        self.fresh_low.push_back(agent);
+    }
+
     pub fn active_count(&self) -> usize {
         self.active.len()
     }
 
     pub fn pending_count(&self) -> usize {
-        self.paused.len() + self.fresh.len()
+        self.paused.len() + self.fresh.len() + self.fresh_low.len()
     }
 
     pub fn is_active(&self, agent: AgentId) -> bool {
@@ -91,7 +101,8 @@ impl SlotManager {
     }
 
     /// Grant slots up to `window`, returning agents to (re)start, paused
-    /// agents first (LIFO), then fresh agents (FIFO).
+    /// agents first (LIFO), then fresh agents (FIFO), then low-priority
+    /// fresh agents (FIFO).
     pub fn grant_up_to(&mut self, window: usize) -> Vec<AgentId> {
         let mut granted = Vec::new();
         while self.active.len() < window {
@@ -99,6 +110,9 @@ impl SlotManager {
                 self.resumes += 1;
                 Some(a)
             } else if let Some(a) = self.fresh.pop_front() {
+                self.admissions += 1;
+                Some(a)
+            } else if let Some(a) = self.fresh_low.pop_front() {
                 self.admissions += 1;
                 Some(a)
             } else {
@@ -109,6 +123,32 @@ impl SlotManager {
             granted.push(a);
         }
         granted
+    }
+
+    /// Remove every *waiting* agent (paused or fresh — never one with a
+    /// step in flight) for which `expired` holds: open-loop abandonment.
+    /// Returns the removed ids in queue order.
+    pub fn take_expired(&mut self, expired: impl Fn(AgentId) -> bool) -> Vec<AgentId> {
+        let mut gone = Vec::new();
+        let mut keep = |a: AgentId| {
+            if expired(a) {
+                gone.push(a);
+                false
+            } else {
+                true
+            }
+        };
+        self.paused.retain(|&a| keep(a));
+        self.fresh.retain(|&a| keep(a));
+        self.fresh_low.retain(|&a| keep(a));
+        gone
+    }
+
+    /// Drain the whole low-priority fresh queue — the overload governor
+    /// has decided the fleet cannot serve it within SLO.  Returns the
+    /// shed ids in queue order.
+    pub fn shed_low_fresh(&mut self) -> Vec<AgentId> {
+        self.fresh_low.drain(..).collect()
     }
 }
 
@@ -191,6 +231,49 @@ mod tests {
         // A requeue is neither a pause nor a resume.
         assert_eq!(s.pauses, 0);
         assert_eq!(s.resumes, 0);
+    }
+
+    #[test]
+    fn low_priority_fresh_waits_behind_everyone() {
+        let mut s = SlotManager::new();
+        s.register_low(AgentId(0)); // arrives first, but low priority
+        s.register(AgentId(1));
+        s.register(AgentId(2));
+        assert_eq!(s.grant_up_to(2), ids(&[1, 2]));
+        s.on_step_boundary(AgentId(1), 1); // paused: [1]
+        // Paused high beats the queued low even after a window regrowth.
+        assert_eq!(s.grant_up_to(3), ids(&[1, 0]));
+        assert_eq!(s.pending_count(), 0);
+    }
+
+    #[test]
+    fn take_expired_only_touches_waiters() {
+        let mut s = SlotManager::new();
+        for i in 0..4 {
+            s.register(AgentId(i));
+        }
+        s.register_low(AgentId(4));
+        s.grant_up_to(2); // 0,1 active; 2,3 fresh; 4 fresh_low
+        s.on_step_boundary(AgentId(0), 1); // paused: [0]
+        let gone = s.take_expired(|a| a.0 != 1);
+        // Active agent 1 is untouched; every waiter matching the
+        // predicate is removed, queue order within each pool.
+        assert_eq!(gone, ids(&[0, 2, 3, 4]));
+        assert_eq!(s.active_count(), 1);
+        assert_eq!(s.pending_count(), 0);
+        assert!(s.is_active(AgentId(1)));
+    }
+
+    #[test]
+    fn shedding_drains_only_the_low_queue() {
+        let mut s = SlotManager::new();
+        s.register(AgentId(0));
+        s.register_low(AgentId(1));
+        s.register_low(AgentId(2));
+        assert_eq!(s.shed_low_fresh(), ids(&[1, 2]));
+        assert_eq!(s.shed_low_fresh(), ids(&[]));
+        assert_eq!(s.pending_count(), 1);
+        assert_eq!(s.grant_up_to(4), ids(&[0]));
     }
 
     #[test]

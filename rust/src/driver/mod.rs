@@ -5,17 +5,24 @@
 //! and figures need: end-to-end latency, lifetime hit rate, usage/hit-rate
 //! time series, the latency breakdown and controller window trajectory.
 //!
-//! All agents are submitted at t=0 (offline batch).  The event loop lives
-//! in [`crate::cluster::run_sharded`]: a job runs on
+//! All agents are submitted at t=0 (offline batch) unless the job's
+//! `topology.open_loop` is enabled, in which case the fleet arrives over
+//! a seeded Poisson process (see [`crate::agent::open_loop_fleet`]).  The
+//! event loop lives in [`crate::cluster::run_sharded`]: a job runs on
 //! `job.topology.replicas` data-parallel engine replicas — with the
 //! topology's scripted fault plan and per-replica tool-latency skew —
 //! and the classic single-engine path is simply its N=1 healthy case
 //! (bit-identical to the pre-cluster driver — see
 //! `tests/cluster_integration.rs`).
 
-use crate::agent::{Agent, WorkloadGenerator};
-use crate::cluster::{make_router, ClusterCoordinator, FaultStats, PrefixTierStats, TransportStats};
-use crate::config::{FaultPlan, JobConfig, PrefixTierConfig, RouterKind, TransportConfig};
+use crate::agent::{open_loop_fleet, Agent, WorkloadGenerator};
+use crate::cluster::{
+    make_router, ClusterCoordinator, FaultStats, OpenLoopStats, PrefixTierStats, TransportStats,
+};
+use crate::config::{
+    FaultPlan, FaultRateConfig, JobConfig, OpenLoopConfig, PrefixTierConfig, RouterKind,
+    TransportConfig,
+};
 use crate::coordinator::{make_controller, Controller};
 use crate::core::{AgentId, Micros, Result};
 use crate::engine::{EngineCounters, SimEngine};
@@ -77,6 +84,15 @@ pub struct RunResult {
     /// Asynchronous-transport telemetry (all zero with the transport
     /// off — the default).
     pub transport: TransportStats,
+    /// TTFT distribution — arrival to first generation-step completion —
+    /// of open-loop sessions, merged across replicas (empty for
+    /// closed-batch runs).
+    pub ttft: Histogram,
+    /// Per-turn latency distribution of open-loop turns after the first
+    /// (empty for closed-batch runs).
+    pub step_latency: Histogram,
+    /// Open-loop traffic telemetry (all zero for closed-batch runs).
+    pub open_loop: OpenLoopStats,
 }
 
 impl RunResult {
@@ -97,7 +113,11 @@ impl RunResult {
 /// (a single replica unless `job.topology` says otherwise).
 pub fn run_job(job: &JobConfig) -> Result<RunResult> {
     job.validate()?;
-    let agents = WorkloadGenerator::new(job.workload.clone()).generate();
+    let agents = if job.topology.open_loop.enabled {
+        open_loop_fleet(&job.workload, &job.topology.open_loop)
+    } else {
+        WorkloadGenerator::new(job.workload.clone()).generate()
+    };
     let controller = make_controller(&job.scheduler);
     ClusterCoordinator::new(job).run(agents, controller)
 }
@@ -135,12 +155,49 @@ fn available_parallelism() -> usize {
 /// override and the machine's available parallelism.  Requests above
 /// `available` are clamped — a 2-core CI runner must not be oversubscribed
 /// by an 8-worker default — and unparsable or zero overrides fall back to
-/// `available`.
+/// `available`.  Every fallback or clamp is reported on stderr so a typo'd
+/// override fails loudly instead of silently running on all cores.
 pub fn resolve_workers(requested: Option<&str>, available: usize) -> usize {
+    let (workers, warning) = resolve_workers_explain(requested, available);
+    if let Some(w) = warning {
+        eprintln!("warning: {w}");
+    }
+    workers
+}
+
+/// [`resolve_workers`] minus the stderr side effect: returns the resolved
+/// count and the warning that would be printed, so tests can pin both.
+pub fn resolve_workers_explain(
+    requested: Option<&str>,
+    available: usize,
+) -> (usize, Option<String>) {
     let available = available.max(1);
-    match requested.and_then(|s| s.trim().parse::<usize>().ok()) {
-        Some(n) if n >= 1 => n.min(available),
-        _ => available,
+    let Some(raw) = requested else {
+        return (available, None);
+    };
+    match raw.trim().parse::<usize>() {
+        Ok(0) => (
+            available,
+            Some(format!(
+                "CONCUR_WORKERS=0 is not a worker count; \
+                 using all {available} available cores"
+            )),
+        ),
+        Ok(n) if n > available => (
+            available,
+            Some(format!(
+                "CONCUR_WORKERS={n} exceeds available parallelism; \
+                 clamping to {available}"
+            )),
+        ),
+        Ok(n) => (n, None),
+        Err(_) => (
+            available,
+            Some(format!(
+                "CONCUR_WORKERS={raw:?} is not a number; \
+                 using all {available} available cores"
+            )),
+        ),
     }
 }
 
@@ -211,6 +268,8 @@ pub fn run_with(
         &[],
         &PrefixTierConfig::default(),
         &TransportConfig::default(),
+        &OpenLoopConfig::default(),
+        &FaultRateConfig::default(),
     )
 }
 
@@ -328,6 +387,35 @@ mod tests {
         assert_eq!(resolve_workers(Some("8"), 2), 2);
         // Degenerate availability never yields zero workers.
         assert_eq!(resolve_workers(None, 0), 1);
+    }
+
+    /// Every bad-override case warns; every clean case stays silent.
+    #[test]
+    fn worker_resolution_warns_on_every_bad_override() {
+        // Unset: silent, all cores.
+        assert_eq!(resolve_workers_explain(None, 8), (8, None));
+        // Non-numeric: fall back with a warning naming the bad value.
+        let (w, msg) = resolve_workers_explain(Some("many"), 8);
+        assert_eq!(w, 8);
+        assert!(msg.as_deref().unwrap().contains("\"many\""), "{msg:?}");
+        assert!(msg.as_deref().unwrap().contains("not a number"), "{msg:?}");
+        // Zero: fall back with a warning.
+        let (w, msg) = resolve_workers_explain(Some("0"), 8);
+        assert_eq!(w, 8);
+        assert!(msg.as_deref().unwrap().contains("CONCUR_WORKERS=0"), "{msg:?}");
+        // Absurdly large: clamp with a warning naming both numbers.
+        let (w, msg) = resolve_workers_explain(Some("9999"), 4);
+        assert_eq!(w, 4);
+        let msg = msg.unwrap();
+        assert!(msg.contains("9999") && msg.contains("clamping to 4"), "{msg}");
+        // Whitespace-padded in-range override: honored silently.
+        assert_eq!(resolve_workers_explain(Some(" 4 "), 8), (4, None));
+        // Negative numbers don't parse as usize: warned fallback.
+        let (w, msg) = resolve_workers_explain(Some("-2"), 8);
+        assert_eq!(w, 8);
+        assert!(msg.is_some());
+        // Degenerate availability never yields zero workers.
+        assert_eq!(resolve_workers_explain(Some("3"), 0).0, 1);
     }
 
     #[test]

@@ -24,10 +24,13 @@
 //!                     admission control plus all evaluated baselines.
 //! * [`cluster`]     — data-parallel serving fleet: N engine replicas,
 //!                     cache-affine + cold-first rebalancing routing,
-//!                     aggregated control signals, scripted replica
-//!                     faults (kill / drain-and-refill / revive),
-//!                     per-replica tool-latency skew, and an optional
-//!                     cross-replica shared-prefix broadcast tier.
+//!                     aggregated control signals, scripted and
+//!                     stochastic (MTBF/MTTR-sampled) replica faults
+//!                     (kill / drain-and-refill / revive), per-replica
+//!                     tool-latency skew, open-loop session traffic with
+//!                     SLO accounting and overload shedding, and an
+//!                     optional cross-replica shared-prefix broadcast
+//!                     tier.
 //! * [`driver`]      — glue that runs a full agentic batch job end-to-end.
 //! * [`runtime`]     — PJRT bridge: loads `artifacts/*.hlo.txt` (lowered
 //!                     from the L2 JAX model + L1 Pallas kernels) and

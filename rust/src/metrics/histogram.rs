@@ -85,6 +85,23 @@ impl Histogram {
         Micros(self.max)
     }
 
+    /// Fold another histogram into this one (cross-replica aggregation).
+    ///
+    /// Bucket bounds are identical by construction (`new` derives them
+    /// from constants), so merging is element-wise bucket addition; the
+    /// merged percentiles are exactly the percentiles the receiver would
+    /// report had it recorded the concatenated sample stream.
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.buckets.len(), other.buckets.len());
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "{}: n={} mean={} p50={} p95={} p99={} max={}",
@@ -140,5 +157,57 @@ mod tests {
         h.record(Micros(u64::MAX / 2));
         assert_eq!(h.count(), 1);
         assert_eq!(h.percentile(100.0), h.max());
+    }
+
+    /// PROPERTY: for any split of a sample stream across shards, merging
+    /// the shard histograms yields exactly the percentiles (and count /
+    /// mean / min / max) of one histogram fed the concatenated stream.
+    /// Holds at the log-bucket resolution because every histogram shares
+    /// the same bounds by construction.
+    #[test]
+    fn merged_percentiles_equal_concatenated_stream() {
+        let mut rng = crate::core::Rng::new(0xBEEF);
+        for round in 0..20u64 {
+            let shards = 1 + (round as usize % 4);
+            let mut parts: Vec<Histogram> =
+                (0..shards).map(|i| Histogram::new(format!("s{i}"))).collect();
+            let mut whole = Histogram::new("whole");
+            let n = rng.gen_range(1, 2000);
+            for _ in 0..n {
+                // Span many orders of magnitude to cross bucket scales.
+                let v = Micros(1 + rng.gen_range(0, 1u64 << rng.gen_range(1, 33)));
+                whole.record(v);
+                let shard = rng.gen_range(0, shards as u64) as usize;
+                parts[shard].record(v);
+            }
+            let mut merged = Histogram::new("merged");
+            for p in &parts {
+                merged.merge(p);
+            }
+            assert_eq!(merged.count(), whole.count(), "round {round}: count");
+            assert_eq!(merged.mean(), whole.mean(), "round {round}: mean");
+            assert_eq!(merged.min(), whole.min(), "round {round}: min");
+            assert_eq!(merged.max(), whole.max(), "round {round}: max");
+            for p in [0.1, 1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+                assert_eq!(
+                    merged.percentile(p),
+                    whole.percentile(p),
+                    "round {round}: p{p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merging_an_empty_histogram_is_identity() {
+        let mut h = Histogram::new("a");
+        h.record(Micros(500));
+        let before = (h.count(), h.mean(), h.min(), h.max(), h.percentile(50.0));
+        h.merge(&Histogram::new("empty"));
+        assert_eq!(before, (h.count(), h.mean(), h.min(), h.max(), h.percentile(50.0)));
+        let mut e = Histogram::new("e");
+        e.merge(&h);
+        assert_eq!(e.percentile(99.0), h.percentile(99.0));
+        assert_eq!(e.count(), 1);
     }
 }

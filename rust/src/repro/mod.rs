@@ -13,10 +13,12 @@
 //! study (see [`cluster_scaling`]), `concur repro cluster_faults` the
 //! fault-tolerance study (see [`faults`] — emits `BENCH_faults.json`),
 //! `concur repro prefix_sharing` the shared-prefix tier study (see
-//! [`prefix_sharing`] — emits `BENCH_prefix.json`), and `concur repro
+//! [`prefix_sharing`] — emits `BENCH_prefix.json`), `concur repro
 //! transport` the asynchronous-transport study (see [`transport`] —
-//! emits `BENCH_transport.json`).  The full experiment index lives in
-//! one table ([`EXPERIMENTS`]) shared with the CLI usage string.
+//! emits `BENCH_transport.json`), and `concur repro openloop` the
+//! open-loop traffic / SLO study (see [`openloop`] — emits
+//! `BENCH_openloop.json`).  The full experiment index lives in one
+//! table ([`EXPERIMENTS`]) shared with the CLI usage string.
 
 pub mod cluster_scaling;
 pub mod faults;
@@ -24,6 +26,7 @@ pub mod fig1;
 pub mod fig3;
 pub mod fig5;
 pub mod fig6;
+pub mod openloop;
 pub mod prefix_sharing;
 pub mod table1;
 pub mod table2;
@@ -125,7 +128,7 @@ pub struct Experiment {
 
 /// Every experiment, paper artifacts first (in paper order), then our
 /// studies.
-pub const EXPERIMENTS: [Experiment; 11] = [
+pub const EXPERIMENTS: [Experiment; 12] = [
     Experiment { name: "fig1", aliases: &[], paper: true },
     Experiment { name: "fig3", aliases: &[], paper: true },
     Experiment { name: "table1", aliases: &[], paper: true },
@@ -137,6 +140,7 @@ pub const EXPERIMENTS: [Experiment; 11] = [
     Experiment { name: "cluster_faults", aliases: &["faults"], paper: false },
     Experiment { name: "prefix_sharing", aliases: &["prefix"], paper: false },
     Experiment { name: "transport", aliases: &[], paper: false },
+    Experiment { name: "openloop", aliases: &["open_loop"], paper: false },
 ];
 
 /// Canonical names, in table order — what the usage string and the
@@ -184,6 +188,7 @@ pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
             "cluster_faults" => out.push(faults::run()?),
             "prefix_sharing" => out.push(prefix_sharing::run()?),
             "transport" => out.push(transport::run()?),
+            "openloop" => out.push(openloop::run()?),
             "fig1" => out.extend(fig1::run()?),
             "fig3" => out.push(fig3::run()?),
             "fig5" => out.push(fig5::run()?),
@@ -220,6 +225,7 @@ mod tests {
         assert_eq!(super::canonical("faults"), Some("cluster_faults"));
         assert_eq!(super::canonical("prefix"), Some("prefix_sharing"));
         assert_eq!(super::canonical("transport"), Some("transport"));
+        assert_eq!(super::canonical("open_loop"), Some("openloop"));
         assert_eq!(super::canonical("meteor"), None);
     }
 

@@ -14,8 +14,9 @@
 
 use concur::config::presets;
 use concur::config::{
-    AimdParams, EngineConfig, EvictionMode, FaultPlan, JobConfig, PrefixTierConfig,
-    RouterKind, SchedulerKind, TopologyConfig, TransportConfig, WorkloadConfig,
+    AimdParams, EngineConfig, EvictionMode, FaultPlan, FaultRateConfig, JobConfig,
+    OpenLoopConfig, PrefixTierConfig, RouterKind, SchedulerKind, TopologyConfig,
+    TransportConfig, WorkloadConfig,
 };
 use concur::core::Rng;
 use concur::driver::{run_job, RunResult};
@@ -27,7 +28,7 @@ use concur::metrics::ALL_PHASES;
 /// replica).
 mod reference {
     use concur::agent::Agent;
-    use concur::cluster::{FaultStats, PrefixTierStats, TransportStats};
+    use concur::cluster::{FaultStats, OpenLoopStats, PrefixTierStats, TransportStats};
     use concur::coordinator::slots::BoundaryDecision;
     use concur::coordinator::{ControlInputs, Controller, SlotManager};
     use concur::core::{AgentId, Micros, RequestId};
@@ -190,6 +191,9 @@ mod reference {
             prefix_tier: PrefixTierStats::default(),
             broadcast_series: TimeSeries::new("broadcast_shipped_tokens"),
             transport: TransportStats::default(),
+            ttft: Histogram::new("ttft"),
+            step_latency: Histogram::new("step_latency"),
+            open_loop: OpenLoopStats::default(),
         }
     }
 }
@@ -245,6 +249,12 @@ fn assert_bit_identical(a: &RunResult, b: &RunResult, ctx: &str) {
     assert_eq!(a.agent_latency.count(), b.agent_latency.count(), "{ctx}: latency n");
     assert_eq!(a.agent_latency.mean(), b.agent_latency.mean(), "{ctx}: latency mean");
     assert_eq!(a.agent_latency.max(), b.agent_latency.max(), "{ctx}: latency max");
+    assert_eq!(a.open_loop, b.open_loop, "{ctx}: open-loop stats");
+    for (name, ha, hb) in [("ttft", &a.ttft, &b.ttft), ("step", &a.step_latency, &b.step_latency)] {
+        assert_eq!(ha.count(), hb.count(), "{ctx}: {name} n");
+        assert_eq!(ha.mean(), hb.mean(), "{ctx}: {name} mean");
+        assert_eq!(ha.max(), hb.max(), "{ctx}: {name} max");
+    }
 }
 
 /// Seeded random small jobs across schedulers and eviction modes (same
@@ -314,6 +324,8 @@ fn n1_cluster_matches_prerefactor_driver_bitwise() {
             tool_skew: vec![1.0],
             prefix_tier: PrefixTierConfig::default(),
             transport: TransportConfig::default(),
+            open_loop: OpenLoopConfig::default(),
+            fault_rates: FaultRateConfig::default(),
         };
         let got = run_job(&job).unwrap();
         assert_bit_identical(&got, &want, &format!("job {i} with explicit no-fault topology"));
@@ -341,6 +353,28 @@ fn n1_cluster_matches_prerefactor_driver_bitwise() {
         };
         let got = run_job(&job).unwrap();
         assert_bit_identical(&got, &want, &format!("job {i} with disabled transport"));
+        // Disabled open-loop traffic + disabled stochastic faults, dormant
+        // knobs cranked: the closed-batch path must not notice them.
+        let mut job = base.clone();
+        job.topology.open_loop = OpenLoopConfig {
+            enabled: false,
+            arrival_rate_per_s: 50.0,
+            diurnal_amplitude: 1.0,
+            patience_s: 0.001,
+            high_priority_share: 0.9,
+            shed_on_ratio: 0.1,
+            shed_off_ratio: 0.05,
+            ..OpenLoopConfig::default()
+        };
+        job.topology.fault_rates = FaultRateConfig {
+            enabled: false,
+            mtbf_s: 0.001,
+            mttr_s: 0.001,
+            drain_share: 1.0,
+            ..FaultRateConfig::default()
+        };
+        let got = run_job(&job).unwrap();
+        assert_bit_identical(&got, &want, &format!("job {i} with disabled open-loop"));
     }
 }
 
@@ -426,6 +460,42 @@ fn n4_transport_off_machinery_is_invisible() {
         let got = run_job(&dormant).unwrap();
         assert_bit_identical(&got, &want, &format!("{router:?} N=4 disabled transport"));
         assert_eq!(got.transport, Default::default(), "disabled transport must report zeros");
+    }
+}
+
+/// PROPERTY (differential, open-loop tentpole): with `OpenLoopConfig` and
+/// `FaultRateConfig` disabled — the defaults — `run_sharded` output at
+/// N=4 is bit-identical to the closed-batch cluster, however the dormant
+/// knobs are set.  Any open-loop bookkeeping leaking into the closed path
+/// (an arrival clock stop, a latency sample, a governor observation, a
+/// sampler draw) breaks this immediately.
+#[test]
+fn n4_open_loop_off_machinery_is_invisible() {
+    for router in [RouterKind::CacheAffinity, RouterKind::Rebalance] {
+        let plain = routing_job(4, router);
+        let want = run_job(&plain).unwrap();
+        let mut dormant = plain.clone();
+        dormant.topology.open_loop = OpenLoopConfig {
+            enabled: false,
+            arrival_rate_per_s: 100.0,
+            patience_s: 0.001,
+            slo_ttft_s: 0.001,
+            slo_step_s: 0.001,
+            priority_admission: true,
+            shed: true,
+            ..OpenLoopConfig::default()
+        };
+        dormant.topology.fault_rates = FaultRateConfig {
+            enabled: false,
+            mtbf_s: 0.01,
+            mttr_s: 0.01,
+            ..FaultRateConfig::default()
+        };
+        let got = run_job(&dormant).unwrap();
+        assert_bit_identical(&got, &want, &format!("{router:?} N=4 disabled open-loop"));
+        assert_eq!(got.open_loop, Default::default(), "disabled open-loop must report zeros");
+        assert_eq!(got.ttft.count(), 0, "no TTFT samples in a closed-batch run");
+        assert_eq!(got.step_latency.count(), 0, "no step-latency samples in a closed-batch run");
     }
 }
 

@@ -1,0 +1,172 @@
+//! Open-loop traffic + stochastic fault integration tests.
+//!
+//! The load-bearing properties: (1) replay — with arrivals, abandonment,
+//! shedding and MTBF/MTTR fault injection all enabled, a fixed seed
+//! reproduces the run bit-identically, and perturbing the traffic seed
+//! genuinely moves the schedule; (2) graceful degradation — an infinitely
+//! patient open-loop fleet under sustained stochastic kills and drains
+//! still finishes every session; (3) the acceptance claim — on an
+//! overloaded fault-injected fleet, priority admission + shedding
+//! strictly beats FIFO admission on high-priority goodput-under-SLO.
+//!
+//! (The closed-batch invisibility of all this machinery is pinned by the
+//! differential oracle in `cluster_integration.rs`.)
+
+use concur::config::{
+    presets, AimdParams, EngineConfig, FaultRateConfig, JobConfig, OpenLoopConfig, RouterKind,
+    SchedulerKind, TopologyConfig, WorkloadConfig,
+};
+use concur::driver::{run_job, RunResult};
+
+fn open_loop_job(n_agents: usize, ol: OpenLoopConfig, fr: FaultRateConfig) -> JobConfig {
+    JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+        workload: WorkloadConfig {
+            n_agents,
+            steps_min: 3,
+            steps_max: 5,
+            task_families: 5,
+            ..WorkloadConfig::default()
+        },
+        scheduler: SchedulerKind::Concur(AimdParams::default()),
+        topology: TopologyConfig {
+            replicas: 3,
+            router: RouterKind::CacheAffinity,
+            open_loop: ol,
+            fault_rates: fr,
+            ..TopologyConfig::default()
+        },
+    }
+}
+
+/// Every session is accounted for exactly once: served, shed at the
+/// door, or abandoned while waiting.
+fn assert_conservation(r: &RunResult, n: u64, ctx: &str) {
+    assert_eq!(r.open_loop.arrived, n, "{ctx}: arrivals");
+    assert_eq!(
+        r.agents_finished as u64 + r.open_loop.shed + r.open_loop.abandoned,
+        n,
+        "{ctx}: served + shed + abandoned must cover every arrival"
+    );
+    assert_eq!(
+        r.open_loop.finished_high + r.open_loop.finished_low,
+        r.agents_finished as u64,
+        "{ctx}: class split must cover every finish"
+    );
+    assert!(
+        r.ttft.count() >= r.agents_finished as u64,
+        "{ctx}: every finished session has a first-turn sample"
+    );
+}
+
+fn assert_replay_identical(a: &RunResult, b: &RunResult, ctx: &str) {
+    assert_eq!(a.total_time, b.total_time, "{ctx}: total_time");
+    assert_eq!(a.counters, b.counters, "{ctx}: counters");
+    assert_eq!(a.hit_rate.to_bits(), b.hit_rate.to_bits(), "{ctx}: hit_rate");
+    assert_eq!(a.engine_steps, b.engine_steps, "{ctx}: engine_steps");
+    assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
+    assert_eq!(a.open_loop, b.open_loop, "{ctx}: open-loop stats");
+    assert_eq!(a.per_agent, b.per_agent, "{ctx}: per-agent records");
+    for (name, ha, hb) in [("ttft", &a.ttft, &b.ttft), ("step", &a.step_latency, &b.step_latency)]
+    {
+        assert_eq!(ha.count(), hb.count(), "{ctx}: {name} n");
+        assert_eq!(ha.mean(), hb.mean(), "{ctx}: {name} mean");
+        assert_eq!(ha.max(), hb.max(), "{ctx}: {name} max");
+    }
+}
+
+/// PROPERTY (replay): with the full open-loop stack *and* stochastic
+/// fault injection enabled, a fixed seed pair replays bit-identically —
+/// and perturbing the traffic seed genuinely moves the schedule, so the
+/// identity is not vacuous.
+#[test]
+fn open_loop_with_stochastic_faults_replays_bit_identically() {
+    let ol = OpenLoopConfig { arrival_rate_per_s: 2.0, ..OpenLoopConfig::on() };
+    let fr = FaultRateConfig { mtbf_s: 5.0, mttr_s: 2.0, ..FaultRateConfig::on() };
+    let job = open_loop_job(24, ol, fr);
+    let a = run_job(&job).unwrap();
+    let b = run_job(&job).unwrap();
+    assert_replay_identical(&a, &b, "replay");
+    assert_conservation(&a, 24, "replay");
+    assert!(
+        a.faults.stochastic_injected + a.faults.stochastic_suppressed > 0,
+        "the sampler must actually draw events at MTBF 5s"
+    );
+
+    // A different traffic seed is a different run.
+    let mut moved = job.clone();
+    moved.topology.open_loop.seed = 777;
+    let c = run_job(&moved).unwrap();
+    assert!(
+        c.total_time != a.total_time || c.open_loop != a.open_loop,
+        "perturbing the traffic seed must move the schedule"
+    );
+}
+
+/// PROPERTY (graceful degradation): an infinitely patient open-loop
+/// fleet with shedding off, under sustained stochastic kills and drains,
+/// still serves every single session — faults may slow the fleet down
+/// but never lose work.
+#[test]
+fn patient_open_loop_fleet_survives_sustained_faults_without_losing_sessions() {
+    let ol = OpenLoopConfig {
+        arrival_rate_per_s: 2.0,
+        patience_s: 0.0, // infinitely patient
+        shed: false,
+        priority_admission: false,
+        ..OpenLoopConfig::on()
+    };
+    let fr =
+        FaultRateConfig { mtbf_s: 4.0, mttr_s: 2.0, drain_share: 0.5, ..FaultRateConfig::on() };
+    let r = run_job(&open_loop_job(24, ol, fr)).unwrap();
+    assert_eq!(r.agents_finished, 24, "no session may be lost");
+    assert_eq!(r.open_loop.shed, 0);
+    assert_eq!(r.open_loop.abandoned, 0);
+    assert_conservation(&r, 24, "patient fleet");
+    assert!(
+        r.faults.stochastic_injected > 0,
+        "the run must actually have been fault-injected (mtbf 4s)"
+    );
+}
+
+/// ACCEPTANCE (tentpole): on an overloaded, fault-injected open-loop
+/// fleet — 64 sessions arriving at 4/s into an AIMD-controlled 3-replica
+/// cluster with MTBF 60s — priority admission plus hysteretic shedding
+/// strictly beats plain FIFO admission on **high-priority
+/// goodput-under-SLO**: shedding not-yet-started low-priority sessions
+/// under backlog frees capacity for the high class, and priority
+/// admission stops high sessions from queueing (and abandoning) behind
+/// low ones.
+#[test]
+fn priority_shedding_beats_fifo_on_high_priority_goodput_under_slo() {
+    let shaped = |priority: bool| OpenLoopConfig {
+        arrival_rate_per_s: 4.0,
+        patience_s: 45.0,
+        slo_ttft_s: 30.0,
+        slo_step_s: 60.0,
+        priority_admission: priority,
+        shed: priority,
+        ..OpenLoopConfig::on()
+    };
+    let fr =
+        FaultRateConfig { mtbf_s: 60.0, mttr_s: 15.0, drain_share: 0.5, ..FaultRateConfig::on() };
+
+    let concur = run_job(&open_loop_job(64, shaped(true), fr)).unwrap();
+    let fifo = run_job(&open_loop_job(64, shaped(false), fr)).unwrap();
+    assert_conservation(&concur, 64, "priority+shed");
+    assert_conservation(&fifo, 64, "fifo");
+
+    // The scenario is genuinely overloaded: FIFO loses sessions to
+    // abandonment, the governor trips and sheds in the priority arm.
+    assert!(fifo.open_loop.abandoned > 0, "FIFO arm must be overloaded");
+    assert!(concur.open_loop.shed > 0, "governor must shed under backlog");
+    assert_eq!(fifo.open_loop.shed, 0, "nothing is shed with shedding off");
+
+    assert!(
+        concur.open_loop.goodput_high > fifo.open_loop.goodput_high,
+        "high-priority goodput-under-SLO: priority+shed {} must strictly beat FIFO {}",
+        concur.open_loop.goodput_high,
+        fifo.open_loop.goodput_high
+    );
+}

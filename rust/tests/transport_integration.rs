@@ -140,6 +140,7 @@ fn assert_runs_match(a: &RunResult, b: &RunResult, ctx: &str) {
     assert_eq!(a.transport, b.transport, "{ctx}: transport stats");
     assert_eq!(a.per_agent, b.per_agent, "{ctx}: per-agent records");
     assert_eq!(a.broadcast_series.len(), b.broadcast_series.len(), "{ctx}: broadcast series");
+    assert_eq!(a.open_loop, b.open_loop, "{ctx}: open-loop stats");
 }
 
 /// PROPERTY (determinism): the full stack — tier + delayed visibility +
@@ -166,6 +167,48 @@ fn delayed_transport_runs_are_deterministic_across_seeds() {
         assert_eq!(a.faults.drains, 1);
         // The full stack genuinely engaged: transfers flowed.
         assert!(a.transport.transfers > 0, "seed {seed}: no transfers flowed");
+    }
+}
+
+/// PROPERTY (double fault): a kill landing on a replica *mid
+/// drain-handoff* — its checkpoints still crossing the fabric — cancels
+/// the in-flight transfers cleanly: no agent is lost, no agent outcome
+/// is recorded twice, and the whole schedule is deterministic across
+/// seeds.  The fabric is deliberately slowed to 1 Gbps so the handoffs
+/// issued at the drain instant are guaranteed still in flight when the
+/// kill lands 2 ms later.
+#[test]
+fn kill_mid_drain_handoff_cancels_transfers_without_losing_agents() {
+    for seed in [11u64, 22, 33, 44, 55] {
+        let mut cfg = TransportConfig::on();
+        cfg.delayed_visibility = true;
+        cfg.drain_handoff = true;
+        cfg.fabric_gbps = 1.0;
+        let mut job = transport_job(seed, cfg);
+        let probe = run_job(&job).unwrap();
+        let drain_at = Micros(probe.total_time.0 * 2 / 5);
+        job.topology.fault_plan = FaultPlan::new(vec![
+            FaultEvent::drain(0, drain_at),
+            FaultEvent::kill(0, drain_at + Micros(2_000)),
+        ]);
+        let a = run_job(&job).unwrap();
+        let b = run_job(&job).unwrap();
+        assert_runs_match(&a, &b, &format!("double fault seed {seed}"));
+
+        // The race genuinely engaged: the drain checkpointed agents and
+        // the kill voided checkpoints still on the wire.
+        assert!(a.faults.handoff_agents > 0, "seed {seed}: drain must checkpoint");
+        assert!(a.transport.cancelled > 0, "seed {seed}: kill must cancel in-flight");
+        assert_eq!(a.faults.drains, 1, "seed {seed}");
+        assert_eq!(a.faults.kills, 1, "seed {seed}");
+
+        // No agent lost, none double-counted: every agent finishes and
+        // is recorded exactly once.
+        assert_eq!(a.agents_finished, 24, "seed {seed}: agents lost");
+        let mut seen: Vec<u64> = a.per_agent.iter().map(|o| o.agent.0).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 24, "seed {seed}: an agent outcome was double-counted");
     }
 }
 
