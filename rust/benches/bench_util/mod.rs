@@ -55,6 +55,14 @@ impl Recorder {
         self.entries.push((name.to_string(), per));
     }
 
+    /// Record a value measured outside the timing harness (throughputs,
+    /// percentiles) so it lands in the JSON dump — and the perf gate —
+    /// alongside the timed entries.
+    pub fn record(&mut self, name: &str, value: f64) {
+        println!("{name:<52} value  {value:>12.1}");
+        self.entries.push((name.to_string(), value));
+    }
+
     /// Write `{name -> ns_per_op}` through the crate's own JSON codec.
     pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
         use concur::core::json::Value;

@@ -1,11 +1,16 @@
 //! Hot-path microbenchmarks for the L3 coordinator + engine substrate.
 //!
-//! `cargo bench --bench hotpath`.  These are the §Perf targets from
-//! DESIGN.md: radix match/insert at serving prompt lengths, LRU eviction,
-//! the AIMD decision, one engine iteration at paper-scale batch, and a
-//! full end-to-end Table-1-scale run.  Alongside the human-readable report
-//! it writes `BENCH_hotpath.json` (name → ns/op; override the path with
-//! `BENCH_JSON_PATH`) so the perf trajectory is tracked across PRs.
+//! `cargo bench --bench hotpath` (append `-- --quick` for the PR-smoke
+//! grid: same metrics, smaller scales, seconds instead of minutes).
+//! These are the §Perf targets from DESIGN.md: radix match/insert at
+//! serving prompt lengths, LRU eviction, the AIMD decision, one engine
+//! iteration at paper-scale batch, and a full end-to-end Table-1-scale
+//! run.  Alongside the human-readable report it writes
+//! `BENCH_hotpath.json` (override the path with `BENCH_JSON_PATH`) keyed
+//! by **stable machine names** (`radix/insert_prompts_ns`, ...) — the
+//! same names `ci/perf_thresholds.json` gates on, so renaming a metric
+//! here without touching the thresholds fails the gate instead of
+//! silently dropping coverage.
 
 mod bench_util;
 use bench_util::Recorder;
@@ -27,14 +32,50 @@ fn agent_prompt(agent: u32, steps: u32, per_step: u32) -> Vec<Token> {
     p
 }
 
+/// Scale knobs: the full grid for nightly trend tracking, the `--quick`
+/// grid for PR smoke (same metric names, ~seconds of wall clock).
+struct Grid {
+    prompts: u32,
+    samples: usize,
+    match_samples: usize,
+    job_agents: usize,
+    job_samples: usize,
+    sweep_jobs: usize,
+    step_probe: usize,
+}
+
+const FULL: Grid = Grid {
+    prompts: 64,
+    samples: 20,
+    match_samples: 200,
+    job_agents: 64,
+    job_samples: 5,
+    sweep_jobs: 8,
+    step_probe: 200,
+};
+
+const QUICK: Grid = Grid {
+    prompts: 16,
+    samples: 5,
+    match_samples: 30,
+    job_agents: 16,
+    job_samples: 2,
+    sweep_jobs: 4,
+    step_probe: 60,
+};
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let g = if quick { QUICK } else { FULL };
+    println!("hotpath bench · {} grid\n", if quick { "--quick" } else { "full" });
     let mut rec = Recorder::new();
 
     // --- radix tree -------------------------------------------------------
     let prompts: Vec<Vec<Token>> =
-        (0..64).map(|a| agent_prompt(a, 16, 512)).collect();
+        (0..g.prompts).map(|a| agent_prompt(a, 16, 512)).collect();
+    let prompt_len = prompts[0].len() as u64;
 
-    rec.report("radix: insert 64 x 8.7k-token prompts", 20, || {
+    rec.report("radix/insert_prompts_ns", g.samples, || {
         let mut t = RadixTree::new();
         for (i, p) in prompts.iter().enumerate() {
             t.insert(p, Micros(i as u64));
@@ -42,10 +83,10 @@ fn main() {
     });
 
     // Finished-request fold: insert prompt+output without concatenation.
-    let outputs: Vec<Vec<Token>> = (0..64)
+    let outputs: Vec<Vec<Token>> = (0..g.prompts)
         .map(|a| ((2 << 24 | a << 8)..(2 << 24 | a << 8) + 512).collect())
         .collect();
-    rec.report("radix: insert_parts 64 x (8.7k prompt + 512 out)", 20, || {
+    rec.report("radix/insert_parts_ns", g.samples, || {
         let mut t = RadixTree::new();
         for (i, p) in prompts.iter().enumerate() {
             t.insert(p, Micros(i as u64));
@@ -57,14 +98,14 @@ fn main() {
 
     // Split churn: probes that always diverge mid-edge (arena split is two
     // range adjustments; the old tree copied both halves).
-    rec.report("radix: 1k mid-edge splits (partial matches)", 20, || {
+    rec.report("radix/mid_edge_splits_ns", g.samples, || {
         let mut t = RadixTree::new();
         for (i, p) in prompts.iter().enumerate() {
             t.insert(p, Micros(i as u64));
         }
         let mut stamp = 500u64;
         for k in 0..1_000usize {
-            let p = &prompts[k % 64];
+            let p = &prompts[k % prompts.len()];
             stamp += 1;
             t.match_prefix(&p[..512 + (k % 8_000)], Micros(stamp));
         }
@@ -75,13 +116,13 @@ fn main() {
         warm.insert(p, Micros(i as u64));
     }
     let mut stamp = 1_000_000u64;
-    rec.report_per("radix: match_prefix 8.7k tokens (warm)", 200, 8704, || {
+    rec.report_per("radix/match_prefix_ns_per_token", g.match_samples, prompt_len, || {
         stamp += 1;
-        let m = warm.match_prefix(&prompts[13], Micros(stamp));
+        let m = warm.match_prefix(&prompts[13 % prompts.len()], Micros(stamp));
         assert!(m.gpu_tokens > 0);
     });
 
-    rec.report("radix: evict half the tree (64 x 8.7k)", 20, || {
+    rec.report("radix/evict_half_tree_ns", g.samples, || {
         let mut t = RadixTree::new();
         for (i, p) in prompts.iter().enumerate() {
             t.insert(p, Micros(i as u64));
@@ -90,7 +131,7 @@ fn main() {
         assert!(ev.freed_gpu_tokens > 0);
     });
 
-    rec.report("radix: evictable_gpu_tokens (U_t signal scan)", 200, || {
+    rec.report("radix/evictable_scan_ns", g.match_samples, || {
         let e = warm.evictable_gpu_tokens();
         assert!(e > 0);
     });
@@ -109,20 +150,16 @@ fn main() {
         capacity: 300_000,
     };
     let mut ctl = AimdController::new(AimdParams { control_interval: 1, ..Default::default() });
-    rec.report_per("aimd: 10k control decisions", 50, 10_000, || {
+    rec.report_per("aimd/decision_ns", 50, 10_000, || {
         for _ in 0..10_000 {
             ctl.on_signals(&inputs);
         }
     });
 
     // --- engine iteration at paper scale -----------------------------------
-    rec.report("engine: one iteration, 256 running decode seqs", 50, || {
+    let loaded_engine = || {
         let cost = CostModel::new(presets::qwen3_cluster(8));
-        let mut engine = concur::engine::SimEngine::new(
-            EngineConfig::default(),
-            cost,
-        );
-        let mut rng = Rng::new(1);
+        let mut engine = concur::engine::SimEngine::new(EngineConfig::default(), cost);
         for a in 0..256u64 {
             let base = (a as u32 + 1) << 14;
             engine.submit(concur::engine::Request {
@@ -134,6 +171,11 @@ fn main() {
                 submitted_at: Micros::ZERO,
             });
         }
+        engine
+    };
+    rec.report("engine/iteration_ns", g.samples, || {
+        let mut engine = loaded_engine();
+        let mut rng = Rng::new(1);
         let mut now = Micros::ZERO;
         for _ in 0..20 {
             let out = engine.step(now);
@@ -142,29 +184,61 @@ fn main() {
         let _ = rng.next_u64();
     });
 
+    // Tail latency of a single engine step under a long mixed
+    // prefill/decode run — the p99 is what a congested replica's clock
+    // advance actually waits on, and it regresses independently of the
+    // 20-step median above (e.g. an eviction storm at pool pressure).
+    {
+        let mut engine = loaded_engine();
+        let mut now = Micros::ZERO;
+        let mut step_ns: Vec<u128> = Vec::with_capacity(g.step_probe);
+        for _ in 0..g.step_probe {
+            let t = std::time::Instant::now();
+            let out = engine.step(now);
+            step_ns.push(t.elapsed().as_nanos());
+            now = now + out.duration + Micros(1);
+            if !engine.has_work() {
+                break;
+            }
+        }
+        step_ns.sort_unstable();
+        let p99 = step_ns[(step_ns.len().saturating_sub(1)) * 99 / 100];
+        rec.record("engine/step_p99_ns", p99 as f64);
+    }
+
     // --- end-to-end simulation ---------------------------------------------
     let table1_job = || JobConfig {
         cluster: presets::qwen3_cluster(2),
         engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
-        workload: presets::qwen3_workload(64),
+        workload: presets::qwen3_workload(g.job_agents),
         scheduler: SchedulerKind::Concur(AimdParams::default()),
         topology: TopologyConfig::default(),
     };
-    rec.report("driver: full job, 64 agents, Qwen3 TP2, CONCUR", 5, || {
+    rec.report("driver/full_job_ns", g.job_samples, || {
         let r = run_job(&table1_job()).unwrap();
-        assert_eq!(r.agents_finished, 64);
+        assert_eq!(r.agents_finished, g.job_agents);
     });
 
-    // Parallel sweep harness: 8 independent jobs across all cores (the
+    // Wall-clock simulation throughput (generated tokens per real second)
+    // of that same job — the floor metric: any hot-path regression shows
+    // up here even if no single microbench moved past its ceiling.
+    {
+        let t = std::time::Instant::now();
+        let r = run_job(&table1_job()).unwrap();
+        let secs = t.elapsed().as_secs_f64().max(1e-9);
+        rec.record("driver/full_job_tokens_per_s", r.total_gen_tokens as f64 / secs);
+    }
+
+    // Parallel sweep harness: independent jobs across all cores (the
     // repro-harness fan-out pattern).
-    let sweep: Vec<JobConfig> = (0..8)
+    let sweep: Vec<JobConfig> = (0..g.sweep_jobs)
         .map(|i| {
             let mut j = table1_job();
             j.workload.seed = 7 + i as u64;
             j
         })
         .collect();
-    rec.report("driver: 8-job sweep via run_jobs_parallel", 3, || {
+    rec.report("driver/sweep_parallel_ns", 3, || {
         let rs = run_jobs_parallel(&sweep);
         assert!(rs.iter().all(|r| r.is_ok()));
     });

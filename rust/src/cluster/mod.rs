@@ -87,10 +87,28 @@
 //! Replicas are advanced in index order and every event queue tie-breaks
 //! by insertion order, so cluster runs are deterministic for any N, any
 //! fault plan and any skew vector.
+//!
+//! ## Parallel stepping (the deterministic event-clock merge)
+//!
+//! Between those cluster-level clock stops, replicas are independent:
+//! `SimEngine::step` touches nothing outside its own replica.
+//! [`run_sharded`] therefore fans the per-instant step loop out over a
+//! `parallel::StepPool` worker pool (`CONCUR_WORKERS`, the same knob
+//! as the sweep driver) and re-serializes determinism at the merge
+//! points: outcomes are *applied* in replica-index order, and the clock
+//! advance takes the minimum over per-replica next-event times with the
+//! same `(time, replica)` tie order as the sequential loop.  Results are
+//! **bit-identical at any worker count** — pinned by the workers-{1,2,4}
+//! full-stack determinism test and the CI determinism job.  N=1 fleets
+//! never spawn a pool, so the single-engine bit-identity contract above
+//! is untouched.  [`run_sharded_with_workers`] takes the worker count
+//! explicitly (tests use it to avoid racing on the environment).
 
 pub mod prefix;
 pub mod router;
 pub mod transport;
+
+mod parallel;
 
 pub use prefix::{PrefixTierStats, SharedPrefixTier};
 pub use router::{
@@ -715,6 +733,39 @@ pub fn run_sharded(
     engines: &mut [SimEngine],
     router: &mut dyn Router,
     agents: Vec<Agent>,
+    controller: Box<dyn Controller>,
+    faults: &FaultPlan,
+    tool_skew: &[f64],
+    prefix_tier: &PrefixTierConfig,
+    transport_cfg: &TransportConfig,
+    open_loop: &OpenLoopConfig,
+    fault_rates: &FaultRateConfig,
+) -> Result<RunResult> {
+    // Resolve the step-worker count from the same `CONCUR_WORKERS` knob
+    // the sweep driver honors, silently (the sweep path already warns on
+    // bad overrides; double-warning every nested run would spam stderr).
+    let available = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let (workers, _) = crate::driver::resolve_workers_explain(
+        std::env::var("CONCUR_WORKERS").ok().as_deref(),
+        available,
+    );
+    run_sharded_with_workers(
+        engines, router, agents, controller, faults, tool_skew, prefix_tier, transport_cfg,
+        open_loop, fault_rates, workers,
+    )
+}
+
+/// [`run_sharded`] with an explicit step-worker count instead of the
+/// `CONCUR_WORKERS` environment lookup (`0`/`1` ⇒ sequential stepping).
+/// The count only changes *how* ready replicas are stepped, never the
+/// result: outputs are bit-identical at any value (see the module docs on
+/// the deterministic event-clock merge).  The pool is capped at the
+/// replica count; single-replica fleets never spawn one.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sharded_with_workers(
+    engines: &mut [SimEngine],
+    router: &mut dyn Router,
+    agents: Vec<Agent>,
     mut controller: Box<dyn Controller>,
     faults: &FaultPlan,
     tool_skew: &[f64],
@@ -722,6 +773,7 @@ pub fn run_sharded(
     transport_cfg: &TransportConfig,
     open_loop: &OpenLoopConfig,
     fault_rates: &FaultRateConfig,
+    step_workers: usize,
 ) -> Result<RunResult> {
     assert!(!engines.is_empty(), "cluster needs at least one replica");
     let n = engines.len();
@@ -847,6 +899,17 @@ pub fn run_sharded(
         None
     };
     let mut handoff_time = Micros::ZERO;
+
+    // Parallel stepping: a scoped worker pool for phase 4, capped at the
+    // replica count.  `None` means "step inline" — single-replica fleets
+    // and `CONCUR_WORKERS=1` never pay thread spawn or channel traffic.
+    let step_pool = if step_workers > 1 && n > 1 {
+        Some(parallel::StepPool::new(step_workers.min(n)))
+    } else {
+        None
+    };
+    let mut ready: Vec<usize> = Vec::with_capacity(n);
+    let mut stepped: Vec<crate::engine::StepOutcome> = Vec::with_capacity(n);
 
     loop {
         let now = clock.now();
@@ -1145,12 +1208,23 @@ pub fn run_sharded(
 
         // 4. Start an iteration on every idle live replica with queued
         //    work (a draining replica keeps iterating to finish what it
-        //    holds; a dead one is skipped).
-        for (r, e) in engines.iter_mut().enumerate() {
-            if state[r] == ReplicaState::Dead || inflight[r].is_some() || !e.has_work() {
-                continue;
-            }
-            let out = e.step(now);
+        //    holds; a dead one is skipped).  The ready set is stepped
+        //    either inline or on the pool — replicas share no state
+        //    between clock stops, so the outcomes are identical — and
+        //    then applied strictly in replica-index order, which keeps
+        //    every downstream observation (stagnation counters, livelock
+        //    error attribution, inflight boundaries) bit-identical at any
+        //    worker count.
+        ready.clear();
+        ready.extend((0..n).filter(|&r| {
+            state[r] != ReplicaState::Dead && inflight[r].is_none() && engines[r].has_work()
+        }));
+        stepped.clear();
+        match &step_pool {
+            Some(pool) if ready.len() > 1 => pool.step_batch(engines, &ready, now, &mut stepped),
+            _ => stepped.extend(ready.iter().map(|&r| engines[r].step(now))),
+        }
+        for (&r, out) in ready.iter().zip(stepped.drain(..)) {
             engine_steps += 1;
             let progressed = !out.work.is_empty() || !out.finished.is_empty();
             if progressed {
@@ -1158,6 +1232,12 @@ pub fn run_sharded(
             } else {
                 stagnant[r] += 1;
                 if stagnant[r] > 10_000 {
+                    // Applied in index order, so the livelock error names
+                    // the lowest stagnant replica exactly as the
+                    // sequential loop did; outcomes from higher replicas
+                    // stepped in the same batch are discarded with the
+                    // aborted run and thus invisible.
+                    let e = &engines[r];
                     let sig = e.signals();
                     return Err(ConcurError::engine(format!(
                         "livelock: replica {r} made no progress for 10k \

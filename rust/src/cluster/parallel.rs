@@ -1,0 +1,219 @@
+//! Scoped worker pool for parallel replica stepping.
+//!
+//! Between cluster-level events — fault instants, arrivals, transfer
+//! completions, coordinator adjustments, all of which are clock stops in
+//! [`run_sharded`](super::run_sharded) — replicas are fully independent:
+//! `SimEngine::step` reads and writes nothing outside its own replica.
+//! That makes the per-instant step fan-out embarrassingly parallel, and
+//! this pool exploits it without giving up determinism:
+//!
+//! * the dispatching loop collects the ready replica set, ships one task
+//!   per replica to the pool, and blocks until **all** results are back;
+//! * outcomes are applied in replica-index order, and the clock advance
+//!   merges per-replica next-event times with the same `(time, replica)`
+//!   tie order as the sequential loop —
+//!
+//! so a run is bit-identical at any worker count (pinned by the
+//! `workers {1,2,4}` determinism tests and the CI determinism job).
+//!
+//! Workers are plain `std::thread` spawns living for one `run_sharded`
+//! invocation; tasks cross the channel as raw engine pointers because the
+//! engines stay borrowed by the dispatching frame.  Soundness rests on
+//! two invariants, both local to this file and `step_batch`'s caller
+//! contract: task indices are distinct, and the dispatcher never touches
+//! the engine slice while tasks are outstanding.
+
+use crate::core::Micros;
+use crate::engine::{SimEngine, StepOutcome};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+// Compile-time proof that engines may cross threads at all: the unsafe
+// Send below only smuggles the *pointer*, the pointee type must be Send
+// in its own right.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<SimEngine>();
+};
+
+/// A replica pointer crossing the channel to a worker.
+struct EnginePtr(*mut SimEngine);
+
+// SAFETY: an `EnginePtr` is dereferenced only by the worker that receives
+// it, exclusively between task receipt and result send.  `step_batch`
+// guarantees every outstanding task points at a *distinct* engine and
+// that the dispatching thread does not access the engine slice until all
+// results are collected, so no two threads ever alias one engine.
+// `SimEngine` itself is `Send` (compile-checked above).
+unsafe impl Send for EnginePtr {}
+
+type StepTask = (usize, EnginePtr, Micros);
+type StepResult = (usize, std::thread::Result<StepOutcome>);
+
+/// Worker pool stepping disjoint replicas concurrently for one
+/// `run_sharded` invocation.  Dropping the pool disconnects the task
+/// channel and joins every worker.
+pub(crate) struct StepPool {
+    task_tx: Option<Sender<StepTask>>,
+    result_rx: Receiver<StepResult>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl StepPool {
+    pub(crate) fn new(workers: usize) -> StepPool {
+        let (task_tx, task_rx) = channel::<StepTask>();
+        let task_rx = Arc::new(Mutex::new(task_rx));
+        let (result_tx, result_rx) = channel::<StepResult>();
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&task_rx);
+                let tx = result_tx.clone();
+                std::thread::spawn(move || loop {
+                    // Blocking recv under the mutex serializes task
+                    // pickup, which is exactly what a shared queue is;
+                    // idle workers would block on the empty channel
+                    // anyway.
+                    let task = rx.lock().expect("step pool lock poisoned").recv();
+                    let Ok((r, ptr, now)) = task else {
+                        break; // pool dropped: no more tasks will come
+                    };
+                    let outcome =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            // SAFETY: see `EnginePtr` — this worker has
+                            // exclusive access to the pointed-to engine
+                            // for the duration of the task.
+                            let engine = unsafe { &mut *ptr.0 };
+                            engine.step(now)
+                        }));
+                    if tx.send((r, outcome)).is_err() {
+                        break; // pool dropped mid-flight
+                    }
+                })
+            })
+            .collect();
+        StepPool { task_tx: Some(task_tx), result_rx, workers }
+    }
+
+    /// Step every replica in `ready` concurrently at instant `now`,
+    /// appending one outcome per replica to `out` in `ready` order (the
+    /// caller's replica-index order).  Blocks until all results are in;
+    /// a panic inside any `step` is resumed on this thread, exactly as
+    /// the sequential loop would have surfaced it.
+    ///
+    /// `ready` must hold strictly increasing (hence distinct) in-range
+    /// indices — the aliasing contract behind `EnginePtr`.
+    pub(crate) fn step_batch(
+        &self,
+        engines: &mut [SimEngine],
+        ready: &[usize],
+        now: Micros,
+        out: &mut Vec<StepOutcome>,
+    ) {
+        debug_assert!(ready.windows(2).all(|w| w[0] < w[1]), "ready not sorted");
+        debug_assert!(ready.last().is_none_or(|&r| r < engines.len()));
+        let base = engines.as_mut_ptr();
+        let tx = self.task_tx.as_ref().expect("pool already shut down");
+        for &r in ready {
+            // SAFETY: `r` is in range and the indices are distinct, so
+            // each task carries a pointer to a different engine.  This
+            // thread parks in the recv loop below until every task has
+            // answered, so it never aliases an engine mid-step.
+            let ptr = EnginePtr(unsafe { base.add(r) });
+            tx.send((r, ptr, now)).expect("step worker pool died");
+        }
+        let start = out.len();
+        out.resize_with(start + ready.len(), StepOutcome::default);
+        for _ in 0..ready.len() {
+            let (r, res) = self.result_rx.recv().expect("step worker pool died");
+            let slot = ready.binary_search(&r).expect("result for unknown replica");
+            match res {
+                Ok(o) => out[start + slot] = o,
+                Err(panic) => std::panic::resume_unwind(panic),
+            }
+        }
+    }
+}
+
+impl Drop for StepPool {
+    fn drop(&mut self) {
+        // Disconnect the task channel so idle workers wake and exit, then
+        // join them: after drop returns, nothing holds an engine pointer.
+        self.task_tx.take();
+        for h in self.workers.drain(..) {
+            // A panicking worker already surfaced through `step_batch`
+            // (or this drop is part of that unwind); don't double-panic.
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, EngineConfig};
+    use crate::core::{AgentId, RequestId};
+    use crate::costmodel::CostModel;
+    use crate::engine::Request;
+
+    fn engine_with_work(seed: u32) -> SimEngine {
+        let mut e =
+            SimEngine::new(EngineConfig::default(), CostModel::new(presets::qwen3_cluster(8)));
+        e.submit(Request {
+            id: RequestId(u64::from(seed)),
+            agent: AgentId(u64::from(seed)),
+            prompt: (seed * 1000..seed * 1000 + 64).collect(),
+            gen: (900_000..900_010).collect(),
+            prev_ctx: 0,
+            submitted_at: Micros::ZERO,
+        });
+        e
+    }
+
+    #[test]
+    fn pool_steps_match_sequential_steps() {
+        let mut seq: Vec<SimEngine> = (1..=4).map(engine_with_work).collect();
+        let mut par: Vec<SimEngine> = (1..=4).map(engine_with_work).collect();
+        let seq_out: Vec<StepOutcome> =
+            seq.iter_mut().map(|e| e.step(Micros(5))).collect();
+
+        let pool = StepPool::new(3);
+        let ready: Vec<usize> = (0..4).collect();
+        let mut par_out = Vec::new();
+        pool.step_batch(&mut par, &ready, Micros(5), &mut par_out);
+
+        assert_eq!(par_out.len(), 4);
+        for (s, p) in seq_out.iter().zip(&par_out) {
+            assert_eq!(s.duration, p.duration);
+            assert_eq!(s.finished.len(), p.finished.len());
+            assert_eq!(s.admitted, p.admitted);
+            assert_eq!(s.recompute_tokens, p.recompute_tokens);
+        }
+        for (s, p) in seq.iter().zip(&par) {
+            assert_eq!(s.counters, p.counters);
+            assert_eq!(s.pool().free(), p.pool().free());
+            assert_eq!(s.tree().gpu_tokens(), p.tree().gpu_tokens());
+        }
+    }
+
+    #[test]
+    fn pool_steps_a_sparse_ready_set() {
+        let mut engines: Vec<SimEngine> = (1..=5).map(engine_with_work).collect();
+        let pool = StepPool::new(2);
+        let ready = vec![0usize, 2, 4];
+        let mut out = Vec::new();
+        pool.step_batch(&mut engines, &ready, Micros(3), &mut out);
+        assert_eq!(out.len(), 3);
+        // Only the stepped replicas made progress (admitted their request).
+        for (r, e) in engines.iter().enumerate() {
+            let stepped = ready.contains(&r);
+            assert_eq!(e.counters.admitted > 0, stepped, "replica {r}");
+        }
+    }
+
+    #[test]
+    fn dropping_an_idle_pool_joins_cleanly() {
+        let pool = StepPool::new(4);
+        drop(pool); // must not hang or panic
+    }
+}

@@ -28,6 +28,8 @@ use crate::core::{AgentId, Micros, Result};
 use crate::engine::{EngineCounters, SimEngine};
 use crate::metrics::{Breakdown, Histogram, Phase, TimeSeries};
 
+mod numa;
+
 /// One finished agent's completion record (in finish order).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AgentOutcome {
@@ -215,11 +217,21 @@ pub fn run_jobs_parallel_with(
     if threads <= 1 {
         return run_jobs(jobs);
     }
+    // On multi-socket boxes, pin worker w to NUMA node w % nodes so a
+    // simulation's arena stays node-local (see `numa`).  `None` on
+    // single-socket machines and under `CONCUR_NUMA=0` — the common case
+    // pays nothing.  Pinning is placement only: results are bit-identical
+    // either way.
+    let numa_plan = numa::plan();
     let next = AtomicUsize::new(0);
+    let next = &next;
     let per_worker: Vec<Vec<(usize, Result<RunResult>)>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                s.spawn(|| {
+            .map(|w| {
+                s.spawn(move || {
+                    if let Some(nodes) = numa_plan {
+                        numa::pin_current_thread(&nodes[w % nodes.len()]);
+                    }
                     let mut done = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);

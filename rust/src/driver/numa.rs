@@ -1,0 +1,193 @@
+//! NUMA-aware placement for the parallel sweep workers.
+//!
+//! A paper-scale sweep saturates every core, and on a multi-socket box the
+//! default scheduler happily migrates a simulation — and its multi-GiB
+//! radix arena — across sockets mid-run, turning every arena access into a
+//! remote-node miss.  The fix is boring: probe the node topology once from
+//! sysfs, and pin sweep worker *w* to the CPUs of node `w % nodes` so each
+//! simulation's allocations and accesses stay node-local.
+//!
+//! Deliberately conservative:
+//!
+//! * **Off by default on single-socket boxes** (the common case — laptops,
+//!   most CI runners): zero syscalls, zero behavior change.
+//! * `CONCUR_NUMA=0` force-disables pinning even on multi-socket boxes;
+//!   `CONCUR_NUMA=1` force-enables it (useful for testing the mask
+//!   plumbing on one node).
+//! * Pinning affects **where** workers run, never **what** they compute —
+//!   jobs are deterministic functions of their config, so sweep results
+//!   stay bit-identical with pinning on, off, or unsupported.
+//! * On non-Linux (or non-x86_64/aarch64) targets every probe returns
+//!   "no topology" and pinning is a no-op; no libc dependency is taken.
+
+use std::sync::OnceLock;
+
+/// CPU lists per NUMA node, probed from sysfs once per process.
+/// Empty ⇒ no usable multi-node topology (single node, non-Linux, or
+/// unreadable sysfs).
+fn topology() -> &'static [Vec<usize>] {
+    static TOPO: OnceLock<Vec<Vec<usize>>> = OnceLock::new();
+    TOPO.get_or_init(probe_topology)
+}
+
+fn probe_topology() -> Vec<Vec<usize>> {
+    let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+    let Ok(entries) = std::fs::read_dir("/sys/devices/system/node") else {
+        return Vec::new();
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(idx) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok())
+        else {
+            continue;
+        };
+        let path = entry.path().join("cpulist");
+        let Ok(list) = std::fs::read_to_string(path) else { continue };
+        let cpus = parse_cpulist(list.trim());
+        if !cpus.is_empty() {
+            nodes.push((idx, cpus));
+        }
+    }
+    // Directory order is arbitrary; worker→node assignment must not be.
+    nodes.sort_by_key(|&(idx, _)| idx);
+    nodes.into_iter().map(|(_, cpus)| cpus).collect()
+}
+
+/// Parse a sysfs cpulist (`"0-3,8-11,16"`) into explicit CPU ids.
+/// Malformed chunks are skipped rather than failing the probe — a weird
+/// sysfs should degrade to "don't pin", never to a crash.
+fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for chunk in s.split(',') {
+        let chunk = chunk.trim();
+        if chunk.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = chunk.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse()) {
+                if lo <= hi {
+                    cpus.extend(lo..=hi);
+                }
+            }
+        } else if let Ok(cpu) = chunk.parse::<usize>() {
+            cpus.push(cpu);
+        }
+    }
+    cpus
+}
+
+/// Decide whether (and how) to pin sweep workers: `Some(nodes)` with the
+/// per-node CPU lists when pinning should happen, `None` otherwise.
+///
+/// Pinning happens only when the box has more than one NUMA node (or
+/// `CONCUR_NUMA=1` forces it) and is vetoed entirely by `CONCUR_NUMA=0`.
+pub(crate) fn plan() -> Option<&'static [Vec<usize>]> {
+    let force = std::env::var("CONCUR_NUMA").ok();
+    match force.as_deref().map(str::trim) {
+        Some("0") => return None,
+        Some("1") => {
+            let topo = topology();
+            return if topo.is_empty() { None } else { Some(topo) };
+        }
+        _ => {}
+    }
+    let topo = topology();
+    if topo.len() > 1 { Some(topo) } else { None }
+}
+
+/// Pin the calling thread to the given CPU set.  Best-effort: an empty
+/// set, an unsupported platform, or a failed syscall leaves the thread
+/// unpinned (affinity is a placement hint, never a correctness input).
+pub(crate) fn pin_current_thread(cpus: &[usize]) {
+    const MASK_WORDS: usize = 16; // 1024 CPUs, same as glibc's cpu_set_t
+    let mut mask = [0u64; MASK_WORDS];
+    let mut any = false;
+    for &cpu in cpus {
+        if cpu < MASK_WORDS * 64 {
+            mask[cpu / 64] |= 1u64 << (cpu % 64);
+            any = true;
+        }
+    }
+    if any {
+        sched_setaffinity_self(&mask);
+    }
+}
+
+/// Raw `sched_setaffinity(0, ...)` — inline asm instead of libc so the
+/// crate keeps its zero-dependency rule.  Errors are ignored (see
+/// [`pin_current_thread`]).
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn sched_setaffinity_self(mask: &[u64; 16]) {
+    let mut _ret: isize;
+    // SAFETY: sched_setaffinity reads `size` bytes from the mask pointer
+    // and touches no other memory; the mask outlives the call and the
+    // clobbers cover everything the Linux syscall ABI tramples.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => _ret, // __NR_sched_setaffinity
+            in("rdi") 0usize,                  // pid 0 = calling thread
+            in("rsi") std::mem::size_of_val(mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn sched_setaffinity_self(mask: &[u64; 16]) {
+    let mut _ret: isize;
+    // SAFETY: as the x86_64 variant — the syscall only reads the mask.
+    unsafe {
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 122usize, // __NR_sched_setaffinity
+            inlateout("x0") 0usize => _ret, // pid 0 = calling thread
+            in("x1") std::mem::size_of_val(mask),
+            in("x2") mask.as_ptr(),
+            options(nostack),
+        );
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn sched_setaffinity_self(_mask: &[u64; 16]) {
+    // Unsupported platform: stay unpinned.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parsing_covers_sysfs_shapes() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-1,4-5"), vec![0, 1, 4, 5]);
+        assert_eq!(parse_cpulist("7"), vec![7]);
+        assert_eq!(parse_cpulist("0, 2-3 , 9"), vec![0, 2, 3, 9]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        // Malformed chunks are dropped, valid ones kept.
+        assert_eq!(parse_cpulist("x,3-1,2"), vec![2]);
+    }
+
+    #[test]
+    fn pinning_to_current_cpus_is_harmless() {
+        // Whatever this box looks like, pinning the thread to every CPU
+        // of node 0 (or a superset mask) must not panic and must leave
+        // the thread able to run.
+        let topo = topology();
+        if let Some(cpus) = topo.first() {
+            pin_current_thread(cpus);
+        }
+        pin_current_thread(&(0..64).collect::<Vec<_>>());
+        assert_eq!(1 + 1, 2); // still scheduled
+    }
+
+    #[test]
+    fn empty_pin_set_is_a_no_op() {
+        pin_current_thread(&[]);
+    }
+}

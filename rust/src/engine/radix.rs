@@ -14,21 +14,26 @@
 //!
 //! ## Hot-path representation (see DESIGN.md §Perf)
 //!
-//! * **Token arena.**  All edge labels live in one append-only `Vec<Token>`
-//!   slab; nodes store `(off, len)` ranges into it.  `split()` is two range
-//!   adjustments with zero copies, and `match_prefix` compares the probe
-//!   against contiguous memory.  Discarded leaves leak their arena range —
-//!   bounded by the total tokens ever inserted in a run, which is fine for
-//!   simulation lifetimes and keeps the slab append-only.
-//! * **Intrusive LRU list.**  Eviction candidates sit on a doubly-linked
-//!   list threaded through the nodes, kept sorted by `(last_access,
-//!   version, id)` — the exact pop order of the lazy binary heap this
-//!   replaced, so eviction decisions (and therefore every simulation
-//!   result) are bit-identical.  Touch/pop/fresh-insert are O(1);
-//!   re-inserting a node whose stamp went stale while it was off-list
-//!   (e.g. unlock after a long-held lock) walks backward from the tail
-//!   past candidates newer than that stamp — see `lru_insert` for the
-//!   cost trade-off.  Membership mirrors the old
+//! * **Token arena with generational compaction.**  All edge labels live in
+//!   one `Vec<Token>` slab; nodes store `(off, len)` ranges into it.
+//!   `split()` is two range adjustments with zero copies, and
+//!   `match_prefix` compares the probe against contiguous memory.
+//!   Discarded leaves abandon their range in place; once dead ranges
+//!   outweigh live tokens past a floor, `compact_arena` rebuilds the slab —
+//!   tenured (pinned/parked) ranges first, LRU candidates behind them with
+//!   the coldest at the tail, so the ranges most likely to die next cluster
+//!   where the next compaction cheaply truncates.  Compaction rewrites only
+//!   `off` fields: node identities, stamps, counters and the mutation epoch
+//!   are untouched, so it is invisible to every caller (including the
+//!   engine's epoch-guarded fast path) and to simulation results.
+//! * **Ordered LRU index.**  Eviction candidates sit in a `BTreeSet` of
+//!   `(last_access, version, id)` keys — the exact pop order of the lazy
+//!   binary heap (and then the intrusive list) this replaced, so eviction
+//!   decisions (and therefore every simulation result) are bit-identical.
+//!   Touch/pop/insert are O(log n); crucially, *stale-stamp re-entry*
+//!   (unlock after a long-held lock) is O(log n) too, where the intrusive
+//!   list walked backward past every fresher candidate — the pause-heavy
+//!   fleet pathology the ROADMAP item named.  Membership mirrors the old
 //!   heap's "has a currently-valid entry" rule: a node touched after its
 //!   last `push_candidate` is *not* evictable until the next push — that
 //!   quirk is load-bearing for which caches survive, so it is preserved.
@@ -37,12 +42,18 @@
 //!   being recomputed by scans.
 
 use crate::core::{FxHashMap, Micros, Token};
+use std::collections::BTreeSet;
 
 pub type NodeId = usize;
 
 const ROOT: NodeId = 0;
-/// Null link for the intrusive LRU list.
-const NIL: NodeId = usize::MAX;
+
+/// Auto-compaction floor: slabs below this size are never compacted (the
+/// copy would cost more than the memory it reclaims).
+const COMPACT_MIN_ARENA: usize = 64 * 1024;
+/// Auto-compaction slack: compact only once the slab exceeds this multiple
+/// of the live token count, i.e. at least half the slab is garbage.
+const COMPACT_SLACK: usize = 2;
 
 /// Where a node's KV currently lives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,9 +90,9 @@ struct Node {
     version: u64,
     residency: Residency,
     alive: bool,
-    /// Intrusive LRU links (NIL when not on the list).
-    lru_prev: NodeId,
-    lru_next: NodeId,
+    /// Whether this node currently has an entry in the LRU index.  While
+    /// set, `(last_access, version)` are frozen (every mutation removes the
+    /// entry first), so the stored key is always recomputable.
     in_lru: bool,
 }
 
@@ -206,7 +217,8 @@ pub enum EvictPolicy {
 pub struct RadixTree {
     nodes: Vec<Node>,
     free_slots: Vec<NodeId>,
-    /// Append-only token slab backing every edge label.
+    /// Token slab backing every edge label.  Appended on insert; dead
+    /// ranges are reclaimed by `compact_arena`.
     arena: Vec<Token>,
     gpu_tokens: u64,
     cpu_tokens: u64,
@@ -223,10 +235,18 @@ pub struct RadixTree {
     /// path — what lets the engine skip redundant head-of-line re-matches
     /// and replay their recency touches from a cached path.
     epoch: u64,
-    /// Intrusive LRU list of eviction candidates, sorted ascending by
-    /// `(last_access, version, id)` — head is the eviction victim.
-    lru_head: NodeId,
-    lru_tail: NodeId,
+    /// Ordered LRU index of eviction candidates, keyed by
+    /// `(last_access, version, id)` — the first element is the eviction
+    /// victim.  Keys are unique (id tie-break) and frozen while a node is
+    /// a member (see `Node::in_lru`).
+    lru: BTreeSet<(Micros, u64, NodeId)>,
+    /// Auto-compaction switch (on by default; tests that pin slab layout
+    /// or diff against a non-compacting oracle turn it off).
+    auto_compact: bool,
+    /// Number of `compact_arena` runs (diagnostics).
+    compactions: u64,
+    /// Total dead tokens reclaimed by compaction (diagnostics).
+    compacted_tokens: u64,
 }
 
 impl RadixTree {
@@ -244,8 +264,6 @@ impl RadixTree {
             version: 0,
             residency: Residency::Gpu,
             alive: true,
-            lru_prev: NIL,
-            lru_next: NIL,
             in_lru: false,
         };
         RadixTree {
@@ -258,8 +276,10 @@ impl RadixTree {
             broadcast_tokens: 0,
             live_nodes: 0,
             epoch: 0,
-            lru_head: NIL,
-            lru_tail: NIL,
+            lru: BTreeSet::new(),
+            auto_compact: true,
+            compactions: 0,
+            compacted_tokens: 0,
         }
     }
 
@@ -286,10 +306,29 @@ impl RadixTree {
         self.epoch
     }
 
-    /// Total tokens ever appended to the arena (diagnostics; the slab is
-    /// append-only, so this bounds resident slab memory).
+    /// Current token-slab length (diagnostics).  Live tokens plus
+    /// not-yet-compacted dead ranges; bounded at roughly
+    /// `COMPACT_SLACK ×` live tokens once auto-compaction kicks in.
     pub fn arena_len(&self) -> usize {
         self.arena.len()
+    }
+
+    /// Number of arena compactions performed so far (diagnostics).
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    /// Total dead tokens reclaimed by arena compaction (diagnostics).
+    pub fn compacted_tokens(&self) -> u64 {
+        self.compacted_tokens
+    }
+
+    /// Enable or disable automatic arena compaction (on by default).
+    /// Compaction never changes observable behaviour — only slab layout —
+    /// so this exists for tests that pin layout or diff against a
+    /// non-compacting oracle.
+    pub fn set_auto_compaction(&mut self, on: bool) {
+        self.auto_compact = on;
     }
 
     /// Tokens currently covered by broadcast registrations (each node
@@ -371,7 +410,7 @@ impl RadixTree {
         self.nodes[id].gpu_children == 0
     }
 
-    // -- intrusive LRU list -------------------------------------------------
+    // -- ordered LRU index --------------------------------------------------
 
     fn lru_key(&self, id: NodeId) -> (Micros, u64, NodeId) {
         let n = &self.nodes[id];
@@ -380,58 +419,25 @@ impl RadixTree {
 
     fn lru_remove(&mut self, id: NodeId) {
         debug_assert!(self.nodes[id].in_lru);
-        let (prev, next) = (self.nodes[id].lru_prev, self.nodes[id].lru_next);
-        if prev == NIL {
-            self.lru_head = next;
-        } else {
-            self.nodes[prev].lru_next = next;
-        }
-        if next == NIL {
-            self.lru_tail = prev;
-        } else {
-            self.nodes[next].lru_prev = prev;
-        }
-        let n = &mut self.nodes[id];
-        n.lru_prev = NIL;
-        n.lru_next = NIL;
-        n.in_lru = false;
+        // Valid because (last_access, version) are frozen while in_lru: the
+        // key computed now is the key that was inserted.
+        let removed = self.lru.remove(&self.lru_key(id));
+        debug_assert!(removed, "lru entry missing for flagged node {id}");
+        self.nodes[id].in_lru = false;
     }
 
-    /// Insert `id` at its sorted position.  Fresh-stamped entries (new
-    /// leaves, just-touched pushes) are a tail append, O(1).  Stale-stamped
-    /// re-entries (unlock after a long-held lock, leaf transitions) walk
-    /// backward past every candidate that entered since that stamp —
-    /// worst-case O(live candidates) per re-entry, the price of replacing
-    /// the heap's O(log n) push while keeping its exact pop order.  The
-    /// dominant operations (touch, pop, fresh insert) stay O(1); if
-    /// profiles ever show the walk dominating on pause-heavy fleets, an
-    /// ordered index over the same (stamp, version, id) keys is the
-    /// drop-in fix (see ROADMAP "Open items").
+    /// Insert `id` at its sorted position — O(log candidates) whether the
+    /// stamp is fresh (new leaf, just-touched push) or stale (unlock after
+    /// a long-held lock).  The stale case is the win over the intrusive
+    /// list this replaced, which walked backward past every candidate that
+    /// entered since the stamp; pop order is unchanged, so eviction
+    /// decisions stay bit-identical (safety net:
+    /// `lru_stale_reentry_matches_slow_path_order`).
     fn lru_insert(&mut self, id: NodeId) {
         debug_assert!(!self.nodes[id].in_lru);
-        let key = self.lru_key(id);
-        let mut after = self.lru_tail;
-        while after != NIL && self.lru_key(after) > key {
-            after = self.nodes[after].lru_prev;
-        }
-        let before = if after == NIL {
-            let h = self.lru_head;
-            self.lru_head = id;
-            h
-        } else {
-            let n = self.nodes[after].lru_next;
-            self.nodes[after].lru_next = id;
-            n
-        };
-        if before == NIL {
-            self.lru_tail = id;
-        } else {
-            self.nodes[before].lru_prev = id;
-        }
-        let n = &mut self.nodes[id];
-        n.lru_prev = after;
-        n.lru_next = before;
-        n.in_lru = true;
+        let inserted = self.lru.insert(self.lru_key(id));
+        debug_assert!(inserted, "duplicate lru key for node {id}");
+        self.nodes[id].in_lru = true;
     }
 
     /// Register `id` as an LRU candidate (no-op if already registered or
@@ -488,8 +494,6 @@ impl RadixTree {
             version: 0,
             residency,
             alive: true,
-            lru_prev: NIL,
-            lru_next: NIL,
             in_lru: false,
         });
         {
@@ -616,8 +620,6 @@ impl RadixTree {
                 version: 0,
                 residency: Residency::Gpu,
                 alive: true,
-                lru_prev: NIL,
-                lru_next: NIL,
                 in_lru: false,
             });
             // `cur` gains a GPU child and stops being a GPU leaf.  (The
@@ -785,12 +787,11 @@ impl RadixTree {
     pub fn evict(&mut self, want: u64, policy: EvictPolicy) -> EvictResult {
         let mut out = EvictResult::default();
         while out.freed_gpu_tokens < want {
-            let id = self.lru_head;
-            if id == NIL {
+            let Some(&(_, _, id)) = self.lru.first() else {
                 break;
-            }
-            // List membership is maintained eagerly: the head is always a
-            // currently-valid candidate.
+            };
+            // Index membership is maintained eagerly: the first entry is
+            // always a currently-valid candidate.
             debug_assert!({
                 let n = &self.nodes[id];
                 n.alive && n.ref_count == 0 && n.broadcast_pins == 0
@@ -835,6 +836,7 @@ impl RadixTree {
         }
         if out.nodes > 0 {
             self.epoch += 1;
+            self.maybe_compact();
         }
         out
     }
@@ -853,11 +855,68 @@ impl RadixTree {
         }
         let n = &mut self.nodes[id];
         n.alive = false;
-        n.len = 0; // arena range leaked by design (append-only slab)
+        n.len = 0; // arena range abandoned; reclaimed by the next compaction
         self.live_nodes -= 1;
         self.free_slots.push(id);
         // The parent may have become an eviction candidate.
         self.push_candidate(parent);
+    }
+
+    // -- arena compaction -------------------------------------------------------
+
+    /// Rebuild the token slab with only live edge ranges, rewriting each
+    /// node's `off`.  Generational copy order: tenured ranges (everything
+    /// *not* on the LRU candidate index — pinned, broadcast, parked,
+    /// CPU-tier and inner nodes) go first in node-id order, then the LRU
+    /// candidates from newest to coldest, so the ranges most likely to die
+    /// next sit at the slab tail where future compactions reclaim them as
+    /// a cheap truncation.
+    ///
+    /// Observable behaviour is unchanged by construction: node identities,
+    /// `(last_access, version)` stamps, all token counters and the
+    /// mutation epoch stay exactly as they were — only `off` values and
+    /// the slab move.  The engine's epoch-guarded head-of-line fast path
+    /// therefore stays valid across a compaction, and simulation results
+    /// are bit-identical with compaction on or off (pinned by the
+    /// non-compacting-oracle differential test in `proptests.rs`).
+    pub fn compact_arena(&mut self) {
+        let live_tokens = (self.gpu_tokens + self.cpu_tokens) as usize;
+        let mut fresh: Vec<Token> = Vec::with_capacity(live_tokens);
+        for id in 0..self.nodes.len() {
+            let n = &self.nodes[id];
+            if id == ROOT || !n.alive || n.in_lru {
+                continue;
+            }
+            let off = fresh.len();
+            fresh.extend_from_slice(&self.arena[n.off..n.off + n.len]);
+            self.nodes[id].off = off;
+        }
+        let candidates: Vec<NodeId> =
+            self.lru.iter().rev().map(|&(_, _, id)| id).collect();
+        for id in candidates {
+            let n = &self.nodes[id];
+            let off = fresh.len();
+            fresh.extend_from_slice(&self.arena[n.off..n.off + n.len]);
+            self.nodes[id].off = off;
+        }
+        debug_assert_eq!(fresh.len(), live_tokens);
+        self.compacted_tokens += (self.arena.len() - fresh.len()) as u64;
+        self.compactions += 1;
+        self.arena = fresh;
+    }
+
+    /// Auto-compaction trigger, run after bulk reclaim paths (`evict`,
+    /// `trim_cpu`): compact once the slab is past the floor and more than
+    /// half dead.  A deterministic function of tree state, so identical
+    /// op sequences compact at identical points on every run.
+    fn maybe_compact(&mut self) {
+        let live = (self.gpu_tokens + self.cpu_tokens) as usize;
+        if self.auto_compact
+            && self.arena.len() > COMPACT_MIN_ARENA
+            && self.arena.len() > COMPACT_SLACK * live
+        {
+            self.compact_arena();
+        }
     }
 
     /// Drop LRU CPU-tier nodes until at most `limit` CPU tokens remain.
@@ -894,6 +953,7 @@ impl RadixTree {
         }
         if dropped > 0 {
             self.epoch += 1;
+            self.maybe_compact();
         }
         dropped
     }
@@ -1002,17 +1062,27 @@ impl RadixTree {
                 ));
             }
         }
-        // LRU list: sorted, flags consistent, members are valid candidates.
-        let mut seen = 0usize;
-        let mut prev = NIL;
-        let mut cur = self.lru_head;
-        while cur != NIL {
-            let n = &self.nodes[cur];
+        // Arena: live ranges already validated per node above; the slab
+        // must be at least as large as the live token total (compaction
+        // shrinks it to exactly that).
+        if gpu + cpu > self.arena.len() as u64 {
+            return Err(format!(
+                "arena {} smaller than live tokens {}",
+                self.arena.len(),
+                gpu + cpu
+            ));
+        }
+        // LRU index: flags consistent, keys current, members are valid
+        // candidates.
+        for &(stamp, version, id) in &self.lru {
+            let Some(n) = self.nodes.get(id) else {
+                return Err(format!("lru entry for out-of-range node {id}"));
+            };
             if !n.in_lru {
-                return Err(format!("lru node {cur} not flagged in_lru"));
+                return Err(format!("lru node {id} not flagged in_lru"));
             }
-            if n.lru_prev != prev {
-                return Err(format!("lru node {cur} has bad prev link"));
+            if (n.last_access, n.version) != (stamp, version) {
+                return Err(format!("lru key for node {id} is stale"));
             }
             if !(n.alive
                 && n.ref_count == 0
@@ -1020,24 +1090,15 @@ impl RadixTree {
                 && n.residency == Residency::Gpu
                 && n.gpu_children == 0)
             {
-                return Err(format!("lru node {cur} is not a valid candidate"));
+                return Err(format!("lru node {id} is not a valid candidate"));
             }
-            if prev != NIL && self.lru_key(prev) >= self.lru_key(cur) {
-                return Err(format!("lru order violated at node {cur}"));
-            }
-            seen += 1;
-            if seen > self.nodes.len() {
-                return Err("lru list contains a cycle".to_string());
-            }
-            prev = cur;
-            cur = n.lru_next;
-        }
-        if prev != self.lru_tail {
-            return Err("lru tail link inconsistent".to_string());
         }
         let flagged = self.nodes.iter().filter(|n| n.in_lru).count();
-        if flagged != seen {
-            return Err(format!("{flagged} nodes flagged in_lru, {seen} on list"));
+        if flagged != self.lru.len() {
+            return Err(format!(
+                "{flagged} nodes flagged in_lru, {} in the index",
+                self.lru.len()
+            ));
         }
         let fast = self.evictable_gpu_tokens();
         let slow = self.evictable_gpu_tokens_slow();
@@ -1052,19 +1113,12 @@ impl RadixTree {
 
     // -- test support -----------------------------------------------------------
 
-    /// Head→tail snapshot of the intrusive LRU candidate list.  Test
-    /// support: the stale-re-entry regression test compares this against
-    /// the slow `(last_access, version, id)` sort so the planned
-    /// ordered-index swap (ROADMAP) has a safety net.
+    /// Eviction-order snapshot of the LRU candidate index.  Test support:
+    /// the stale-re-entry regression test compares this against the slow
+    /// `(last_access, version, id)` sort — the safety net that caught the
+    /// intrusive-list → ordered-index swap.
     pub fn lru_order_for_tests(&self) -> Vec<NodeId> {
-        let mut order = Vec::new();
-        let mut cur = self.lru_head;
-        while cur != NIL {
-            order.push(cur);
-            cur = self.nodes[cur].lru_next;
-            assert!(order.len() <= self.nodes.len(), "lru cycle");
-        }
-        order
+        self.lru.iter().map(|&(_, _, id)| id).collect()
     }
 
     /// The `(last_access, version, id)` eviction key of a node (test
@@ -1413,6 +1467,59 @@ mod tests {
         t.evict(u64::MAX, EvictPolicy::OffloadToCpu);
         assert_eq!(t.peek_prefix(&toks(0..100)), (0, 100));
         t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn compaction_preserves_matches_and_epoch() {
+        let mut t = RadixTree::new();
+        t.set_auto_compaction(false);
+        let a: Vec<Token> = (0..50).chain(100..150).collect();
+        let b: Vec<Token> = (0..50).chain(200..250).collect();
+        let c = toks(5000..5300);
+        t.insert(&a, Micros(1));
+        t.insert(&b, Micros(2));
+        t.insert(&c, Micros(3));
+        // Park `a` and `b` (touch quirk), leaving `c` the only candidate.
+        t.match_prefix(&a, Micros(4));
+        t.match_prefix(&b, Micros(5));
+        let ev = t.evict(u64::MAX, EvictPolicy::Discard);
+        assert_eq!(ev.discarded_tokens, 300, "only `c` was evictable");
+        let epoch = t.epoch();
+        let before = t.arena_len();
+        t.compact_arena();
+        assert!(t.arena_len() < before, "dead range must be reclaimed");
+        assert_eq!(t.arena_len() as u64, t.gpu_tokens() + t.cpu_tokens());
+        assert_eq!(t.epoch(), epoch, "compaction must not bump the epoch");
+        assert_eq!(t.compactions(), 1);
+        assert_eq!(t.compacted_tokens(), 300);
+        assert_eq!(t.match_prefix(&a, Micros(6)).gpu_tokens, 100);
+        assert_eq!(t.match_prefix(&b, Micros(7)).gpu_tokens, 100);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn auto_compaction_bounds_arena_under_eviction_churn() {
+        // The acceptance bound: a thrashing-scale insert/evict churn keeps
+        // the slab under `COMPACT_MIN_ARENA` plus one round of inserts,
+        // where the pre-compaction slab grew without bound.
+        let mut t = RadixTree::new();
+        let round_tokens = 20_000usize;
+        for round in 0u32..40 {
+            for k in 0..10u32 {
+                let base = (round * 10 + k + 1) * 100_000;
+                let seq: Vec<Token> = (base..base + 2_000).collect();
+                t.insert(&seq, Micros(u64::from(round) + 1));
+            }
+            t.evict(u64::MAX, EvictPolicy::Discard);
+            assert!(
+                t.arena_len() <= COMPACT_MIN_ARENA + round_tokens,
+                "round {round}: slab {} grew past the compaction bound",
+                t.arena_len()
+            );
+            t.check_invariants().unwrap();
+        }
+        assert!(t.compactions() > 0, "churn must have triggered compaction");
+        assert!(t.compacted_tokens() > 0);
     }
 
     #[test]

@@ -1,0 +1,427 @@
+//! CI perf gate: compare a `BENCH_*.json` dump against checked-in
+//! per-metric thresholds and fail loudly on regression.
+//!
+//! Perf work without a gate silently rots: the nightly bench artifacts
+//! record the trajectory, but nobody reads artifacts, so a 2× regression
+//! lands and ages until it is archaeology.  The gate turns the dump into
+//! a verdict: `concur bench gate --bench BENCH_hotpath.json --thresholds
+//! ci/perf_thresholds.json --profile nightly` exits 0 when every metric
+//! is within its allowance, 1 on any breach (printing a per-metric
+//! table), and 2 when the inputs themselves are unreadable — so a CI
+//! wiring bug is distinguishable from a real regression.
+//!
+//! Threshold schema (`ci/perf_thresholds.json`):
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "profiles": {
+//!     "pr":      { "metric-name": { "kind": "ceiling", "baseline": 1000.0,
+//!                                   "allowed_regression_pct": 100.0 } },
+//!     "nightly": { "metric-name": { "kind": "ceiling", "baseline": 1000.0,
+//!                                   "allowed_regression_pct": 35.0 } }
+//!   }
+//! }
+//! ```
+//!
+//! `kind` is `"ceiling"` (lower is better — latencies; breach when value
+//! exceeds `baseline × (1 + pct/100)`) or `"floor"` (higher is better —
+//! throughputs; breach when value drops below `baseline × (1 − pct/100)`).
+//! A metric listed in the profile but absent from the bench dump is a
+//! breach (a silently dropped bench must not pass the gate); a bench
+//! metric with no threshold is reported as uncovered but does not fail.
+//! Re-baselining is an ordinary reviewed edit to the JSON — see
+//! OPERATIONS.md.
+
+use std::collections::BTreeMap;
+
+use crate::core::json::Value;
+use crate::core::{ConcurError, Result};
+
+/// Direction of a metric's "better" axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThresholdKind {
+    /// Higher is better (e.g. tokens/s); breach when value < limit.
+    Floor,
+    /// Lower is better (e.g. ns/op, p99 step time); breach when value > limit.
+    Ceiling,
+}
+
+/// One metric's checked-in expectation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Threshold {
+    pub kind: ThresholdKind,
+    pub baseline: f64,
+    pub allowed_regression_pct: f64,
+}
+
+impl Threshold {
+    /// The worst acceptable value.
+    pub fn limit(&self) -> f64 {
+        match self.kind {
+            ThresholdKind::Floor => self.baseline * (1.0 - self.allowed_regression_pct / 100.0),
+            ThresholdKind::Ceiling => self.baseline * (1.0 + self.allowed_regression_pct / 100.0),
+        }
+    }
+
+    fn breached_by(&self, value: f64) -> bool {
+        match self.kind {
+            ThresholdKind::Floor => value < self.limit(),
+            ThresholdKind::Ceiling => value > self.limit(),
+        }
+    }
+}
+
+/// A named set of thresholds (`pr`, `nightly`, ...).
+pub type Profile = BTreeMap<String, Threshold>;
+
+/// Parse the thresholds file into its profiles.
+pub fn parse_thresholds(v: &Value) -> Result<BTreeMap<String, Profile>> {
+    if v.get("schema").as_u64() != Some(1) {
+        return Err(ConcurError::config(
+            "thresholds file: missing or unsupported 'schema' (expected 1)",
+        ));
+    }
+    let profiles = v.get("profiles").as_object().ok_or_else(|| {
+        ConcurError::config("thresholds file: missing 'profiles' object")
+    })?;
+    let mut out = BTreeMap::new();
+    for (pname, pval) in profiles {
+        let metrics = pval.as_object().ok_or_else(|| {
+            ConcurError::config(format!("thresholds profile '{pname}' is not an object"))
+        })?;
+        let mut profile = Profile::new();
+        for (metric, tval) in metrics {
+            let kind = match tval.req_str("kind")? {
+                "floor" => ThresholdKind::Floor,
+                "ceiling" => ThresholdKind::Ceiling,
+                other => {
+                    return Err(ConcurError::config(format!(
+                        "threshold '{pname}/{metric}': unknown kind {other:?} \
+                         (expected \"floor\" or \"ceiling\")"
+                    )))
+                }
+            };
+            let baseline = tval.req_f64("baseline")?;
+            let pct = tval.req_f64("allowed_regression_pct")?;
+            if !(baseline.is_finite() && baseline > 0.0) {
+                return Err(ConcurError::config(format!(
+                    "threshold '{pname}/{metric}': baseline must be finite and positive"
+                )));
+            }
+            if !(pct.is_finite() && pct >= 0.0) || (kind == ThresholdKind::Floor && pct >= 100.0) {
+                return Err(ConcurError::config(format!(
+                    "threshold '{pname}/{metric}': bad allowed_regression_pct"
+                )));
+            }
+            profile.insert(
+                metric.clone(),
+                Threshold { kind, baseline, allowed_regression_pct: pct },
+            );
+        }
+        out.insert(pname.clone(), profile);
+    }
+    Ok(out)
+}
+
+/// Parse a `BENCH_*.json` dump (flat `{name -> number}`; non-numeric
+/// entries are ignored so future nested dumps don't break old gates).
+pub fn parse_bench(v: &Value) -> Result<BTreeMap<String, f64>> {
+    let obj = v
+        .as_object()
+        .ok_or_else(|| ConcurError::config("bench file: top level is not an object"))?;
+    Ok(obj
+        .iter()
+        .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
+        .collect())
+}
+
+/// One metric's verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateRow {
+    pub metric: String,
+    pub threshold: Threshold,
+    /// Measured value; `None` when the bench dump lacks the metric.
+    pub value: Option<f64>,
+    pub breached: bool,
+}
+
+/// Full gate outcome: one row per threshold plus the bench metrics no
+/// threshold covers (informational).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateReport {
+    pub profile: String,
+    pub rows: Vec<GateRow>,
+    pub uncovered: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.rows.iter().all(|r| !r.breached)
+    }
+
+    /// Human-readable per-metric table (stdout in CI).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "perf gate · profile '{}': {}\n\n",
+            self.profile,
+            if self.passed() { "PASS" } else { "BREACH" }
+        ));
+        out.push_str(&format!(
+            "{:<44} {:>6} {:>14} {:>14} {:>14}  {}\n",
+            "metric", "kind", "baseline", "limit", "value", "status"
+        ));
+        for r in &self.rows {
+            let kind = match r.threshold.kind {
+                ThresholdKind::Floor => "floor",
+                ThresholdKind::Ceiling => "ceil",
+            };
+            let value = match r.value {
+                Some(v) => format!("{v:.1}"),
+                None => "missing".to_string(),
+            };
+            let status = if r.breached { "BREACH" } else { "ok" };
+            out.push_str(&format!(
+                "{:<44} {:>6} {:>14.1} {:>14.1} {:>14}  {}\n",
+                r.metric,
+                kind,
+                r.threshold.baseline,
+                r.threshold.limit(),
+                value,
+                status
+            ));
+        }
+        for m in &self.uncovered {
+            out.push_str(&format!("{m:<44} (no threshold — uncovered)\n"));
+        }
+        out
+    }
+}
+
+/// Evaluate one profile against one bench dump.
+pub fn evaluate(
+    profile_name: &str,
+    profile: &Profile,
+    bench: &BTreeMap<String, f64>,
+) -> GateReport {
+    let rows = profile
+        .iter()
+        .map(|(metric, &threshold)| {
+            let value = bench.get(metric).copied();
+            // A metric the bench no longer emits is a breach: a dropped
+            // bench must not read as "no regression".
+            let breached = value.is_none_or(|v| threshold.breached_by(v));
+            GateRow { metric: metric.clone(), threshold, value, breached }
+        })
+        .collect();
+    let uncovered = bench
+        .keys()
+        .filter(|k| !profile.contains_key(*k))
+        .cloned()
+        .collect();
+    GateReport { profile: profile_name.to_string(), rows, uncovered }
+}
+
+/// File-level driver for `concur bench gate`: load both JSONs, pick the
+/// profile, evaluate.  Every error here is a *config/IO* failure (exit 2
+/// in the CLI), never a perf verdict.
+pub fn run_gate_files(
+    bench_path: &std::path::Path,
+    thresholds_path: &std::path::Path,
+    profile: &str,
+) -> Result<GateReport> {
+    let read = |p: &std::path::Path| -> Result<Value> {
+        let text = std::fs::read_to_string(p).map_err(|e| {
+            ConcurError::config(format!("cannot read {}: {e}", p.display()))
+        })?;
+        Value::parse(&text)
+    };
+    let bench = parse_bench(&read(bench_path)?)?;
+    let profiles = parse_thresholds(&read(thresholds_path)?)?;
+    let prof = profiles.get(profile).ok_or_else(|| {
+        ConcurError::config(format!(
+            "thresholds file has no profile '{profile}' (have: {})",
+            profiles.keys().cloned().collect::<Vec<_>>().join(", ")
+        ))
+    })?;
+    Ok(evaluate(profile, prof, &bench))
+}
+
+/// One-line digest of a BENCH json for `$GITHUB_STEP_SUMMARY`:
+/// `name: k=v k=v ...` for numeric entries, nested objects counted.
+pub fn summarize_bench(name: &str, v: &Value) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    if let Some(obj) = v.as_object() {
+        for (k, val) in obj {
+            match val {
+                Value::Number(n) => parts.push(format!("{k}={n:.4}")),
+                Value::Object(o) => parts.push(format!("{k}={{{} entries}}", o.len())),
+                Value::Array(a) => parts.push(format!("{k}=[{} items]", a.len())),
+                _ => {}
+            }
+        }
+    }
+    format!("{name}: {}", parts.join("  "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn thresholds_fixture() -> BTreeMap<String, Profile> {
+        let text = r#"{
+            "schema": 1,
+            "profiles": {
+                "pr": {
+                    "engine/iteration_ns": {
+                        "kind": "ceiling", "baseline": 1000000.0,
+                        "allowed_regression_pct": 100.0
+                    },
+                    "driver/full_job_tokens_per_s": {
+                        "kind": "floor", "baseline": 50000.0,
+                        "allowed_regression_pct": 50.0
+                    }
+                }
+            }
+        }"#;
+        parse_thresholds(&Value::parse(text).unwrap()).unwrap()
+    }
+
+    fn bench(entries: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        entries.iter().map(|&(k, v)| (k.to_string(), v)).collect()
+    }
+
+    #[test]
+    fn thresholds_parse_and_compute_limits() {
+        let profiles = thresholds_fixture();
+        let pr = &profiles["pr"];
+        let ceil = pr["engine/iteration_ns"];
+        assert_eq!(ceil.kind, ThresholdKind::Ceiling);
+        assert!((ceil.limit() - 2_000_000.0).abs() < 1e-6);
+        let floor = pr["driver/full_job_tokens_per_s"];
+        assert_eq!(floor.kind, ThresholdKind::Floor);
+        assert!((floor.limit() - 25_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn in_allowance_values_pass() {
+        let profiles = thresholds_fixture();
+        let b = bench(&[
+            ("engine/iteration_ns", 1_900_000.0),
+            ("driver/full_job_tokens_per_s", 26_000.0),
+        ]);
+        let report = evaluate("pr", &profiles["pr"], &b);
+        assert!(report.passed(), "{}", report.render());
+        assert!(report.uncovered.is_empty());
+    }
+
+    /// The acceptance-criteria breach test: a synthetic regression past
+    /// the allowance must fail the gate and name the metric.
+    #[test]
+    fn synthetic_breach_fails_the_gate() {
+        let profiles = thresholds_fixture();
+        // Ceiling blown 2.5×, floor undershot to 20% of baseline.
+        let b = bench(&[
+            ("engine/iteration_ns", 2_500_000.0),
+            ("driver/full_job_tokens_per_s", 10_000.0),
+        ]);
+        let report = evaluate("pr", &profiles["pr"], &b);
+        assert!(!report.passed());
+        assert_eq!(report.rows.iter().filter(|r| r.breached).count(), 2);
+        let rendered = report.render();
+        assert!(rendered.contains("BREACH"), "{rendered}");
+        assert!(rendered.contains("engine/iteration_ns"), "{rendered}");
+    }
+
+    #[test]
+    fn boundary_values_pass_exactly_at_the_limit() {
+        let profiles = thresholds_fixture();
+        let b = bench(&[
+            ("engine/iteration_ns", 2_000_000.0),
+            ("driver/full_job_tokens_per_s", 25_000.0),
+        ]);
+        assert!(evaluate("pr", &profiles["pr"], &b).passed());
+    }
+
+    #[test]
+    fn missing_metric_is_a_breach_extra_metric_is_not() {
+        let profiles = thresholds_fixture();
+        let b = bench(&[
+            ("engine/iteration_ns", 1_000_000.0),
+            ("radix/new_metric_ns", 5.0), // no threshold yet
+        ]);
+        let report = evaluate("pr", &profiles["pr"], &b);
+        assert!(!report.passed()); // tokens_per_s missing from the dump
+        let missing = report
+            .rows
+            .iter()
+            .find(|r| r.metric == "driver/full_job_tokens_per_s")
+            .unwrap();
+        assert!(missing.breached && missing.value.is_none());
+        assert_eq!(report.uncovered, vec!["radix/new_metric_ns".to_string()]);
+        let rendered = report.render();
+        assert!(rendered.contains("missing"), "{rendered}");
+        assert!(rendered.contains("uncovered"), "{rendered}");
+    }
+
+    #[test]
+    fn bad_threshold_files_are_config_errors() {
+        for text in [
+            r#"{"profiles": {}}"#,                       // no schema
+            r#"{"schema": 2, "profiles": {}}"#,          // wrong schema
+            r#"{"schema": 1}"#,                          // no profiles
+            r#"{"schema": 1, "profiles": {"pr": {"m":
+                {"kind": "sideways", "baseline": 1.0,
+                 "allowed_regression_pct": 10.0}}}}"#,   // bad kind
+            r#"{"schema": 1, "profiles": {"pr": {"m":
+                {"kind": "floor", "baseline": 1.0,
+                 "allowed_regression_pct": 100.0}}}}"#,  // floor pct >= 100
+            r#"{"schema": 1, "profiles": {"pr": {"m":
+                {"kind": "ceiling", "baseline": -3.0,
+                 "allowed_regression_pct": 10.0}}}}"#,   // negative baseline
+        ] {
+            let v = Value::parse(text).unwrap();
+            assert!(parse_thresholds(&v).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn bench_parsing_keeps_numbers_and_skips_the_rest() {
+        let v = Value::parse(
+            r#"{"a": 1.5, "b": "text", "c": {"nested": 1}, "d": 2}"#,
+        )
+        .unwrap();
+        let b = parse_bench(&v).unwrap();
+        assert_eq!(b, bench(&[("a", 1.5), ("d", 2.0)]));
+        assert!(parse_bench(&Value::parse("[1,2]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn summary_line_digests_mixed_shapes() {
+        let v = Value::parse(r#"{"tput": 123.456, "cells": {"a": 1, "b": 2}}"#).unwrap();
+        let line = summarize_bench("BENCH_x.json", &v);
+        assert!(line.starts_with("BENCH_x.json: "), "{line}");
+        assert!(line.contains("tput=123.456"), "{line}");
+        assert!(line.contains("cells={2 entries}"), "{line}");
+    }
+
+    #[test]
+    fn file_driver_reports_missing_profile_and_files_as_errors() {
+        let dir = std::env::temp_dir().join("concur_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bench_p = dir.join("bench.json");
+        let thr_p = dir.join("thr.json");
+        std::fs::write(&bench_p, r#"{"engine/iteration_ns": 1.0}"#).unwrap();
+        std::fs::write(
+            &thr_p,
+            r#"{"schema": 1, "profiles": {"pr": {"engine/iteration_ns":
+                {"kind": "ceiling", "baseline": 2.0,
+                 "allowed_regression_pct": 10.0}}}}"#,
+        )
+        .unwrap();
+        assert!(run_gate_files(&bench_p, &thr_p, "pr").unwrap().passed());
+        assert!(run_gate_files(&bench_p, &thr_p, "nightly").is_err());
+        assert!(run_gate_files(&dir.join("nope.json"), &thr_p, "pr").is_err());
+    }
+}

@@ -32,6 +32,7 @@
 //!                     optional cross-replica shared-prefix broadcast
 //!                     tier.
 //! * [`driver`]      — glue that runs a full agentic batch job end-to-end.
+//! * [`gate`]        — CI perf gate: BENCH json vs checked-in thresholds.
 //! * [`runtime`]     — PJRT bridge: loads `artifacts/*.hlo.txt` (lowered
 //!                     from the L2 JAX model + L1 Pallas kernels) and
 //!                     executes them from the request path.
@@ -49,6 +50,7 @@ pub mod core;
 pub mod costmodel;
 pub mod driver;
 pub mod engine;
+pub mod gate;
 pub mod metrics;
 pub mod repro;
 pub mod runtime;

@@ -10,6 +10,10 @@
 //!                                        serve the real tiny model (PJRT)
 //! concur trace --out FILE [--agents N] [--seed S]
 //!                                        dump a deterministic workload trace
+//! concur bench gate --bench FILE --thresholds FILE --profile NAME
+//!                                        perf-gate a BENCH json (exit 0 pass,
+//!                                        1 breach, 2 config/IO error)
+//! concur bench summary FILE...           one-line digests for CI summaries
 //! concur info                            print presets + pool arithmetic
 //! ```
 //!
@@ -29,6 +33,12 @@ use concur::server::{RealServer, Sampling, ServeRequest};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    // `bench gate` owns its exit codes (0 pass / 1 breach / 2 config
+    // error) so CI can tell a regression from a wiring bug; every other
+    // command keeps the plain ok/err mapping.
+    if args.first().map(String::as_str) == Some("bench") {
+        return cmd_bench(&args[1..]);
+    }
     match dispatch(&args) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
@@ -77,10 +87,75 @@ USAGE:
   concur serve [--batch N] [--requests N] [--max-new N] [--prompt TEXT]
                [--artifacts DIR] [--temperature T]
   concur trace --out FILE [--agents N] [--seed S]
+  concur bench gate --bench FILE --thresholds FILE --profile NAME
+  concur bench summary FILE...
   concur info
 ",
         repro::cli_name_list()
     )
+}
+
+/// `concur bench <gate|summary>` — the CI perf-gate surface.  Returns the
+/// process exit code directly: the gate distinguishes "perf regression"
+/// (1) from "the gate itself is misconfigured" (2).
+fn cmd_bench(args: &[String]) -> ExitCode {
+    match args.first().map(String::as_str) {
+        Some("gate") => {
+            let (Some(bench), Some(thresholds), Some(profile)) = (
+                flag(args, "--bench"),
+                flag(args, "--thresholds"),
+                flag(args, "--profile"),
+            ) else {
+                eprintln!(
+                    "error: bench gate requires --bench FILE --thresholds FILE --profile NAME"
+                );
+                return ExitCode::from(2);
+            };
+            match concur::gate::run_gate_files(
+                std::path::Path::new(&bench),
+                std::path::Path::new(&thresholds),
+                &profile,
+            ) {
+                Ok(report) => {
+                    print!("{}", report.render());
+                    if report.passed() {
+                        ExitCode::SUCCESS
+                    } else {
+                        ExitCode::from(1)
+                    }
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    ExitCode::from(2)
+                }
+            }
+        }
+        Some("summary") => {
+            let files: Vec<&String> = args[1..].iter().filter(|a| !a.starts_with("--")).collect();
+            if files.is_empty() {
+                eprintln!("error: bench summary requires at least one BENCH json file");
+                return ExitCode::from(2);
+            }
+            for f in files {
+                let line = std::fs::read_to_string(f)
+                    .map_err(|e| concur::core::ConcurError::config(format!("{f}: {e}")))
+                    .and_then(|text| concur::core::json::Value::parse(&text))
+                    .map(|v| concur::gate::summarize_bench(f, &v));
+                match line {
+                    Ok(line) => println!("{line}"),
+                    Err(e) => {
+                        eprintln!("error: {e}");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            ExitCode::SUCCESS
+        }
+        _ => {
+            eprintln!("error: bench expects a 'gate' or 'summary' subcommand\n\n{}", usage());
+            ExitCode::from(2)
+        }
+    }
 }
 
 fn cmd_repro(args: &[String]) -> Result<()> {

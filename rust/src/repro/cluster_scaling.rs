@@ -9,8 +9,11 @@
 //! cache-affinity routing should beat pure load balancing on hit rate as
 //! soon as there is more than one replica to be wrong about.
 //!
-//! Run via `concur repro cluster` or the `replica_sweep` example (which
-//! also emits `BENCH_cluster.json` for the nightly perf trajectory).
+//! Run via `concur repro cluster` or the `replica_sweep` example; both
+//! emit `BENCH_cluster.json` for the nightly perf trajectory (and for
+//! the CI determinism job, which diffs two runs of it — override the
+//! repro path with `BENCH_CLUSTER_PATH`, the example's with
+//! `BENCH_JSON_PATH`).
 
 use std::collections::BTreeMap;
 
@@ -161,7 +164,15 @@ pub fn output_from(cells: &[Cell]) -> ExpOutput {
 }
 
 pub fn run() -> Result<ExpOutput> {
-    Ok(output_from(&run_sweep()?))
+    let cells = run_sweep()?;
+    // Emit the machine-readable dump alongside the table: the CI
+    // determinism job runs `concur repro cluster` at two CONCUR_WORKERS
+    // settings and byte-diffs this file, and the nightly perf trajectory
+    // archives it.  Override the path with BENCH_CLUSTER_PATH.
+    let path = std::env::var("BENCH_CLUSTER_PATH")
+        .unwrap_or_else(|_| "BENCH_cluster.json".to_string());
+    std::fs::write(&path, format!("{}\n", bench_json(&cells).to_string_pretty()))?;
+    Ok(output_from(&cells))
 }
 
 #[cfg(test)]

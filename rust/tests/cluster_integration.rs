@@ -578,3 +578,93 @@ fn affinity_preserves_single_replica_hit_rate() {
         single.hit_rate
     );
 }
+
+/// PROPERTY (tentpole acceptance): `run_sharded` output is bit-identical
+/// across step-worker counts {1, 2, 4} on the **full-stack** config —
+/// broadcast tier + asynchronous transport + open-loop traffic +
+/// stochastic fault injection all enabled at once — over 5 seeds.  The
+/// parallel event-clock merge only changes how ready replicas are
+/// stepped between clock stops, never what any of the machinery above
+/// observes.  (The CI determinism job pins the same claim end-to-end via
+/// `CONCUR_WORKERS` on `concur repro cluster`.)
+#[test]
+fn full_stack_run_is_bit_identical_across_step_worker_counts() {
+    use concur::agent::open_loop_fleet;
+    use concur::cluster::{make_router, run_sharded_with_workers};
+    use concur::coordinator::make_controller;
+    use concur::costmodel::CostModel;
+    use concur::engine::SimEngine;
+
+    for seed in 0..5u64 {
+        let job = JobConfig {
+            cluster: presets::qwen3_cluster(2),
+            engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+            workload: WorkloadConfig {
+                n_agents: 16,
+                steps_min: 3,
+                steps_max: 5,
+                task_families: 5,
+                seed: 40 + seed,
+                ..WorkloadConfig::default()
+            },
+            scheduler: SchedulerKind::Concur(AimdParams::default()),
+            topology: TopologyConfig {
+                replicas: 3,
+                router: RouterKind::CacheAffinity,
+                prefix_tier: PrefixTierConfig::on(),
+                transport: TransportConfig::on(),
+                open_loop: OpenLoopConfig {
+                    arrival_rate_per_s: 2.0,
+                    seed: 100 + seed,
+                    ..OpenLoopConfig::on()
+                },
+                fault_rates: FaultRateConfig {
+                    mtbf_s: 5.0,
+                    mttr_s: 2.0,
+                    ..FaultRateConfig::on()
+                },
+                ..TopologyConfig::default()
+            },
+        };
+        job.validate().unwrap();
+
+        let run_at = |step_workers: usize| -> RunResult {
+            let n = job.topology.replicas;
+            let mut engines: Vec<SimEngine> = (0..n)
+                .map(|_| SimEngine::new(job.engine.clone(), CostModel::new(job.cluster.clone())))
+                .collect();
+            let mut router = make_router(job.topology.router);
+            let agents = open_loop_fleet(&job.workload, &job.topology.open_loop);
+            run_sharded_with_workers(
+                &mut engines,
+                router.as_mut(),
+                agents,
+                make_controller(&job.scheduler),
+                &job.topology.fault_plan,
+                &job.topology.tool_skew,
+                &job.topology.prefix_tier,
+                &job.topology.transport,
+                &job.topology.open_loop,
+                &job.topology.fault_rates,
+                step_workers,
+            )
+            .unwrap()
+        };
+
+        let sequential = run_at(1);
+        // The run must actually exercise the machinery it claims to pin.
+        assert!(sequential.open_loop.arrived > 0, "seed {seed}: no open-loop arrivals");
+        assert!(
+            sequential.faults.stochastic_injected + sequential.faults.stochastic_suppressed > 0,
+            "seed {seed}: the fault sampler never drew"
+        );
+        for workers in [2usize, 4] {
+            let parallel = run_at(workers);
+            assert_bit_identical(
+                &parallel,
+                &sequential,
+                &format!("seed {seed}, {workers} step workers vs sequential"),
+            );
+        }
+    }
+}

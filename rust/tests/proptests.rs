@@ -856,6 +856,230 @@ fn arena_tree_matches_reference_implementation() {
     }
 }
 
+/// PROPERTY (satellite): tree invariants hold with **generational arena
+/// compaction** forced mid-sequence, across every public mutator
+/// including the broadcast pin/demote pair.  `check_invariants` runs
+/// after every op and after every forced compaction, and compaction must
+/// leave the arena at exactly the live token count while every pinned
+/// sequence stays fully matchable.
+#[test]
+fn radix_invariants_with_mid_sequence_compaction() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(11_000 + seed);
+        let mut tree = RadixTree::new();
+        let mut locked: Vec<Vec<usize>> = Vec::new();
+        let mut broadcast: Vec<(Vec<usize>, Vec<Token>)> = Vec::new();
+        let mut clockv = 0u64;
+        for op in 0..250 {
+            clockv += 1;
+            let now = Micros(clockv);
+            match rng.gen_range(0, 13) {
+                0..=2 => {
+                    let seq = random_seq(&mut rng, 300);
+                    let cut = rng.gen_range(0, seq.len() as u64 + 1) as usize;
+                    let ins = tree.insert_parts(&seq[..cut], &seq[cut..], now);
+                    if rng.chance(0.3) && !ins.path.is_empty() {
+                        tree.lock_path(&ins.path);
+                        locked.push(ins.path);
+                    }
+                }
+                3 => {
+                    if broadcast.len() < 6 {
+                        let seq = random_seq(&mut rng, 300);
+                        let ins = tree.insert(&seq, now);
+                        assert!(!ins.path.is_empty());
+                        tree.pin_broadcast(&ins.path);
+                        broadcast.push((ins.path, seq));
+                    }
+                }
+                4..=5 => {
+                    let seq = random_seq(&mut rng, 300);
+                    let m = tree.match_prefix(&seq, now);
+                    assert!(m.total() <= seq.len() as u64);
+                }
+                6 => {
+                    if let Some(path) = locked.pop() {
+                        tree.unlock_path(&path);
+                    }
+                }
+                7 => {
+                    if !broadcast.is_empty() {
+                        let i = rng.gen_range(0, broadcast.len() as u64) as usize;
+                        let (path, _) = broadcast.remove(i);
+                        tree.demote_broadcast(&path);
+                    }
+                }
+                8..=9 => {
+                    let want = rng.gen_range(1, 2_000);
+                    let policy = if rng.chance(0.5) {
+                        EvictPolicy::Discard
+                    } else {
+                        EvictPolicy::OffloadToCpu
+                    };
+                    tree.evict(want, policy);
+                }
+                10 => {
+                    tree.trim_cpu(rng.gen_range(0, 2_000));
+                }
+                11 => {
+                    // The new op in the mix: force a compaction at an
+                    // arbitrary point, regardless of slack.
+                    tree.compact_arena();
+                    assert_eq!(
+                        tree.arena_len() as u64,
+                        tree.gpu_tokens() + tree.cpu_tokens(),
+                        "seed {seed} op {op}: compaction left slack"
+                    );
+                    tree.check_invariants().unwrap_or_else(|e| {
+                        panic!("seed {seed} op {op}: invariant after compaction: {e}")
+                    });
+                }
+                _ => {
+                    let seq = random_seq(&mut rng, 300);
+                    let m = tree.match_prefix(&seq, now);
+                    if m.cpu_tokens > 0 {
+                        tree.reload_path(&m.path, now);
+                    }
+                }
+            }
+            tree.check_invariants().unwrap_or_else(|e| {
+                panic!("seed {seed} op {op}: invariant violated: {e}")
+            });
+            for (_, seq) in &broadcast {
+                clockv += 1;
+                let m = tree.match_prefix(seq, Micros(clockv));
+                assert_eq!(
+                    m.total(),
+                    seq.len() as u64,
+                    "seed {seed} op {op}: broadcast-pinned sequence lost cache"
+                );
+            }
+        }
+        // Tear down, compact once more, and drain.
+        while let Some((path, _)) = broadcast.pop() {
+            tree.demote_broadcast(&path);
+        }
+        while let Some(path) = locked.pop() {
+            tree.unlock_path(&path);
+        }
+        tree.compact_arena();
+        tree.check_invariants().unwrap();
+        tree.evict(u64::MAX, EvictPolicy::Discard);
+        tree.check_invariants().unwrap();
+    }
+}
+
+/// PROPERTY (differential): a compacting tree is observably
+/// bit-identical to a non-compacting oracle (`set_auto_compaction(false)`
+/// — the pre-compaction append-only behavior) on random
+/// match/insert/evict/reload/trim traces.  Forced compactions are
+/// sprinkled through the trace on the compacting side only: compaction
+/// rewrites arena offsets, never behavior.
+#[test]
+fn compacting_tree_matches_non_compacting_oracle() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(12_000 + seed);
+        let mut compacting = RadixTree::new();
+        let mut oracle = RadixTree::new();
+        oracle.set_auto_compaction(false);
+        let mut locked: Vec<Vec<usize>> = Vec::new();
+        let mut clockv = 0u64;
+        for op in 0..300 {
+            clockv += 1;
+            let now = Micros(clockv);
+            match rng.gen_range(0, 12) {
+                0..=3 => {
+                    let seq = random_seq(&mut rng, 300);
+                    let cut = rng.gen_range(0, seq.len() as u64 + 1) as usize;
+                    let a = compacting.insert_parts(&seq[..cut], &seq[cut..], now);
+                    let b = oracle.insert_parts(&seq[..cut], &seq[cut..], now);
+                    assert_eq!(a.new_gpu_tokens, b.new_gpu_tokens, "seed {seed} op {op}");
+                    assert_eq!(a.path, b.path, "seed {seed} op {op}");
+                    if rng.chance(0.35) && !a.path.is_empty() {
+                        compacting.lock_path(&a.path);
+                        oracle.lock_path(&b.path);
+                        locked.push(a.path);
+                    }
+                }
+                4..=5 => {
+                    let seq = random_seq(&mut rng, 300);
+                    let a = compacting.match_prefix(&seq, now);
+                    let b = oracle.match_prefix(&seq, now);
+                    assert_eq!(a.gpu_tokens, b.gpu_tokens, "seed {seed} op {op}");
+                    assert_eq!(a.cpu_tokens, b.cpu_tokens, "seed {seed} op {op}");
+                    assert_eq!(a.path, b.path, "seed {seed} op {op}");
+                }
+                6 => {
+                    if let Some(path) = locked.pop() {
+                        compacting.unlock_path(&path);
+                        oracle.unlock_path(&path);
+                    }
+                }
+                7..=8 => {
+                    let want = rng.gen_range(1, 2_000);
+                    let policy = if rng.chance(0.5) {
+                        EvictPolicy::Discard
+                    } else {
+                        EvictPolicy::OffloadToCpu
+                    };
+                    let a = compacting.evict(want, policy);
+                    let b = oracle.evict(want, policy);
+                    assert_eq!(
+                        a.freed_gpu_tokens, b.freed_gpu_tokens,
+                        "seed {seed} op {op}: eviction diverged"
+                    );
+                    assert_eq!(a.discarded_tokens, b.discarded_tokens, "seed {seed} op {op}");
+                    assert_eq!(a.offloaded_tokens, b.offloaded_tokens, "seed {seed} op {op}");
+                    assert_eq!(a.nodes, b.nodes, "seed {seed} op {op}");
+                }
+                9 => {
+                    let limit = rng.gen_range(0, 2_000);
+                    assert_eq!(
+                        compacting.trim_cpu(limit),
+                        oracle.trim_cpu(limit),
+                        "seed {seed} op {op}: trim diverged"
+                    );
+                }
+                10 => {
+                    // Compacting side only: the divergence injection.
+                    compacting.compact_arena();
+                }
+                _ => {
+                    let seq = random_seq(&mut rng, 300);
+                    let a = compacting.match_prefix(&seq, now);
+                    let b = oracle.match_prefix(&seq, now);
+                    assert_eq!(a.path, b.path, "seed {seed} op {op}");
+                    if a.cpu_tokens > 0 {
+                        let pa = compacting.reload_path(&a.path, now);
+                        let pb = oracle.reload_path(&b.path, now);
+                        assert_eq!(pa, pb, "seed {seed} op {op}: reload diverged");
+                    }
+                }
+            }
+            assert_eq!(compacting.gpu_tokens(), oracle.gpu_tokens(), "seed {seed} op {op}");
+            assert_eq!(compacting.cpu_tokens(), oracle.cpu_tokens(), "seed {seed} op {op}");
+            assert_eq!(compacting.node_count(), oracle.node_count(), "seed {seed} op {op}");
+            assert_eq!(
+                compacting.lru_order_for_tests(),
+                oracle.lru_order_for_tests(),
+                "seed {seed} op {op}: eviction order diverged"
+            );
+            // The compacting side must stay bounded; the oracle's arena
+            // only ever grows.
+            assert!(
+                compacting.arena_len() <= oracle.arena_len(),
+                "seed {seed} op {op}: compaction grew the arena"
+            );
+            compacting.check_invariants().unwrap_or_else(|e| {
+                panic!("seed {seed} op {op}: compacting invariant: {e}")
+            });
+            oracle.check_invariants().unwrap_or_else(|e| {
+                panic!("seed {seed} op {op}: oracle invariant: {e}")
+            });
+        }
+    }
+}
+
 /// PROPERTY: `run_jobs_parallel` returns bit-identical `RunResult`s to
 /// serial execution on randomized seeded workloads — the parallel sweep
 /// harness must never change simulation outcomes.
