@@ -16,7 +16,7 @@ pub mod trace;
 pub mod workload;
 
 pub use arrivals::open_loop_fleet;
-pub use workload::{WorkloadGenerator, WorkloadStats};
+pub use workload::{workflow_fleet, WorkflowGraph, WorkloadGenerator, WorkloadStats};
 
 use crate::core::{AgentId, Micros, RequestId, Token};
 use crate::engine::Request;
@@ -109,6 +109,24 @@ impl Agent {
 
     pub fn steps_done(&self) -> usize {
         self.step
+    }
+
+    /// Steps left after the current one completes (0 on the last step).
+    /// This is the `StepsToExecution` lifetime hint: how much future this
+    /// agent's KV still has in front of it.
+    pub fn remaining_steps(&self) -> usize {
+        self.plan.len().saturating_sub(self.step + 1)
+    }
+
+    /// Tool latency the agent will wait after its *current* step — the
+    /// `ToolTtl` lifetime hint (`None` on the final step: there is no
+    /// tool call, the KV has no return to be pinned for).
+    pub fn next_tool_latency(&self) -> Option<Micros> {
+        if self.step + 1 < self.plan.len() {
+            Some(self.plan[self.step].tool_latency)
+        } else {
+            None
+        }
     }
 
     /// Build the generation request for the current step.

@@ -145,6 +145,196 @@ impl Agent {
     }
 }
 
+/// Dependency DAG of a workflow fleet: which agents are released when a
+/// node finishes, and how many unfinished dependencies each node still
+/// has.  The cluster owns a mutable copy and drives release through the
+/// existing slot path: only indegree-0 nodes are registered at start;
+/// [`on_finished`](WorkflowGraph::on_finished) surfaces newly-ready
+/// nodes as their last dependency completes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkflowGraph {
+    /// `children[i]` = agents whose indegree drops when agent `i`
+    /// finishes (indexed by dense `AgentId`).
+    children: Vec<Vec<AgentId>>,
+    /// Remaining unfinished dependencies per agent.
+    indegree: Vec<u32>,
+}
+
+impl WorkflowGraph {
+    /// An edge-free graph over `n` nodes (every node is a root).  This is
+    /// what a non-workflow fleet looks like to release logic.
+    pub fn independent(n: usize) -> WorkflowGraph {
+        WorkflowGraph { children: vec![Vec::new(); n], indegree: vec![0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indegree.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indegree.is_empty()
+    }
+
+    /// Is this node free of unfinished dependencies (admissible now)?
+    pub fn is_ready(&self, a: AgentId) -> bool {
+        self.indegree[a.0 as usize] == 0
+    }
+
+    /// Downstream consumers released by this node's completion.
+    pub fn children_of(&self, a: AgentId) -> &[AgentId] {
+        &self.children[a.0 as usize]
+    }
+
+    /// Record a node's completion: decrement each child's indegree and
+    /// return the children that just became ready, in child order
+    /// (deterministic release order).
+    pub fn on_finished(&mut self, a: AgentId) -> Vec<AgentId> {
+        let mut ready = Vec::new();
+        for &c in &self.children[a.0 as usize] {
+            let d = &mut self.indegree[c.0 as usize];
+            debug_assert!(*d > 0, "child {c} released twice");
+            *d -= 1;
+            if *d == 0 {
+                ready.push(c);
+            }
+        }
+        ready
+    }
+}
+
+/// Generate a workflow fleet: `cfg.workflow.graphs` independent DAGs,
+/// each a planner whose first step *produces* a shared intermediate
+/// context, fan-out workers whose prompts embed that context
+/// byte-identically, and — for the map-reduce share — a reducer joining
+/// on every worker.  Agent ids are dense and sequential in creation
+/// order (planner, workers, reducer per graph), which the cluster's
+/// registration loop requires.
+///
+/// Content layout (W = `align_tokens`, S = the graph's shared context):
+///
+/// * planner prompt  = `family ++ unique`, and its step-0 generation
+///   ends with `pad ++ S` padded so S starts on a W-aligned offset of
+///   the planner's accumulated context — S sits *mid-prompt* in every
+///   later planner step, visible only to content-hash detection;
+/// * worker prompt   = `family ++ pad ++ S ++ unique`, the pad shared
+///   per graph, so siblings share `family ++ pad ++ S` as an ordinary
+///   radix prefix and S starts W-aligned here too;
+/// * reducer prompt  = same layout as a worker.
+///
+/// Shape draws (fan-out width, map-reduce coin) come from
+/// `workflow.seed`; token content comes from the workload seed via the
+/// same [`WorkloadGenerator`] machinery as the plain fleet.
+pub fn workflow_fleet(cfg: &WorkloadConfig) -> (Vec<Agent>, WorkflowGraph) {
+    let wf = cfg.workflow;
+    assert!(wf.enabled, "workflow_fleet called with workflow disabled");
+    let mut g = WorkloadGenerator::new(cfg.clone());
+    let mut shape = Rng::new(wf.seed);
+    let w = wf.align_tokens as u64;
+
+    let families: Vec<Vec<Token>> = (0..cfg.task_families)
+        .map(|f| {
+            let base = f * cfg.system_prompt_tokens;
+            (base..base + cfg.system_prompt_tokens).collect()
+        })
+        .collect();
+
+    let mut agents: Vec<Agent> = Vec::new();
+    let mut children: Vec<Vec<AgentId>> = Vec::new();
+    let mut indegree: Vec<u32> = Vec::new();
+
+    for gi in 0..wf.graphs {
+        let family = &families[gi % families.len()];
+        let fanout = if wf.fanout_min >= wf.fanout_max {
+            wf.fanout_min
+        } else {
+            shape.gen_range(wf.fanout_min as u64, wf.fanout_max as u64 + 1) as u32
+        };
+        let map_reduce = shape.chance(wf.map_reduce_share);
+        let shared = g.unique_run(wf.shared_context_tokens);
+        // Pad shared per graph: workers prefix-share `family ++ pad ++ S`.
+        let worker_pad_len = (w - (family.len() as u64 % w)) % w;
+        let worker_pad = g.unique_run(worker_pad_len as u32);
+
+        let planner_id = AgentId(agents.len() as u64);
+        // Planner: plain prompt; step 0 generates `pad ++ S` at a
+        // W-aligned offset of the accumulated context.
+        let init = g.range_sample(cfg.initial_prompt_min, cfg.initial_prompt_max);
+        let mut ctx = family.clone();
+        ctx.extend(g.unique_run(init));
+        let steps = g.range_sample(cfg.steps_min, cfg.steps_max);
+        let plan: Vec<StepPlan> = (0..steps)
+            .map(|k| {
+                let gen_n = g.range_sample(cfg.gen_tokens_min, cfg.gen_tokens_max);
+                let tool_n = g.range_sample(cfg.tool_tokens_min, cfg.tool_tokens_max);
+                let last = k + 1 == steps;
+                let lat = g.rng.lognormal(cfg.tool_latency_mu, cfg.tool_latency_sigma);
+                let mut gen = g.unique_run(gen_n);
+                if k == 0 {
+                    let off = (family.len() + init as usize + gen.len()) as u64;
+                    let pad = (w - (off % w)) % w;
+                    gen.extend(g.unique_run(pad as u32));
+                    gen.extend_from_slice(&shared);
+                }
+                StepPlan {
+                    gen,
+                    tool_tokens: if last { Vec::new() } else { g.unique_run(tool_n) },
+                    tool_latency: Micros::from_secs_f64(lat),
+                }
+            })
+            .collect();
+        agents.push(Agent::new(planner_id, ctx, plan));
+        children.push(Vec::new());
+        indegree.push(0);
+
+        // Workers (and the reducer) embed the shared context mid-prompt.
+        let consumer = |g: &mut WorkloadGenerator| {
+            let mut ctx = family.clone();
+            ctx.extend_from_slice(&worker_pad);
+            ctx.extend_from_slice(&shared);
+            let init = g.range_sample(cfg.initial_prompt_min, cfg.initial_prompt_max);
+            ctx.extend(g.unique_run(init));
+            let steps = g.range_sample(cfg.steps_min, cfg.steps_max);
+            let plan: Vec<StepPlan> = (0..steps)
+                .map(|k| {
+                    let gen_n = g.range_sample(cfg.gen_tokens_min, cfg.gen_tokens_max);
+                    let tool_n = g.range_sample(cfg.tool_tokens_min, cfg.tool_tokens_max);
+                    let last = k + 1 == steps;
+                    let lat =
+                        g.rng.lognormal(cfg.tool_latency_mu, cfg.tool_latency_sigma);
+                    StepPlan {
+                        gen: g.unique_run(gen_n),
+                        tool_tokens: if last { Vec::new() } else { g.unique_run(tool_n) },
+                        tool_latency: Micros::from_secs_f64(lat),
+                    }
+                })
+                .collect();
+            (ctx, plan)
+        };
+
+        let mut worker_ids = Vec::with_capacity(fanout as usize);
+        for _ in 0..fanout {
+            let id = AgentId(agents.len() as u64);
+            let (ctx, plan) = consumer(&mut g);
+            agents.push(Agent::new(id, ctx, plan));
+            children.push(Vec::new());
+            indegree.push(1); // released by the planner
+            children[planner_id.0 as usize].push(id);
+            worker_ids.push(id);
+        }
+        if map_reduce {
+            let id = AgentId(agents.len() as u64);
+            let (ctx, plan) = consumer(&mut g);
+            agents.push(Agent::new(id, ctx, plan));
+            children.push(Vec::new());
+            indegree.push(fanout); // released by the last worker
+            for &wid in &worker_ids {
+                children[wid.0 as usize].push(id);
+            }
+        }
+    }
+    (agents, WorkflowGraph { children, indegree })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +406,106 @@ mod tests {
                     assert!(t >= UNIQUE_BASE);
                 }
             }
+        }
+    }
+
+    fn wf_cfg() -> WorkloadConfig {
+        WorkloadConfig {
+            workflow: crate::config::WorkflowConfig::on(),
+            ..WorkloadConfig::default()
+        }
+    }
+
+    #[test]
+    fn workflow_fleet_is_deterministic_and_seed_sensitive() {
+        let (a, ga) = workflow_fleet(&wf_cfg());
+        let (b, gb) = workflow_fleet(&wf_cfg());
+        assert_eq!(a.len(), b.len());
+        assert_eq!(ga, gb);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context(), y.context());
+            assert_eq!(x.steps_total(), y.steps_total());
+        }
+        // Perturbing the workflow seed moves the shape.
+        let mut cfg = wf_cfg();
+        cfg.workflow.seed += 1;
+        let (c, gc) = workflow_fleet(&cfg);
+        assert!(
+            gc != ga || c.len() != a.len(),
+            "workflow seed must influence the fleet"
+        );
+    }
+
+    #[test]
+    fn workflow_graph_has_dense_topo_structure() {
+        let (agents, graph) = workflow_fleet(&wf_cfg());
+        assert_eq!(agents.len(), graph.len());
+        for (i, a) in agents.iter().enumerate() {
+            assert_eq!(a.id.0 as usize, i, "ids must be dense and sequential");
+        }
+        // Every graph: planner root with >= fanout_min children; workers
+        // have indegree 1; reducers join on every worker.
+        let roots: Vec<_> =
+            agents.iter().filter(|a| graph.is_ready(a.id)).map(|a| a.id).collect();
+        assert_eq!(roots.len(), wf_cfg().workflow.graphs, "one root per graph");
+        for &r in &roots {
+            assert!(
+                graph.children_of(r).len() >= wf_cfg().workflow.fanout_min as usize,
+                "planner must fan out"
+            );
+        }
+        // Releasing a planner readies exactly its workers.
+        let mut g = graph.clone();
+        let ready = g.on_finished(roots[0]);
+        assert_eq!(ready, graph.children_of(roots[0]).to_vec());
+    }
+
+    #[test]
+    fn workflow_consumers_share_context_byte_identically_and_aligned() {
+        let cfg = wf_cfg();
+        let (agents, graph) = workflow_fleet(&cfg);
+        let s = cfg.workflow.shared_context_tokens as usize;
+        let w = cfg.workflow.align_tokens as usize;
+        let sys = cfg.system_prompt_tokens as usize;
+        let roots: Vec<_> =
+            agents.iter().filter(|a| graph.is_ready(a.id)).map(|a| a.id).collect();
+        let mut saw_reducer = false;
+        for &r in &roots {
+            let workers = graph.children_of(r);
+            assert!(!workers.is_empty());
+            // The planner's step-0 generation ends with the shared run.
+            let planner = &agents[r.0 as usize];
+            let gen0 = &planner.plan_for_stats()[0].gen;
+            let shared = &gen0[gen0.len() - s..];
+            // Every consumer embeds the identical run at an aligned,
+            // identical mid-prompt offset.
+            let pad = (w - sys % w) % w;
+            let off = sys + pad;
+            assert_eq!(off % w, 0, "shared context must be chunk-aligned");
+            for &c in workers {
+                let ctx = agents[c.0 as usize].context();
+                assert_eq!(&ctx[off..off + s], shared, "worker context differs");
+                for &rc in graph.children_of(c) {
+                    saw_reducer = true;
+                    let rctx = agents[rc.0 as usize].context();
+                    assert_eq!(&rctx[off..off + s], shared, "reducer context differs");
+                }
+            }
+            // And it is W-aligned in the planner's accumulated context:
+            // ctx after step 0 = prompt ++ gen0, with S its suffix.
+            let s_off = planner.context_len() + gen0.len() - s;
+            assert_eq!(s_off % w, 0, "planner-side shared context misaligned");
+        }
+        assert!(saw_reducer, "default map_reduce_share must produce a reducer");
+    }
+
+    #[test]
+    fn independent_graph_releases_nothing() {
+        let mut g = WorkflowGraph::independent(4);
+        assert_eq!(g.len(), 4);
+        for i in 0..4 {
+            assert!(g.is_ready(AgentId(i)));
+            assert!(g.on_finished(AgentId(i)).is_empty());
         }
     }
 

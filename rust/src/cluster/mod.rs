@@ -116,7 +116,7 @@ pub use router::{
 };
 pub use transport::{Transfer, TransferKind, TransferPayload, Transport, TransportStats};
 
-use crate::agent::{Agent, AgentPhase, Priority};
+use crate::agent::{Agent, AgentPhase, Priority, WorkflowGraph};
 use crate::config::{
     FaultKind, FaultPlan, FaultRateConfig, JobConfig, OpenLoopConfig, PrefixTierConfig,
     TransportConfig,
@@ -127,7 +127,7 @@ use crate::coordinator::{
 use crate::core::{AgentId, ConcurError, Micros, RequestId, Result, Rng};
 use crate::costmodel::CostModel;
 use crate::driver::{AgentOutcome, RunResult};
-use crate::engine::{EngineCounters, EngineSignals, FinishedReq, SimEngine};
+use crate::engine::{EngineCounters, EngineSignals, FinishedReq, KvLifetimePolicy, SimEngine};
 use crate::metrics::{Breakdown, Histogram, LifetimeRatio, Phase, TimeSeries};
 use crate::sim::{EventQueue, SimClock};
 
@@ -348,14 +348,29 @@ impl ClusterCoordinator {
 
     /// Run one batch job over the fleet to completion.
     pub fn run(
+        self,
+        agents: Vec<Agent>,
+        controller: Box<dyn Controller>,
+    ) -> Result<RunResult> {
+        self.run_workflow(agents, None, controller)
+    }
+
+    /// [`Self::run`] with a workflow dependency graph: only indegree-0
+    /// nodes are admissible at t=0, and each node's completion releases
+    /// its ready children through the normal slot path.  `None` is the
+    /// plain closed batch (everyone present at t=0), bit-identical to
+    /// [`Self::run`].
+    pub fn run_workflow(
         mut self,
         agents: Vec<Agent>,
+        workflow: Option<WorkflowGraph>,
         controller: Box<dyn Controller>,
     ) -> Result<RunResult> {
         run_sharded(
             &mut self.engines,
             self.router.as_mut(),
             agents,
+            workflow,
             controller,
             &self.faults,
             &self.tool_skew,
@@ -670,6 +685,28 @@ fn apply_fault_event(
     }
 }
 
+/// KV lifetime hint for the step `a` is about to run on `engine` (see
+/// `SimEngine::set_lifetime_hint`).  Under `StepsToExecution` it is the
+/// remaining trajectory length — floored at 1 on the final step while
+/// the workflow graph still holds children of this node, whose prompts
+/// re-read its shared context the instant it finishes.  Under `ToolTtl`
+/// it is the upcoming tool latency in microseconds (0 on the final
+/// step: no tool return to pin for).
+fn lifetime_hint(engine: &SimEngine, a: &Agent, graph: Option<&WorkflowGraph>) -> u64 {
+    match engine.lifetime_policy() {
+        KvLifetimePolicy::Lru => 0,
+        KvLifetimePolicy::StepsToExecution => {
+            let steps = a.remaining_steps() as u64;
+            if steps == 0 && graph.is_some_and(|g| !g.children_of(a.id).is_empty()) {
+                1
+            } else {
+                steps
+            }
+        }
+        KvLifetimePolicy::ToolTtl => a.next_tool_latency().map_or(0, |l| l.0),
+    }
+}
+
 /// Run a complete batch job over an explicit replica slice.  This is the
 /// one driver loop in the crate: `driver::run_with` calls it with a
 /// single-element slice, no faults and no skew; `driver::run_job` with
@@ -690,6 +727,14 @@ fn apply_fault_event(
 /// `fault_rates` adds the stochastic MTBF/MTTR fault process — both off
 /// by default and **inert** when off (differential-tested bit-identical
 /// in `tests/cluster_integration.rs`).
+///
+/// `workflow` optionally imposes a dependency DAG on a closed batch:
+/// only indegree-0 nodes are admissible at t=0, and finishing a node
+/// releases its ready children through the same slot path (topo-ordered
+/// release — see [`crate::agent::workflow_fleet`]).  `None` keeps the
+/// everyone-at-t=0 closed batch bit-exactly, and is required with
+/// `open_loop` (a DAG node's release time is its dependency edge, not a
+/// Poisson arrival).
 ///
 /// # Examples
 ///
@@ -716,6 +761,7 @@ fn apply_fault_event(
 ///     &mut engines,
 ///     router.as_mut(),
 ///     agents,
+///     None, // no workflow DAG: plain closed batch
 ///     concur_default(),
 ///     &FaultPlan::none(),
 ///     &[],
@@ -733,6 +779,7 @@ pub fn run_sharded(
     engines: &mut [SimEngine],
     router: &mut dyn Router,
     agents: Vec<Agent>,
+    workflow: Option<WorkflowGraph>,
     controller: Box<dyn Controller>,
     faults: &FaultPlan,
     tool_skew: &[f64],
@@ -750,8 +797,8 @@ pub fn run_sharded(
         available,
     );
     run_sharded_with_workers(
-        engines, router, agents, controller, faults, tool_skew, prefix_tier, transport_cfg,
-        open_loop, fault_rates, workers,
+        engines, router, agents, workflow, controller, faults, tool_skew, prefix_tier,
+        transport_cfg, open_loop, fault_rates, workers,
     )
 }
 
@@ -766,6 +813,7 @@ pub fn run_sharded_with_workers(
     engines: &mut [SimEngine],
     router: &mut dyn Router,
     agents: Vec<Agent>,
+    workflow: Option<WorkflowGraph>,
     mut controller: Box<dyn Controller>,
     faults: &FaultPlan,
     tool_skew: &[f64],
@@ -799,15 +847,25 @@ pub fn run_sharded_with_workers(
     let total_gen: u64 = agents.iter().map(|a| a.total_gen_tokens()).sum();
     let agents_total = agents.len();
     let ol = open_loop.enabled;
+    // Workflow DAG release state (mutated as nodes finish).  `None` is
+    // the plain closed batch and must stay bit-identical to the
+    // pre-workflow loop.
+    let mut graph: Option<WorkflowGraph> = workflow;
+    if let Some(g) = &graph {
+        assert!(!ol, "workflow DAGs and open-loop traffic are mutually exclusive");
+        assert_eq!(g.len(), agents_total, "workflow graph must cover the fleet exactly");
+    }
     // Agent ids from the workload generator are dense 0..n — index by id
     // for O(1) access on the hot path.
     let mut fleet: Vec<Agent> = agents;
     fleet.sort_by_key(|a| a.id.0);
     for (i, a) in fleet.iter().enumerate() {
         assert_eq!(a.id.0 as usize, i, "driver requires dense agent ids");
-        if !ol {
-            // Closed batch: the whole fleet is present at t=0.  Open
-            // loop registers each session at its arrival instant.
+        if !ol && graph.as_ref().map_or(true, |g| g.is_ready(a.id)) {
+            // Closed batch: the whole fleet is present at t=0 — minus
+            // workflow nodes with unmet dependencies, which register
+            // when their last dependency finishes.  Open loop registers
+            // each session at its arrival instant.
             slots.register(a.id);
         }
     }
@@ -1013,6 +1071,16 @@ pub fn run_sharded_with_workers(
                             gen_tokens: a.total_gen_tokens(),
                             finished_at: now,
                         });
+                        // Workflow release: this node's completion may
+                        // free downstream consumers.  Only a *true*
+                        // finish releases — a kill-requeue re-runs the
+                        // same step without ever reaching this branch,
+                        // so no child is lost or double-released.
+                        if let Some(g) = graph.as_mut() {
+                            for ready_id in g.on_finished(f.agent) {
+                                slots.register(ready_id);
+                            }
+                        }
                         if ol {
                             // Goodput-under-SLO: a completed session
                             // counts only if every turn met its bound.
@@ -1138,6 +1206,10 @@ pub fn run_sharded_with_workers(
                         assignment[aid.0 as usize] = Some(tgt);
                     }
                 }
+                if engines[tgt].wants_lifetime_hint() {
+                    let hint = lifetime_hint(&engines[tgt], a, graph.as_ref());
+                    engines[tgt].set_lifetime_hint(aid, hint);
+                }
                 engines[tgt].submit(req);
             } else if let Some(ar) = assignment[aid.0 as usize] {
                 footprint[ar] -= a.context_len() as u64; // paused
@@ -1189,6 +1261,10 @@ pub fn run_sharded_with_workers(
             }
             assignment[aid.0 as usize] = Some(tgt);
             footprint[tgt] += ctx;
+            if engines[tgt].wants_lifetime_hint() {
+                let hint = lifetime_hint(&engines[tgt], a, graph.as_ref());
+                engines[tgt].set_lifetime_hint(aid, hint);
+            }
             engines[tgt].submit(req);
         }
 

@@ -35,6 +35,20 @@
 //!    every replica: the KV stays cached but becomes ordinary evictable
 //!    state.
 //!
+//! **Content-hash detection** (`cfg.content_hash`, off by default) adds
+//! a second candidate index over *non-head* chunks: every W-aligned
+//! `hash_chunk_tokens` window past a prompt's head (and past its
+//! hot-covered prefix) is hashed into a bounded table.  LCP detection is
+//! structurally blind to mid-prompt sharing — two prompts embedding the
+//! same intermediate context at *different offsets* (a workflow planner's
+//! generated context vs. its workers' prompts, see
+//! [`crate::agent::workflow_fleet`]) never converge head-first.  A chunk
+//! seen by `hot_after` distinct agents promotes its **head-extended run**
+//! — `prompt[..off + W]` from the smallest-offset sighting — which is a
+//! true prefix of every prompt carrying the chunk at that offset, so it
+//! rides the ordinary promote/ship machinery unchanged (broadcast pins
+//! nest, so a run extending an already-hot family head is safe).
+//!
 //! Everything is deterministic — candidate order, promotion order and
 //! install order follow insertion and replica index — and the whole tier
 //! is inert unless `TopologyConfig::prefix_tier.enabled` is set: the
@@ -62,6 +76,30 @@ const MAX_CANDIDATE_TOKENS: usize = 4096;
 /// the stalest candidate, so detection keeps adapting.
 const MAX_CANDIDATES: usize = 64;
 
+/// Bound on simultaneously tracked content-hash chunk candidates, with
+/// the same stalest-replacement policy as `MAX_CANDIDATES` but wider —
+/// every prompt contributes several non-head chunks (up to
+/// `MAX_CANDIDATE_TOKENS / hash_chunk_tokens`), so a table sized like
+/// the head index would churn out genuinely shared chunks between
+/// sightings.  One-off chunks (unique agent history) still churn
+/// through; shared chunks are re-sighted every step and stay fresh.
+const MAX_CHUNK_CANDIDATES: usize = 256;
+
+/// FNV-1a over a token run — the deterministic, dependency-free chunk
+/// fingerprint of the content-hash index.  Matches are confirmed
+/// byte-for-byte before they count, so collisions cost a lookup, never
+/// a wrong promotion.
+fn chunk_hash(tokens: &[Token]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
 /// Tier telemetry for one run (all zero with the tier disabled).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PrefixTierStats {
@@ -77,6 +115,9 @@ pub struct PrefixTierStats {
     pub demotions: u64,
     /// Installs skipped because a replica could not free enough pool.
     pub skipped_installs: u64,
+    /// Hot prefixes that entered through the content-hash chunk index
+    /// (a subset of `hot_prefixes`; zero with `content_hash` off).
+    pub hash_promotions: u64,
 }
 
 /// A tracked prompt head that may converge onto a shared prefix.
@@ -89,6 +130,26 @@ struct Candidate {
     /// stalest candidate is replaced, so one-off prompt heads cannot
     /// permanently lock out future detection).
     last_seen: Micros,
+}
+
+/// A tracked non-head chunk that may surface mid-prompt sharing (the
+/// content-hash index; see the module docs).
+struct ChunkCandidate {
+    /// FNV-1a fingerprint of the W-token chunk (confirmed against the
+    /// tail of `run` before a sighting counts).
+    hash: u64,
+    /// Head-extended run `prompt[..off + W]` from the smallest-offset
+    /// sighting so far — what promotion ships.  Its last W tokens are
+    /// the chunk itself.
+    run: Vec<Token>,
+    /// Distinct agents that have presented this chunk (capped at
+    /// `hot_after`, like `Candidate::seen`).
+    seen: Vec<AgentId>,
+    last_seen: Micros,
+    /// Already promoted: the entry stays as a tombstone (refreshed, never
+    /// re-counted) so ongoing sightings cannot re-register the chunk and
+    /// promote a duplicate run.
+    promoted: bool,
 }
 
 /// Per-replica install state of a hot prefix.
@@ -136,6 +197,8 @@ pub struct SharedPrefixTier {
     cfg: PrefixTierConfig,
     replicas: usize,
     candidates: Vec<Candidate>,
+    /// Content-hash chunk index (empty with `cfg.content_hash` off).
+    chunks: Vec<ChunkCandidate>,
     hot: Vec<HotPrefix>,
     /// Σ tokens of hot prefixes (per-replica pinned budget).
     budget_used: u64,
@@ -152,6 +215,7 @@ impl SharedPrefixTier {
             cfg,
             replicas,
             candidates: Vec::new(),
+            chunks: Vec::new(),
             hot: Vec::new(),
             budget_used: 0,
             last_alive: vec![true; replicas],
@@ -195,15 +259,24 @@ impl SharedPrefixTier {
         // re-registering an already-promoted prefix would duplicate it —
         // but only everywhere-installed coverage feeds the routing hint.
         let mut covered_by_hot = false;
+        let mut hot_cov = 0usize;
         let mut hint = 0u64;
         for h in &mut self.hot {
             if prompt.starts_with(&h.tokens) {
                 h.last_reuse = now;
                 covered_by_hot = true;
+                hot_cov = hot_cov.max(h.tokens.len());
                 if fully_installed(&self.last_alive, h) {
                     hint = hint.max(h.tokens.len() as u64);
                 }
             }
+        }
+        // Content-hash chunk detection runs even on hot-covered prompts —
+        // a hot family head must not blind the tier to shared context
+        // sitting *past* it — but skips the chunks the hot head already
+        // covers (they cannot extend coverage, only re-register it).
+        if self.cfg.content_hash {
+            self.observe_chunks(agent, prompt, hot_cov, now);
         }
         let minp = (self.cfg.min_prefix_tokens as usize).max(1);
         if prompt.len() < minp || covered_by_hot {
@@ -253,6 +326,75 @@ impl SharedPrefixTier {
             }
         }
         0 // not covered by any hot prefix, so no routing hint either
+    }
+
+    /// Advance content-hash detection over one prompt: hash every
+    /// W-aligned non-overlapping chunk past the head (offset 0 belongs to
+    /// LCP detection) and past `hot_cov` (already-hot coverage), matching
+    /// against the bounded chunk table.  A match from a smaller offset
+    /// re-anchors the candidate's head-extended run there — the smallest
+    /// sighting offset yields the run shared by the widest audience (a
+    /// workflow's workers embed the shared context right after their
+    /// family head; the planner carries it deep in its history).
+    fn observe_chunks(
+        &mut self,
+        agent: AgentId,
+        prompt: &[Token],
+        hot_cov: usize,
+        now: Micros,
+    ) {
+        let w = self.cfg.hash_chunk_tokens as usize;
+        if w == 0 || prompt.len() < 2 * w {
+            return;
+        }
+        // Same detection-memory bound as head candidates: chunks past
+        // MAX_CANDIDATE_TOKENS are not tracked.
+        let scan = prompt.len().min(MAX_CANDIDATE_TOKENS);
+        let mut off = w.max(hot_cov.next_multiple_of(w));
+        while off + w <= scan {
+            let chunk = &prompt[off..off + w];
+            let hash = chunk_hash(chunk);
+            off += w;
+            match self.chunks.iter_mut().find(|c| c.hash == hash) {
+                Some(c) => {
+                    if c.run[c.run.len() - w..] != *chunk {
+                        continue; // hash collision: not the same content
+                    }
+                    c.last_seen = now;
+                    if c.promoted {
+                        continue; // tombstone: refreshed, never re-counted
+                    }
+                    let o = off - w;
+                    if o + w < c.run.len() {
+                        c.run = prompt[..o + w].to_vec();
+                    }
+                    if c.seen.len() < self.cfg.hot_after as usize
+                        && !c.seen.contains(&agent)
+                    {
+                        c.seen.push(agent);
+                    }
+                }
+                None => {
+                    let cand = ChunkCandidate {
+                        hash,
+                        run: prompt[..off].to_vec(),
+                        seen: vec![agent],
+                        last_seen: now,
+                        promoted: false,
+                    };
+                    if self.chunks.len() < MAX_CHUNK_CANDIDATES {
+                        self.chunks.push(cand);
+                    } else if let Some(victim) = (0..self.chunks.len())
+                        .min_by_key(|&i| (self.chunks[i].last_seen, i))
+                    {
+                        // Stalest replacement, exactly like the head
+                        // candidate table: unique-history chunks churn
+                        // through without locking out detection.
+                        self.chunks[victim] = cand;
+                    }
+                }
+            }
+        }
     }
 
     /// A replica's serving state was wiped (kill, or drain-refill): its
@@ -321,6 +463,35 @@ impl SharedPrefixTier {
                 self.promote(cand, engines, now);
             } else {
                 c += 1;
+            }
+        }
+
+        // 2b. Promote ripe content-hash chunk candidates (in registration
+        // order).  The head-extended run rides the ordinary promote/ship
+        // machinery; a run an existing hot prefix already covers adds
+        // nothing and is dropped, but a run *extending* a hot head (the
+        // family prompt went hot first, the shared context sits past it)
+        // promotes on top of it — broadcast pins nest per node, so the
+        // overlap is safe and only the budget counts it twice.
+        if self.cfg.content_hash {
+            for i in 0..self.chunks.len() {
+                if self.chunks[i].promoted
+                    || self.chunks[i].seen.len() < self.cfg.hot_after as usize
+                {
+                    continue;
+                }
+                self.chunks[i].promoted = true;
+                let run = self.chunks[i].run.clone();
+                if self.hot.iter().any(|h| h.tokens.starts_with(&run)) {
+                    continue; // fully covered: nothing new to ship
+                }
+                let cand = Candidate {
+                    tokens: run,
+                    seen: self.chunks[i].seen.clone(),
+                    last_seen: self.chunks[i].last_seen,
+                };
+                self.stats.hash_promotions += 1;
+                self.promote(cand, engines, now);
             }
         }
 
@@ -868,6 +1039,107 @@ mod tests {
         assert_eq!(t.on_transfer_done(&due[0], &mut eng, done), 256);
         assert_eq!(eng[1].tree().broadcast_tokens(), 512, "whole prefix ends pinned");
         eng[1].check_invariants().unwrap();
+    }
+
+    fn hashed_tier(replicas: usize) -> SharedPrefixTier {
+        let mut cfg = PrefixTierConfig::on();
+        cfg.content_hash = true;
+        cfg.hash_chunk_tokens = 128;
+        SharedPrefixTier::new(cfg, replicas)
+    }
+
+    /// Mid-prompt sharing fixture: every agent embeds the same 128-token
+    /// shared context at a 128-aligned offset, but prompt heads are
+    /// unique, so LCP detection can never converge on the shared part.
+    /// `deep` carries it at offset 384 (a planner's history); otherwise
+    /// at offset 128 (a worker's prompt).
+    fn mid_prompt(agent: u32, deep: bool) -> Vec<Token> {
+        let head = if deep { 384 } else { 128 };
+        let base = 50_000_000 + agent * 100_000;
+        let mut p: Vec<Token> = (base..base + head).collect();
+        p.extend(40_000_000..40_000_128); // shared context, verbatim
+        p.extend(base + 10_000..base + 10_192); // unique tail
+        p
+    }
+
+    #[test]
+    fn content_hash_promotes_mid_prompt_shared_context() {
+        let mut t = hashed_tier(2);
+        let mut eng = engines(2);
+        let alive = vec![true, true];
+        // Planner first: the chunk candidate anchors at its deep offset;
+        // the workers then re-anchor the run to their shallow one.
+        t.observe(AgentId(0), &mid_prompt(0, true), Micros(1));
+        t.observe(AgentId(1), &mid_prompt(1, false), Micros(2));
+        t.observe(AgentId(2), &mid_prompt(2, false), Micros(3));
+        seed(&mut eng[0], mid_prompt(1, false));
+        let (shipped, _) = t.maintain(&mut eng, &alive, Micros(10), None);
+        // Three unrelated heads: only the chunk index converged.
+        assert_eq!(t.stats().hash_promotions, 1);
+        assert_eq!(t.stats().hot_prefixes, 1);
+        // The promoted run is the smallest-offset sighting's head + S.
+        assert_eq!(t.hot[0].tokens, mid_prompt(1, false)[..256].to_vec());
+        assert_eq!(shipped, 256, "the peer replica receives the run");
+        assert_eq!(t.broadcast_prefix_len(&mid_prompt(1, false)), 256);
+        // Tombstone: continued sightings never re-promote the chunk.
+        t.observe(AgentId(3), &mid_prompt(3, false), Micros(11));
+        t.observe(AgentId(4), &mid_prompt(4, false), Micros(12));
+        t.maintain(&mut eng, &alive, Micros(13), None);
+        assert_eq!(t.stats().hash_promotions, 1);
+        for e in &eng {
+            e.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn content_hash_off_tracks_no_chunks() {
+        let mut t = tier(2);
+        let mut eng = engines(2);
+        t.observe(AgentId(0), &mid_prompt(0, true), Micros(1));
+        t.observe(AgentId(1), &mid_prompt(1, false), Micros(2));
+        t.observe(AgentId(2), &mid_prompt(2, false), Micros(3));
+        assert!(t.chunks.is_empty(), "disabled index must stay empty");
+        t.maintain(&mut eng, &[true, true], Micros(4), None);
+        assert_eq!(t.stats().hash_promotions, 0);
+        assert_eq!(t.stats().hot_prefixes, 0, "LCP is blind to mid-prompt sharing");
+    }
+
+    #[test]
+    fn chunks_past_a_hot_head_extend_it() {
+        let mut t = hashed_tier(1);
+        let mut eng = engines(1);
+        let family: Vec<Token> = (60_000_000..60_000_512).collect();
+        let uniq = |a: u32| -> Vec<Token> {
+            (70_000_000 + a * 100_000..70_000_000 + a * 100_000 + 256).collect()
+        };
+        // The family head goes hot through plain LCP traffic first.  The
+        // family-interior chunks also ripen, but their runs are prefixes
+        // of the hot head — fully covered, dropped without promotion.
+        for a in 0..3u32 {
+            let mut p = family.clone();
+            p.extend(uniq(a));
+            t.observe(AgentId(a as u64), &p, Micros(a as u64 + 1));
+        }
+        t.maintain(&mut eng, &[true], Micros(4), None);
+        assert_eq!(t.stats().hot_prefixes, 1);
+        assert_eq!(t.stats().hash_promotions, 0, "covered runs must not double-ship");
+        // A later cohort embeds shared context right past the hot head:
+        // their prompts are hot-covered, but the chunk index keeps
+        // looking past the covered 512 tokens and promotes the extended
+        // run on top (broadcast pins nest).
+        let shared: Vec<Token> = (40_000_000..40_000_128).collect();
+        for a in 10..13u32 {
+            let mut p = family.clone();
+            p.extend_from_slice(&shared);
+            p.extend(uniq(a));
+            t.observe(AgentId(a as u64), &p, Micros(a as u64 + 10));
+        }
+        t.maintain(&mut eng, &[true], Micros(30), None);
+        assert_eq!(t.stats().hash_promotions, 1);
+        assert_eq!(t.stats().hot_prefixes, 2);
+        let ext = t.hot.iter().find(|h| h.tokens.len() == 640).expect("extended run hot");
+        assert!(ext.tokens.starts_with(&family));
+        assert_eq!(&ext.tokens[512..], &shared[..]);
     }
 
     #[test]

@@ -89,6 +89,16 @@ pub struct PrefixTierConfig {
     pub min_prefix_tokens: u32,
     /// Demote a broadcast prefix that has not been reused for this long.
     pub cool_after: Micros,
+    /// Content-hash candidate index over non-head prompt chunks: detects
+    /// shared context sitting *mid-prompt* (workflow intermediate
+    /// context), where LCP convergence is structurally blind because the
+    /// prompt heads differ.  A detected chunk's candidate is the
+    /// head-extended run through the chunk, so promotion still pins an
+    /// installable radix prefix.  Off by default (pure LCP detection).
+    pub content_hash: bool,
+    /// Chunk width (tokens) of the content-hash index; chunks are
+    /// non-overlapping and offset-aligned to this width.
+    pub hash_chunk_tokens: u32,
 }
 
 impl Default for PrefixTierConfig {
@@ -99,6 +109,8 @@ impl Default for PrefixTierConfig {
             budget_tokens: 32_768,
             min_prefix_tokens: 64,
             cool_after: Micros(300_000_000), // 300 s of simulated cold
+            content_hash: false,
+            hash_chunk_tokens: 256,
         }
     }
 }
@@ -132,6 +144,12 @@ impl PrefixTierConfig {
                 "prefix_tier.cool_after must be > 0 (zero demotes every \
                  prefix the instant after it ships, churning the tier \
                  forever)",
+            ));
+        }
+        if self.content_hash && self.hash_chunk_tokens == 0 {
+            return Err(ConcurError::config(
+                "prefix_tier.hash_chunk_tokens must be > 0 with \
+                 content_hash on",
             ));
         }
         Ok(())
@@ -527,6 +545,36 @@ pub enum EvictionMode {
     Offload,
 }
 
+/// Which KV lifetime policy orders the radix tree's eviction queue
+/// (mirrored into `engine::radix::KvLifetimePolicy`; the config layer
+/// cannot depend on the engine).  `Lru` is the default and is
+/// bit-identical to the pre-policy tree; the other two reorder *which*
+/// KV is evicted first, never *whether* an admission fits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvLifetimeMode {
+    /// Recency only (the classic ordered-LRU index).
+    Lru,
+    /// KVFlow-style freshness: agents closest to their next execution
+    /// (fewest remaining workflow steps) are evicted last; finished
+    /// agents with no pending workflow consumers are evicted first.
+    StepsToExecution,
+    /// Continuum-style tool-TTL pinning: a finished step's KV is pinned
+    /// until the issuing agent's expected tool latency elapses on the
+    /// simulation clock (the agent is about to return for it), expiring
+    /// lazily at eviction time.
+    ToolTtl,
+}
+
+impl KvLifetimeMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvLifetimeMode::Lru => "lru",
+            KvLifetimeMode::StepsToExecution => "steps-to-execution",
+            KvLifetimeMode::ToolTtl => "tool-ttl",
+        }
+    }
+}
+
 /// Serving-engine substrate parameters.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -540,6 +588,9 @@ pub struct EngineConfig {
     /// Hit-rate observation window (requests) for telemetry + `H_t`.
     pub hit_window: usize,
     pub eviction: EvictionMode,
+    /// KV lifetime policy ordering the eviction queue (`Lru` = the
+    /// pre-policy tree, bit-identical).
+    pub kv_lifetime: KvLifetimeMode,
     /// Fraction of the pool decode steps must keep free to allocate new
     /// tokens (headroom before forced eviction).
     pub decode_headroom: f64,
@@ -553,8 +604,95 @@ impl Default for EngineConfig {
             max_running: 1024,
             hit_window: 64,
             eviction: EvictionMode::Discard,
+            kv_lifetime: KvLifetimeMode::Lru,
             decode_headroom: 0.02,
         }
+    }
+}
+
+/// Workflow-graph workload shape (`agent::workload::workflow_fleet`).
+/// When enabled, the fleet is no longer independent ReAct agents but a
+/// set of seeded planner→worker DAGs: each graph has a planner whose
+/// first step *produces* a shared intermediate context, fan-out workers
+/// whose prompts embed that context byte-identically (mid-prompt, chunk
+/// aligned), and — for the map-reduce share — a reducer that joins on
+/// every worker.  Nodes are released in topological order through the
+/// existing slot path: a worker becomes admissible only when its planner
+/// finishes, a reducer only when all its workers have.  Disabled by
+/// default and differential-tested inert: the closed-batch fleet is
+/// bit-identical to the pre-workflow generator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkflowConfig {
+    pub enabled: bool,
+    /// Number of independent workflow graphs in the fleet (the fleet
+    /// size is derived: planner + fan-out + optional reducer per graph;
+    /// `n_agents` is ignored in workflow mode).
+    pub graphs: usize,
+    /// Fan-out workers per planner: uniform in [min, max].
+    pub fanout_min: u32,
+    pub fanout_max: u32,
+    /// Fraction of graphs shaped map-reduce (fan-out *and* fan-in
+    /// through a reducer); the rest are plain planner→worker fan-outs.
+    pub map_reduce_share: f64,
+    /// Tokens of planner-produced shared context injected into every
+    /// consumer prompt (byte-identical across the graph's consumers).
+    pub shared_context_tokens: u32,
+    /// The shared context is padded to start on a multiple of this many
+    /// tokens in every prompt that embeds it, so content-hash chunking
+    /// (`prefix_tier.hash_chunk_tokens`) sees identical aligned chunks.
+    pub align_tokens: u32,
+    /// Seed of the graph-shape draws (independent of the workload seed).
+    pub seed: u64,
+}
+
+impl Default for WorkflowConfig {
+    fn default() -> WorkflowConfig {
+        WorkflowConfig {
+            enabled: false,
+            graphs: 8,
+            fanout_min: 2,
+            fanout_max: 4,
+            map_reduce_share: 0.5,
+            shared_context_tokens: 384,
+            align_tokens: 256,
+            seed: 13,
+        }
+    }
+}
+
+impl WorkflowConfig {
+    /// The default configuration with workflow workloads switched on.
+    pub fn on() -> WorkflowConfig {
+        WorkflowConfig { enabled: true, ..WorkflowConfig::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(()); // dormant knobs are valid, whatever they say
+        }
+        if self.graphs == 0 {
+            return Err(ConcurError::config("workflow.graphs must be > 0"));
+        }
+        if self.fanout_min == 0 || self.fanout_min > self.fanout_max {
+            return Err(ConcurError::config(
+                "need 1 <= workflow.fanout_min <= workflow.fanout_max",
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.map_reduce_share) {
+            return Err(ConcurError::config(
+                "workflow.map_reduce_share must be in [0,1]",
+            ));
+        }
+        if self.shared_context_tokens == 0 {
+            return Err(ConcurError::config(
+                "workflow.shared_context_tokens must be > 0 (a workflow \
+                 whose members share nothing is just the plain fleet)",
+            ));
+        }
+        if self.align_tokens == 0 {
+            return Err(ConcurError::config("workflow.align_tokens must be > 0"));
+        }
+        Ok(())
     }
 }
 
@@ -583,6 +721,8 @@ pub struct WorkloadConfig {
     pub tool_latency_mu: f64,
     pub tool_latency_sigma: f64,
     pub seed: u64,
+    /// Workflow-graph mode (off by default = independent ReAct agents).
+    pub workflow: WorkflowConfig,
 }
 
 impl Default for WorkloadConfig {
@@ -604,6 +744,7 @@ impl Default for WorkloadConfig {
             tool_latency_mu: 0.3,  // e^0.3 ≈ 1.35 s median
             tool_latency_sigma: 0.8,
             seed: 7,
+            workflow: WorkflowConfig::default(),
         }
     }
 }
@@ -628,6 +769,7 @@ impl WorkloadConfig {
         if self.task_families == 0 {
             return Err(ConcurError::config("task_families must be > 0"));
         }
+        self.workflow.validate()?;
         Ok(())
     }
 }
@@ -647,6 +789,13 @@ impl JobConfig {
     pub fn validate(&self) -> Result<()> {
         self.workload.validate()?;
         self.topology.validate()?;
+        if self.workload.workflow.enabled && self.topology.open_loop.enabled {
+            return Err(ConcurError::config(
+                "workflow workloads and open-loop traffic are mutually \
+                 exclusive: a DAG node's release time is its dependency \
+                 edge, not a Poisson arrival",
+            ));
+        }
         if let SchedulerKind::Concur(p) = &self.scheduler {
             p.validate()?;
         }
@@ -689,6 +838,39 @@ impl JobConfig {
         if let Some(s) = w.get("steps_max").as_u64() {
             workload.steps_max = s as u32;
         }
+        let wf = w.get("workflow");
+        if let Some(b) = wf.get("enabled").as_bool() {
+            workload.workflow.enabled = b;
+        }
+        if let Some(n) = wf.get("graphs").as_usize() {
+            workload.workflow.graphs = n;
+        }
+        if let Some(x) = wf.get("fanout_min").as_u64() {
+            workload.workflow.fanout_min = u32::try_from(x).map_err(|_| {
+                ConcurError::config("workflow.fanout_min out of range (u32)")
+            })?;
+        }
+        if let Some(x) = wf.get("fanout_max").as_u64() {
+            workload.workflow.fanout_max = u32::try_from(x).map_err(|_| {
+                ConcurError::config("workflow.fanout_max out of range (u32)")
+            })?;
+        }
+        if let Some(x) = wf.get("map_reduce_share").as_f64() {
+            workload.workflow.map_reduce_share = x;
+        }
+        if let Some(x) = wf.get("shared_context_tokens").as_u64() {
+            workload.workflow.shared_context_tokens = u32::try_from(x).map_err(|_| {
+                ConcurError::config("workflow.shared_context_tokens out of range (u32)")
+            })?;
+        }
+        if let Some(x) = wf.get("align_tokens").as_u64() {
+            workload.workflow.align_tokens = u32::try_from(x).map_err(|_| {
+                ConcurError::config("workflow.align_tokens out of range (u32)")
+            })?;
+        }
+        if let Some(s) = wf.get("seed").as_u64() {
+            workload.workflow.seed = s;
+        }
 
         let mut engine = EngineConfig::default();
         let e = v.get("engine");
@@ -697,6 +879,20 @@ impl JobConfig {
         }
         if e.get("eviction").as_str() == Some("offload") {
             engine.eviction = EvictionMode::Offload;
+        }
+        if let Some(k) = e.get("kv_lifetime").as_str() {
+            engine.kv_lifetime = match k {
+                "lru" => KvLifetimeMode::Lru,
+                "steps-to-execution" | "steps_to_execution" | "steps" => {
+                    KvLifetimeMode::StepsToExecution
+                }
+                "tool-ttl" | "tool_ttl" => KvLifetimeMode::ToolTtl,
+                other => {
+                    return Err(ConcurError::config(format!(
+                        "unknown kv_lifetime '{other}'"
+                    )))
+                }
+            };
         }
 
         let mut topology = TopologyConfig::default();
@@ -749,6 +945,14 @@ impl JobConfig {
         }
         if let Some(x) = pt.get("cool_after_s").as_f64() {
             topology.prefix_tier.cool_after = Micros::from_secs_f64(x);
+        }
+        if let Some(b) = pt.get("content_hash").as_bool() {
+            topology.prefix_tier.content_hash = b;
+        }
+        if let Some(x) = pt.get("hash_chunk_tokens").as_u64() {
+            topology.prefix_tier.hash_chunk_tokens = u32::try_from(x).map_err(|_| {
+                ConcurError::config("prefix_tier.hash_chunk_tokens out of range (u32)")
+            })?;
         }
         let tr = t.get("transport");
         if let Some(b) = tr.get("enabled").as_bool() {
@@ -1215,6 +1419,112 @@ mod tests {
             "/../examples/configs/faulty_cluster.json"
         ));
         JobConfig::from_json_file(good).unwrap();
+    }
+
+    #[test]
+    fn workflow_defaults_off_and_validates() {
+        let w = WorkloadConfig::default();
+        assert!(!w.workflow.enabled, "workflow mode must be opt-in");
+        w.validate().unwrap();
+        // Dormant nonsense knobs are valid while disabled...
+        let weird = WorkloadConfig {
+            workflow: WorkflowConfig {
+                graphs: 0,
+                fanout_min: 9,
+                fanout_max: 2,
+                shared_context_tokens: 0,
+                ..WorkflowConfig::default()
+            },
+            ..WorkloadConfig::default()
+        };
+        weird.validate().unwrap();
+        // ...and rejected once enabled.
+        let mut on = weird;
+        on.workflow.enabled = true;
+        assert!(on.validate().is_err());
+        WorkflowConfig::on().validate().unwrap();
+        let mut bad = WorkflowConfig::on();
+        bad.fanout_min = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = WorkflowConfig::on();
+        bad.map_reduce_share = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = WorkflowConfig::on();
+        bad.align_tokens = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn workflow_excludes_open_loop() {
+        let mut job = JobConfig {
+            cluster: ClusterSpec::new(GpuSpec::h100(), ModelSpec::qwen3_32b(), 2, 2),
+            engine: EngineConfig::default(),
+            workload: WorkloadConfig {
+                workflow: WorkflowConfig::on(),
+                ..WorkloadConfig::default()
+            },
+            scheduler: SchedulerKind::Uncontrolled,
+            topology: TopologyConfig::default(),
+        };
+        job.validate().unwrap();
+        job.topology.open_loop = OpenLoopConfig::on();
+        assert!(job.validate().is_err(), "workflow + open_loop must be rejected");
+    }
+
+    #[test]
+    fn kv_lifetime_defaults_to_lru_and_parses() {
+        assert_eq!(EngineConfig::default().kv_lifetime, KvLifetimeMode::Lru);
+        assert_eq!(KvLifetimeMode::Lru.name(), "lru");
+        assert_eq!(KvLifetimeMode::StepsToExecution.name(), "steps-to-execution");
+        assert_eq!(KvLifetimeMode::ToolTtl.name(), "tool-ttl");
+        let text = r#"{
+            "model": "qwen3-32b", "tp": 2,
+            "engine": {"kv_lifetime": "steps-to-execution"}
+        }"#;
+        let job = JobConfig::from_json(&Value::parse(text).unwrap()).unwrap();
+        assert_eq!(job.engine.kv_lifetime, KvLifetimeMode::StepsToExecution);
+        let text = r#"{"model": "tiny", "engine": {"kv_lifetime": "tool_ttl"}}"#;
+        let job = JobConfig::from_json(&Value::parse(text).unwrap()).unwrap();
+        assert_eq!(job.engine.kv_lifetime, KvLifetimeMode::ToolTtl);
+        let bad = r#"{"engine": {"kv_lifetime": "mru"}}"#;
+        assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn json_config_parses_workflow_and_content_hash() {
+        let text = r#"{
+            "model": "qwen3-32b", "tp": 2,
+            "workload": {"workflow": {"enabled": true, "graphs": 5,
+                                       "fanout_min": 3, "fanout_max": 6,
+                                       "map_reduce_share": 0.25,
+                                       "shared_context_tokens": 512,
+                                       "align_tokens": 128, "seed": 21}},
+            "topology": {"prefix_tier": {"enabled": true, "content_hash": true,
+                                          "hash_chunk_tokens": 128}}
+        }"#;
+        let job = JobConfig::from_json(&Value::parse(text).unwrap()).unwrap();
+        let wf = job.workload.workflow;
+        assert!(wf.enabled);
+        assert_eq!(wf.graphs, 5);
+        assert_eq!(wf.fanout_min, 3);
+        assert_eq!(wf.fanout_max, 6);
+        assert_eq!(wf.map_reduce_share, 0.25);
+        assert_eq!(wf.shared_context_tokens, 512);
+        assert_eq!(wf.align_tokens, 128);
+        assert_eq!(wf.seed, 21);
+        let pt = job.topology.prefix_tier;
+        assert!(pt.content_hash);
+        assert_eq!(pt.hash_chunk_tokens, 128);
+
+        // Validation runs inside from_json.
+        let bad = r#"{"workload": {"workflow": {"enabled": true, "graphs": 0}}}"#;
+        assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
+        let bad = r#"{"topology": {"prefix_tier": {"enabled": true,
+                       "content_hash": true, "hash_chunk_tokens": 0}}}"#;
+        assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
+        // Out-of-range u32 knobs are rejected, not silently wrapped.
+        let wrap = r#"{"workload": {"workflow": {"fanout_max": 4294967298}}}"#;
+        assert!(JobConfig::from_json(&Value::parse(wrap).unwrap()).is_err());
     }
 
     #[test]

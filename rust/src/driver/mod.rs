@@ -15,7 +15,7 @@
 //! (bit-identical to the pre-cluster driver — see
 //! `tests/cluster_integration.rs`).
 
-use crate::agent::{open_loop_fleet, Agent, WorkloadGenerator};
+use crate::agent::{open_loop_fleet, workflow_fleet, Agent, WorkloadGenerator};
 use crate::cluster::{
     make_router, ClusterCoordinator, FaultStats, OpenLoopStats, PrefixTierStats, TransportStats,
 };
@@ -115,13 +115,16 @@ impl RunResult {
 /// (a single replica unless `job.topology` says otherwise).
 pub fn run_job(job: &JobConfig) -> Result<RunResult> {
     job.validate()?;
-    let agents = if job.topology.open_loop.enabled {
-        open_loop_fleet(&job.workload, &job.topology.open_loop)
+    let (agents, workflow) = if job.topology.open_loop.enabled {
+        (open_loop_fleet(&job.workload, &job.topology.open_loop), None)
+    } else if job.workload.workflow.enabled {
+        let (agents, graph) = workflow_fleet(&job.workload);
+        (agents, Some(graph))
     } else {
-        WorkloadGenerator::new(job.workload.clone()).generate()
+        (WorkloadGenerator::new(job.workload.clone()).generate(), None)
     };
     let controller = make_controller(&job.scheduler);
-    ClusterCoordinator::new(job).run(agents, controller)
+    ClusterCoordinator::new(job).run_workflow(agents, workflow, controller)
 }
 
 /// Run every job serially, in order.  Reference implementation for
@@ -275,6 +278,7 @@ pub fn run_with(
         std::slice::from_mut(engine),
         router.as_mut(),
         agents,
+        None,
         controller,
         &FaultPlan::none(),
         &[],

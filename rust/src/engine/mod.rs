@@ -22,12 +22,12 @@ pub mod radix;
 pub mod request;
 
 pub use kvpool::KvPool;
-pub use radix::{EvictPolicy, MatchResult, RadixTree};
+pub use radix::{EvictPolicy, KvLifetimePolicy, MatchResult, RadixTree};
 pub use request::{Request, RunningSeq, SeqPhase};
 
 use std::collections::VecDeque;
 
-use crate::config::{EngineConfig, EvictionMode};
+use crate::config::{EngineConfig, EvictionMode, KvLifetimeMode};
 use crate::core::{AgentId, Bytes, FxHashMap, Micros, RequestId, Token};
 use crate::costmodel::{CostModel, PcieLink, StepWork};
 use crate::metrics::{Breakdown, LifetimeRatio, Phase, WindowedRatio};
@@ -189,6 +189,26 @@ pub struct SimEngine {
     /// transfer issue, consumed or released at commit/abort).  Zero
     /// unless the cluster transport runs with delayed visibility.
     broadcast_reserved: u64,
+    /// Per-agent KV lifetime hints (see [`SimEngine::set_lifetime_hint`]):
+    /// remaining steps under `StepsToExecution`, expected tool latency in
+    /// micros under `ToolTtl`.  Unused (and never populated by the
+    /// cluster) under `Lru`.
+    lifetime_hints: FxHashMap<AgentId, u64>,
+}
+
+/// Class cap for `StepsToExecution` stamping: a hint of 1 (one step left
+/// — the agent's context is largest and frees the pool soonest) maps to
+/// the highest class, larger hints map progressively lower, and hint 0
+/// (no future: the agent is done and nothing consumes its context) maps
+/// to class 0 — first in the eviction order, like unhinted cache.
+const LIFETIME_CLASS_CAP: u64 = 1 << 20;
+
+fn lifetime_class(hint: u64) -> u64 {
+    if hint == 0 {
+        0
+    } else {
+        LIFETIME_CLASS_CAP - hint.min(LIFETIME_CLASS_CAP - 1)
+    }
 }
 
 impl SimEngine {
@@ -198,10 +218,15 @@ impl SimEngine {
             EvictionMode::Discard => EvictPolicy::Discard,
             EvictionMode::Offload => EvictPolicy::OffloadToCpu,
         };
+        let lifetime = match cfg.kv_lifetime {
+            KvLifetimeMode::Lru => KvLifetimePolicy::Lru,
+            KvLifetimeMode::StepsToExecution => KvLifetimePolicy::StepsToExecution,
+            KvLifetimeMode::ToolTtl => KvLifetimePolicy::ToolTtl,
+        };
         let pcie = PcieLink::new(cost.cluster.agg_pcie_bw());
         SimEngine {
             pool: KvPool::new(capacity, cfg.page_size),
-            tree: RadixTree::new(),
+            tree: RadixTree::with_policy(lifetime),
             pcie,
             // CPU tier sized by host RAM (2 TB/node).
             cpu_tier_limit: cost.cluster.cpu_tier_tokens(),
@@ -216,9 +241,32 @@ impl SimEngine {
             admit_block: None,
             heat: FxHashMap::default(),
             broadcast_reserved: 0,
+            lifetime_hints: FxHashMap::default(),
             cfg,
             cost,
         }
+    }
+
+    /// The KV lifetime policy this engine's radix tree runs.
+    pub fn lifetime_policy(&self) -> KvLifetimePolicy {
+        self.tree.lifetime_policy()
+    }
+
+    /// Whether the cluster should compute and push per-agent lifetime
+    /// hints before submitting (false under plain `Lru`, where hints are
+    /// dead weight on the submit path).
+    pub fn wants_lifetime_hint(&self) -> bool {
+        self.tree.lifetime_policy() != KvLifetimePolicy::Lru
+    }
+
+    /// Record `agent`'s current lifetime hint, consumed when its requests
+    /// are admitted and when their KV folds back into the radix cache:
+    /// under `StepsToExecution` the hint is the agent's remaining step
+    /// count (0 = no future, evict first); under `ToolTtl` it is the
+    /// expected latency (in micros) of the tool call the agent issues
+    /// after the current step (0 = no tool call, no pin).
+    pub fn set_lifetime_hint(&mut self, agent: AgentId, hint: u64) {
+        self.lifetime_hints.insert(agent, hint);
     }
 
     // -- introspection ----------------------------------------------------
@@ -305,7 +353,8 @@ impl SimEngine {
     /// dropped; the caller owns re-queueing their agents.
     pub fn clear_state(&mut self) {
         self.pool = KvPool::new(self.pool.capacity(), self.cfg.page_size);
-        self.tree = RadixTree::new();
+        self.tree = RadixTree::with_policy(self.tree.lifetime_policy());
+        self.lifetime_hints.clear();
         self.pcie = PcieLink::new(self.cost.cluster.agg_pcie_bw());
         self.running.clear();
         self.waiting.clear();
@@ -576,7 +625,7 @@ impl SimEngine {
             return true;
         }
         let deficit = tokens - self.pool.free();
-        let ev = self.tree.evict(deficit, self.policy);
+        let ev = self.tree.evict_at(deficit, self.policy, now);
         if ev.freed_gpu_tokens > 0 {
             self.pool.release(ev.freed_gpu_tokens);
             self.counters.evictions += ev.nodes as u64;
@@ -756,6 +805,15 @@ impl SimEngine {
 
             let _ = gen_len;
             self.tree.lock_path(&m.path);
+            // Stamp the matched path with the agent's lifetime class so a
+            // preemption-unlocked path re-enters the eviction order where
+            // the workflow position says, not where raw recency does.
+            // (ToolTtl pins are stamped at completion only: the path is
+            // locked for the whole generation anyway.)
+            if self.tree.lifetime_policy() == KvLifetimePolicy::StepsToExecution {
+                let hint = self.lifetime_hints.get(&req.agent).copied().unwrap_or(0);
+                self.tree.stamp_path_lifetime(&m.path, lifetime_class(hint), Micros::ZERO);
+            }
             self.running.push(RunningSeq::new(req, cached, m.path, now));
             self.counters.admitted += 1;
             out.admitted += 1;
@@ -907,6 +965,29 @@ impl SimEngine {
             // state; inserted straight from the two slices — no O(context)
             // concatenation per finished request.
             let ins = self.tree.insert_parts(&seq.req.prompt, &seq.output, now);
+            // Stamp the folded-in path from the agent's lifetime hint:
+            // its remaining-steps class (KVFlow), or a pin covering the
+            // tool call it is about to wait on (Continuum) — precisely
+            // the window where plain LRU loses the race to fresher
+            // traffic and evicts an about-to-return agent's context.
+            match self.tree.lifetime_policy() {
+                KvLifetimePolicy::Lru => {}
+                KvLifetimePolicy::StepsToExecution => {
+                    let hint =
+                        self.lifetime_hints.get(&seq.req.agent).copied().unwrap_or(0);
+                    self.tree.stamp_path_lifetime(
+                        &ins.path,
+                        lifetime_class(hint),
+                        Micros::ZERO,
+                    );
+                }
+                KvLifetimePolicy::ToolTtl => {
+                    let hint =
+                        self.lifetime_hints.get(&seq.req.agent).copied().unwrap_or(0);
+                    let pin = if hint > 0 { now + Micros(hint) } else { Micros::ZERO };
+                    self.tree.stamp_path_lifetime(&ins.path, 0, pin);
+                }
+            }
             // The tree took ownership of `new_gpu_tokens` of this request's
             // private slots; anything beyond that duplicates existing cache
             // (another agent inserted the same prefix meanwhile) — free it.
@@ -1304,5 +1385,88 @@ mod tests {
         assert!(e.breakdown.total().0 > 0);
         assert!(e.breakdown.fraction(Phase::Decode) > 0.0);
         assert!(e.breakdown.fraction(Phase::Prefill) > 0.0);
+    }
+
+    fn policy_engine(mode: crate::config::KvLifetimeMode, capacity: u64) -> SimEngine {
+        let cost = CostModel::new(ClusterSpec::new(
+            GpuSpec::h100(),
+            ModelSpec::qwen3_32b(),
+            8,
+            8,
+        ));
+        let cfg = EngineConfig {
+            prefill_chunk: 8192,
+            kv_lifetime: mode,
+            ..EngineConfig::default()
+        };
+        let mut e = SimEngine::new(cfg, cost);
+        e.shrink_pool_for_tests(capacity);
+        e
+    }
+
+    /// Cache A (hinted) then B (unhinted), then admit a C big enough to
+    /// force exactly one whole-leaf eviction; returns the surviving GPU
+    /// coverage of A's and B's prompts.
+    fn pressure_one_eviction(mode: crate::config::KvLifetimeMode, hint_a: u64) -> (u64, u64) {
+        let mut e = policy_engine(mode, 3_600);
+        let pa: Vec<Token> = (0..1_000).collect();
+        let pb: Vec<Token> = (100_000..101_000).collect();
+        e.set_lifetime_hint(AgentId(1), hint_a);
+        e.submit(mk_req(1, 1, pa.clone(), 20, 0));
+        drive(&mut e, 200);
+        e.submit(mk_req(2, 2, pb.clone(), 20, 0));
+        drive(&mut e, 200);
+        // C's prefill overflows the free pool and must evict one victim.
+        e.submit(mk_req(3, 3, (200_000..202_000).collect(), 20, 0));
+        drive(&mut e, 300);
+        assert!(e.counters.evicted_tokens > 0, "pressure must have evicted");
+        e.check_invariants().unwrap();
+        (e.tree().peek_prefix(&pa).0, e.tree().peek_prefix(&pb).0)
+    }
+
+    #[test]
+    fn wants_lifetime_hint_only_off_lru() {
+        use crate::config::KvLifetimeMode;
+        assert!(!policy_engine(KvLifetimeMode::Lru, 1_000).wants_lifetime_hint());
+        assert!(policy_engine(KvLifetimeMode::StepsToExecution, 1_000).wants_lifetime_hint());
+        assert!(policy_engine(KvLifetimeMode::ToolTtl, 1_000).wants_lifetime_hint());
+    }
+
+    #[test]
+    fn steps_hint_inverts_the_lru_eviction_choice() {
+        use crate::config::KvLifetimeMode;
+        // LRU control: A is staler, so pressure takes A and keeps B.
+        let (a, b) = pressure_one_eviction(KvLifetimeMode::Lru, 1);
+        assert_eq!((a, b), (0, 1_000), "LRU must evict the staler A");
+        // StepsToExecution: A hinted one-step-from-done outranks the
+        // fresher-but-futureless B.
+        let (a, b) = pressure_one_eviction(KvLifetimeMode::StepsToExecution, 1);
+        assert_eq!((a, b), (1_000, 0), "hinted A must survive, unhinted B goes");
+        // An explicit 0 hint (no future) keeps plain recency order.
+        let (a, b) = pressure_one_eviction(KvLifetimeMode::StepsToExecution, 0);
+        assert_eq!((a, b), (0, 1_000));
+    }
+
+    #[test]
+    fn tool_ttl_pin_inverts_the_lru_eviction_choice() {
+        use crate::config::KvLifetimeMode;
+        // A pinned across a long tool wait survives pressure that takes
+        // the fresher unpinned B — the paper's recency inversion, fixed.
+        let (a, b) = pressure_one_eviction(KvLifetimeMode::ToolTtl, 3_600_000_000);
+        assert_eq!((a, b), (1_000, 0), "pinned A must survive its tool wait");
+        // No tool call, no pin: plain recency order.
+        let (a, b) = pressure_one_eviction(KvLifetimeMode::ToolTtl, 0);
+        assert_eq!((a, b), (0, 1_000));
+    }
+
+    #[test]
+    fn clear_state_preserves_lifetime_policy() {
+        use crate::config::KvLifetimeMode;
+        let mut e = policy_engine(KvLifetimeMode::ToolTtl, 10_000);
+        e.set_lifetime_hint(AgentId(1), 5_000);
+        e.clear_state();
+        assert_eq!(e.lifetime_policy(), KvLifetimePolicy::ToolTtl);
+        assert!(e.wants_lifetime_hint());
+        e.check_invariants().unwrap();
     }
 }

@@ -84,6 +84,16 @@ struct Node {
     /// Children currently GPU-resident; 0 ⇒ this node is a *GPU leaf*
     /// (its subtree holds no other GPU memory) and may be evicted.
     gpu_children: u32,
+    /// Lifetime class under `KvLifetimePolicy::StepsToExecution`: lower
+    /// classes evict first (recency breaks ties within a class).  Stamped
+    /// by the engine from per-agent remaining-steps hints; always 0 under
+    /// the other policies, where it does not participate in the key.
+    class: u64,
+    /// Pin expiry instant under `KvLifetimePolicy::ToolTtl`: while
+    /// `pin_until > now` the node sorts behind every unpinned candidate.
+    /// `Micros::ZERO` = unpinned; elapsed pins are cleared lazily by
+    /// `evict_at`.  Always ZERO under the other policies.
+    pin_until: Micros,
     last_access: Micros,
     /// Bumped on every access; a node whose version moved past its last
     /// `push_candidate` is off the LRU list until re-pushed.
@@ -213,6 +223,34 @@ pub enum EvictPolicy {
     OffloadToCpu,
 }
 
+/// KV lifetime policy: what orders the eviction queue (mirrors
+/// `config::KvLifetimeMode`).  The policy decides *which* cached KV is
+/// evicted first, never *whether* an eviction request can be satisfied —
+/// candidate membership (and therefore `evictable_gpu_tokens` and every
+/// admission-feasibility decision) is identical across policies.
+///
+/// Mechanically, each policy prepends one component to the LRU ordering
+/// key `(last_access, version, id)`:
+///
+/// * [`Lru`](KvLifetimePolicy::Lru) — constant `0`: the 4-tuple orders
+///   exactly as the classic 3-tuple, bit-identical to the pre-policy
+///   tree.
+/// * [`StepsToExecution`](KvLifetimePolicy::StepsToExecution) — the
+///   node's *lifetime class*, stamped by the engine from each agent's
+///   remaining-steps hint (KVFlow): low class = little future = evicted
+///   first; recency breaks ties within a class.
+/// * [`ToolTtl`](KvLifetimePolicy::ToolTtl) — the node's pin expiry
+///   instant (Continuum): unpinned KV (`pin_until` 0) evicts first in
+///   recency order; pinned KV is only reached once nothing unpinned
+///   remains, and an *elapsed* pin lazily re-enters the unpinned order
+///   at its preserved recency stamp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvLifetimePolicy {
+    Lru,
+    StepsToExecution,
+    ToolTtl,
+}
+
 /// The prefix cache.
 pub struct RadixTree {
     nodes: Vec<Node>,
@@ -235,11 +273,17 @@ pub struct RadixTree {
     /// path — what lets the engine skip redundant head-of-line re-matches
     /// and replay their recency touches from a cached path.
     epoch: u64,
+    /// KV lifetime policy ordering this tree's eviction queue (fixed at
+    /// construction; see [`KvLifetimePolicy`]).
+    lifetime: KvLifetimePolicy,
     /// Ordered LRU index of eviction candidates, keyed by
-    /// `(last_access, version, id)` — the first element is the eviction
-    /// victim.  Keys are unique (id tie-break) and frozen while a node is
-    /// a member (see `Node::in_lru`).
-    lru: BTreeSet<(Micros, u64, NodeId)>,
+    /// `(lifetime_component, last_access, version, id)` — the first
+    /// element is the eviction victim.  The leading component is the
+    /// policy's contribution (constant 0 under `Lru`, so the order is
+    /// bit-identical to the classic `(last_access, version, id)` key).
+    /// Keys are unique (id tie-break) and frozen while a node is a member
+    /// (see `Node::in_lru`).
+    lru: BTreeSet<(u64, Micros, u64, NodeId)>,
     /// Auto-compaction switch (on by default; tests that pin slab layout
     /// or diff against a non-compacting oracle turn it off).
     auto_compact: bool,
@@ -251,6 +295,12 @@ pub struct RadixTree {
 
 impl RadixTree {
     pub fn new() -> RadixTree {
+        Self::with_policy(KvLifetimePolicy::Lru)
+    }
+
+    /// Build a tree whose eviction queue is ordered by `lifetime`.
+    /// `with_policy(Lru)` is exactly `new()`.
+    pub fn with_policy(lifetime: KvLifetimePolicy) -> RadixTree {
         let root = Node {
             off: 0,
             len: 0,
@@ -260,6 +310,8 @@ impl RadixTree {
             pin_count: 0,
             broadcast_pins: 0,
             gpu_children: 0,
+            class: 0,
+            pin_until: Micros::ZERO,
             last_access: Micros::ZERO,
             version: 0,
             residency: Residency::Gpu,
@@ -276,11 +328,17 @@ impl RadixTree {
             broadcast_tokens: 0,
             live_nodes: 0,
             epoch: 0,
+            lifetime,
             lru: BTreeSet::new(),
             auto_compact: true,
             compactions: 0,
             compacted_tokens: 0,
         }
+    }
+
+    /// The lifetime policy this tree was built with.
+    pub fn lifetime_policy(&self) -> KvLifetimePolicy {
+        self.lifetime
     }
 
     /// Tokens currently resident on GPU (must equal the pool's `used` minus
@@ -412,15 +470,27 @@ impl RadixTree {
 
     // -- ordered LRU index --------------------------------------------------
 
-    fn lru_key(&self, id: NodeId) -> (Micros, u64, NodeId) {
+    /// The policy's leading key component for `n` (see the `lru` field
+    /// doc).  Constant 0 under `Lru`, so the 4-tuple key orders exactly
+    /// as the classic `(last_access, version, id)` 3-tuple.
+    fn lifetime_component(&self, n: &Node) -> u64 {
+        match self.lifetime {
+            KvLifetimePolicy::Lru => 0,
+            KvLifetimePolicy::StepsToExecution => n.class,
+            KvLifetimePolicy::ToolTtl => n.pin_until.0,
+        }
+    }
+
+    fn lru_key(&self, id: NodeId) -> (u64, Micros, u64, NodeId) {
         let n = &self.nodes[id];
-        (n.last_access, n.version, id)
+        (self.lifetime_component(n), n.last_access, n.version, id)
     }
 
     fn lru_remove(&mut self, id: NodeId) {
         debug_assert!(self.nodes[id].in_lru);
-        // Valid because (last_access, version) are frozen while in_lru: the
-        // key computed now is the key that was inserted.
+        // Valid because every key input (class/pin_until, last_access,
+        // version) is frozen while in_lru — all mutators remove the entry
+        // first — so the key computed now is the key that was inserted.
         let removed = self.lru.remove(&self.lru_key(id));
         debug_assert!(removed, "lru entry missing for flagged node {id}");
         self.nodes[id].in_lru = false;
@@ -474,6 +544,8 @@ impl RadixTree {
         // unlocks the lower node.
         let lower_pins = self.nodes[id].pin_count;
         let lower_bcast = self.nodes[id].broadcast_pins;
+        let lower_class = self.nodes[id].class;
+        let lower_pin_until = self.nodes[id].pin_until;
         let upper = self.alloc_node(Node {
             off,
             len: at,
@@ -490,6 +562,11 @@ impl RadixTree {
             // The lower half is the upper's only child and shares its
             // residency.
             gpu_children: if residency == Residency::Gpu { 1 } else { 0 },
+            // Lifetime stamps cover whole root→deepest paths, so both
+            // halves of a split edge carry the same class/pin — coverage
+            // stays contiguous exactly like broadcast pins.
+            class: lower_class,
+            pin_until: lower_pin_until,
             last_access,
             version: 0,
             residency,
@@ -616,6 +693,8 @@ impl RadixTree {
                 pin_count: 0,
                 broadcast_pins: 0,
                 gpu_children: 0,
+                class: 0,
+                pin_until: Micros::ZERO,
                 last_access: now,
                 version: 0,
                 residency: Residency::Gpu,
@@ -682,6 +761,40 @@ impl RadixTree {
                 id = n.parent;
             }
             self.push_candidate(last);
+        }
+    }
+
+    // -- lifetime stamping ------------------------------------------------------
+
+    /// Stamp every node on `path` with a lifetime `class` and `pin_until`
+    /// expiry (the engine derives both from per-agent hints; see
+    /// [`KvLifetimePolicy`]).  A no-op under `Lru`, where neither field
+    /// participates in the eviction key.
+    ///
+    /// Stamping re-orders the eviction queue but never changes candidate
+    /// membership, token counters, recency stamps or the mutation epoch —
+    /// admission feasibility (and the engine's epoch-guarded head-of-line
+    /// fast path) is untouched by construction.
+    pub fn stamp_path_lifetime(&mut self, path: &[NodeId], class: u64, pin_until: Micros) {
+        if self.lifetime == KvLifetimePolicy::Lru {
+            return;
+        }
+        for &id in path {
+            let n = &self.nodes[id];
+            debug_assert!(n.alive);
+            if n.class == class && n.pin_until == pin_until {
+                continue;
+            }
+            let was_in_lru = n.in_lru;
+            if was_in_lru {
+                self.lru_remove(id);
+            }
+            let n = &mut self.nodes[id];
+            n.class = class;
+            n.pin_until = pin_until;
+            if was_in_lru {
+                self.lru_insert(id);
+            }
         }
     }
 
@@ -784,12 +897,41 @@ impl RadixTree {
     /// Evict LRU leaves until `want` GPU tokens are freed or nothing is
     /// evictable.  In `OffloadToCpu` mode evicted nodes stay matchable in
     /// the CPU tier.
+    ///
+    /// Clock-free wrapper around [`evict_at`](Self::evict_at) at
+    /// `Micros::ZERO` — under `Lru` (where no pins exist) the two are
+    /// identical; under `ToolTtl` this treats every pin as still active.
     pub fn evict(&mut self, want: u64, policy: EvictPolicy) -> EvictResult {
+        self.evict_at(want, policy, Micros::ZERO)
+    }
+
+    /// Evict eviction-queue heads until `want` GPU tokens are freed or
+    /// nothing is evictable, lazily expiring `ToolTtl` pins against the
+    /// sim clock `now`: a queue head whose `pin_until` has elapsed is
+    /// un-pinned and re-enters the unpinned order at its preserved
+    /// recency stamp instead of being evicted.  A head pinned *into the
+    /// future* is only reached once nothing unpinned remains (the key
+    /// sorts all pins last) and is then evicted anyway — pinning shapes
+    /// the order, never feasibility, so admission cannot deadlock on a
+    /// fully-pinned cache.
+    pub fn evict_at(&mut self, want: u64, policy: EvictPolicy, now: Micros) -> EvictResult {
         let mut out = EvictResult::default();
         while out.freed_gpu_tokens < want {
-            let Some(&(_, _, id)) = self.lru.first() else {
+            let Some(&(life, _, _, id)) = self.lru.first() else {
                 break;
             };
+            if life > 0
+                && self.lifetime == KvLifetimePolicy::ToolTtl
+                && self.nodes[id].pin_until <= now
+            {
+                // Elapsed pin: clear it and re-sort among the unpinned
+                // (each node takes this branch at most once per pin, so
+                // the loop terminates).
+                self.lru_remove(id);
+                self.nodes[id].pin_until = Micros::ZERO;
+                self.lru_insert(id);
+                continue;
+            }
             // Index membership is maintained eagerly: the first entry is
             // always a currently-valid candidate.
             debug_assert!({
@@ -892,7 +1034,7 @@ impl RadixTree {
             self.nodes[id].off = off;
         }
         let candidates: Vec<NodeId> =
-            self.lru.iter().rev().map(|&(_, _, id)| id).collect();
+            self.lru.iter().rev().map(|&(_, _, _, id)| id).collect();
         for id in candidates {
             let n = &self.nodes[id];
             let off = fresh.len();
@@ -1074,7 +1216,7 @@ impl RadixTree {
         }
         // LRU index: flags consistent, keys current, members are valid
         // candidates.
-        for &(stamp, version, id) in &self.lru {
+        for &(life, stamp, version, id) in &self.lru {
             let Some(n) = self.nodes.get(id) else {
                 return Err(format!("lru entry for out-of-range node {id}"));
             };
@@ -1083,6 +1225,13 @@ impl RadixTree {
             }
             if (n.last_access, n.version) != (stamp, version) {
                 return Err(format!("lru key for node {id} is stale"));
+            }
+            if life != self.lifetime_component(n) {
+                return Err(format!(
+                    "lru lifetime component for node {id} is stale \
+                     ({life} != {})",
+                    self.lifetime_component(n)
+                ));
             }
             if !(n.alive
                 && n.ref_count == 0
@@ -1118,12 +1267,13 @@ impl RadixTree {
     /// `(last_access, version, id)` sort — the safety net that caught the
     /// intrusive-list → ordered-index swap.
     pub fn lru_order_for_tests(&self) -> Vec<NodeId> {
-        self.lru.iter().map(|&(_, _, id)| id).collect()
+        self.lru.iter().map(|&(_, _, _, id)| id).collect()
     }
 
-    /// The `(last_access, version, id)` eviction key of a node (test
-    /// support for the slow-order comparison).
-    pub fn lru_key_for_tests(&self, id: NodeId) -> (Micros, u64, NodeId) {
+    /// The `(lifetime_component, last_access, version, id)` eviction key
+    /// of a node (test support for the slow-order comparison; the leading
+    /// component is constant 0 under `Lru`).
+    pub fn lru_key_for_tests(&self, id: NodeId) -> (u64, Micros, u64, NodeId) {
         self.lru_key(id)
     }
 }
@@ -1520,6 +1670,114 @@ mod tests {
         }
         assert!(t.compactions() > 0, "churn must have triggered compaction");
         assert!(t.compacted_tokens() > 0);
+    }
+
+    #[test]
+    fn lru_policy_ignores_lifetime_stamps() {
+        // Under the default policy, stamping is a no-op and the 4-tuple
+        // key's leading component is constant 0 — eviction order is
+        // bit-identical to the classic recency order.
+        let mut t = RadixTree::with_policy(KvLifetimePolicy::Lru);
+        let a = toks(0..100);
+        let b = toks(1000..1100);
+        let ia = t.insert(&a, Micros(1));
+        t.insert(&b, Micros(2));
+        t.stamp_path_lifetime(&ia.path, 999, Micros(777));
+        let keys: Vec<_> =
+            t.lru_order_for_tests().iter().map(|&id| t.lru_key_for_tests(id)).collect();
+        assert!(keys.iter().all(|k| k.0 == 0), "Lru leading component must stay 0");
+        // `a` (stamp 1) still evicts before `b` despite the stamp attempt.
+        t.evict(50, EvictPolicy::Discard);
+        assert_eq!(t.match_prefix(&a, Micros(3)).gpu_tokens, 0);
+        assert_eq!(t.match_prefix(&b, Micros(4)).gpu_tokens, 100);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn steps_class_outranks_recency() {
+        // StepsToExecution: a *fresher* node in a lower class evicts
+        // before a staler node in a higher class.
+        let mut t = RadixTree::with_policy(KvLifetimePolicy::StepsToExecution);
+        let a = toks(0..100);
+        let b = toks(1000..1100);
+        let ia = t.insert(&a, Micros(1));
+        t.insert(&b, Micros(2)); // fresher, but class 0
+        t.stamp_path_lifetime(&ia.path, 5, Micros::ZERO);
+        let ev = t.evict(50, EvictPolicy::Discard);
+        assert_eq!(ev.freed_gpu_tokens, 100);
+        assert_eq!(t.match_prefix(&b, Micros(3)).gpu_tokens, 0, "class 0 goes first");
+        assert_eq!(t.match_prefix(&a, Micros(4)).gpu_tokens, 100);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tool_ttl_pin_defers_eviction_until_expiry() {
+        let mut t = RadixTree::with_policy(KvLifetimePolicy::ToolTtl);
+        let a = toks(0..100);
+        let b = toks(1000..1100);
+        let ia = t.insert(&a, Micros(1));
+        t.insert(&b, Micros(2));
+        t.stamp_path_lifetime(&ia.path, 0, Micros(100)); // pinned until t=100
+        // Before expiry: the unpinned (fresher!) `b` is taken instead.
+        let ev = t.evict_at(50, EvictPolicy::Discard, Micros(50));
+        assert_eq!(ev.freed_gpu_tokens, 100);
+        assert_eq!(t.match_prefix(&b, Micros(60)).gpu_tokens, 0);
+        t.check_invariants().unwrap();
+        // Re-arm `a`'s candidacy (matches above only touched root-misses,
+        // but `a` itself was never parked — it is still registered).
+        // After expiry the pin is lazily cleared and `a` evicts normally.
+        let ev = t.evict_at(u64::MAX, EvictPolicy::Discard, Micros(150));
+        assert_eq!(ev.freed_gpu_tokens, 100);
+        assert_eq!(t.gpu_tokens(), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tool_ttl_live_pins_evict_as_last_resort() {
+        // Pinning shapes order, never feasibility: when everything is
+        // pinned into the future, eviction still makes progress.
+        let mut t = RadixTree::with_policy(KvLifetimePolicy::ToolTtl);
+        let a = toks(0..100);
+        let ia = t.insert(&a, Micros(1));
+        t.stamp_path_lifetime(&ia.path, 0, Micros(1_000_000));
+        let ev = t.evict_at(u64::MAX, EvictPolicy::Discard, Micros(10));
+        assert_eq!(ev.freed_gpu_tokens, 100, "live pin must not block a forced evict");
+        assert_eq!(t.gpu_tokens(), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stamping_changes_neither_epoch_nor_feasibility() {
+        let mut t = RadixTree::with_policy(KvLifetimePolicy::StepsToExecution);
+        let ia = t.insert(&toks(0..100), Micros(1));
+        let epoch = t.epoch();
+        let evictable = t.evictable_gpu_tokens();
+        t.stamp_path_lifetime(&ia.path, 7, Micros(42));
+        assert_eq!(t.epoch(), epoch, "stamping must not bump the epoch");
+        assert_eq!(t.evictable_gpu_tokens(), evictable);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn split_inherits_lifetime_stamps() {
+        // A partial match splits a stamped edge; both halves keep the
+        // stamp so coverage stays contiguous (mirrors broadcast pins).
+        let mut t = RadixTree::with_policy(KvLifetimePolicy::ToolTtl);
+        let ia = t.insert(&toks(0..100), Micros(1));
+        t.stamp_path_lifetime(&ia.path, 3, Micros(500));
+        t.insert(&toks(2000..2100), Micros(2)); // unpinned victim
+        t.match_prefix(&toks(0..40), Micros(3)); // splits the stamped edge
+        t.check_invariants().unwrap();
+        // Both halves are now parked (touch quirk); re-arm and verify the
+        // split-off upper half still sorts behind the unpinned node.
+        let m = t.match_prefix(&toks(0..100), Micros(4));
+        t.lock_path(&m.path);
+        t.unlock_path(&m.path);
+        let ev = t.evict_at(50, EvictPolicy::Discard, Micros(10));
+        assert_eq!(ev.freed_gpu_tokens, 100);
+        assert_eq!(t.match_prefix(&toks(2000..2100), Micros(5)).gpu_tokens, 0);
+        assert_eq!(t.match_prefix(&toks(0..100), Micros(6)).gpu_tokens, 100);
+        t.check_invariants().unwrap();
     }
 
     #[test]

@@ -15,9 +15,11 @@
 //! `concur repro prefix_sharing` the shared-prefix tier study (see
 //! [`prefix_sharing`] — emits `BENCH_prefix.json`), `concur repro
 //! transport` the asynchronous-transport study (see [`transport`] —
-//! emits `BENCH_transport.json`), and `concur repro openloop` the
+//! emits `BENCH_transport.json`), `concur repro openloop` the
 //! open-loop traffic / SLO study (see [`openloop`] — emits
-//! `BENCH_openloop.json`).  The full experiment index lives in one
+//! `BENCH_openloop.json`), and `concur repro workflow` the
+//! workflow-DAG / KV-lifetime-policy study (see [`workflow`] — emits
+//! `BENCH_workflow.json`).  The full experiment index lives in one
 //! table ([`EXPERIMENTS`]) shared with the CLI usage string.
 
 pub mod cluster_scaling;
@@ -32,6 +34,7 @@ pub mod table1;
 pub mod table2;
 pub mod table3;
 pub mod transport;
+pub mod workflow;
 
 use crate::config::{EngineConfig, EvictionMode, JobConfig, SchedulerKind, WorkloadConfig};
 use crate::core::Result;
@@ -128,7 +131,7 @@ pub struct Experiment {
 
 /// Every experiment, paper artifacts first (in paper order), then our
 /// studies.
-pub const EXPERIMENTS: [Experiment; 12] = [
+pub const EXPERIMENTS: [Experiment; 13] = [
     Experiment { name: "fig1", aliases: &[], paper: true },
     Experiment { name: "fig3", aliases: &[], paper: true },
     Experiment { name: "table1", aliases: &[], paper: true },
@@ -141,6 +144,7 @@ pub const EXPERIMENTS: [Experiment; 12] = [
     Experiment { name: "prefix_sharing", aliases: &["prefix"], paper: false },
     Experiment { name: "transport", aliases: &[], paper: false },
     Experiment { name: "openloop", aliases: &["open_loop"], paper: false },
+    Experiment { name: "workflow", aliases: &["workflows"], paper: false },
 ];
 
 /// Canonical names, in table order — what the usage string and the
@@ -189,6 +193,7 @@ pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
             "prefix_sharing" => out.push(prefix_sharing::run()?),
             "transport" => out.push(transport::run()?),
             "openloop" => out.push(openloop::run()?),
+            "workflow" => out.push(workflow::run()?),
             "fig1" => out.extend(fig1::run()?),
             "fig3" => out.push(fig3::run()?),
             "fig5" => out.push(fig5::run()?),
@@ -226,6 +231,7 @@ mod tests {
         assert_eq!(super::canonical("prefix"), Some("prefix_sharing"));
         assert_eq!(super::canonical("transport"), Some("transport"));
         assert_eq!(super::canonical("open_loop"), Some("openloop"));
+        assert_eq!(super::canonical("workflows"), Some("workflow"));
         assert_eq!(super::canonical("meteor"), None);
     }
 

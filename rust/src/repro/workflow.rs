@@ -1,0 +1,282 @@
+//! Workflow-graph workload study (`concur repro workflow`): aggregate
+//! cache hit rate and makespan across KV lifetime policies and workflow
+//! shapes.
+//!
+//! Not a paper artifact — this opens the workflow-awareness axis the
+//! ROADMAP calls for.  Fleets of planner→worker DAGs (see
+//! [`crate::agent::workflow_fleet`]) run under each
+//! [`KvLifetimeMode`]:
+//!
+//! * `lru`                — recency only (the baseline every serving
+//!   engine ships);
+//! * `steps-to-execution` — KVFlow-style: KV belonging to agents with
+//!   the *least* remaining trajectory is retained hardest (their
+//!   contexts are the largest, the most expensive to recompute, and the
+//!   first to free the pool for good);
+//! * `tool-ttl`           — Continuum-style: KV of a tool-waiting agent
+//!   is pinned for the tool's expected latency, so plain recency cannot
+//!   evict exactly the context that is about to be re-read.
+//!
+//! Two shapes (`fanout`: planner → workers; `mapreduce`: planner →
+//! workers → reducer) at two pressure levels (fleet size against one
+//! TP2 pool).  The question the grid answers: once the pool thrashes,
+//! does knowing *when KV comes back* (tool-ttl) or *how much future it
+//! has* (steps-to-execution) beat plain recency on aggregate hit rate?
+//! `tests/workflow_integration.rs` pins the scaled-down claim.
+//!
+//! The sweep also writes `BENCH_workflow.json` (override the path with
+//! `BENCH_WORKFLOW_PATH`) so the nightly CI job can archive the policy
+//! comparison next to the other bench artifacts.
+
+use std::collections::BTreeMap;
+
+use crate::config::presets;
+use crate::config::{
+    AimdParams, EngineConfig, JobConfig, KvLifetimeMode, SchedulerKind, TopologyConfig,
+    WorkflowConfig, WorkloadConfig,
+};
+use crate::core::json::Value;
+use crate::core::Result;
+use crate::driver::RunResult;
+use crate::metrics::Table;
+
+use super::{run_systems, ExpOutput};
+
+/// KV lifetime policies compared in every cell, in table order.
+pub const POLICIES: [KvLifetimeMode; 3] = [
+    KvLifetimeMode::Lru,
+    KvLifetimeMode::StepsToExecution,
+    KvLifetimeMode::ToolTtl,
+];
+
+/// Workflow shapes: `(label, map_reduce_share)`.
+pub const SHAPES: [(&str, f64); 2] = [("fanout", 0.0), ("mapreduce", 1.0)];
+
+/// Pressure levels: `(label, graphs per fleet)` against one TP2 pool.
+pub const PRESSURES: [(&str, u32); 2] = [("light", 6), ("heavy", 16)];
+
+/// One grid cell: a (policy, shape, pressure) triple and its run.
+pub struct WorkflowCell {
+    pub policy: KvLifetimeMode,
+    pub shape: &'static str,
+    pub pressure: &'static str,
+    pub result: RunResult,
+}
+
+/// The workflow generator shape for one (shape, pressure) cell.
+pub fn workflow_for(shape: &str, graphs: u32) -> WorkflowConfig {
+    let map_reduce_share = SHAPES
+        .iter()
+        .find(|(s, _)| *s == shape)
+        .unwrap_or_else(|| panic!("unknown workflow shape '{shape}'"))
+        .1;
+    WorkflowConfig {
+        graphs: graphs as usize,
+        fanout_min: 2,
+        fanout_max: 4,
+        map_reduce_share,
+        shared_context_tokens: 512,
+        ..WorkflowConfig::on()
+    }
+}
+
+/// The repro-standard job for one cell: workflow DAGs on a single
+/// Qwen3-class TP2 replica (one pool carries the whole fleet, so the
+/// heavy pressure level genuinely thrashes it).
+pub fn base_job(policy: KvLifetimeMode, shape: &'static str, graphs: u32) -> JobConfig {
+    JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig {
+            hit_window: 8,
+            kv_lifetime: policy,
+            ..EngineConfig::default()
+        },
+        workload: WorkloadConfig {
+            steps_min: 10,
+            steps_max: 16,
+            task_families: 4,
+            workflow: workflow_for(shape, graphs),
+            ..WorkloadConfig::default()
+        },
+        scheduler: SchedulerKind::Concur(AimdParams::default()),
+        topology: TopologyConfig::default(),
+    }
+}
+
+/// Run the whole grid, fanned out across cores.
+pub fn run_sweep() -> Result<Vec<WorkflowCell>> {
+    let mut labels = Vec::new();
+    let mut jobs = Vec::new();
+    for &policy in &POLICIES {
+        for &(shape, _) in &SHAPES {
+            for &(pressure, graphs) in &PRESSURES {
+                labels.push((policy, shape, pressure));
+                jobs.push(base_job(policy, shape, graphs));
+            }
+        }
+    }
+    Ok(labels
+        .into_iter()
+        .zip(run_systems(jobs)?)
+        .map(|((policy, shape, pressure), result)| WorkflowCell {
+            policy,
+            shape,
+            pressure,
+            result,
+        })
+        .collect())
+}
+
+/// Machine-readable sweep dump (`BENCH_workflow.json`): one entry per
+/// cell, keyed `{policy}/{shape}/{pressure}`.
+pub fn bench_json(cells: &[WorkflowCell]) -> Value {
+    let mut map: BTreeMap<String, Value> = BTreeMap::new();
+    for c in cells {
+        let mut entry: BTreeMap<String, Value> = BTreeMap::new();
+        entry.insert("latency_s".into(), Value::Number(c.result.total_time.as_secs_f64()));
+        entry.insert("hit_rate".into(), Value::Number(c.result.hit_rate));
+        entry.insert(
+            "recompute_frac".into(),
+            Value::Number(c.result.breakdown.fraction(crate::metrics::Phase::Recompute)),
+        );
+        entry.insert("throughput_tps".into(), Value::Number(c.result.throughput_tps));
+        entry.insert("evictions".into(), Value::Number(c.result.counters.evictions as f64));
+        entry.insert("agents".into(), Value::Number(c.result.agents_finished as f64));
+        map.insert(
+            format!("{}/{}/{}", c.policy.name(), c.shape, c.pressure),
+            Value::Object(entry),
+        );
+    }
+    Value::Object(map)
+}
+
+fn cell<'a>(
+    cells: &'a [WorkflowCell],
+    policy: KvLifetimeMode,
+    shape: &str,
+    pressure: &str,
+) -> &'a RunResult {
+    &cells
+        .iter()
+        .find(|c| c.policy == policy && c.shape == shape && c.pressure == pressure)
+        .expect("complete grid")
+        .result
+}
+
+/// Render the grid as a repro table with policy-vs-LRU notes.
+pub fn output_from(cells: &[WorkflowCell]) -> ExpOutput {
+    let mut table = Table::new(
+        "Workflow DAG fleets: aggregate hit rate and makespan across KV \
+         lifetime policy x workflow shape x pool pressure",
+    )
+    .header(&[
+        "shape/pressure",
+        "lru hit%",
+        "steps hit%",
+        "ttl hit%",
+        "lru s",
+        "steps s",
+        "ttl s",
+    ]);
+
+    for &(shape, _) in &SHAPES {
+        for &(pressure, _) in &PRESSURES {
+            let lru = cell(cells, KvLifetimeMode::Lru, shape, pressure);
+            let steps = cell(cells, KvLifetimeMode::StepsToExecution, shape, pressure);
+            let ttl = cell(cells, KvLifetimeMode::ToolTtl, shape, pressure);
+            table.row(vec![
+                format!("{shape}/{pressure}"),
+                format!("{:.1}", lru.hit_rate * 100.0),
+                format!("{:.1}", steps.hit_rate * 100.0),
+                format!("{:.1}", ttl.hit_rate * 100.0),
+                format!("{:.0}", lru.total_time.as_secs_f64()),
+                format!("{:.0}", steps.total_time.as_secs_f64()),
+                format!("{:.0}", ttl.total_time.as_secs_f64()),
+            ]);
+        }
+    }
+
+    // Best lifetime-aware policy vs the LRU baseline on the most
+    // pressured cells.
+    let mut notes = Vec::new();
+    for &(shape, _) in &SHAPES {
+        let lru = cell(cells, KvLifetimeMode::Lru, shape, "heavy");
+        let steps = cell(cells, KvLifetimeMode::StepsToExecution, shape, "heavy");
+        let ttl = cell(cells, KvLifetimeMode::ToolTtl, shape, "heavy");
+        let (best_name, best) = if steps.hit_rate >= ttl.hit_rate {
+            ("steps-to-execution", steps)
+        } else {
+            ("tool-ttl", ttl)
+        };
+        notes.push(format!(
+            "{shape}/heavy: {} hit {:.1}% vs lru {:.1}% (evictions {} vs {})",
+            best_name,
+            best.hit_rate * 100.0,
+            lru.hit_rate * 100.0,
+            best.counters.evictions,
+            lru.counters.evictions,
+        ));
+    }
+    notes.push(
+        "identical fleets and release order within a cell: the policies \
+         change which KV evicts under pressure, never who runs when"
+            .into(),
+    );
+
+    ExpOutput {
+        name: "workflow",
+        title: "Workflow DAGs: KV lifetime policy x shape x pressure".into(),
+        table,
+        figures: vec![],
+        notes,
+    }
+}
+
+/// Run the study and write `BENCH_workflow.json` (path overridable via
+/// `BENCH_WORKFLOW_PATH`).
+pub fn run() -> Result<ExpOutput> {
+    let cells = run_sweep()?;
+    let path = std::env::var("BENCH_WORKFLOW_PATH")
+        .unwrap_or_else(|_| "BENCH_workflow.json".to_string());
+    std::fs::write(&path, format!("{}\n", bench_json(&cells).to_string_pretty()))?;
+    let mut out = output_from(&cells);
+    out.notes.push(format!("machine-readable results written to {path}"));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_jobs_validate_for_every_cell() {
+        for &policy in &POLICIES {
+            for &(shape, _) in &SHAPES {
+                for &(pressure, graphs) in &PRESSURES {
+                    let job = base_job(policy, shape, graphs);
+                    job.validate().unwrap();
+                    assert!(job.workload.workflow.enabled, "{shape}/{pressure}");
+                    assert_eq!(job.engine.kv_lifetime, policy);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shapes_differ_only_in_the_reduce_coin() {
+        let fo = workflow_for("fanout", 6);
+        let mr = workflow_for("mapreduce", 6);
+        assert_eq!(fo.map_reduce_share, 0.0);
+        assert_eq!(mr.map_reduce_share, 1.0);
+        assert_eq!(
+            (fo.graphs, fo.fanout_min, fo.fanout_max, fo.shared_context_tokens, fo.seed),
+            (mr.graphs, mr.fanout_min, mr.fanout_max, mr.shared_context_tokens, mr.seed),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown workflow shape")]
+    fn unknown_shape_panics() {
+        workflow_for("meteor", 6);
+    }
+}

@@ -1,0 +1,320 @@
+//! Shared scaffolding for the integration suites (`mod common;` from
+//! each test binary).
+//!
+//! Lives here so `cluster_integration.rs`, `transport_integration.rs`,
+//! `openloop_integration.rs` and `workflow_integration.rs` stop
+//! copy-pasting the same three things:
+//!
+//! * [`reference`] / [`reference_run`] — the pre-refactor single-engine
+//!   driver, embedded verbatim as the behavioral oracle every
+//!   feature-off differential compares against;
+//! * [`assert_bit_identical`] — the exhaustive `RunResult` comparison
+//!   (every counter, series point, histogram moment and per-agent
+//!   record, float fields compared by bits);
+//! * job builders ([`small_cluster_job`], [`random_jobs`]) — the
+//!   anchored workload recipes the suites perturb.
+//!
+//! Each binary uses a subset, hence the file-wide `dead_code` allow.
+#![allow(dead_code)]
+
+use concur::config::presets;
+use concur::config::{
+    AimdParams, EngineConfig, EvictionMode, JobConfig, RouterKind, SchedulerKind,
+    TopologyConfig, WorkloadConfig,
+};
+use concur::core::Rng;
+use concur::driver::RunResult;
+use concur::metrics::ALL_PHASES;
+
+/// Pre-refactor driver, embedded verbatim as the behavioral oracle (only
+/// the `crate::` paths and the RunResult's new replica/fault fields
+/// adapted — a single-engine run has no faults and one always-admissible
+/// replica).
+pub mod reference {
+    use concur::agent::Agent;
+    use concur::cluster::{FaultStats, OpenLoopStats, PrefixTierStats, TransportStats};
+    use concur::coordinator::slots::BoundaryDecision;
+    use concur::coordinator::{ControlInputs, Controller, SlotManager};
+    use concur::core::{AgentId, Micros, RequestId};
+    use concur::driver::{AgentOutcome, RunResult};
+    use concur::engine::SimEngine;
+    use concur::metrics::{Histogram, Phase, TimeSeries};
+    use concur::sim::{EventQueue, SimClock};
+
+    pub fn run_with(
+        engine: &mut SimEngine,
+        agents: Vec<Agent>,
+        mut controller: Box<dyn Controller>,
+    ) -> RunResult {
+        if let Some(cap) = controller.engine_request_cap() {
+            engine.cfg.max_running = cap;
+        }
+
+        let mut slots = SlotManager::new();
+        let total_gen: u64 = agents.iter().map(|a| a.total_gen_tokens()).sum();
+        let agents_total = agents.len();
+        let mut fleet: Vec<Agent> = agents;
+        fleet.sort_by_key(|a| a.id.0);
+        for (i, a) in fleet.iter().enumerate() {
+            assert_eq!(a.id.0 as usize, i, "driver requires dense agent ids");
+            slots.register(a.id);
+        }
+        fn agent(fleet: &mut [Agent], id: AgentId) -> &mut Agent {
+            &mut fleet[id.0 as usize]
+        }
+        let mut active_footprint: u64 = 0;
+
+        let mut clock = SimClock::new();
+        let mut events: EventQueue<AgentId> = EventQueue::new();
+        let mut next_req: u64 = 0;
+        let mut result_breakdown_toolwait = Micros::ZERO;
+
+        let mut usage_series = TimeSeries::new("kv_usage");
+        let mut hit_series = TimeSeries::new("hit_rate");
+        let mut active_series = TimeSeries::new("active_agents");
+        let mut window_series = TimeSeries::new("window");
+        let mut agent_latency = Histogram::new("agent_e2e_latency");
+        let mut alive_series = TimeSeries::new("admissible_replicas");
+        alive_series.record(Micros::ZERO, 1.0);
+        let mut per_agent: Vec<AgentOutcome> = Vec::with_capacity(agents_total);
+
+        let mut finished_agents = 0usize;
+        let mut engine_steps = 0u64;
+
+        loop {
+            let now = clock.now();
+
+            // 1. Deliver due tool completions; paused agents wait.
+            while let Some((_, aid)) = events.pop_due(now) {
+                let a = agent(&mut fleet, aid);
+                a.on_tool_done();
+                if slots.on_step_boundary(aid, controller.window())
+                    == BoundaryDecision::Continue
+                {
+                    let req = a.make_request(RequestId(next_req), now);
+                    next_req += 1;
+                    engine.submit(req);
+                } else {
+                    active_footprint -= a.context_len() as u64; // paused
+                }
+            }
+
+            // 2. Grant freed slots (resume paused LIFO, admit fresh FIFO).
+            for aid in slots.grant_up_to(controller.window()) {
+                let a = agent(&mut fleet, aid);
+                active_footprint += a.context_len() as u64;
+                let req = a.make_request(RequestId(next_req), now);
+                next_req += 1;
+                engine.submit(req);
+            }
+
+            // 3. Advance: engine iteration, or jump to the next event.
+            if engine.has_work() {
+                let out = engine.step(now);
+                engine_steps += 1;
+                clock.advance(Micros(out.duration.0.max(1)));
+                let after = clock.now();
+
+                for fin in out.finished {
+                    let a = agent(&mut fleet, fin.agent);
+                    let before = a.context_len() as u64;
+                    match a.on_step_finished(&fin.output, after) {
+                        Some(tool_latency) => {
+                            active_footprint += a.context_len() as u64 - before;
+                            events.push(after + tool_latency, fin.agent);
+                        }
+                        None => {
+                            active_footprint -= before; // slot released
+                            slots.release(fin.agent);
+                            finished_agents += 1;
+                            let start = a.started_at.unwrap_or(Micros::ZERO);
+                            agent_latency.record(after.saturating_sub(start));
+                            per_agent.push(AgentOutcome {
+                                agent: fin.agent,
+                                gen_tokens: a.total_gen_tokens(),
+                                finished_at: after,
+                            });
+                        }
+                    }
+                }
+
+                let sig = engine.signals();
+                controller.on_signals(&ControlInputs {
+                    engine: sig,
+                    active_agents: slots.active_count(),
+                    active_footprint,
+                    capacity: engine.pool().capacity(),
+                });
+                usage_series.record(after, sig.pool_usage);
+                hit_series.record(after, sig.hit_rate);
+                active_series.record(after, slots.active_count() as f64);
+                let w = controller.window();
+                window_series.record(after, if w == usize::MAX { f64::NAN } else { w as f64 });
+            } else if let Some(t) = events.peek_time() {
+                result_breakdown_toolwait += t.saturating_sub(now);
+                clock.advance_to(t);
+            } else {
+                break; // no engine work, no future events → done
+            }
+        }
+
+        assert_eq!(finished_agents, agents_total, "reference run incomplete");
+
+        let total_time = clock.now();
+        let mut breakdown = std::mem::take(&mut engine.breakdown);
+        breakdown.add(Phase::ToolWait, result_breakdown_toolwait);
+        let throughput_tps = if total_time.0 > 0 {
+            total_gen as f64 / total_time.as_secs_f64()
+        } else {
+            0.0
+        };
+
+        RunResult {
+            scheduler: controller.name(),
+            total_time,
+            breakdown,
+            hit_rate: engine.lifetime_hits.ratio(),
+            counters: engine.counters,
+            usage_series,
+            hit_series,
+            active_series,
+            window_series,
+            agents_total,
+            agents_finished: finished_agents,
+            total_gen_tokens: total_gen,
+            throughput_tps,
+            agent_latency,
+            engine_steps,
+            pauses: slots.pauses,
+            resumes: slots.resumes,
+            replicas: 1,
+            router: "single".into(),
+            faults: FaultStats::default(),
+            alive_series,
+            per_agent,
+            prefix_tier: PrefixTierStats::default(),
+            broadcast_series: TimeSeries::new("broadcast_shipped_tokens"),
+            transport: TransportStats::default(),
+            ttft: Histogram::new("ttft"),
+            step_latency: Histogram::new("step_latency"),
+            open_loop: OpenLoopStats::default(),
+        }
+    }
+}
+
+/// Run `job` through the embedded pre-refactor driver.
+pub fn reference_run(job: &JobConfig) -> RunResult {
+    use concur::agent::WorkloadGenerator;
+    use concur::coordinator::make_controller;
+    use concur::costmodel::CostModel;
+    use concur::engine::SimEngine;
+
+    job.validate().unwrap();
+    let agents = WorkloadGenerator::new(job.workload.clone()).generate();
+    let controller = make_controller(&job.scheduler);
+    let mut engine = SimEngine::new(job.engine.clone(), CostModel::new(job.cluster.clone()));
+    reference::run_with(&mut engine, agents, controller)
+}
+
+/// Bitwise comparison of everything a RunResult records (NaN-tolerant for
+/// the window series: unbounded windows record NaN points).
+pub fn assert_bit_identical(a: &RunResult, b: &RunResult, ctx: &str) {
+    assert_eq!(a.scheduler, b.scheduler, "{ctx}: scheduler");
+    assert_eq!(a.total_time, b.total_time, "{ctx}: total_time");
+    assert_eq!(a.counters, b.counters, "{ctx}: counters");
+    assert_eq!(a.hit_rate.to_bits(), b.hit_rate.to_bits(), "{ctx}: hit_rate");
+    assert_eq!(a.throughput_tps.to_bits(), b.throughput_tps.to_bits(), "{ctx}: throughput");
+    assert_eq!(a.engine_steps, b.engine_steps, "{ctx}: engine_steps");
+    assert_eq!(a.agents_finished, b.agents_finished, "{ctx}: agents_finished");
+    assert_eq!(a.total_gen_tokens, b.total_gen_tokens, "{ctx}: gen tokens");
+    assert_eq!(a.pauses, b.pauses, "{ctx}: pauses");
+    assert_eq!(a.resumes, b.resumes, "{ctx}: resumes");
+    for p in ALL_PHASES {
+        assert_eq!(a.breakdown.get(p), b.breakdown.get(p), "{ctx}: breakdown {}", p.name());
+    }
+    assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
+    assert_eq!(a.prefix_tier, b.prefix_tier, "{ctx}: prefix-tier stats");
+    assert_eq!(a.transport, b.transport, "{ctx}: transport stats");
+    assert_eq!(a.per_agent, b.per_agent, "{ctx}: per-agent records");
+    for (name, sa, sb) in [
+        ("usage", &a.usage_series, &b.usage_series),
+        ("hit", &a.hit_series, &b.hit_series),
+        ("active", &a.active_series, &b.active_series),
+        ("window", &a.window_series, &b.window_series),
+        ("alive", &a.alive_series, &b.alive_series),
+        ("broadcast", &a.broadcast_series, &b.broadcast_series),
+    ] {
+        assert_eq!(sa.len(), sb.len(), "{ctx}: {name} series length");
+        for (pa, pb) in sa.points().iter().zip(sb.points()) {
+            assert_eq!(pa.0, pb.0, "{ctx}: {name} series timestamp");
+            assert_eq!(pa.1.to_bits(), pb.1.to_bits(), "{ctx}: {name} series value");
+        }
+    }
+    assert_eq!(a.agent_latency.count(), b.agent_latency.count(), "{ctx}: latency n");
+    assert_eq!(a.agent_latency.mean(), b.agent_latency.mean(), "{ctx}: latency mean");
+    assert_eq!(a.agent_latency.max(), b.agent_latency.max(), "{ctx}: latency max");
+    assert_eq!(a.open_loop, b.open_loop, "{ctx}: open-loop stats");
+    for (name, ha, hb) in [("ttft", &a.ttft, &b.ttft), ("step", &a.step_latency, &b.step_latency)] {
+        assert_eq!(ha.count(), hb.count(), "{ctx}: {name} n");
+        assert_eq!(ha.mean(), hb.mean(), "{ctx}: {name} mean");
+        assert_eq!(ha.max(), hb.max(), "{ctx}: {name} max");
+    }
+}
+
+/// Seeded random small jobs across schedulers and eviction modes (same
+/// recipe as the parallel-sweep proptest).
+pub fn random_jobs(n: usize) -> Vec<JobConfig> {
+    let mut rng = Rng::new(0xD1FF);
+    (0..n)
+        .map(|i| {
+            let scheduler = match i % 4 {
+                0 => SchedulerKind::Uncontrolled,
+                1 => SchedulerKind::Concur(AimdParams::default()),
+                2 => SchedulerKind::AgentCap(rng.gen_range(2, 6) as usize),
+                _ => SchedulerKind::RequestCap(rng.gen_range(2, 6) as usize),
+            };
+            let eviction = if rng.chance(0.5) {
+                EvictionMode::Discard
+            } else {
+                EvictionMode::Offload
+            };
+            JobConfig {
+                cluster: presets::qwen3_cluster(8),
+                engine: EngineConfig {
+                    eviction,
+                    hit_window: 8,
+                    ..EngineConfig::default()
+                },
+                workload: WorkloadConfig {
+                    n_agents: rng.gen_range(4, 12) as usize,
+                    steps_min: 2,
+                    steps_max: 4,
+                    seed: rng.gen_range(1, 1_000),
+                    ..WorkloadConfig::default()
+                },
+                scheduler,
+                topology: TopologyConfig::default(),
+            }
+        })
+        .collect()
+}
+
+/// The anchored small-cluster job the multi-replica suites share: a
+/// Qwen3-class TP2 cluster, responsive hit window, CONCUR admission and
+/// a short 5-family fleet.  Each suite then enables the machinery it
+/// actually tests (tier, transport, open-loop, workflow) on top.
+pub fn small_cluster_job(n_agents: usize, replicas: usize, router: RouterKind) -> JobConfig {
+    JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
+        workload: WorkloadConfig {
+            n_agents,
+            steps_min: 3,
+            steps_max: 5,
+            task_families: 5,
+            ..WorkloadConfig::default()
+        },
+        scheduler: SchedulerKind::Concur(AimdParams::default()),
+        topology: TopologyConfig { replicas, router, ..TopologyConfig::default() },
+    }
+}

@@ -12,32 +12,19 @@
 //! (The closed-batch invisibility of all this machinery is pinned by the
 //! differential oracle in `cluster_integration.rs`.)
 
-use concur::config::{
-    presets, AimdParams, EngineConfig, FaultRateConfig, JobConfig, OpenLoopConfig, RouterKind,
-    SchedulerKind, TopologyConfig, WorkloadConfig,
-};
+mod common;
+
+use common::{assert_bit_identical, small_cluster_job};
+use concur::config::{FaultRateConfig, JobConfig, OpenLoopConfig, RouterKind};
 use concur::driver::{run_job, RunResult};
 
+/// The anchored 3-replica cell (see `common::small_cluster_job`) with
+/// the open-loop arrival process and stochastic fault rates under test.
 fn open_loop_job(n_agents: usize, ol: OpenLoopConfig, fr: FaultRateConfig) -> JobConfig {
-    JobConfig {
-        cluster: presets::qwen3_cluster(2),
-        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
-        workload: WorkloadConfig {
-            n_agents,
-            steps_min: 3,
-            steps_max: 5,
-            task_families: 5,
-            ..WorkloadConfig::default()
-        },
-        scheduler: SchedulerKind::Concur(AimdParams::default()),
-        topology: TopologyConfig {
-            replicas: 3,
-            router: RouterKind::CacheAffinity,
-            open_loop: ol,
-            fault_rates: fr,
-            ..TopologyConfig::default()
-        },
-    }
+    let mut job = small_cluster_job(n_agents, 3, RouterKind::CacheAffinity);
+    job.topology.open_loop = ol;
+    job.topology.fault_rates = fr;
+    job
 }
 
 /// Every session is accounted for exactly once: served, shed at the
@@ -60,22 +47,6 @@ fn assert_conservation(r: &RunResult, n: u64, ctx: &str) {
     );
 }
 
-fn assert_replay_identical(a: &RunResult, b: &RunResult, ctx: &str) {
-    assert_eq!(a.total_time, b.total_time, "{ctx}: total_time");
-    assert_eq!(a.counters, b.counters, "{ctx}: counters");
-    assert_eq!(a.hit_rate.to_bits(), b.hit_rate.to_bits(), "{ctx}: hit_rate");
-    assert_eq!(a.engine_steps, b.engine_steps, "{ctx}: engine_steps");
-    assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
-    assert_eq!(a.open_loop, b.open_loop, "{ctx}: open-loop stats");
-    assert_eq!(a.per_agent, b.per_agent, "{ctx}: per-agent records");
-    for (name, ha, hb) in [("ttft", &a.ttft, &b.ttft), ("step", &a.step_latency, &b.step_latency)]
-    {
-        assert_eq!(ha.count(), hb.count(), "{ctx}: {name} n");
-        assert_eq!(ha.mean(), hb.mean(), "{ctx}: {name} mean");
-        assert_eq!(ha.max(), hb.max(), "{ctx}: {name} max");
-    }
-}
-
 /// PROPERTY (replay): with the full open-loop stack *and* stochastic
 /// fault injection enabled, a fixed seed pair replays bit-identically —
 /// and perturbing the traffic seed genuinely moves the schedule, so the
@@ -87,7 +58,7 @@ fn open_loop_with_stochastic_faults_replays_bit_identically() {
     let job = open_loop_job(24, ol, fr);
     let a = run_job(&job).unwrap();
     let b = run_job(&job).unwrap();
-    assert_replay_identical(&a, &b, "replay");
+    assert_bit_identical(&a, &b, "replay");
     assert_conservation(&a, 24, "replay");
     assert!(
         a.faults.stochastic_injected + a.faults.stochastic_suppressed > 0,

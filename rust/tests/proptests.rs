@@ -5,7 +5,18 @@
 //! across runs).  Each property states the invariant it defends.
 
 use concur::core::{Micros, Rng, Token};
-use concur::engine::{EvictPolicy, RadixTree};
+use concur::engine::{EvictPolicy, KvLifetimePolicy, RadixTree};
+
+/// Every KV lifetime policy, in declaration order.  The radix op-trace
+/// suites below replay the *same* seeded traces under each policy:
+/// stamping draws are consumed unconditionally (and are a no-op under
+/// `Lru`), so the trace a seed produces is policy-independent while the
+/// eviction order it exercises is not.
+const LIFETIME_POLICIES: [KvLifetimePolicy; 3] = [
+    KvLifetimePolicy::Lru,
+    KvLifetimePolicy::StepsToExecution,
+    KvLifetimePolicy::ToolTtl,
+];
 
 /// Random token sequence with a shared low-id prefix pool so sequences
 /// overlap in interesting ways.
@@ -93,116 +104,140 @@ fn radix_invariants_under_random_ops() {
 
 /// PROPERTY (satellite): the radix tree's invariants hold under long
 /// random interleavings of *every* public mutator — `match_prefix`,
-/// `insert_parts`, `lock_path`/`unlock_path`, `evict` (both policies),
-/// `trim_cpu`, `reload_path` — **including the broadcast pin/demote ops**
-/// of the shared-prefix tier.  `check_invariants()` runs after every op,
-/// and a broadcast-pinned sequence must stay fully matchable (GPU or
-/// CPU, never dropped) until its demotion.  Fixed seed set (12 ≥ 8), so
-/// the CI run is deterministic.
+/// `insert_parts`, `lock_path`/`unlock_path`, `evict_at` (both residency
+/// policies), `trim_cpu`, `reload_path`, `stamp_path_lifetime` —
+/// **including the broadcast pin/demote ops** of the shared-prefix tier —
+/// and under **every [`KvLifetimePolicy`]**, replaying the same 12-seed
+/// op traces per policy.  `check_invariants()` runs after every op, and a
+/// broadcast-pinned sequence must stay fully matchable (GPU or CPU,
+/// never dropped) until its demotion, whatever the eviction order the
+/// policy picks.  Fixed seed set (12 ≥ 8), so the CI run is
+/// deterministic.
 #[test]
 fn radix_invariants_with_broadcast_ops() {
-    for seed in 0..12u64 {
-        let mut rng = Rng::new(7000 + seed);
-        let mut tree = RadixTree::new();
-        let mut locked: Vec<Vec<usize>> = Vec::new();
-        let mut broadcast: Vec<(Vec<usize>, Vec<Token>)> = Vec::new();
-        let mut clockv = 0u64;
-        for op in 0..250 {
-            clockv += 1;
-            let now = Micros(clockv);
-            match rng.gen_range(0, 12) {
-                0..=2 => {
-                    let seq = random_seq(&mut rng, 300);
-                    let cut = rng.gen_range(0, seq.len() as u64 + 1) as usize;
-                    let ins = tree.insert_parts(&seq[..cut], &seq[cut..], now);
-                    if rng.chance(0.3) && !ins.path.is_empty() {
-                        tree.lock_path(&ins.path);
-                        locked.push(ins.path);
-                    }
-                }
-                3 => {
-                    // Broadcast-pin a freshly inserted sequence (the tier's
-                    // install flow: insert, then pin the returned path).
-                    if broadcast.len() < 6 {
-                        let seq = random_seq(&mut rng, 300);
-                        let ins = tree.insert(&seq, now);
-                        assert!(!ins.path.is_empty());
-                        tree.pin_broadcast(&ins.path);
-                        broadcast.push((ins.path, seq));
-                    }
-                }
-                4..=5 => {
-                    let seq = random_seq(&mut rng, 300);
-                    let m = tree.match_prefix(&seq, now);
-                    assert!(m.total() <= seq.len() as u64);
-                    assert!(m.broadcast_tokens <= m.total());
-                }
-                6 => {
-                    if let Some(path) = locked.pop() {
-                        tree.unlock_path(&path);
-                    }
-                }
-                7 => {
-                    // Demote in random order, not just LIFO.
-                    if !broadcast.is_empty() {
-                        let i = rng.gen_range(0, broadcast.len() as u64) as usize;
-                        let (path, _) = broadcast.remove(i);
-                        tree.demote_broadcast(&path);
-                    }
-                }
-                8..=9 => {
-                    let want = rng.gen_range(1, 2_000);
-                    let policy = if rng.chance(0.5) {
-                        EvictPolicy::Discard
-                    } else {
-                        EvictPolicy::OffloadToCpu
-                    };
-                    tree.evict(want, policy);
-                }
-                10 => {
-                    tree.trim_cpu(rng.gen_range(0, 2_000));
-                }
-                _ => {
-                    let seq = random_seq(&mut rng, 300);
-                    let m = tree.match_prefix(&seq, now);
-                    if m.cpu_tokens > 0 {
-                        tree.reload_path(&m.path, now);
-                    }
-                }
-            }
-            tree.check_invariants().unwrap_or_else(|e| {
-                panic!("seed {seed} op {op}: invariant violated: {e}")
-            });
-            // Every pinned broadcast sequence must still fully match —
-            // eviction and trimming may never touch covered nodes.
-            for (_, seq) in &broadcast {
+    for policy in LIFETIME_POLICIES {
+        for seed in 0..12u64 {
+            let mut rng = Rng::new(7000 + seed);
+            let mut tree = RadixTree::with_policy(policy);
+            let mut locked: Vec<Vec<usize>> = Vec::new();
+            let mut broadcast: Vec<(Vec<usize>, Vec<Token>)> = Vec::new();
+            let mut clockv = 0u64;
+            for op in 0..250 {
                 clockv += 1;
-                let m = tree.match_prefix(seq, Micros(clockv));
-                assert_eq!(
-                    m.total(),
-                    seq.len() as u64,
-                    "seed {seed} op {op}: broadcast-pinned sequence lost cache"
-                );
+                let now = Micros(clockv);
+                match rng.gen_range(0, 13) {
+                    0..=2 => {
+                        let seq = random_seq(&mut rng, 300);
+                        let cut = rng.gen_range(0, seq.len() as u64 + 1) as usize;
+                        let ins = tree.insert_parts(&seq[..cut], &seq[cut..], now);
+                        if rng.chance(0.3) && !ins.path.is_empty() {
+                            tree.lock_path(&ins.path);
+                            locked.push(ins.path);
+                        }
+                    }
+                    3 => {
+                        // Broadcast-pin a freshly inserted sequence (the tier's
+                        // install flow: insert, then pin the returned path).
+                        if broadcast.len() < 6 {
+                            let seq = random_seq(&mut rng, 300);
+                            let ins = tree.insert(&seq, now);
+                            assert!(!ins.path.is_empty());
+                            tree.pin_broadcast(&ins.path);
+                            broadcast.push((ins.path, seq));
+                        }
+                    }
+                    4..=5 => {
+                        let seq = random_seq(&mut rng, 300);
+                        let m = tree.match_prefix(&seq, now);
+                        assert!(m.total() <= seq.len() as u64);
+                        assert!(m.broadcast_tokens <= m.total());
+                    }
+                    6 => {
+                        if let Some(path) = locked.pop() {
+                            tree.unlock_path(&path);
+                        }
+                    }
+                    7 => {
+                        // Demote in random order, not just LIFO.
+                        if !broadcast.is_empty() {
+                            let i = rng.gen_range(0, broadcast.len() as u64) as usize;
+                            let (path, _) = broadcast.remove(i);
+                            tree.demote_broadcast(&path);
+                        }
+                    }
+                    8..=9 => {
+                        let want = rng.gen_range(1, 2_000);
+                        let ep = if rng.chance(0.5) {
+                            EvictPolicy::Discard
+                        } else {
+                            EvictPolicy::OffloadToCpu
+                        };
+                        // Clocked form so `ToolTtl` exercises lazy pin
+                        // expiry; identical to `evict` under `Lru`.
+                        tree.evict_at(want, ep, now);
+                    }
+                    10 => {
+                        tree.trim_cpu(rng.gen_range(0, 2_000));
+                    }
+                    11 => {
+                        // Lifetime stamping, the engine's hint path.  The
+                        // draws happen under every policy (keeping the
+                        // trace policy-independent); the stamp itself is a
+                        // no-op under `Lru`.
+                        let seq = random_seq(&mut rng, 300);
+                        let class = rng.gen_range(0, 1 << 20);
+                        let pin = now + Micros(rng.gen_range(0, 3_000));
+                        let m = tree.match_prefix(&seq, now);
+                        tree.stamp_path_lifetime(&m.path, class, pin);
+                    }
+                    _ => {
+                        let seq = random_seq(&mut rng, 300);
+                        let m = tree.match_prefix(&seq, now);
+                        if m.cpu_tokens > 0 {
+                            tree.reload_path(&m.path, now);
+                        }
+                    }
+                }
+                tree.check_invariants().unwrap_or_else(|e| {
+                    panic!("{policy:?} seed {seed} op {op}: invariant violated: {e}")
+                });
+                // Every pinned broadcast sequence must still fully match —
+                // eviction and trimming may never touch covered nodes.
+                for (_, seq) in &broadcast {
+                    clockv += 1;
+                    let m = tree.match_prefix(seq, Micros(clockv));
+                    assert_eq!(
+                        m.total(),
+                        seq.len() as u64,
+                        "{policy:?} seed {seed} op {op}: broadcast-pinned sequence lost cache"
+                    );
+                }
             }
+            // Tear-down: demote and unlock everything, then the tree must be
+            // fully reclaimable again — TTL pins shape the drain order but
+            // never block it.
+            while let Some((path, _)) = broadcast.pop() {
+                tree.demote_broadcast(&path);
+            }
+            while let Some(path) = locked.pop() {
+                tree.unlock_path(&path);
+            }
+            assert_eq!(
+                tree.broadcast_tokens(),
+                0,
+                "{policy:?} seed {seed}: coverage must drain"
+            );
+            tree.evict(u64::MAX, EvictPolicy::Discard);
+            tree.check_invariants().unwrap_or_else(|e| {
+                panic!("{policy:?} seed {seed}: invariant violated after teardown: {e}")
+            });
         }
-        // Tear-down: demote and unlock everything, then the tree must be
-        // fully reclaimable again.
-        while let Some((path, _)) = broadcast.pop() {
-            tree.demote_broadcast(&path);
-        }
-        while let Some(path) = locked.pop() {
-            tree.unlock_path(&path);
-        }
-        assert_eq!(tree.broadcast_tokens(), 0, "seed {seed}: coverage must drain");
-        tree.evict(u64::MAX, EvictPolicy::Discard);
-        tree.check_invariants().unwrap_or_else(|e| {
-            panic!("seed {seed}: invariant violated after teardown: {e}")
-        });
     }
 }
 
 /// Slow-path reference for the intrusive LRU: the list must equal its
-/// own contents sorted by the `(last_access, version, id)` eviction key.
+/// own contents sorted by the `(lifetime, last_access, version, id)`
+/// eviction key (the lifetime component is constant 0 under `Lru`).
 /// Set-equality plus this sortedness pins the exact eviction order the
 /// lazy-heap predecessor produced — the safety net for the planned
 /// ordered-index swap (ROADMAP "LRU stale re-entry cost").
@@ -858,224 +893,255 @@ fn arena_tree_matches_reference_implementation() {
 
 /// PROPERTY (satellite): tree invariants hold with **generational arena
 /// compaction** forced mid-sequence, across every public mutator
-/// including the broadcast pin/demote pair.  `check_invariants` runs
-/// after every op and after every forced compaction, and compaction must
-/// leave the arena at exactly the live token count while every pinned
-/// sequence stays fully matchable.
+/// including the broadcast pin/demote pair and lifetime stamping, under
+/// **every [`KvLifetimePolicy`]** (same 12-seed traces per policy).
+/// `check_invariants` runs after every op and after every forced
+/// compaction, and compaction must leave the arena at exactly the live
+/// token count while every pinned sequence stays fully matchable.
 #[test]
 fn radix_invariants_with_mid_sequence_compaction() {
-    for seed in 0..12u64 {
-        let mut rng = Rng::new(11_000 + seed);
-        let mut tree = RadixTree::new();
-        let mut locked: Vec<Vec<usize>> = Vec::new();
-        let mut broadcast: Vec<(Vec<usize>, Vec<Token>)> = Vec::new();
-        let mut clockv = 0u64;
-        for op in 0..250 {
-            clockv += 1;
-            let now = Micros(clockv);
-            match rng.gen_range(0, 13) {
-                0..=2 => {
-                    let seq = random_seq(&mut rng, 300);
-                    let cut = rng.gen_range(0, seq.len() as u64 + 1) as usize;
-                    let ins = tree.insert_parts(&seq[..cut], &seq[cut..], now);
-                    if rng.chance(0.3) && !ins.path.is_empty() {
-                        tree.lock_path(&ins.path);
-                        locked.push(ins.path);
-                    }
-                }
-                3 => {
-                    if broadcast.len() < 6 {
-                        let seq = random_seq(&mut rng, 300);
-                        let ins = tree.insert(&seq, now);
-                        assert!(!ins.path.is_empty());
-                        tree.pin_broadcast(&ins.path);
-                        broadcast.push((ins.path, seq));
-                    }
-                }
-                4..=5 => {
-                    let seq = random_seq(&mut rng, 300);
-                    let m = tree.match_prefix(&seq, now);
-                    assert!(m.total() <= seq.len() as u64);
-                }
-                6 => {
-                    if let Some(path) = locked.pop() {
-                        tree.unlock_path(&path);
-                    }
-                }
-                7 => {
-                    if !broadcast.is_empty() {
-                        let i = rng.gen_range(0, broadcast.len() as u64) as usize;
-                        let (path, _) = broadcast.remove(i);
-                        tree.demote_broadcast(&path);
-                    }
-                }
-                8..=9 => {
-                    let want = rng.gen_range(1, 2_000);
-                    let policy = if rng.chance(0.5) {
-                        EvictPolicy::Discard
-                    } else {
-                        EvictPolicy::OffloadToCpu
-                    };
-                    tree.evict(want, policy);
-                }
-                10 => {
-                    tree.trim_cpu(rng.gen_range(0, 2_000));
-                }
-                11 => {
-                    // The new op in the mix: force a compaction at an
-                    // arbitrary point, regardless of slack.
-                    tree.compact_arena();
-                    assert_eq!(
-                        tree.arena_len() as u64,
-                        tree.gpu_tokens() + tree.cpu_tokens(),
-                        "seed {seed} op {op}: compaction left slack"
-                    );
-                    tree.check_invariants().unwrap_or_else(|e| {
-                        panic!("seed {seed} op {op}: invariant after compaction: {e}")
-                    });
-                }
-                _ => {
-                    let seq = random_seq(&mut rng, 300);
-                    let m = tree.match_prefix(&seq, now);
-                    if m.cpu_tokens > 0 {
-                        tree.reload_path(&m.path, now);
-                    }
-                }
-            }
-            tree.check_invariants().unwrap_or_else(|e| {
-                panic!("seed {seed} op {op}: invariant violated: {e}")
-            });
-            for (_, seq) in &broadcast {
+    for policy in LIFETIME_POLICIES {
+        for seed in 0..12u64 {
+            let mut rng = Rng::new(11_000 + seed);
+            let mut tree = RadixTree::with_policy(policy);
+            let mut locked: Vec<Vec<usize>> = Vec::new();
+            let mut broadcast: Vec<(Vec<usize>, Vec<Token>)> = Vec::new();
+            let mut clockv = 0u64;
+            for op in 0..250 {
                 clockv += 1;
-                let m = tree.match_prefix(seq, Micros(clockv));
-                assert_eq!(
-                    m.total(),
-                    seq.len() as u64,
-                    "seed {seed} op {op}: broadcast-pinned sequence lost cache"
-                );
+                let now = Micros(clockv);
+                match rng.gen_range(0, 14) {
+                    0..=2 => {
+                        let seq = random_seq(&mut rng, 300);
+                        let cut = rng.gen_range(0, seq.len() as u64 + 1) as usize;
+                        let ins = tree.insert_parts(&seq[..cut], &seq[cut..], now);
+                        if rng.chance(0.3) && !ins.path.is_empty() {
+                            tree.lock_path(&ins.path);
+                            locked.push(ins.path);
+                        }
+                    }
+                    3 => {
+                        if broadcast.len() < 6 {
+                            let seq = random_seq(&mut rng, 300);
+                            let ins = tree.insert(&seq, now);
+                            assert!(!ins.path.is_empty());
+                            tree.pin_broadcast(&ins.path);
+                            broadcast.push((ins.path, seq));
+                        }
+                    }
+                    4..=5 => {
+                        let seq = random_seq(&mut rng, 300);
+                        let m = tree.match_prefix(&seq, now);
+                        assert!(m.total() <= seq.len() as u64);
+                    }
+                    6 => {
+                        if let Some(path) = locked.pop() {
+                            tree.unlock_path(&path);
+                        }
+                    }
+                    7 => {
+                        if !broadcast.is_empty() {
+                            let i = rng.gen_range(0, broadcast.len() as u64) as usize;
+                            let (path, _) = broadcast.remove(i);
+                            tree.demote_broadcast(&path);
+                        }
+                    }
+                    8..=9 => {
+                        let want = rng.gen_range(1, 2_000);
+                        let ep = if rng.chance(0.5) {
+                            EvictPolicy::Discard
+                        } else {
+                            EvictPolicy::OffloadToCpu
+                        };
+                        tree.evict_at(want, ep, now);
+                    }
+                    10 => {
+                        tree.trim_cpu(rng.gen_range(0, 2_000));
+                    }
+                    11 => {
+                        // The compaction op in the mix: force one at an
+                        // arbitrary point, regardless of slack.
+                        tree.compact_arena();
+                        assert_eq!(
+                            tree.arena_len() as u64,
+                            tree.gpu_tokens() + tree.cpu_tokens(),
+                            "{policy:?} seed {seed} op {op}: compaction left slack"
+                        );
+                        tree.check_invariants().unwrap_or_else(|e| {
+                            panic!(
+                                "{policy:?} seed {seed} op {op}: invariant after compaction: {e}"
+                            )
+                        });
+                    }
+                    12 => {
+                        // Lifetime stamping (no-op under `Lru`; the draws
+                        // are policy-independent either way).
+                        let seq = random_seq(&mut rng, 300);
+                        let class = rng.gen_range(0, 1 << 20);
+                        let pin = now + Micros(rng.gen_range(0, 3_000));
+                        let m = tree.match_prefix(&seq, now);
+                        tree.stamp_path_lifetime(&m.path, class, pin);
+                    }
+                    _ => {
+                        let seq = random_seq(&mut rng, 300);
+                        let m = tree.match_prefix(&seq, now);
+                        if m.cpu_tokens > 0 {
+                            tree.reload_path(&m.path, now);
+                        }
+                    }
+                }
+                tree.check_invariants().unwrap_or_else(|e| {
+                    panic!("{policy:?} seed {seed} op {op}: invariant violated: {e}")
+                });
+                for (_, seq) in &broadcast {
+                    clockv += 1;
+                    let m = tree.match_prefix(seq, Micros(clockv));
+                    assert_eq!(
+                        m.total(),
+                        seq.len() as u64,
+                        "{policy:?} seed {seed} op {op}: broadcast-pinned sequence lost cache"
+                    );
+                }
             }
+            // Tear down, compact once more, and drain.
+            while let Some((path, _)) = broadcast.pop() {
+                tree.demote_broadcast(&path);
+            }
+            while let Some(path) = locked.pop() {
+                tree.unlock_path(&path);
+            }
+            tree.compact_arena();
+            tree.check_invariants().unwrap();
+            tree.evict(u64::MAX, EvictPolicy::Discard);
+            tree.check_invariants().unwrap();
         }
-        // Tear down, compact once more, and drain.
-        while let Some((path, _)) = broadcast.pop() {
-            tree.demote_broadcast(&path);
-        }
-        while let Some(path) = locked.pop() {
-            tree.unlock_path(&path);
-        }
-        tree.compact_arena();
-        tree.check_invariants().unwrap();
-        tree.evict(u64::MAX, EvictPolicy::Discard);
-        tree.check_invariants().unwrap();
     }
 }
 
 /// PROPERTY (differential): a compacting tree is observably
 /// bit-identical to a non-compacting oracle (`set_auto_compaction(false)`
 /// — the pre-compaction append-only behavior) on random
-/// match/insert/evict/reload/trim traces.  Forced compactions are
-/// sprinkled through the trace on the compacting side only: compaction
-/// rewrites arena offsets, never behavior.
+/// match/insert/evict/reload/trim/stamp traces, under **every
+/// [`KvLifetimePolicy`]**.  Forced compactions are sprinkled through the
+/// trace on the compacting side only: compaction rewrites arena offsets,
+/// never behavior — and in particular never the policy-ordered eviction
+/// queue, which is asserted entry-for-entry after every op.
 #[test]
 fn compacting_tree_matches_non_compacting_oracle() {
-    for seed in 0..25u64 {
-        let mut rng = Rng::new(12_000 + seed);
-        let mut compacting = RadixTree::new();
-        let mut oracle = RadixTree::new();
-        oracle.set_auto_compaction(false);
-        let mut locked: Vec<Vec<usize>> = Vec::new();
-        let mut clockv = 0u64;
-        for op in 0..300 {
-            clockv += 1;
-            let now = Micros(clockv);
-            match rng.gen_range(0, 12) {
-                0..=3 => {
-                    let seq = random_seq(&mut rng, 300);
-                    let cut = rng.gen_range(0, seq.len() as u64 + 1) as usize;
-                    let a = compacting.insert_parts(&seq[..cut], &seq[cut..], now);
-                    let b = oracle.insert_parts(&seq[..cut], &seq[cut..], now);
-                    assert_eq!(a.new_gpu_tokens, b.new_gpu_tokens, "seed {seed} op {op}");
-                    assert_eq!(a.path, b.path, "seed {seed} op {op}");
-                    if rng.chance(0.35) && !a.path.is_empty() {
-                        compacting.lock_path(&a.path);
-                        oracle.lock_path(&b.path);
-                        locked.push(a.path);
+    for policy in LIFETIME_POLICIES {
+        for seed in 0..25u64 {
+            let mut rng = Rng::new(12_000 + seed);
+            let mut compacting = RadixTree::with_policy(policy);
+            let mut oracle = RadixTree::with_policy(policy);
+            oracle.set_auto_compaction(false);
+            let mut locked: Vec<Vec<usize>> = Vec::new();
+            let mut clockv = 0u64;
+            for op in 0..300 {
+                clockv += 1;
+                let now = Micros(clockv);
+                match rng.gen_range(0, 13) {
+                    0..=3 => {
+                        let seq = random_seq(&mut rng, 300);
+                        let cut = rng.gen_range(0, seq.len() as u64 + 1) as usize;
+                        let a = compacting.insert_parts(&seq[..cut], &seq[cut..], now);
+                        let b = oracle.insert_parts(&seq[..cut], &seq[cut..], now);
+                        assert_eq!(a.new_gpu_tokens, b.new_gpu_tokens, "seed {seed} op {op}");
+                        assert_eq!(a.path, b.path, "seed {seed} op {op}");
+                        if rng.chance(0.35) && !a.path.is_empty() {
+                            compacting.lock_path(&a.path);
+                            oracle.lock_path(&b.path);
+                            locked.push(a.path);
+                        }
+                    }
+                    4..=5 => {
+                        let seq = random_seq(&mut rng, 300);
+                        let a = compacting.match_prefix(&seq, now);
+                        let b = oracle.match_prefix(&seq, now);
+                        assert_eq!(a.gpu_tokens, b.gpu_tokens, "seed {seed} op {op}");
+                        assert_eq!(a.cpu_tokens, b.cpu_tokens, "seed {seed} op {op}");
+                        assert_eq!(a.path, b.path, "seed {seed} op {op}");
+                    }
+                    6 => {
+                        if let Some(path) = locked.pop() {
+                            compacting.unlock_path(&path);
+                            oracle.unlock_path(&path);
+                        }
+                    }
+                    7..=8 => {
+                        let want = rng.gen_range(1, 2_000);
+                        let ep = if rng.chance(0.5) {
+                            EvictPolicy::Discard
+                        } else {
+                            EvictPolicy::OffloadToCpu
+                        };
+                        let a = compacting.evict_at(want, ep, now);
+                        let b = oracle.evict_at(want, ep, now);
+                        assert_eq!(
+                            a.freed_gpu_tokens, b.freed_gpu_tokens,
+                            "seed {seed} op {op}: eviction diverged"
+                        );
+                        assert_eq!(a.discarded_tokens, b.discarded_tokens, "seed {seed} op {op}");
+                        assert_eq!(a.offloaded_tokens, b.offloaded_tokens, "seed {seed} op {op}");
+                        assert_eq!(a.nodes, b.nodes, "seed {seed} op {op}");
+                    }
+                    9 => {
+                        let limit = rng.gen_range(0, 2_000);
+                        assert_eq!(
+                            compacting.trim_cpu(limit),
+                            oracle.trim_cpu(limit),
+                            "seed {seed} op {op}: trim diverged"
+                        );
+                    }
+                    10 => {
+                        // Compacting side only: the divergence injection.
+                        compacting.compact_arena();
+                    }
+                    11 => {
+                        // Same stamp on both sides (no-op under `Lru`):
+                        // reordering the eviction queue must commute with
+                        // compaction like every other mutator.
+                        let seq = random_seq(&mut rng, 300);
+                        let class = rng.gen_range(0, 1 << 20);
+                        let pin = now + Micros(rng.gen_range(0, 3_000));
+                        let a = compacting.match_prefix(&seq, now);
+                        let b = oracle.match_prefix(&seq, now);
+                        assert_eq!(a.path, b.path, "seed {seed} op {op}");
+                        compacting.stamp_path_lifetime(&a.path, class, pin);
+                        oracle.stamp_path_lifetime(&b.path, class, pin);
+                    }
+                    _ => {
+                        let seq = random_seq(&mut rng, 300);
+                        let a = compacting.match_prefix(&seq, now);
+                        let b = oracle.match_prefix(&seq, now);
+                        assert_eq!(a.path, b.path, "seed {seed} op {op}");
+                        if a.cpu_tokens > 0 {
+                            let pa = compacting.reload_path(&a.path, now);
+                            let pb = oracle.reload_path(&b.path, now);
+                            assert_eq!(pa, pb, "seed {seed} op {op}: reload diverged");
+                        }
                     }
                 }
-                4..=5 => {
-                    let seq = random_seq(&mut rng, 300);
-                    let a = compacting.match_prefix(&seq, now);
-                    let b = oracle.match_prefix(&seq, now);
-                    assert_eq!(a.gpu_tokens, b.gpu_tokens, "seed {seed} op {op}");
-                    assert_eq!(a.cpu_tokens, b.cpu_tokens, "seed {seed} op {op}");
-                    assert_eq!(a.path, b.path, "seed {seed} op {op}");
-                }
-                6 => {
-                    if let Some(path) = locked.pop() {
-                        compacting.unlock_path(&path);
-                        oracle.unlock_path(&path);
-                    }
-                }
-                7..=8 => {
-                    let want = rng.gen_range(1, 2_000);
-                    let policy = if rng.chance(0.5) {
-                        EvictPolicy::Discard
-                    } else {
-                        EvictPolicy::OffloadToCpu
-                    };
-                    let a = compacting.evict(want, policy);
-                    let b = oracle.evict(want, policy);
-                    assert_eq!(
-                        a.freed_gpu_tokens, b.freed_gpu_tokens,
-                        "seed {seed} op {op}: eviction diverged"
-                    );
-                    assert_eq!(a.discarded_tokens, b.discarded_tokens, "seed {seed} op {op}");
-                    assert_eq!(a.offloaded_tokens, b.offloaded_tokens, "seed {seed} op {op}");
-                    assert_eq!(a.nodes, b.nodes, "seed {seed} op {op}");
-                }
-                9 => {
-                    let limit = rng.gen_range(0, 2_000);
-                    assert_eq!(
-                        compacting.trim_cpu(limit),
-                        oracle.trim_cpu(limit),
-                        "seed {seed} op {op}: trim diverged"
-                    );
-                }
-                10 => {
-                    // Compacting side only: the divergence injection.
-                    compacting.compact_arena();
-                }
-                _ => {
-                    let seq = random_seq(&mut rng, 300);
-                    let a = compacting.match_prefix(&seq, now);
-                    let b = oracle.match_prefix(&seq, now);
-                    assert_eq!(a.path, b.path, "seed {seed} op {op}");
-                    if a.cpu_tokens > 0 {
-                        let pa = compacting.reload_path(&a.path, now);
-                        let pb = oracle.reload_path(&b.path, now);
-                        assert_eq!(pa, pb, "seed {seed} op {op}: reload diverged");
-                    }
-                }
+                assert_eq!(compacting.gpu_tokens(), oracle.gpu_tokens(), "seed {seed} op {op}");
+                assert_eq!(compacting.cpu_tokens(), oracle.cpu_tokens(), "seed {seed} op {op}");
+                assert_eq!(compacting.node_count(), oracle.node_count(), "seed {seed} op {op}");
+                assert_eq!(
+                    compacting.lru_order_for_tests(),
+                    oracle.lru_order_for_tests(),
+                    "{policy:?} seed {seed} op {op}: eviction order diverged"
+                );
+                // The compacting side must stay bounded; the oracle's arena
+                // only ever grows.
+                assert!(
+                    compacting.arena_len() <= oracle.arena_len(),
+                    "seed {seed} op {op}: compaction grew the arena"
+                );
+                compacting.check_invariants().unwrap_or_else(|e| {
+                    panic!("{policy:?} seed {seed} op {op}: compacting invariant: {e}")
+                });
+                oracle.check_invariants().unwrap_or_else(|e| {
+                    panic!("{policy:?} seed {seed} op {op}: oracle invariant: {e}")
+                });
             }
-            assert_eq!(compacting.gpu_tokens(), oracle.gpu_tokens(), "seed {seed} op {op}");
-            assert_eq!(compacting.cpu_tokens(), oracle.cpu_tokens(), "seed {seed} op {op}");
-            assert_eq!(compacting.node_count(), oracle.node_count(), "seed {seed} op {op}");
-            assert_eq!(
-                compacting.lru_order_for_tests(),
-                oracle.lru_order_for_tests(),
-                "seed {seed} op {op}: eviction order diverged"
-            );
-            // The compacting side must stay bounded; the oracle's arena
-            // only ever grows.
-            assert!(
-                compacting.arena_len() <= oracle.arena_len(),
-                "seed {seed} op {op}: compaction grew the arena"
-            );
-            compacting.check_invariants().unwrap_or_else(|e| {
-                panic!("seed {seed} op {op}: compacting invariant: {e}")
-            });
-            oracle.check_invariants().unwrap_or_else(|e| {
-                panic!("seed {seed} op {op}: oracle invariant: {e}")
-            });
         }
     }
 }

@@ -10,11 +10,13 @@
 //! drained workload, KV handoff yields a strictly higher post-drain
 //! aggregate hit rate than drop-on-drain.
 
-use concur::agent::WorkloadGenerator;
+mod common;
+
+use common::{assert_bit_identical, small_cluster_job};
 use concur::cluster::{SharedPrefixTier, Transport};
 use concur::config::{
-    presets, AimdParams, EngineConfig, FaultEvent, FaultPlan, JobConfig, PrefixTierConfig,
-    RouterKind, SchedulerKind, TopologyConfig, TransportConfig, WorkloadConfig,
+    presets, EngineConfig, FaultEvent, FaultPlan, JobConfig, PrefixTierConfig, RouterKind,
+    SchedulerKind, TopologyConfig, TransportConfig,
 };
 use concur::core::{AgentId, Micros, RequestId, Token};
 use concur::costmodel::CostModel;
@@ -107,40 +109,14 @@ fn no_broadcast_hits_accrue_before_the_install_lands() {
     }
 }
 
+/// The anchored 3-replica cell (see `common::small_cluster_job`) with
+/// the tier on and the transport under test.
 fn transport_job(seed: u64, transport: TransportConfig) -> JobConfig {
-    JobConfig {
-        cluster: presets::qwen3_cluster(2),
-        engine: EngineConfig { hit_window: 8, ..EngineConfig::default() },
-        workload: WorkloadConfig {
-            n_agents: 24,
-            steps_min: 3,
-            steps_max: 5,
-            task_families: 5,
-            seed,
-            ..WorkloadConfig::default()
-        },
-        scheduler: SchedulerKind::Concur(AimdParams::default()),
-        topology: TopologyConfig {
-            replicas: 3,
-            router: RouterKind::Rebalance,
-            prefix_tier: PrefixTierConfig::on(),
-            transport,
-            ..TopologyConfig::default()
-        },
-    }
-}
-
-fn assert_runs_match(a: &RunResult, b: &RunResult, ctx: &str) {
-    assert_eq!(a.total_time, b.total_time, "{ctx}: total_time");
-    assert_eq!(a.counters, b.counters, "{ctx}: counters");
-    assert_eq!(a.hit_rate.to_bits(), b.hit_rate.to_bits(), "{ctx}: hit_rate");
-    assert_eq!(a.engine_steps, b.engine_steps, "{ctx}: engine_steps");
-    assert_eq!(a.faults, b.faults, "{ctx}: fault stats");
-    assert_eq!(a.prefix_tier, b.prefix_tier, "{ctx}: prefix-tier stats");
-    assert_eq!(a.transport, b.transport, "{ctx}: transport stats");
-    assert_eq!(a.per_agent, b.per_agent, "{ctx}: per-agent records");
-    assert_eq!(a.broadcast_series.len(), b.broadcast_series.len(), "{ctx}: broadcast series");
-    assert_eq!(a.open_loop, b.open_loop, "{ctx}: open-loop stats");
+    let mut job = small_cluster_job(24, 3, RouterKind::Rebalance);
+    job.workload.seed = seed;
+    job.topology.prefix_tier = PrefixTierConfig::on();
+    job.topology.transport = transport;
+    job
 }
 
 /// PROPERTY (determinism): the full stack — tier + delayed visibility +
@@ -162,7 +138,7 @@ fn delayed_transport_runs_are_deterministic_across_seeds() {
             FaultPlan::new(vec![FaultEvent::drain(0, Micros(probe.total_time.0 * 2 / 5))]);
         let a = run_job(&job).unwrap();
         let b = run_job(&job).unwrap();
-        assert_runs_match(&a, &b, &format!("seed {seed}"));
+        assert_bit_identical(&a, &b, &format!("seed {seed}"));
         assert_eq!(a.agents_finished, 24, "seed {seed} must finish");
         assert_eq!(a.faults.drains, 1);
         // The full stack genuinely engaged: transfers flowed.
@@ -193,7 +169,7 @@ fn kill_mid_drain_handoff_cancels_transfers_without_losing_agents() {
         ]);
         let a = run_job(&job).unwrap();
         let b = run_job(&job).unwrap();
-        assert_runs_match(&a, &b, &format!("double fault seed {seed}"));
+        assert_bit_identical(&a, &b, &format!("double fault seed {seed}"));
 
         // The race genuinely engaged: the drain checkpointed agents and
         // the kill voided checkpoints still on the wire.

@@ -1,0 +1,218 @@
+//! Workflow-DAG integration tests.
+//!
+//! The load-bearing properties: (1) execution — every DAG node runs
+//! exactly once and no child ever finishes before a dependency; (2)
+//! sharing — the planner-produced intermediate context lands
+//! byte-identically (and chunk-aligned) in every consumer's prompt; (3)
+//! replay — a fixed seed reproduces a workflow run bit-identically and
+//! perturbing the workflow seed genuinely moves the schedule; (4) fault
+//! cross — a kill landing mid fan-out loses no node and double-runs
+//! none; (5) the acceptance claim — under pool pressure, a
+//! lifetime-aware KV policy strictly beats plain LRU on aggregate hit
+//! rate for at least one workflow shape.
+//!
+//! (That the workflow + lifetime machinery is invisible while disabled
+//! is pinned by the differential oracle in `cluster_integration.rs`.)
+
+mod common;
+
+use common::assert_bit_identical;
+use concur::agent::workflow_fleet;
+use concur::config::{FaultEvent, FaultPlan, JobConfig, KvLifetimeMode, RouterKind};
+use concur::core::Micros;
+use concur::driver::{run_job, RunResult};
+use concur::repro::run_systems;
+use concur::repro::workflow::{base_job, POLICIES, SHAPES};
+
+/// The repro-standard workflow cell scaled down to 4 DAGs — big enough
+/// to exercise fan-out, fan-in and cross-graph interleaving, small
+/// enough for tier-1.
+fn small_job(shape: &'static str) -> JobConfig {
+    base_job(KvLifetimeMode::Lru, shape, 4)
+}
+
+/// PROPERTY (execution): every DAG node executes exactly once, and
+/// topological order is never violated — a consumer finishes strictly
+/// after every dependency, for both shapes.
+#[test]
+fn every_dag_node_runs_exactly_once_in_topo_order() {
+    for &(shape, _) in &SHAPES {
+        let job = small_job(shape);
+        let (agents, graph) = workflow_fleet(&job.workload);
+        let r = run_job(&job).unwrap();
+        assert_eq!(r.agents_finished, agents.len(), "{shape}: a node was lost");
+
+        let mut ids: Vec<u64> = r.per_agent.iter().map(|o| o.agent.0).collect();
+        ids.sort_unstable();
+        assert_eq!(
+            ids,
+            (0..agents.len() as u64).collect::<Vec<u64>>(),
+            "{shape}: every node must be recorded exactly once"
+        );
+
+        let mut fin = vec![Micros::ZERO; agents.len()];
+        for o in &r.per_agent {
+            fin[o.agent.0 as usize] = o.finished_at;
+        }
+        for a in &agents {
+            for &c in graph.children_of(a.id) {
+                assert!(
+                    fin[c.0 as usize] > fin[a.id.0 as usize],
+                    "{shape}: node {c} finished at {:?}, not after its \
+                     dependency {} at {:?}",
+                    fin[c.0 as usize],
+                    a.id,
+                    fin[a.id.0 as usize],
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY (sharing): the intermediate context the planner generates in
+/// its first step is embedded byte-identically in every worker and
+/// reducer prompt, at one chunk-aligned offset common to all consumers.
+#[test]
+fn consumers_embed_the_shared_context_byte_identically() {
+    let job = small_job("mapreduce");
+    let (agents, graph) = workflow_fleet(&job.workload);
+    let s = job.workload.workflow.shared_context_tokens as usize;
+    let w = job.workload.workflow.align_tokens as usize;
+    let sys = job.workload.system_prompt_tokens as usize;
+    let off = sys + (w - sys % w) % w;
+    assert_eq!(off % w, 0, "shared context must start chunk-aligned");
+
+    let mut consumers = 0;
+    for planner in agents.iter().filter(|a| graph.is_ready(a.id)) {
+        let gen0 = &planner.plan_for_stats()[0].gen;
+        let shared = &gen0[gen0.len() - s..];
+        for &c in graph.children_of(planner.id) {
+            consumers += 1;
+            assert_eq!(
+                &agents[c.0 as usize].context()[off..off + s],
+                shared,
+                "worker {c} diverged from its planner's shared context"
+            );
+            for &rc in graph.children_of(c) {
+                assert_eq!(
+                    &agents[rc.0 as usize].context()[off..off + s],
+                    shared,
+                    "reducer {rc} diverged from its graph's shared context"
+                );
+            }
+        }
+    }
+    assert!(consumers >= 8, "4 graphs at fanout 2-4 must produce >= 8 workers");
+}
+
+/// PROPERTY (replay): a workflow run replays bit-identically under a
+/// fixed seed, and perturbing the workflow seed genuinely moves the
+/// schedule — so the identity is not vacuous.
+#[test]
+fn fixed_seed_replays_bit_identically_and_perturbation_moves_it() {
+    let job = small_job("mapreduce");
+    let a = run_job(&job).unwrap();
+    let b = run_job(&job).unwrap();
+    assert_bit_identical(&a, &b, "workflow replay");
+
+    let mut moved = job.clone();
+    moved.workload.workflow.seed += 1;
+    let c = run_job(&moved).unwrap();
+    assert!(
+        c.total_time != a.total_time || c.per_agent != a.per_agent,
+        "perturbing the workflow seed must move the schedule"
+    );
+}
+
+/// PROPERTY (fault cross): a kill landing mid fan-out — workers of
+/// several graphs in flight, reducers still locked behind them — loses
+/// no node, double-runs none, and the whole schedule stays deterministic.
+#[test]
+fn kill_mid_fanout_loses_no_node_and_double_runs_none() {
+    let mut job = small_job("mapreduce");
+    job.topology.replicas = 3;
+    job.topology.router = RouterKind::Rebalance;
+    let (agents, _) = workflow_fleet(&job.workload);
+
+    // Anchor the kill at 40% of the healthy makespan: fan-outs from the
+    // released planners are guaranteed mid-flight.
+    let probe = run_job(&job).unwrap();
+    job.topology.fault_plan =
+        FaultPlan::new(vec![FaultEvent::kill(0, Micros(probe.total_time.0 * 2 / 5))]);
+
+    let a = run_job(&job).unwrap();
+    let b = run_job(&job).unwrap();
+    assert_bit_identical(&a, &b, "workflow kill replay");
+    assert_eq!(a.faults.kills, 1);
+    assert_eq!(a.agents_finished, agents.len(), "the kill lost a node");
+    let mut seen: Vec<u64> = a.per_agent.iter().map(|o| o.agent.0).collect();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), agents.len(), "a node outcome was double-counted");
+}
+
+/// ACCEPTANCE (tentpole, scaled down from `concur repro workflow`): on
+/// the pressured cells of the policy grid — both workflow shapes at the
+/// heavy fleet size against one TP2 pool — at least one lifetime-aware
+/// KV policy (steps-to-execution or tool-ttl) strictly beats plain LRU
+/// on aggregate hit rate.  Within a cell the fleets and release order
+/// are identical across policies (pinned by the eviction-order oracle in
+/// `proptests.rs` and the replay tests above), so any hit-rate gap is
+/// the eviction policy's doing.
+#[test]
+fn a_lifetime_aware_policy_beats_lru_on_a_pressured_cell() {
+    let mut labels = Vec::new();
+    let mut jobs = Vec::new();
+    for &(shape, _) in &SHAPES {
+        for &policy in &POLICIES {
+            labels.push((shape, policy));
+            jobs.push(base_job(policy, shape, 16));
+        }
+    }
+    let results = run_systems(jobs).unwrap();
+    fn cell<'a>(
+        labels: &[(&'static str, KvLifetimeMode)],
+        results: &'a [RunResult],
+        shape: &str,
+        policy: KvLifetimeMode,
+    ) -> &'a RunResult {
+        let i = labels
+            .iter()
+            .position(|&(s, p)| s == shape && p == policy)
+            .expect("complete grid");
+        &results[i]
+    }
+
+    let mut wins = Vec::new();
+    for &(shape, _) in &SHAPES {
+        let fleet = workflow_fleet(&base_job(KvLifetimeMode::Lru, shape, 16).workload).0.len();
+        let lru = cell(&labels, &results, shape, KvLifetimeMode::Lru);
+        let steps = cell(&labels, &results, shape, KvLifetimeMode::StepsToExecution);
+        let ttl = cell(&labels, &results, shape, KvLifetimeMode::ToolTtl);
+        for (name, r) in [("lru", lru), ("steps-to-execution", steps), ("tool-ttl", ttl)] {
+            assert_eq!(
+                r.agents_finished, fleet,
+                "{shape}/{name}: every policy must finish the whole fleet"
+            );
+        }
+        // The cell genuinely thrashes: the claim is about eviction
+        // *choice*, which needs evictions to choose between.
+        assert!(lru.counters.evictions > 0, "{shape}/heavy must evict under lru");
+        if steps.hit_rate > lru.hit_rate {
+            wins.push(format!(
+                "{shape}: steps-to-execution {:.4} > lru {:.4}",
+                steps.hit_rate, lru.hit_rate
+            ));
+        }
+        if ttl.hit_rate > lru.hit_rate {
+            wins.push(format!(
+                "{shape}: tool-ttl {:.4} > lru {:.4}",
+                ttl.hit_rate, lru.hit_rate
+            ));
+        }
+    }
+    assert!(
+        !wins.is_empty(),
+        "no lifetime-aware policy beat lru on any pressured cell"
+    );
+}
