@@ -1302,6 +1302,14 @@ pub fn run_sharded_with_workers(
         }
         for (&r, out) in ready.iter().zip(stepped.drain(..)) {
             engine_steps += 1;
+            // Mirror committed storage-tier reads onto the shared-fabric
+            // accounting (instant: the engine already landed the KV; the
+            // fabric carries the bytes of a disaggregated storage pool).
+            if let Some(tp) = transport.as_mut() {
+                for &(tokens, engine_done) in &out.storage_transfers {
+                    tp.ship_instant(TransferKind::StorageReload, r, r, tokens, engine_done, now);
+                }
+            }
             let progressed = !out.work.is_empty() || !out.finished.is_empty();
             if progressed {
                 stagnant[r] = 0;

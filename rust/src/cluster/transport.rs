@@ -55,6 +55,11 @@ pub enum TransferPayload {
 pub enum TransferKind {
     Broadcast,
     Handoff,
+    /// A storage-tier (NVMe) extent read mirrored onto the fabric
+    /// accounting.  Always instantaneous — the engine lands the KV
+    /// itself; the fabric only carries the bytes — so it never appears
+    /// as an in-flight [`Transfer`].
+    StorageReload,
 }
 
 impl TransferPayload {
@@ -101,6 +106,8 @@ pub struct TransportStats {
     pub broadcast_transfers: u64,
     /// Drain-handoff transfers issued.
     pub handoff_transfers: u64,
+    /// Storage-tier reload reads mirrored onto the fabric.
+    pub storage_reload_transfers: u64,
     /// Σ tokens carried over the fabric.
     pub wire_tokens: u64,
     /// Σ bytes carried over the fabric.
@@ -166,6 +173,7 @@ impl Transport {
         match kind {
             TransferKind::Broadcast => self.stats.broadcast_transfers += 1,
             TransferKind::Handoff => self.stats.handoff_transfers += 1,
+            TransferKind::StorageReload => self.stats.storage_reload_transfers += 1,
         }
         self.stats.wire_tokens += tokens;
         self.stats.wire_bytes += self.kv_bytes(tokens).0;
@@ -377,6 +385,25 @@ mod tests {
         assert_eq!(due.len(), 2);
         assert!(due.iter().any(|x| x.kind() == TransferKind::Broadcast && x.src == 0));
         assert!(due.iter().any(|x| x.kind() == TransferKind::Handoff && x.src == 1));
+    }
+
+    #[test]
+    fn storage_reloads_are_instant_and_separately_counted() {
+        let mut t = transport();
+        let engine_done = Micros(50_000);
+        let done = t.ship_instant(
+            TransferKind::StorageReload,
+            1,
+            1,
+            2_048,
+            engine_done,
+            Micros::ZERO,
+        );
+        assert!(done >= engine_done, "fabric leg folds into the completion");
+        assert_eq!(t.next_completion(), None, "mirrored reads never queue");
+        assert_eq!(t.stats().storage_reload_transfers, 1);
+        assert_eq!(t.stats().broadcast_transfers, 0);
+        assert_eq!(t.stats().wire_bytes, 2_048 * KVB);
     }
 
     #[test]

@@ -575,6 +575,88 @@ impl KvLifetimeMode {
     }
 }
 
+/// Third (NVMe-class) KV memory tier below the CPU tier.  When enabled,
+/// `trim_cpu` demotes CPU-resident prefixes into a storage-resident
+/// extent map instead of dropping them, and the admit path may read them
+/// back over a contended [`StorageLink`](crate::costmodel::StorageLink)
+/// (lower bandwidth, higher per-op latency than the host link).
+/// Disabled by default and differential-tested inert: with the tier off
+/// the engine is bit-identical to the two-tier hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StorageTierConfig {
+    pub enabled: bool,
+    /// Extent-map capacity in tokens; the stalest extents are dropped
+    /// deterministically once exceeded.
+    pub capacity_tokens: u64,
+    /// Aggregate storage read/write bandwidth in GB/s (NVMe-class; the
+    /// sweep axis of `concur repro storage`).
+    pub bandwidth_gbps: f64,
+    /// CPU-tier cap override in tokens; `0` derives the cap from the
+    /// cluster spec (2 TB of host DRAM per node) as always.  Sim-scale
+    /// workloads never fill terabytes of host memory, so sweeps that
+    /// want demotion pressure shrink the middle tier through this knob.
+    pub cpu_tier_tokens: u64,
+}
+
+impl Default for StorageTierConfig {
+    fn default() -> StorageTierConfig {
+        StorageTierConfig {
+            enabled: false,
+            capacity_tokens: 4_000_000,
+            bandwidth_gbps: 6.0,
+            cpu_tier_tokens: 0,
+        }
+    }
+}
+
+impl StorageTierConfig {
+    /// The default configuration with the storage tier switched on.
+    pub fn on() -> StorageTierConfig {
+        StorageTierConfig { enabled: true, ..StorageTierConfig::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(()); // dormant knobs are valid, whatever they say
+        }
+        if self.capacity_tokens == 0 {
+            return Err(ConcurError::config("storage_tier.capacity_tokens must be > 0"));
+        }
+        if self.bandwidth_gbps <= 0.0 {
+            return Err(ConcurError::config("storage_tier.bandwidth_gbps must be > 0"));
+        }
+        Ok(())
+    }
+}
+
+/// How the engine serves a prefix that is resident only in the storage
+/// tier: read it back over the storage link, re-prefill it from scratch,
+/// or let the per-request cost comparison decide (DualPath, PAPERS.md).
+/// Dormant unless `storage_tier.enabled` — without a storage tier there
+/// is nothing to reload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DualPathMode {
+    /// Always read storage-resident prefixes back (HiCache extended
+    /// down-stack — collapses when the storage link congests).
+    AlwaysReload,
+    /// Never read storage — re-prefill the missing prefix (pays the
+    /// quadratic attention term however idle the link is).
+    AlwaysRecompute,
+    /// Per-request argmin of modeled storage-read time vs modeled
+    /// prefill-FLOPs time for the missing span.
+    DualPath,
+}
+
+impl DualPathMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DualPathMode::AlwaysReload => "always-reload",
+            DualPathMode::AlwaysRecompute => "always-recompute",
+            DualPathMode::DualPath => "dual-path",
+        }
+    }
+}
+
 /// Serving-engine substrate parameters.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -594,6 +676,11 @@ pub struct EngineConfig {
     /// Fraction of the pool decode steps must keep free to allocate new
     /// tokens (headroom before forced eviction).
     pub decode_headroom: f64,
+    /// NVMe-class capacity tier below the CPU tier (off by default).
+    pub storage_tier: StorageTierConfig,
+    /// Reload-vs-recompute policy for storage-resident prefixes (dormant
+    /// while the storage tier is off).
+    pub dual_path: DualPathMode,
 }
 
 impl Default for EngineConfig {
@@ -606,6 +693,8 @@ impl Default for EngineConfig {
             eviction: EvictionMode::Discard,
             kv_lifetime: KvLifetimeMode::Lru,
             decode_headroom: 0.02,
+            storage_tier: StorageTierConfig::default(),
+            dual_path: DualPathMode::AlwaysReload,
         }
     }
 }
@@ -802,6 +891,16 @@ impl JobConfig {
         if self.engine.page_size == 0 {
             return Err(ConcurError::config("page_size must be > 0"));
         }
+        self.engine.storage_tier.validate()?;
+        if self.engine.storage_tier.enabled
+            && self.engine.eviction != EvictionMode::Offload
+        {
+            return Err(ConcurError::config(
+                "storage_tier requires eviction = offload: the storage \
+                 tier is fed by CPU-tier demotion, which only exists on \
+                 the offload path",
+            ));
+        }
         if self.cluster.kv_pool_tokens() == 0 {
             return Err(ConcurError::config(
                 "cluster has no KV pool (weights exceed usable HBM)",
@@ -890,6 +989,31 @@ impl JobConfig {
                 other => {
                     return Err(ConcurError::config(format!(
                         "unknown kv_lifetime '{other}'"
+                    )))
+                }
+            };
+        }
+        let st = e.get("storage_tier");
+        if let Some(b) = st.get("enabled").as_bool() {
+            engine.storage_tier.enabled = b;
+        }
+        if let Some(c) = st.get("capacity_tokens").as_u64() {
+            engine.storage_tier.capacity_tokens = c;
+        }
+        if let Some(bw) = st.get("bandwidth_gbps").as_f64() {
+            engine.storage_tier.bandwidth_gbps = bw;
+        }
+        if let Some(c) = st.get("cpu_tier_tokens").as_u64() {
+            engine.storage_tier.cpu_tier_tokens = c;
+        }
+        if let Some(m) = e.get("dual_path").as_str() {
+            engine.dual_path = match m {
+                "always-reload" | "always_reload" => DualPathMode::AlwaysReload,
+                "always-recompute" | "always_recompute" => DualPathMode::AlwaysRecompute,
+                "dual-path" | "dual_path" => DualPathMode::DualPath,
+                other => {
+                    return Err(ConcurError::config(format!(
+                        "unknown dual_path '{other}'"
                     )))
                 }
             };
@@ -1144,6 +1268,78 @@ mod tests {
         assert_eq!(t.router, RouterKind::CacheAffinity);
         t.validate().unwrap();
         assert!(TopologyConfig { replicas: 0, ..t }.validate().is_err());
+    }
+
+    #[test]
+    fn json_config_parses_storage_tier() {
+        let text = r#"{
+            "model": "qwen3-32b", "tp": 2,
+            "engine": {
+                "eviction": "offload",
+                "storage_tier": {
+                    "enabled": true,
+                    "capacity_tokens": 500000,
+                    "bandwidth_gbps": 3.5,
+                    "cpu_tier_tokens": 65536
+                },
+                "dual_path": "dual-path"
+            }
+        }"#;
+        let job = JobConfig::from_json(&Value::parse(text).unwrap()).unwrap();
+        assert!(job.engine.storage_tier.enabled);
+        assert_eq!(job.engine.storage_tier.capacity_tokens, 500_000);
+        assert_eq!(job.engine.storage_tier.bandwidth_gbps, 3.5);
+        assert_eq!(job.engine.storage_tier.cpu_tier_tokens, 65_536);
+        assert_eq!(job.engine.dual_path, DualPathMode::DualPath);
+
+        let bad = r#"{"model": "qwen3-32b", "engine": {"dual_path": "sometimes"}}"#;
+        assert!(JobConfig::from_json(&Value::parse(bad).unwrap()).is_err());
+
+        // The checked-in example stays loadable (and valid: offload
+        // eviction, tier on, squeezed CPU cap).
+        let example = std::path::Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../examples/configs/storage_tier.json"
+        ));
+        let job = JobConfig::from_json_file(example).unwrap();
+        assert!(job.engine.storage_tier.enabled);
+        assert_eq!(job.engine.eviction, EvictionMode::Offload);
+        assert_eq!(job.engine.storage_tier.cpu_tier_tokens, 48_000);
+    }
+
+    #[test]
+    fn storage_tier_requires_offload_eviction() {
+        let mut job = JobConfig {
+            cluster: ClusterSpec::new(GpuSpec::h100(), ModelSpec::qwen3_32b(), 2, 2),
+            engine: EngineConfig {
+                storage_tier: StorageTierConfig::on(),
+                ..EngineConfig::default()
+            },
+            workload: WorkloadConfig::default(),
+            scheduler: SchedulerKind::Uncontrolled,
+            topology: TopologyConfig::default(),
+        };
+        // Discard eviction never demotes to CPU, so there is nothing to
+        // feed the storage tier from.
+        assert!(job.validate().is_err());
+        job.engine.eviction = EvictionMode::Offload;
+        job.validate().unwrap();
+        // Dormant knobs are valid whatever they say.
+        job.engine.storage_tier = StorageTierConfig {
+            enabled: false,
+            capacity_tokens: 0,
+            bandwidth_gbps: -1.0,
+            cpu_tier_tokens: 0,
+        };
+        job.engine.eviction = EvictionMode::Discard;
+        job.validate().unwrap();
+        // Enabled knobs are range-checked.
+        let mut bad = StorageTierConfig::on();
+        bad.capacity_tokens = 0;
+        assert!(bad.validate().is_err());
+        bad = StorageTierConfig::on();
+        bad.bandwidth_gbps = 0.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -15,9 +15,11 @@
 
 pub mod pcie;
 pub mod specs;
+pub mod storage;
 
 pub use pcie::PcieLink;
 pub use specs::{ClusterSpec, GpuSpec, KvLayout, ModelSpec};
+pub use storage::StorageLink;
 
 use crate::core::Micros;
 
@@ -99,6 +101,23 @@ impl CostModel {
         };
         self.step_time(&work)
     }
+
+    /// Time to prefill `tokens` new tokens on top of `start_ctx` tokens of
+    /// already-materialized context — the compute price the dual-path
+    /// policy weighs against a storage reload of the same span.  Context
+    /// grows `start_ctx..start_ctx+tokens`, so the attention-term sum is
+    /// `(2·start_ctx + tokens)·tokens / 2`.
+    pub fn prefill_time(&self, tokens: u64, start_ctx: u64) -> Micros {
+        if tokens == 0 {
+            return Micros::ZERO;
+        }
+        let work = StepWork {
+            prefill_tokens: tokens,
+            prefill_ctx_tokens: (2 * start_ctx + tokens) * tokens / 2,
+            ..Default::default()
+        };
+        self.step_time(&work)
+    }
 }
 
 #[cfg(test)]
@@ -153,6 +172,19 @@ mod tests {
             assert!(t > prev, "recompute must be monotone: {t} after {prev}");
             prev = t;
         }
+    }
+
+    #[test]
+    fn prefill_time_generalizes_recompute_time() {
+        let cm = qwen3_tp8();
+        for tokens in [512u64, 2_048, 8_192] {
+            // From empty context the two formulas coincide (tokens²/2 vs
+            // (2·0+tokens)·tokens/2).
+            assert_eq!(cm.prefill_time(tokens, 0), cm.recompute_time(tokens));
+        }
+        // Deeper starting context → strictly more attention work.
+        assert!(cm.prefill_time(1_024, 8_192) > cm.prefill_time(1_024, 0));
+        assert_eq!(cm.prefill_time(0, 4_096), Micros::ZERO);
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Contended storage-link (NVMe) model for the capacity KV tier below the
+//! CPU tier.
+//!
+//! Same queue-depth congestion shape as [`PcieLink`](super::PcieLink) —
+//! the Fig. 1c bandwidth pathology only deepens down-stack — but with
+//! NVMe-class constants: roughly an order of magnitude less bandwidth
+//! than a host bus, a much larger per-operation overhead (submission
+//! queue, interrupt, filesystem indirection), and harsher degradation
+//! under depth (SSD internal parallelism saturates quickly for the large
+//! sequential reads KV extents are).
+//!
+//! This is what makes *reload vs recompute* a real decision (DualPath,
+//! PAPERS.md): reading a long prefix back from storage can lose to simply
+//! re-prefilling it once the link is deep in queued reloads.
+
+use crate::core::{Bytes, Micros};
+
+/// Shared, serializing storage link with queue-depth congestion.
+#[derive(Debug, Clone)]
+pub struct StorageLink {
+    /// Aggregate storage read bandwidth in GB/s (NVMe-class).
+    pub bandwidth_gbps: f64,
+    /// Per-operation overhead (submission, interrupt, FS indirection).
+    pub op_overhead: Micros,
+    /// Congestion degradation per queued transfer:
+    /// `eff_bw = bw / (1 + gamma * depth)`.
+    pub gamma: f64,
+    busy_until: Micros,
+    /// Completion times of recent transfers (for queue-depth estimation).
+    inflight: std::collections::VecDeque<Micros>,
+    /// Total bytes moved (telemetry).
+    pub bytes_moved: u64,
+    /// Total transfers (telemetry).
+    pub transfers: u64,
+}
+
+impl StorageLink {
+    pub fn new(bandwidth_gbps: f64) -> StorageLink {
+        StorageLink {
+            bandwidth_gbps,
+            op_overhead: Micros(1_500),
+            gamma: 0.5,
+            busy_until: Micros::ZERO,
+            inflight: std::collections::VecDeque::new(),
+            bytes_moved: 0,
+            transfers: 0,
+        }
+    }
+
+    /// Transfers still in flight at `now`.
+    pub fn queue_depth(&mut self, now: Micros) -> usize {
+        while self.inflight.front().is_some_and(|&t| t <= now) {
+            self.inflight.pop_front();
+        }
+        self.inflight.len()
+    }
+
+    /// Raw wire time for `bytes` with no contention.
+    pub fn wire_time(&self, bytes: Bytes) -> Micros {
+        Micros::from_secs_f64(bytes.0 as f64 / (self.bandwidth_gbps * 1e9))
+    }
+
+    /// Schedule a read/write starting no earlier than `now`; returns its
+    /// completion time.  Queues behind in-flight transfers and degrades
+    /// effective bandwidth with depth, exactly like the host link.
+    pub fn transfer(&mut self, now: Micros, bytes: Bytes) -> Micros {
+        let depth = self.queue_depth(now);
+        let start = if self.busy_until > now { self.busy_until } else { now };
+        let eff_bw = self.bandwidth_gbps / (1.0 + self.gamma * depth as f64);
+        let wire = Micros::from_secs_f64(bytes.0 as f64 / (eff_bw * 1e9));
+        let done = start + wire + self.op_overhead;
+        self.busy_until = done;
+        self.inflight.push_back(done);
+        self.bytes_moved += bytes.0;
+        self.transfers += 1;
+        done
+    }
+
+    /// Latency (not completion time) a transfer issued at `now` would see,
+    /// using the same queue-depth-degraded effective bandwidth
+    /// [`transfer`](StorageLink::transfer) applies — the dual-path policy
+    /// prices reloads with this, so its estimate equals the realized
+    /// completion for a transfer issued immediately after.
+    pub fn latency_at(&self, now: Micros, bytes: Bytes) -> Micros {
+        let queue = self.busy_until.saturating_sub(now);
+        // Same depth `transfer` would observe: completions after `now`
+        // (read-only — `queue_depth` pops, this must not).
+        let depth = self.inflight.iter().filter(|&&t| t > now).count();
+        let eff_bw = self.bandwidth_gbps / (1.0 + self.gamma * depth as f64);
+        let wire = Micros::from_secs_f64(bytes.0 as f64 / (eff_bw * 1e9));
+        queue + wire + self.op_overhead
+    }
+
+    pub fn reset(&mut self) {
+        self.busy_until = Micros::ZERO;
+        self.inflight.clear();
+        self.bytes_moved = 0;
+        self.transfers = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_time_matches_bandwidth() {
+        let link = StorageLink::new(6.0);
+        // 6 GB at 6 GB/s = 1 s.
+        let t = link.wire_time(Bytes::from_gb(6.0));
+        assert!((t.as_secs_f64() - 1.0).abs() < 1e-3, "t={t}");
+    }
+
+    #[test]
+    fn transfers_serialize() {
+        let mut link = StorageLink::new(6.0);
+        let b = Bytes::from_gb(1.0);
+        let t1 = link.transfer(Micros::ZERO, b);
+        let t2 = link.transfer(Micros::ZERO, b);
+        let t3 = link.transfer(Micros::ZERO, b);
+        assert!(t2 > t1 && t3 > t2);
+        assert!(t3.0 >= 3 * link.wire_time(b).0);
+    }
+
+    #[test]
+    fn slower_and_costlier_than_host_link() {
+        // The whole point of the tier: same bytes, strictly worse than the
+        // default host link at every depth.
+        let storage = StorageLink::new(6.0);
+        let pcie = super::super::PcieLink::new(50.0);
+        let b = Bytes::from_gb(1.0);
+        assert!(storage.wire_time(b) > pcie.wire_time(b));
+        assert!(storage.op_overhead > pcie.sync_overhead);
+        assert!(storage.gamma > pcie.gamma);
+    }
+
+    #[test]
+    fn latency_estimate_matches_realized_completion_when_queued() {
+        let mut link = StorageLink::new(6.0);
+        let b = Bytes::from_gb(1.0);
+        link.transfer(Micros::ZERO, b);
+        link.transfer(Micros::ZERO, b);
+        let estimate = link.latency_at(Micros::ZERO, b);
+        let realized = link.transfer(Micros::ZERO, b);
+        assert_eq!(estimate, realized, "estimate must equal realized completion");
+    }
+
+    #[test]
+    fn latency_monotone_nonincreasing_in_bandwidth() {
+        // The dual-path crossover argument rests on this: at fixed queue
+        // state, more bandwidth never makes a reload slower.
+        let b = Bytes::from_gb(2.0);
+        let mut prev = Micros(u64::MAX);
+        for bw in [1.0, 2.0, 4.0, 8.0, 16.0] {
+            let lat = StorageLink::new(bw).latency_at(Micros::ZERO, b);
+            assert!(lat <= prev, "latency must not grow with bandwidth");
+            prev = lat;
+        }
+    }
+
+    #[test]
+    fn telemetry_counts() {
+        let mut link = StorageLink::new(6.0);
+        link.transfer(Micros::ZERO, Bytes(100));
+        link.transfer(Micros::ZERO, Bytes(200));
+        assert_eq!(link.bytes_moved, 300);
+        assert_eq!(link.transfers, 2);
+        link.reset();
+        assert_eq!(link.bytes_moved, 0);
+        assert_eq!(link.transfers, 0);
+    }
+}

@@ -20,10 +20,12 @@
 pub mod kvpool;
 pub mod radix;
 pub mod request;
+pub mod storage;
 
 pub use kvpool::KvPool;
 pub use radix::{EvictPolicy, KvLifetimePolicy, MatchResult, RadixTree};
 pub use request::{Request, RunningSeq, SeqPhase};
+pub use storage::{PathChoice, StorageTier};
 
 use std::collections::VecDeque;
 
@@ -56,6 +58,12 @@ pub struct StepOutcome {
     pub recompute_tokens: u64,
     /// Host-link reload time folded into this step (HiCache).
     pub reload_time: Micros,
+    /// Storage-link reload time folded into this step (storage tier;
+    /// includes the host-link hop storage reads take on the way up).
+    pub storage_reload_time: Micros,
+    /// Storage-tier reads committed this step, `(tokens, completion)` —
+    /// the cluster layer mirrors these onto the shared-fabric accounting.
+    pub storage_transfers: Vec<(u64, Micros)>,
 }
 
 /// What one broadcast-prefix install did on a replica (cluster
@@ -110,6 +118,16 @@ pub struct EngineCounters {
     /// Tokens materialised on this replica by drain handoffs (cluster
     /// transport; zero with the transport off).
     pub handoff_installed_tokens: u64,
+    /// Tokens demoted from the CPU tier into the storage tier (zero with
+    /// the storage tier off).
+    pub storage_demoted_tokens: u64,
+    /// Tokens reloaded from the storage tier at admission.
+    pub storage_reloaded_tokens: u64,
+    /// Storage-resident tokens the dual-path policy chose to re-prefill
+    /// instead of reloading.
+    pub storage_recomputed_tokens: u64,
+    /// Tokens dropped out of the storage tier at capacity.
+    pub storage_evicted_tokens: u64,
 }
 
 impl EngineCounters {
@@ -129,6 +147,10 @@ impl EngineCounters {
         self.broadcast_installed_tokens += other.broadcast_installed_tokens;
         self.broadcast_hit_tokens += other.broadcast_hit_tokens;
         self.handoff_installed_tokens += other.handoff_installed_tokens;
+        self.storage_demoted_tokens += other.storage_demoted_tokens;
+        self.storage_reloaded_tokens += other.storage_reloaded_tokens;
+        self.storage_recomputed_tokens += other.storage_recomputed_tokens;
+        self.storage_evicted_tokens += other.storage_evicted_tokens;
     }
 }
 
@@ -167,6 +189,10 @@ pub struct SimEngine {
     pool: KvPool,
     tree: RadixTree,
     pcie: PcieLink,
+    /// Third (NVMe-class) KV tier: CPU-tier trims demote extents here
+    /// instead of dropping them.  `None` with the knob off — the enabled
+    /// paths never execute, keeping the default run bit-identical.
+    storage: Option<StorageTier>,
     cpu_tier_limit: u64,
     running: Vec<RunningSeq>,
     waiting: VecDeque<Request>,
@@ -224,12 +250,19 @@ impl SimEngine {
             KvLifetimeMode::ToolTtl => KvLifetimePolicy::ToolTtl,
         };
         let pcie = PcieLink::new(cost.cluster.agg_pcie_bw());
+        let storage = cfg.storage_tier.enabled.then(|| StorageTier::new(&cfg.storage_tier));
         SimEngine {
             pool: KvPool::new(capacity, cfg.page_size),
             tree: RadixTree::with_policy(lifetime),
             pcie,
-            // CPU tier sized by host RAM (2 TB/node).
-            cpu_tier_limit: cost.cluster.cpu_tier_tokens(),
+            storage,
+            // CPU tier sized by host RAM (2 TB/node) unless a storage-tier
+            // run caps it to manufacture demotion pressure at sim scale.
+            cpu_tier_limit: if cfg.storage_tier.enabled && cfg.storage_tier.cpu_tier_tokens > 0 {
+                cfg.storage_tier.cpu_tier_tokens
+            } else {
+                cost.cluster.cpu_tier_tokens()
+            },
             running: Vec::new(),
             waiting: VecDeque::new(),
             hit_window: WindowedRatio::new(cfg.hit_window),
@@ -335,6 +368,11 @@ impl SimEngine {
         &self.tree
     }
 
+    /// The storage (NVMe) tier, when enabled.
+    pub fn storage(&self) -> Option<&StorageTier> {
+        self.storage.as_ref()
+    }
+
     /// Cache-heat signal: when `agent` last completed a generation step
     /// on this replica (`None` = never, or the state was wiped).  Age
     /// correlates with LRU eviction depth — the staler the stamp, the
@@ -356,6 +394,11 @@ impl SimEngine {
         self.tree = RadixTree::with_policy(self.tree.lifetime_policy());
         self.lifetime_hints.clear();
         self.pcie = PcieLink::new(self.cost.cluster.agg_pcie_bw());
+        // Node-local NVMe extents die with the replica too (the tier
+        // indexes KV produced by the pool that was just wiped).
+        if let Some(tier) = &mut self.storage {
+            tier.clear();
+        }
         self.running.clear();
         self.waiting.clear();
         self.hit_window = WindowedRatio::new(self.cfg.hit_window);
@@ -371,6 +414,9 @@ impl SimEngine {
     /// private tokens.
     pub fn check_invariants(&self) -> std::result::Result<(), String> {
         self.tree.check_invariants()?;
+        if let Some(tier) = &self.storage {
+            tier.check_invariants()?;
+        }
         let private: u64 = self.running.iter().map(|s| s.private_tokens).sum();
         let expect = self.tree.gpu_tokens() + private + self.broadcast_reserved;
         if expect != self.pool.used() {
@@ -402,6 +448,12 @@ impl SimEngine {
         );
         self.pool = KvPool::new(capacity_tokens, self.cfg.page_size);
         self.cpu_tier_limit = capacity_tokens * 4;
+    }
+
+    /// Override the CPU-tier budget (unit studies of the storage tier that
+    /// need demotion pressure without gigantic workloads).
+    pub fn shrink_cpu_tier_for_tests(&mut self, limit_tokens: u64) {
+        self.cpu_tier_limit = limit_tokens;
     }
 
     // -- broadcast prefix tier ----------------------------------------------
@@ -636,10 +688,34 @@ impl SimEngine {
                 // future reloads (the Fig. 1c contention effect).
                 let bytes = self.kv_bytes(ev.offloaded_tokens);
                 self.pcie.transfer(now, bytes);
-                self.tree.trim_cpu(self.cpu_tier_limit);
+                self.trim_cpu_tier(now);
             }
         }
         self.pool.can_alloc(tokens)
+    }
+
+    /// Trim the CPU tier back to its budget.  With the storage tier on,
+    /// trimmed extents demote into it (write-behind on the storage link)
+    /// instead of being dropped; off, this is exactly the old destructive
+    /// trim.
+    fn trim_cpu_tier(&mut self, now: Micros) {
+        let Some(tier) = &mut self.storage else {
+            self.tree.trim_cpu(self.cpu_tier_limit);
+            return;
+        };
+        let evicted_before = tier.evicted_tokens;
+        let mut demoted = 0u64;
+        let mut sink = |prefix: Vec<Token>, edge: Vec<Token>| {
+            demoted += edge.len() as u64;
+            tier.insert(&prefix, edge, now);
+        };
+        self.tree.trim_cpu_with(self.cpu_tier_limit, Some(&mut sink));
+        if demoted > 0 {
+            self.counters.storage_demoted_tokens += demoted;
+            let bytes = Bytes(demoted * self.cost.cluster.model.kv_bytes_per_token());
+            tier.link.transfer(now, bytes);
+        }
+        self.counters.storage_evicted_tokens += tier.evicted_tokens - evicted_before;
     }
 
     fn kv_bytes(&self, tokens: u64) -> Bytes {
@@ -713,6 +789,14 @@ impl SimEngine {
                 .add(Phase::Offload, out.reload_time.saturating_sub(duration));
             duration = out.reload_time;
         }
+        // Storage reads overlap both; only their further excess extends it.
+        if out.storage_reload_time > duration {
+            self.breakdown.add(
+                Phase::StorageReload,
+                out.storage_reload_time.saturating_sub(duration),
+            );
+            duration = out.storage_reload_time;
+        }
         out.duration = duration;
         out.finished = finished;
         self.counters.recompute_tokens += out.recompute_tokens;
@@ -777,23 +861,50 @@ impl SimEngine {
                     .alloc(m.cpu_tokens)
                     .expect("ensure_free guaranteed space");
                 let promoted = self.tree.reload_path(&m.path, now);
-                debug_assert_eq!(promoted, m.cpu_tokens);
+                // `ensure_free`'s own CPU-tier trim can drop part of the
+                // matched span before the reload lands (tight tiers);
+                // release the overshoot instead of leaking the slots.
+                debug_assert!(promoted <= m.cpu_tokens);
+                self.pool.release(m.cpu_tokens - promoted);
                 reloaded = promoted;
                 cached += promoted;
                 self.counters.reloaded_tokens += promoted;
-                let done = self.pcie.transfer(now, self.kv_bytes(promoted));
-                let lat = done.saturating_sub(now);
-                if lat > reload_time {
-                    reload_time = lat;
+                if promoted > 0 {
+                    let done = self.pcie.transfer(now, self.kv_bytes(promoted));
+                    let lat = done.saturating_sub(now);
+                    if lat > reload_time {
+                        reload_time = lat;
+                    }
+                }
+            }
+
+            // Storage tier: past the GPU-resident coverage the prompt may
+            // continue into storage-resident extents (including ones the
+            // CPU-tier trim inside `ensure_free` demoted *during* the
+            // reload above).  Price the storage read against re-prefilling
+            // the same span and take the cheaper path (the dual-path
+            // decision; the pure modes force a side).
+            let mut lock = m.path;
+            let mut storage_hits = 0u64;
+            if cached < prompt_len {
+                if let Some(span_hit) =
+                    self.try_storage_path(&req.prompt, cached, now, out)
+                {
+                    storage_hits = span_hit.0;
+                    cached += storage_hits;
+                    lock = span_hit.1;
                 }
             }
 
             // Hit accounting: GPU hits always count; CPU-tier hits count as
             // hits only under HiCache (the data *is* retained, it just has
             // to cross PCIe — exactly the paper's Table 2 vs Table 1 split).
+            // Storage reloads are retained-and-paid-for the same way; a
+            // dual-path *recompute* of a storage-resident span is a policy
+            // miss and does not count.
             let hits = match self.policy {
                 EvictPolicy::Discard => m.gpu_tokens,
-                EvictPolicy::OffloadToCpu => m.gpu_tokens + reloaded,
+                EvictPolicy::OffloadToCpu => m.gpu_tokens + reloaded + storage_hits,
             };
             self.hit_window.record(hits, prompt_len.max(1));
             self.lifetime_hits.record(hits, prompt_len.max(1));
@@ -804,7 +915,7 @@ impl SimEngine {
             self.counters.broadcast_hit_tokens += m.broadcast_tokens;
 
             let _ = gen_len;
-            self.tree.lock_path(&m.path);
+            self.tree.lock_path(&lock);
             // Stamp the matched path with the agent's lifetime class so a
             // preemption-unlocked path re-enters the eviction order where
             // the workflow position says, not where raw recency does.
@@ -812,13 +923,82 @@ impl SimEngine {
             // locked for the whole generation anyway.)
             if self.tree.lifetime_policy() == KvLifetimePolicy::StepsToExecution {
                 let hint = self.lifetime_hints.get(&req.agent).copied().unwrap_or(0);
-                self.tree.stamp_path_lifetime(&m.path, lifetime_class(hint), Micros::ZERO);
+                self.tree.stamp_path_lifetime(&lock, lifetime_class(hint), Micros::ZERO);
             }
-            self.running.push(RunningSeq::new(req, cached, m.path, now));
+            self.running.push(RunningSeq::new(req, cached, lock, now));
             self.counters.admitted += 1;
             out.admitted += 1;
         }
         reload_time
+    }
+
+    /// Serve the storage-resident continuation of `prompt` past the radix
+    /// boundary `cached`, if any: chain-match extents, price a storage
+    /// read against re-prefilling the span, and commit the chosen path.
+    /// Returns `(span, full radix path)` when a reload materialised the
+    /// span on GPU; `None` when there is no extent, the dual-path policy
+    /// chose recompute (the span stays uncached and prefills normally),
+    /// or the pool could not make room.
+    fn try_storage_path(
+        &mut self,
+        prompt: &[Token],
+        cached: u64,
+        now: Micros,
+        out: &mut StepOutcome,
+    ) -> Option<(u64, Vec<radix::NodeId>)> {
+        let boundary = cached as usize;
+        let kv_per_token = self.cost.cluster.model.kv_bytes_per_token();
+        let (span, reload_cost) = {
+            let tier = self.storage.as_ref()?;
+            let span = tier.match_extents(prompt, boundary);
+            if span == 0 {
+                return None;
+            }
+            (span, tier.link.latency_at(now, Bytes(span * kv_per_token)))
+        };
+        let recompute_cost = self.cost.prefill_time(span, cached);
+        match storage::choose(self.cfg.dual_path, reload_cost, recompute_cost) {
+            PathChoice::Recompute => {
+                self.counters.storage_recomputed_tokens += span;
+                None
+            }
+            PathChoice::Reload => {
+                // The admission feasibility guard already budgeted the
+                // span (it is part of `uncached`); the peek-sized
+                // free/alloc/insert sequence below is the same robust
+                // pattern the broadcast and handoff installs use, so a
+                // concurrent eviction nibbling the prefix mid-flight is
+                // re-derived rather than leaking pool slots.  On failure
+                // the span prefills like any other miss.
+                let covered_len = boundary + span as usize;
+                let needed = self.free_for_prefix(&prompt[..covered_len], now)?;
+                if needed > 0 {
+                    self.pool.alloc(needed).expect("reload sized by peek");
+                }
+                let ins = self.tree.insert(&prompt[..covered_len], now);
+                let promoted = if ins.cpu_tokens > 0 {
+                    self.tree.reload_path(&ins.path, now)
+                } else {
+                    0
+                };
+                debug_assert_eq!(ins.new_gpu_tokens + promoted, needed);
+                self.counters.reloaded_tokens += promoted;
+                self.counters.storage_reloaded_tokens += span;
+                let bytes = Bytes(span * kv_per_token);
+                // The read queues on the storage link, then hops the host
+                // link up to the GPU; both legs congest like any transfer.
+                let tier = self.storage.as_mut().expect("present above");
+                let read_done = tier.link.transfer(now, bytes);
+                tier.touch(prompt, boundary, span, now);
+                let done = self.pcie.transfer(read_done, bytes);
+                let lat = done.saturating_sub(now);
+                if lat > out.storage_reload_time {
+                    out.storage_reload_time = lat;
+                }
+                out.storage_transfers.push((span, done));
+                Some((span, ins.path))
+            }
+        }
     }
 
     /// Chunked prefill under a global per-step token budget, FIFO order.
@@ -1467,6 +1647,143 @@ mod tests {
         e.clear_state();
         assert_eq!(e.lifetime_policy(), KvLifetimePolicy::ToolTtl);
         assert!(e.wants_lifetime_hint());
+        e.check_invariants().unwrap();
+    }
+
+    // -- storage tier ------------------------------------------------------
+
+    fn storage_engine(
+        capacity: u64,
+        bandwidth_gbps: f64,
+        mode: crate::config::DualPathMode,
+    ) -> SimEngine {
+        let cost = CostModel::new(ClusterSpec::new(
+            GpuSpec::h100(),
+            ModelSpec::qwen3_32b(),
+            8,
+            8,
+        ));
+        let cfg = EngineConfig {
+            prefill_chunk: 8192,
+            eviction: crate::config::EvictionMode::Offload,
+            storage_tier: crate::config::StorageTierConfig {
+                enabled: true,
+                capacity_tokens: 1_000_000,
+                bandwidth_gbps,
+                cpu_tier_tokens: 0,
+            },
+            dual_path: mode,
+            ..EngineConfig::default()
+        };
+        let mut e = SimEngine::new(cfg, cost);
+        e.shrink_pool_for_tests(capacity);
+        // Tight CPU tier so offloads demote to storage immediately.
+        e.shrink_cpu_tier_for_tests(capacity / 2);
+        e
+    }
+
+    /// Run agent 1, displace it through CPU into storage with agent 2's
+    /// flood, then resubmit agent 1's continuation; returns the engine.
+    fn storage_round_trip(mut e: SimEngine) -> SimEngine {
+        let prompt: Vec<Token> = (0..2_500).collect();
+        e.submit(mk_req(1, 1, prompt.clone(), 10, 0));
+        let d1 = drive(&mut e, 300);
+        assert_eq!(d1.len(), 1);
+        // Agent 2 floods the pool: agent 1's cache offloads to the tiny
+        // CPU tier, which trims it straight into storage.
+        e.submit(mk_req(2, 2, (100_000..102_500).collect(), 10, 0));
+        drive(&mut e, 300);
+        // Agent 1 returns with its grown context.  Its cache drains
+        // GPU→CPU→storage under agent 2's pressure plus this admission's
+        // own reload attempt (the tight CPU tier trims whatever lands).
+        let mut next = prompt;
+        next.extend(d1[0].output.iter());
+        let prev = next.len() as u64;
+        next.extend(3_000_000..3_000_100u32);
+        e.submit(mk_req(3, 1, next, 10, prev));
+        drive(&mut e, 400);
+        assert!(
+            e.counters.storage_demoted_tokens >= 2_000,
+            "agent 1's context must demote to storage, got {}",
+            e.counters.storage_demoted_tokens
+        );
+        e.check_invariants().unwrap();
+        e
+    }
+
+    #[test]
+    fn storage_reload_serves_demoted_context_without_recompute() {
+        use crate::config::DualPathMode;
+        let e = storage_round_trip(storage_engine(4_000, 6.0, DualPathMode::AlwaysReload));
+        assert!(
+            e.counters.storage_reloaded_tokens >= 2_000,
+            "demoted context must reload from storage, got {}",
+            e.counters.storage_reloaded_tokens
+        );
+        assert_eq!(e.counters.storage_recomputed_tokens, 0);
+        assert_eq!(
+            e.counters.recompute_tokens, 0,
+            "a storage reload is not recompute"
+        );
+        assert!(e.storage().unwrap().link.bytes_moved > 0);
+    }
+
+    #[test]
+    fn always_recompute_leaves_extents_cold_and_pays_prefill() {
+        use crate::config::DualPathMode;
+        let e =
+            storage_round_trip(storage_engine(4_000, 6.0, DualPathMode::AlwaysRecompute));
+        assert_eq!(e.counters.storage_reloaded_tokens, 0);
+        assert!(
+            e.counters.storage_recomputed_tokens >= 2_000,
+            "the storage span must be re-prefilled, got {}",
+            e.counters.storage_recomputed_tokens
+        );
+        assert!(
+            e.counters.recompute_tokens >= 2_000,
+            "re-prefilling previously computed context is recompute churn"
+        );
+    }
+
+    #[test]
+    fn dual_path_follows_the_modeled_crossover() {
+        use crate::config::DualPathMode;
+        // A fast link makes the read cheaper than the quadratic prefill…
+        let fast = storage_round_trip(storage_engine(4_000, 1_000.0, DualPathMode::DualPath));
+        assert!(fast.counters.storage_reloaded_tokens >= 2_000, "fast link → reload");
+        // …and a glacial one flips the argmin to recompute.
+        let slow = storage_round_trip(storage_engine(4_000, 0.001, DualPathMode::DualPath));
+        assert!(slow.counters.storage_recomputed_tokens >= 2_000, "slow link → recompute");
+        assert_eq!(slow.counters.storage_reloaded_tokens, 0);
+    }
+
+    #[test]
+    fn storage_reload_excess_lands_in_its_breakdown_phase() {
+        use crate::config::DualPathMode;
+        // Slow enough that the read dominates the step, fast enough that
+        // dual-path pricing would still pick it — force it via AlwaysReload.
+        let e = storage_round_trip(storage_engine(4_000, 0.05, DualPathMode::AlwaysReload));
+        assert!(
+            e.breakdown.get(Phase::StorageReload) > Micros::ZERO,
+            "read excess over compute must be attributed to StorageReload"
+        );
+    }
+
+    #[test]
+    fn clear_state_wipes_the_storage_tier() {
+        use crate::config::DualPathMode;
+        let mut e = storage_round_trip(storage_engine(4_000, 6.0, DualPathMode::AlwaysReload));
+        assert!(e.storage().unwrap().extent_count() > 0, "round trip left extents behind");
+        let reloaded = e.counters.storage_reloaded_tokens;
+        e.clear_state();
+        let tier = e.storage().expect("tier survives the wipe, empty");
+        assert_eq!(tier.used_tokens(), 0);
+        assert_eq!(tier.extent_count(), 0);
+        assert_eq!(tier.link.transfers, 0);
+        assert_eq!(
+            e.counters.storage_reloaded_tokens, reloaded,
+            "cumulative telemetry survives"
+        );
         e.check_invariants().unwrap();
     }
 }

@@ -1064,6 +1064,20 @@ impl RadixTree {
     /// Drop LRU CPU-tier nodes until at most `limit` CPU tokens remain.
     /// Only childless CPU nodes can be dropped (structure preserved).
     pub fn trim_cpu(&mut self, limit: u64) -> u64 {
+        self.trim_cpu_with(limit, None)
+    }
+
+    /// [`trim_cpu`](Self::trim_cpu) with an optional demotion sink: each
+    /// dropped leaf is reported as `(context_prefix, edge_tokens)` — the
+    /// root→parent token path the leaf extends, and the leaf's own edge —
+    /// *before* removal, so the storage tier can capture what the CPU
+    /// tier is about to forget.  The sink only observes; which leaves are
+    /// dropped, and in what order, is identical with or without it.
+    pub fn trim_cpu_with(
+        &mut self,
+        limit: u64,
+        mut sink: Option<&mut dyn FnMut(Vec<Token>, Vec<Token>)>,
+    ) -> u64 {
         if self.cpu_tokens <= limit {
             return 0;
         }
@@ -1091,6 +1105,12 @@ impl RadixTree {
             let tokens = self.nodes[id].tokens();
             self.cpu_tokens -= tokens;
             dropped += tokens;
+            if let Some(sink) = sink.as_deref_mut() {
+                let prefix = self.context_prefix_of(id);
+                let n = &self.nodes[id];
+                let edge = self.arena[n.off..n.off + n.len].to_vec();
+                sink(prefix, edge);
+            }
             self.remove_leaf(id);
         }
         if dropped > 0 {
@@ -1098,6 +1118,25 @@ impl RadixTree {
             self.maybe_compact();
         }
         dropped
+    }
+
+    /// Tokens on the root→`id` path *excluding* `id`'s own edge — the
+    /// context under which `id`'s tokens were produced.  The storage
+    /// tier keys demoted extents by (a hash of) this prefix.
+    pub fn context_prefix_of(&self, id: NodeId) -> Vec<Token> {
+        let mut chain = Vec::new();
+        let mut cur = self.nodes[id].parent;
+        while cur != ROOT {
+            chain.push(cur);
+            cur = self.nodes[cur].parent;
+        }
+        let total: usize = chain.iter().map(|&nid| self.nodes[nid].len).sum();
+        let mut out = Vec::with_capacity(total);
+        for &nid in chain.iter().rev() {
+            let n = &self.nodes[nid];
+            out.extend_from_slice(&self.arena[n.off..n.off + n.len]);
+        }
+        out
     }
 
     /// Promote every CPU-resident node on `path` back to GPU (the engine
@@ -1500,6 +1539,48 @@ mod tests {
         assert!(dropped >= 100);
         assert!(t.cpu_tokens() <= 200);
         t.check_invariants().unwrap();
+    }
+
+    /// The demotion sink observes exactly what `trim_cpu` drops — the
+    /// dropped leaf's edge plus the root→parent token prefix it extended
+    /// — and its presence changes nothing about what is dropped.
+    #[test]
+    fn trim_cpu_sink_reports_dropped_extents() {
+        let mk = || {
+            let mut t = RadixTree::new();
+            // Shared 100-token head, two tails → head becomes an inner
+            // node, tails become CPU leaves under it after offload.
+            let a: Vec<Token> = (0..100).chain(1_000..1_200).collect();
+            let b: Vec<Token> = (0..100).chain(2_000..2_100).collect();
+            t.insert(&a, Micros(1));
+            t.insert(&b, Micros(2));
+            t.evict(u64::MAX, EvictPolicy::OffloadToCpu);
+            t
+        };
+        let mut plain = mk();
+        let mut observed = mk();
+        let mut extents: Vec<(Vec<Token>, Vec<Token>)> = Vec::new();
+        let dropped_plain = plain.trim_cpu(0);
+        let dropped = observed
+            .trim_cpu_with(0, Some(&mut |prefix, edge| extents.push((prefix, edge))));
+        assert_eq!(dropped, dropped_plain, "sink must not change what is dropped");
+        assert_eq!(observed.cpu_tokens(), plain.cpu_tokens());
+        assert_eq!(observed.epoch(), plain.epoch());
+        let total: usize = extents.iter().map(|(_, e)| e.len()).sum();
+        assert_eq!(total as u64, dropped);
+        for (prefix, edge) in &extents {
+            assert!(!edge.is_empty());
+            // Every reported extent reconstructs a real inserted sequence:
+            // prefix ++ edge is a prefix of one of the two prompts.
+            let full: Vec<Token> = prefix.iter().chain(edge.iter()).copied().collect();
+            let a: Vec<Token> = (0..100).chain(1_000..1_200).collect();
+            let b: Vec<Token> = (0..100).chain(2_000..2_100).collect();
+            assert!(
+                a.starts_with(&full) || b.starts_with(&full),
+                "extent must reconstruct an inserted sequence"
+            );
+        }
+        observed.check_invariants().unwrap();
     }
 
     #[test]

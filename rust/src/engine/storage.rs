@@ -1,0 +1,409 @@
+//! Storage-resident KV extent map — the third (NVMe-class) memory tier —
+//! and the reload-vs-recompute dual-path decision.
+//!
+//! When the CPU tier trims, demoted prefixes land here instead of being
+//! dropped: each trimmed radix leaf becomes a [`StoredExtent`] keyed by a
+//! hash of the token prefix it extended, so a later request whose prompt
+//! reaches the end of the cached tiers can chain extent lookups across
+//! the remainder and discover how much of it is storage-resident.
+//!
+//! Reading an extent back is not free — it queues on a contended
+//! [`StorageLink`] (NVMe bandwidth, per-op overhead, queue-depth
+//! degradation) — so the engine weighs the modeled read time against the
+//! modeled prefill-FLOPs time for the same span and takes the cheaper
+//! path ([`choose`]).  That per-request argmin is the DualPath argument
+//! (PAPERS.md): always-reload collapses when the link congests,
+//! always-recompute pays the quadratic attention term however idle the
+//! link is, and the crossover moves with storage bandwidth.
+
+use crate::config::{DualPathMode, StorageTierConfig};
+use crate::core::{FxHashMap, Micros, Token};
+use crate::costmodel::StorageLink;
+use std::collections::BTreeSet;
+use std::hash::Hasher;
+
+/// One demoted KV extent: the tokens of a trimmed radix edge, stored
+/// under the hash of the context prefix they extended.
+#[derive(Debug, Clone)]
+struct StoredExtent {
+    tokens: Vec<Token>,
+    stamp: Micros,
+    seq: u64,
+}
+
+/// Hash key of a context-prefix token sequence (deterministic FxHash;
+/// length-prefixed so nested prefixes cannot alias trivially).  Chained
+/// lookups verify tokens before trusting a hit, so a collision can only
+/// cost a wasted comparison, never a wrong reload.
+pub fn extent_key(prefix: &[Token]) -> u64 {
+    let mut h = crate::core::fxhash::FxHasher::default();
+    h.write_usize(prefix.len());
+    for &t in prefix {
+        h.write_u32(t);
+    }
+    h.finish()
+}
+
+/// The storage tier: a capacity-bounded extent map plus the contended
+/// link reads and writes travel over.
+#[derive(Debug, Clone)]
+pub struct StorageTier {
+    extents: FxHashMap<u64, StoredExtent>,
+    /// Deterministic staleness order: `(stamp, seq, key)` — the smallest
+    /// entry is the coldest extent and the first dropped at capacity.
+    order: BTreeSet<(Micros, u64, u64)>,
+    used_tokens: u64,
+    capacity: u64,
+    next_seq: u64,
+    pub link: StorageLink,
+    /// Tokens demoted into the tier (telemetry).
+    pub demoted_tokens: u64,
+    /// Tokens dropped out of the tier at capacity (telemetry).
+    pub evicted_tokens: u64,
+}
+
+impl StorageTier {
+    pub fn new(cfg: &StorageTierConfig) -> StorageTier {
+        StorageTier {
+            extents: FxHashMap::default(),
+            order: BTreeSet::new(),
+            used_tokens: 0,
+            capacity: cfg.capacity_tokens,
+            next_seq: 0,
+            link: StorageLink::new(cfg.bandwidth_gbps),
+            demoted_tokens: 0,
+            evicted_tokens: 0,
+        }
+    }
+
+    pub fn used_tokens(&self) -> u64 {
+        self.used_tokens
+    }
+
+    pub fn extent_count(&self) -> usize {
+        self.extents.len()
+    }
+
+    /// Demote a trimmed CPU-tier edge into the tier.  A re-demotion under
+    /// the same prefix replaces the old extent (the tree held the newer
+    /// content).  Exceeding capacity drops the stalest extents — possibly
+    /// including the one just written, if it alone exceeds the budget.
+    pub fn insert(&mut self, prefix: &[Token], tokens: Vec<Token>, now: Micros) {
+        if tokens.is_empty() {
+            return;
+        }
+        let key = extent_key(prefix);
+        self.remove(key);
+        self.demoted_tokens += tokens.len() as u64;
+        self.used_tokens += tokens.len() as u64;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.order.insert((now, seq, key));
+        self.extents.insert(key, StoredExtent { tokens, stamp: now, seq });
+        while self.used_tokens > self.capacity {
+            let &(_, _, coldest) = self.order.first().expect("used>0 implies extents");
+            let dropped = self.remove(coldest).expect("ordered key must exist");
+            self.evicted_tokens += dropped;
+        }
+    }
+
+    fn remove(&mut self, key: u64) -> Option<u64> {
+        let ext = self.extents.remove(&key)?;
+        self.order.remove(&(ext.stamp, ext.seq, key));
+        self.used_tokens -= ext.tokens.len() as u64;
+        Some(ext.tokens.len() as u64)
+    }
+
+    /// How many tokens of `prompt[start..]` are storage-resident: chains
+    /// extent lookups from the `start` boundary, token-verifying each hit
+    /// and following complete extents into the next lookup.  A partial
+    /// extent match ends the chain (the divergence point is mid-extent).
+    /// Read-only — pricing a path must not disturb the tier.
+    pub fn match_extents(&self, prompt: &[Token], start: usize) -> u64 {
+        let mut pos = start;
+        while pos < prompt.len() {
+            let Some(ext) = self.extents.get(&extent_key(&prompt[..pos])) else {
+                break;
+            };
+            let n = ext
+                .tokens
+                .iter()
+                .zip(&prompt[pos..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            if n == 0 {
+                break;
+            }
+            pos += n;
+            if n < ext.tokens.len() {
+                break;
+            }
+        }
+        (pos - start) as u64
+    }
+
+    /// Re-stamp the extents a committed reload of `span` tokens read
+    /// (non-destructive read: the data stays resident, now hot).
+    pub fn touch(&mut self, prompt: &[Token], start: usize, span: u64, now: Micros) {
+        let mut pos = start;
+        let end = start + span as usize;
+        while pos < end {
+            let key = extent_key(&prompt[..pos]);
+            let Some(ext) = self.extents.get_mut(&key) else {
+                break;
+            };
+            let len = ext.tokens.len();
+            let old = (ext.stamp, ext.seq, key);
+            ext.stamp = now;
+            self.order.remove(&old);
+            self.order.insert((now, ext.seq, key));
+            pos += len.min(end - pos);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.extents.clear();
+        self.order.clear();
+        self.used_tokens = 0;
+        self.next_seq = 0;
+        self.link.reset();
+        self.demoted_tokens = 0;
+        self.evicted_tokens = 0;
+    }
+
+    /// Debug invariant: counters match extent contents and the staleness
+    /// order indexes exactly the live extents.
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        let tokens: u64 = self.extents.values().map(|e| e.tokens.len() as u64).sum();
+        if tokens != self.used_tokens {
+            return Err(format!("storage tokens {tokens} != counter {}", self.used_tokens));
+        }
+        if self.order.len() != self.extents.len() {
+            return Err(format!(
+                "order entries {} != extents {}",
+                self.order.len(),
+                self.extents.len()
+            ));
+        }
+        for &(stamp, seq, key) in &self.order {
+            match self.extents.get(&key) {
+                Some(e) if e.stamp == stamp && e.seq == seq => {}
+                _ => return Err(format!("order entry for key {key} is stale")),
+            }
+        }
+        if self.used_tokens > self.capacity {
+            return Err(format!(
+                "used {} exceeds capacity {}",
+                self.used_tokens, self.capacity
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Which way a storage-resident prefix is served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathChoice {
+    /// Read the extents back over the storage link.
+    Reload,
+    /// Re-prefill the span from scratch (leave the extents untouched).
+    Recompute,
+}
+
+/// The dual-path decision: pure argmin of the two modeled costs under
+/// `DualPath` (ties go to `Reload` — equal latency, but a reload spares
+/// the compute roofline), forced under the two pure modes.
+pub fn choose(mode: DualPathMode, reload_cost: Micros, recompute_cost: Micros) -> PathChoice {
+    match mode {
+        DualPathMode::AlwaysReload => PathChoice::Reload,
+        DualPathMode::AlwaysRecompute => PathChoice::Recompute,
+        DualPathMode::DualPath => {
+            if reload_cost <= recompute_cost {
+                PathChoice::Reload
+            } else {
+                PathChoice::Recompute
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Bytes, Rng};
+    use crate::costmodel::{ClusterSpec, CostModel, GpuSpec, ModelSpec};
+
+    fn tier(capacity: u64) -> StorageTier {
+        StorageTier::new(&StorageTierConfig {
+            enabled: true,
+            capacity_tokens: capacity,
+            bandwidth_gbps: 6.0,
+            cpu_tier_tokens: 0,
+        })
+    }
+
+    fn toks(range: std::ops::Range<u32>) -> Vec<Token> {
+        range.collect()
+    }
+
+    #[test]
+    fn insert_then_chained_match() {
+        let mut t = tier(10_000);
+        let prompt: Vec<Token> = (0..300).collect();
+        // Demoted as two consecutive extents: [100..200) under prefix
+        // [0..100), then [200..300) under prefix [0..200).
+        t.insert(&prompt[..100], prompt[100..200].to_vec(), Micros(1));
+        t.insert(&prompt[..200], prompt[200..300].to_vec(), Micros(2));
+        assert_eq!(t.match_extents(&prompt, 100), 200, "chain across both extents");
+        assert_eq!(t.match_extents(&prompt, 200), 100);
+        assert_eq!(t.match_extents(&prompt, 0), 0, "no extent under the empty prefix");
+        assert_eq!(t.used_tokens(), 200);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn diverging_prompt_matches_only_verified_tokens() {
+        let mut t = tier(10_000);
+        let stored: Vec<Token> = (0..200).collect();
+        t.insert(&stored[..100], stored[100..200].to_vec(), Micros(1));
+        // Same prefix, but the prompt diverges 30 tokens into the extent.
+        let mut diverged = stored.clone();
+        for tok in diverged.iter_mut().skip(130) {
+            *tok += 10_000;
+        }
+        assert_eq!(t.match_extents(&diverged, 100), 30, "partial verified span only");
+        // Fully diverged: hash hits, token verification rejects.
+        let mut alien = stored.clone();
+        for tok in alien.iter_mut().skip(100) {
+            *tok += 10_000;
+        }
+        assert_eq!(t.match_extents(&alien, 100), 0);
+    }
+
+    #[test]
+    fn capacity_drops_stalest_first() {
+        let mut t = tier(250);
+        let prompt: Vec<Token> = (0..400).collect();
+        t.insert(&prompt[..100], prompt[100..200].to_vec(), Micros(1));
+        t.insert(&prompt[..200], prompt[200..300].to_vec(), Micros(2));
+        assert_eq!(t.used_tokens(), 200);
+        // Third extent pushes past 250: the stamp-1 extent is dropped.
+        t.insert(&prompt[..300], prompt[300..400].to_vec(), Micros(3));
+        assert_eq!(t.used_tokens(), 200);
+        assert_eq!(t.evicted_tokens, 100);
+        assert_eq!(t.match_extents(&prompt, 100), 0, "coldest extent gone breaks the chain");
+        assert_eq!(t.match_extents(&prompt, 200), 200, "warm extents intact");
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn touch_protects_hot_extents_from_capacity_eviction() {
+        let mut t = tier(250);
+        let prompt: Vec<Token> = (0..400).collect();
+        t.insert(&prompt[..100], prompt[100..200].to_vec(), Micros(1));
+        t.insert(&prompt[..200], prompt[200..300].to_vec(), Micros(2));
+        // A reload re-reads the first extent: it becomes the warmest.
+        t.touch(&prompt, 100, 100, Micros(5));
+        t.insert(&prompt[..300], prompt[300..400].to_vec(), Micros(6));
+        assert_eq!(t.match_extents(&prompt, 100), 100, "touched extent survives");
+        assert_eq!(t.match_extents(&prompt, 200), 0, "untouched stamp-2 extent dropped");
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reinsert_under_same_prefix_replaces() {
+        let mut t = tier(10_000);
+        let prefix = toks(0..100);
+        t.insert(&prefix, toks(500..600), Micros(1));
+        t.insert(&prefix, toks(700..900), Micros(2));
+        assert_eq!(t.extent_count(), 1);
+        assert_eq!(t.used_tokens(), 200);
+        let prompt: Vec<Token> = (0..100).chain(700..900).collect();
+        assert_eq!(t.match_extents(&prompt, 100), 200);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut t = tier(1_000);
+        t.insert(&toks(0..10), toks(10..20), Micros(1));
+        t.link.transfer(Micros::ZERO, Bytes(1_000_000));
+        t.clear();
+        assert_eq!(t.used_tokens(), 0);
+        assert_eq!(t.extent_count(), 0);
+        assert_eq!(t.link.transfers, 0);
+        assert_eq!(t.demoted_tokens, 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn choose_respects_forced_modes() {
+        let (a, b) = (Micros(100), Micros(10));
+        assert_eq!(choose(DualPathMode::AlwaysReload, a, b), PathChoice::Reload);
+        assert_eq!(choose(DualPathMode::AlwaysRecompute, b, a), PathChoice::Recompute);
+        // Ties go to reload.
+        assert_eq!(choose(DualPathMode::DualPath, a, a), PathChoice::Reload);
+    }
+
+    /// PROPERTY (satellite): over a seeded grid of spans, context depths,
+    /// link queue states and storage bandwidths —
+    ///  1. the dual-path choice always equals the argmin of the two
+    ///     modeled costs, and
+    ///  2. at fixed (span, context, queue state) the reload→recompute
+    ///     crossover is monotone in storage bandwidth: once reload wins
+    ///     at some bandwidth, it wins at every higher bandwidth (reload
+    ///     cost is nonincreasing in bandwidth; recompute cost is
+    ///     constant).
+    #[test]
+    fn dual_path_is_argmin_and_crossover_is_monotone_in_bandwidth() {
+        let cm = CostModel::new(ClusterSpec::new(
+            GpuSpec::h100(),
+            ModelSpec::qwen3_32b(),
+            2,
+            2,
+        ));
+        let kv_bytes = cm.cluster.model.kv_bytes_per_token();
+        let mut rng = Rng::new(0xD0A1);
+        let bandwidths = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        for _case in 0..200 {
+            let span = rng.gen_range(64, 16_384);
+            let start_ctx = rng.gen_range(0, 32_768);
+            let queued = rng.gen_range(0, 6);
+            let queued_bytes = Bytes(rng.gen_range(1, 64) * 100_000_000);
+            let recompute_cost = cm.prefill_time(span, start_ctx);
+            let mut reload_won = false;
+            let mut prev_reload_cost = Micros(u64::MAX);
+            for &bw in &bandwidths {
+                let mut link = StorageLink::new(bw);
+                for _ in 0..queued {
+                    link.transfer(Micros::ZERO, queued_bytes);
+                }
+                let reload_cost =
+                    link.latency_at(Micros::ZERO, Bytes(span * kv_bytes));
+                // 1. argmin.
+                let got = choose(DualPathMode::DualPath, reload_cost, recompute_cost);
+                let want = if reload_cost <= recompute_cost {
+                    PathChoice::Reload
+                } else {
+                    PathChoice::Recompute
+                };
+                assert_eq!(got, want, "span={span} ctx={start_ctx} bw={bw}");
+                // 2. monotone crossover.
+                assert!(
+                    reload_cost <= prev_reload_cost,
+                    "reload cost must be nonincreasing in bandwidth"
+                );
+                prev_reload_cost = reload_cost;
+                if reload_won {
+                    assert_eq!(
+                        got,
+                        PathChoice::Reload,
+                        "reload must keep winning above the crossover \
+                         (span={span} ctx={start_ctx} bw={bw})"
+                    );
+                }
+                reload_won = got == PathChoice::Reload;
+            }
+        }
+    }
+}

@@ -18,6 +18,9 @@ pub enum Phase {
     Decode,
     /// KV reload over the host link (HiCache tier).
     Offload,
+    /// KV reload from the storage (NVMe) tier — extent reads back into
+    /// the GPU pool (zero with the storage tier off).
+    StorageReload,
     /// Broadcast-prefix shipping over the interconnect (cluster
     /// shared-prefix tier; zero with the tier off).
     Broadcast,
@@ -28,11 +31,12 @@ pub enum Phase {
     ToolWait,
 }
 
-pub const ALL_PHASES: [Phase; 7] = [
+pub const ALL_PHASES: [Phase; 8] = [
     Phase::Prefill,
     Phase::Recompute,
     Phase::Decode,
     Phase::Offload,
+    Phase::StorageReload,
     Phase::Broadcast,
     Phase::Handoff,
     Phase::ToolWait,
@@ -45,6 +49,7 @@ impl Phase {
             Phase::Recompute => "recompute",
             Phase::Decode => "decode",
             Phase::Offload => "offload",
+            Phase::StorageReload => "storage_reload",
             Phase::Broadcast => "broadcast",
             Phase::Handoff => "handoff",
             Phase::ToolWait => "tool_wait",
@@ -59,6 +64,7 @@ pub struct Breakdown {
     recompute: u64,
     decode: u64,
     offload: u64,
+    storage_reload: u64,
     broadcast: u64,
     handoff: u64,
     tool_wait: u64,
@@ -82,6 +88,7 @@ impl Breakdown {
             Phase::Recompute => self.recompute += t.0,
             Phase::Decode => self.decode += t.0,
             Phase::Offload => self.offload += t.0,
+            Phase::StorageReload => self.storage_reload += t.0,
             Phase::Broadcast => self.broadcast += t.0,
             Phase::Handoff => self.handoff += t.0,
             Phase::ToolWait => self.tool_wait += t.0,
@@ -94,6 +101,7 @@ impl Breakdown {
             Phase::Recompute => self.recompute,
             Phase::Decode => self.decode,
             Phase::Offload => self.offload,
+            Phase::StorageReload => self.storage_reload,
             Phase::Broadcast => self.broadcast,
             Phase::Handoff => self.handoff,
             Phase::ToolWait => self.tool_wait,
@@ -106,6 +114,7 @@ impl Breakdown {
                 + self.recompute
                 + self.decode
                 + self.offload
+                + self.storage_reload
                 + self.broadcast
                 + self.handoff
                 + self.tool_wait,

@@ -90,9 +90,15 @@ impl Histogram {
     /// Bucket bounds are identical by construction (`new` derives them
     /// from constants), so merging is element-wise bucket addition; the
     /// merged percentiles are exactly the percentiles the receiver would
-    /// report had it recorded the concatenated sample stream.
+    /// report had it recorded the concatenated sample stream.  A layout
+    /// mismatch would silently zip-truncate and miscount every merged
+    /// percentile, so it is a hard error in every build profile.
     pub fn merge(&mut self, other: &Histogram) {
-        debug_assert_eq!(self.buckets.len(), other.buckets.len());
+        assert_eq!(
+            self.bounds, other.bounds,
+            "Histogram::merge: bucket layouts differ ({} vs {})",
+            self.name, other.name
+        );
         for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
             *b += o;
         }
@@ -104,15 +110,38 @@ impl Histogram {
 
     pub fn summary(&self) -> String {
         format!(
-            "{}: n={} mean={} p50={} p95={} p99={} max={}",
+            "{}: n={} mean={} min={} p50={} p95={} p99={} max={}",
             self.name,
             self.count,
             self.mean(),
+            self.min(),
             self.percentile(50.0),
             self.percentile(95.0),
             self.percentile(99.0),
             self.max()
         )
+    }
+
+    /// Test-only: a histogram with a custom bucket growth factor, so the
+    /// merge layout guard can be exercised with genuinely different
+    /// bounds (the public `new` derives identical bounds by construction).
+    #[cfg(test)]
+    fn with_growth(name: &str, growth: f64) -> Histogram {
+        let mut bounds = Vec::new();
+        let mut b = 1.0f64;
+        while b < 8.0e9 {
+            bounds.push(b as u64);
+            b *= growth;
+        }
+        Histogram {
+            name: name.into(),
+            buckets: vec![0; bounds.len() + 1],
+            bounds,
+            count: 0,
+            sum: 0,
+            max: 0,
+            min: u64::MAX,
+        }
     }
 }
 
@@ -125,6 +154,19 @@ mod tests {
         let h = Histogram::new("x");
         assert_eq!(h.mean(), Micros::ZERO);
         assert_eq!(h.percentile(99.0), Micros::ZERO);
+    }
+
+    /// REGRESSION: the `min: u64::MAX` sentinel of an empty histogram must
+    /// never leak into step-summary lines or bench JSON — every accessor
+    /// and the rendered summary report 0 when nothing was recorded.
+    #[test]
+    fn empty_summary_reports_zero_not_sentinel() {
+        let h = Histogram::new("ttft");
+        assert_eq!(h.min(), Micros::ZERO);
+        assert_eq!(
+            h.summary(),
+            "ttft: n=0 mean=0us min=0us p50=0us p95=0us p99=0us max=0us"
+        );
     }
 
     #[test]
@@ -196,6 +238,18 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Mismatched bucket layouts must be a hard error in release builds
+    /// too — a zip-truncating merge would silently miscount percentiles.
+    #[test]
+    #[should_panic(expected = "bucket layouts differ")]
+    fn merge_rejects_mismatched_layouts() {
+        let mut a = Histogram::new("a");
+        a.record(Micros(100));
+        let mut b = Histogram::with_growth("b", 1.25);
+        b.record(Micros(100));
+        a.merge(&b);
     }
 
     #[test]

@@ -66,12 +66,16 @@ impl TimeSeries {
 
     /// Downsample into `n` equal time buckets (bucket mean); used when
     /// printing figure series at terminal width.
+    ///
+    /// Points need not be time-sorted: series assembled across replicas
+    /// (open-loop shard merges) interleave timestamps, so the bucket
+    /// range is the min/max over all points, not first/last.
     pub fn resample(&self, n: usize) -> Vec<(Micros, f64)> {
         if self.points.is_empty() || n == 0 {
             return Vec::new();
         }
-        let t0 = self.points.first().unwrap().0 .0;
-        let t1 = self.points.last().unwrap().0 .0.max(t0 + 1);
+        let t0 = self.points.iter().map(|p| p.0 .0).min().unwrap();
+        let t1 = self.points.iter().map(|p| p.0 .0).max().unwrap().max(t0 + 1);
         let width = ((t1 - t0) as f64 / n as f64).max(1.0);
         let mut sums = vec![0.0; n];
         let mut counts = vec![0u64; n];
@@ -157,6 +161,20 @@ mod tests {
     fn resample_buckets() {
         let ts = series(&[(0, 0.0), (25, 1.0), (50, 2.0), (75, 3.0), (100, 4.0)]);
         let r = ts.resample(2);
+        assert_eq!(r.len(), 2);
+        assert!(r[0].1 < r[1].1);
+    }
+
+    /// REGRESSION: out-of-order points (cross-replica series merges) used
+    /// to underflow `t.0 - t0` because the bucket range was taken from the
+    /// first/last point instead of the min/max.  A permuted series must
+    /// resample exactly like its sorted twin.
+    #[test]
+    fn resample_handles_unsorted_points() {
+        let unsorted = series(&[(50, 2.0), (0, 0.0), (100, 4.0), (25, 1.0), (75, 3.0)]);
+        let sorted = series(&[(0, 0.0), (25, 1.0), (50, 2.0), (75, 3.0), (100, 4.0)]);
+        let r = unsorted.resample(2);
+        assert_eq!(r, sorted.resample(2));
         assert_eq!(r.len(), 2);
         assert!(r[0].1 < r[1].1);
     }

@@ -17,10 +17,12 @@
 //! transport` the asynchronous-transport study (see [`transport`] —
 //! emits `BENCH_transport.json`), `concur repro openloop` the
 //! open-loop traffic / SLO study (see [`openloop`] — emits
-//! `BENCH_openloop.json`), and `concur repro workflow` the
+//! `BENCH_openloop.json`), `concur repro workflow` the
 //! workflow-DAG / KV-lifetime-policy study (see [`workflow`] — emits
-//! `BENCH_workflow.json`).  The full experiment index lives in one
-//! table ([`EXPERIMENTS`]) shared with the CLI usage string.
+//! `BENCH_workflow.json`), and `concur repro storage` the storage-tier
+//! dual-path study (see [`storage`] — emits `BENCH_storage.json`).
+//! The full experiment index lives in one table ([`EXPERIMENTS`])
+//! shared with the CLI usage string.
 
 pub mod cluster_scaling;
 pub mod faults;
@@ -30,6 +32,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod openloop;
 pub mod prefix_sharing;
+pub mod storage;
 pub mod table1;
 pub mod table2;
 pub mod table3;
@@ -131,7 +134,7 @@ pub struct Experiment {
 
 /// Every experiment, paper artifacts first (in paper order), then our
 /// studies.
-pub const EXPERIMENTS: [Experiment; 13] = [
+pub const EXPERIMENTS: [Experiment; 14] = [
     Experiment { name: "fig1", aliases: &[], paper: true },
     Experiment { name: "fig3", aliases: &[], paper: true },
     Experiment { name: "table1", aliases: &[], paper: true },
@@ -145,6 +148,7 @@ pub const EXPERIMENTS: [Experiment; 13] = [
     Experiment { name: "transport", aliases: &[], paper: false },
     Experiment { name: "openloop", aliases: &["open_loop"], paper: false },
     Experiment { name: "workflow", aliases: &["workflows"], paper: false },
+    Experiment { name: "storage", aliases: &["storage_tier"], paper: false },
 ];
 
 /// Canonical names, in table order — what the usage string and the
@@ -194,6 +198,7 @@ pub fn run(name: &str) -> Result<Vec<ExpOutput>> {
             "transport" => out.push(transport::run()?),
             "openloop" => out.push(openloop::run()?),
             "workflow" => out.push(workflow::run()?),
+            "storage" => out.push(storage::run()?),
             "fig1" => out.extend(fig1::run()?),
             "fig3" => out.push(fig3::run()?),
             "fig5" => out.push(fig5::run()?),
@@ -232,6 +237,7 @@ mod tests {
         assert_eq!(super::canonical("transport"), Some("transport"));
         assert_eq!(super::canonical("open_loop"), Some("openloop"));
         assert_eq!(super::canonical("workflows"), Some("workflow"));
+        assert_eq!(super::canonical("storage_tier"), Some("storage"));
         assert_eq!(super::canonical("meteor"), None);
     }
 

@@ -1,0 +1,294 @@
+//! Storage-tier dual-path study (`concur repro storage`): batch latency
+//! and reload-vs-recompute traffic across storage bandwidth, cache
+//! pressure, and the three [`DualPathMode`] policies.
+//!
+//! Not a paper artifact — this opens the capacity-tier axis the ROADMAP
+//! calls for.  Every cell runs the same ReAct fleet on one Qwen3-class
+//! TP2 replica with offload eviction, a deliberately small CPU tier (so
+//! demotions reach NVMe at sim scale), and a storage tier whose link
+//! bandwidth is the sweep axis:
+//!
+//! * `always-reload`    — HiCache extended down-stack: every
+//!   storage-resident prefix is read back, however slow the link;
+//! * `always-recompute` — the storage tier is write-only: missing
+//!   prefixes are re-prefilled, paying the quadratic attention term
+//!   however idle the link is;
+//! * `dual-path`        — per-request argmin of modeled storage-read
+//!   time vs modeled prefill time for the missing span.
+//!
+//! The question the grid answers: is a *per-request* decision worth it,
+//! or does one pure policy dominate?  On a congested or slow link the
+//! reload estimate inflates with queue depth, so dual-path degrades
+//! into recompute; on a fast idle link it degrades into reload; in
+//! between it mixes — and should sit at or below both pure policies.
+//! `tests/storage_integration.rs` pins the scaled-down claim.
+//!
+//! The sweep also writes `BENCH_storage.json` (override the path with
+//! `BENCH_STORAGE_PATH`) so the nightly CI job can archive the policy
+//! comparison next to the other bench artifacts.
+
+use std::collections::BTreeMap;
+
+use crate::config::presets;
+use crate::config::{
+    DualPathMode, EngineConfig, EvictionMode, JobConfig, SchedulerKind, StorageTierConfig,
+    TopologyConfig,
+};
+use crate::core::json::Value;
+use crate::core::Result;
+use crate::driver::RunResult;
+use crate::metrics::{Phase, Table};
+
+use super::{run_systems, ExpOutput};
+
+/// Reload policies compared in every cell, in table order.
+pub const POLICIES: [DualPathMode; 3] = [
+    DualPathMode::AlwaysReload,
+    DualPathMode::AlwaysRecompute,
+    DualPathMode::DualPath,
+];
+
+/// Storage-link bandwidth levels: `(label, GB/s)`.  `slow` is a single
+/// saturated QLC drive, `nvme` one enterprise NVMe, `fast` a striped
+/// array — wide enough to cross the reload/recompute break-even.
+pub const BANDWIDTHS: [(&str, f64); 3] = [("slow", 0.8), ("nvme", 6.0), ("fast", 32.0)];
+
+/// Cache-pressure levels: `(label, fleet size)` against one TP2 pool.
+pub const PRESSURES: [(&str, usize); 2] = [("light", 24), ("heavy", 48)];
+
+/// CPU-tier cap for every cell, in tokens.  The stock cap derives from
+/// 2 TB of host DRAM per node (~7.6M tokens for Qwen3-32B) — no
+/// sim-scale fleet fills that, so the middle tier is squeezed until
+/// offloaded prefixes genuinely spill to storage.
+pub const CPU_TIER_TOKENS: u64 = 48_000;
+
+/// One grid cell: a (policy, bandwidth, pressure) triple and its run.
+pub struct StorageCell {
+    pub policy: DualPathMode,
+    pub bandwidth: &'static str,
+    pub pressure: &'static str,
+    pub result: RunResult,
+}
+
+/// The repro-standard job for one cell: a ReAct fleet on a single
+/// Qwen3-class TP2 replica with offload eviction, a squeezed CPU tier,
+/// and the storage tier on at the cell's link bandwidth.
+pub fn base_job(policy: DualPathMode, bandwidth_gbps: f64, n_agents: usize) -> JobConfig {
+    JobConfig {
+        cluster: presets::qwen3_cluster(2),
+        engine: EngineConfig {
+            eviction: EvictionMode::Offload,
+            storage_tier: StorageTierConfig {
+                bandwidth_gbps,
+                cpu_tier_tokens: CPU_TIER_TOKENS,
+                ..StorageTierConfig::on()
+            },
+            dual_path: policy,
+            ..EngineConfig::default()
+        },
+        workload: presets::qwen3_workload(n_agents),
+        // No admission control: isolates the reload-policy effect (AIMD
+        // would throttle the fleet until the pressure axis flattens).
+        scheduler: SchedulerKind::Uncontrolled,
+        topology: TopologyConfig::default(),
+    }
+}
+
+/// Run the whole grid, fanned out across cores.
+pub fn run_sweep() -> Result<Vec<StorageCell>> {
+    let mut labels = Vec::new();
+    let mut jobs = Vec::new();
+    for &policy in &POLICIES {
+        for &(bandwidth, gbps) in &BANDWIDTHS {
+            for &(pressure, n_agents) in &PRESSURES {
+                labels.push((policy, bandwidth, pressure));
+                jobs.push(base_job(policy, gbps, n_agents));
+            }
+        }
+    }
+    Ok(labels
+        .into_iter()
+        .zip(run_systems(jobs)?)
+        .map(|((policy, bandwidth, pressure), result)| StorageCell {
+            policy,
+            bandwidth,
+            pressure,
+            result,
+        })
+        .collect())
+}
+
+/// Machine-readable sweep dump (`BENCH_storage.json`): one entry per
+/// cell, keyed `{policy}/{bandwidth}/{pressure}`.
+pub fn bench_json(cells: &[StorageCell]) -> Value {
+    let mut map: BTreeMap<String, Value> = BTreeMap::new();
+    for c in cells {
+        let n = &c.result.counters;
+        let mut entry: BTreeMap<String, Value> = BTreeMap::new();
+        entry.insert("latency_s".into(), Value::Number(c.result.total_time.as_secs_f64()));
+        entry.insert("hit_rate".into(), Value::Number(c.result.hit_rate));
+        entry.insert("throughput_tps".into(), Value::Number(c.result.throughput_tps));
+        entry.insert(
+            "storage_reload_frac".into(),
+            Value::Number(c.result.breakdown.fraction(Phase::StorageReload)),
+        );
+        entry.insert(
+            "recompute_frac".into(),
+            Value::Number(c.result.breakdown.fraction(Phase::Recompute)),
+        );
+        entry
+            .insert("demoted_tokens".into(), Value::Number(n.storage_demoted_tokens as f64));
+        entry.insert(
+            "reloaded_tokens".into(),
+            Value::Number(n.storage_reloaded_tokens as f64),
+        );
+        entry.insert(
+            "recomputed_tokens".into(),
+            Value::Number(n.storage_recomputed_tokens as f64),
+        );
+        entry
+            .insert("evicted_tokens".into(), Value::Number(n.storage_evicted_tokens as f64));
+        map.insert(
+            format!("{}/{}/{}", c.policy.name(), c.bandwidth, c.pressure),
+            Value::Object(entry),
+        );
+    }
+    Value::Object(map)
+}
+
+fn cell<'a>(
+    cells: &'a [StorageCell],
+    policy: DualPathMode,
+    bandwidth: &str,
+    pressure: &str,
+) -> &'a RunResult {
+    &cells
+        .iter()
+        .find(|c| c.policy == policy && c.bandwidth == bandwidth && c.pressure == pressure)
+        .expect("complete grid")
+        .result
+}
+
+/// Render the grid as a repro table with dual-path-vs-pure notes.
+pub fn output_from(cells: &[StorageCell]) -> ExpOutput {
+    let mut table = Table::new(
+        "Storage tier: batch latency across reload policy x storage link \
+         bandwidth x cache pressure (squeezed CPU tier)",
+    )
+    .header(&[
+        "bw/pressure",
+        "reload s",
+        "recomp s",
+        "dual s",
+        "dual reload kt",
+        "dual recomp kt",
+    ]);
+
+    for &(bandwidth, _) in &BANDWIDTHS {
+        for &(pressure, _) in &PRESSURES {
+            let rl = cell(cells, DualPathMode::AlwaysReload, bandwidth, pressure);
+            let rc = cell(cells, DualPathMode::AlwaysRecompute, bandwidth, pressure);
+            let dp = cell(cells, DualPathMode::DualPath, bandwidth, pressure);
+            table.row(vec![
+                format!("{bandwidth}/{pressure}"),
+                format!("{:.0}", rl.total_time.as_secs_f64()),
+                format!("{:.0}", rc.total_time.as_secs_f64()),
+                format!("{:.0}", dp.total_time.as_secs_f64()),
+                format!("{:.0}", dp.counters.storage_reloaded_tokens as f64 / 1e3),
+                format!("{:.0}", dp.counters.storage_recomputed_tokens as f64 / 1e3),
+            ]);
+        }
+    }
+
+    // Where does the per-request decision beat both pure policies?
+    let mut wins = Vec::new();
+    let mut never_worse = true;
+    for &(bandwidth, _) in &BANDWIDTHS {
+        for &(pressure, _) in &PRESSURES {
+            let rl = cell(cells, DualPathMode::AlwaysReload, bandwidth, pressure).total_time;
+            let rc = cell(cells, DualPathMode::AlwaysRecompute, bandwidth, pressure).total_time;
+            let dp = cell(cells, DualPathMode::DualPath, bandwidth, pressure).total_time;
+            if dp < rl && dp < rc {
+                wins.push(format!("{bandwidth}/{pressure}"));
+            }
+            if dp > rl.min(rc) {
+                never_worse = false;
+            }
+        }
+    }
+    let mut notes = vec![if wins.is_empty() {
+        "dual-path tracks the better pure policy in every cell (no strict win)".to_string()
+    } else {
+        format!("dual-path strictly beats both pure policies at: {}", wins.join(", "))
+    }];
+    notes.push(if never_worse {
+        "dual-path is never slower than the better pure policy".into()
+    } else {
+        "dual-path trails the better pure policy in at least one cell \
+         (estimate error under congestion)"
+            .into()
+    });
+    notes.push(format!(
+        "CPU tier squeezed to {}k tokens so offloads spill to storage at sim scale",
+        CPU_TIER_TOKENS / 1_000
+    ));
+
+    ExpOutput {
+        name: "storage",
+        title: "Storage tier: reload policy x link bandwidth x pressure".into(),
+        table,
+        figures: vec![],
+        notes,
+    }
+}
+
+/// Run the study and write `BENCH_storage.json` (path overridable via
+/// `BENCH_STORAGE_PATH`).
+pub fn run() -> Result<ExpOutput> {
+    let cells = run_sweep()?;
+    let path =
+        std::env::var("BENCH_STORAGE_PATH").unwrap_or_else(|_| "BENCH_storage.json".to_string());
+    std::fs::write(&path, format!("{}\n", bench_json(&cells).to_string_pretty()))?;
+    let mut out = output_from(&cells);
+    out.notes.push(format!("machine-readable results written to {path}"));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_jobs_validate_for_every_cell() {
+        for &policy in &POLICIES {
+            for &(bandwidth, gbps) in &BANDWIDTHS {
+                for &(pressure, n_agents) in &PRESSURES {
+                    let job = base_job(policy, gbps, n_agents);
+                    job.validate().unwrap_or_else(|e| {
+                        panic!("{}/{bandwidth}/{pressure}: {e}", policy.name())
+                    });
+                    assert!(job.engine.storage_tier.enabled);
+                    assert_eq!(job.engine.eviction, EvictionMode::Offload);
+                    assert_eq!(job.engine.dual_path, policy);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_tier_cap_is_tighter_than_the_derived_one() {
+        // The squeeze only means anything if it undercuts what the
+        // cluster spec would derive (2 TB of host DRAM per node).
+        let job = base_job(DualPathMode::DualPath, 6.0, 24);
+        assert!(CPU_TIER_TOKENS < job.cluster.cpu_tier_tokens());
+        // ...and the pool itself must outsize the CPU cap, or nothing
+        // would ever offload past it.
+        assert!(job.cluster.kv_pool_tokens() > CPU_TIER_TOKENS);
+    }
+
+    #[test]
+    fn bandwidth_axis_brackets_the_break_even() {
+        let (lo, hi) = (BANDWIDTHS[0].1, BANDWIDTHS[BANDWIDTHS.len() - 1].1);
+        assert!(lo < 6.0 && hi > 6.0, "axis must straddle one-NVMe bandwidth");
+    }
+}

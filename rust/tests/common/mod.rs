@@ -2,8 +2,8 @@
 //! each test binary).
 //!
 //! Lives here so `cluster_integration.rs`, `transport_integration.rs`,
-//! `openloop_integration.rs` and `workflow_integration.rs` stop
-//! copy-pasting the same three things:
+//! `openloop_integration.rs`, `workflow_integration.rs` and
+//! `storage_integration.rs` stop copy-pasting the same three things:
 //!
 //! * [`reference`] / [`reference_run`] — the pre-refactor single-engine
 //!   driver, embedded verbatim as the behavioral oracle every

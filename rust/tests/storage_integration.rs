@@ -1,0 +1,183 @@
+//! Storage-tier integration tests.
+//!
+//! The load-bearing properties: (1) differential — with
+//! `storage_tier.enabled = false` (the default), every other storage
+//! knob cranked and `dual_path` set to anything, the engine is
+//! bit-identical to the pre-storage oracle at N=1 and the pre-storage
+//! cluster at N=4; (2) replay — a storage-on run is deterministic;
+//! (3) the acceptance claim — on a pressured grid the per-request
+//! dual-path policy strictly beats *both* pure policies (always-reload
+//! and always-recompute) on batch latency in at least one cell.
+//!
+//! (The extent map's internal invariants and the argmin/crossover
+//! property of the decision rule are pinned in `engine/storage.rs`
+//! unit tests.)
+
+mod common;
+
+use common::{assert_bit_identical, random_jobs, reference_run};
+use concur::config::{DualPathMode, EvictionMode, JobConfig, RouterKind, StorageTierConfig};
+use concur::core::Micros;
+use concur::driver::{run_job, RunResult};
+use concur::metrics::Phase;
+use concur::repro::run_systems;
+use concur::repro::storage::{base_job, POLICIES};
+
+/// Crank every dormant knob: `enabled` stays false, everything else is
+/// set to values that would visibly change behavior if they leaked.
+fn cranked_dormant() -> StorageTierConfig {
+    StorageTierConfig {
+        enabled: false,
+        capacity_tokens: 1,
+        bandwidth_gbps: 0.000_1,
+        cpu_tier_tokens: 1,
+    }
+}
+
+/// PROPERTY (differential, N=1): with the storage tier disabled the
+/// engine is bit-identical to the embedded pre-storage oracle, whatever
+/// the dormant knobs or the (equally dormant) `dual_path` mode say.
+/// Any storage bookkeeping leaking into the two-tier path — a demotion
+/// sink, a CPU-cap override, an extent probe on admit — breaks this
+/// immediately.
+#[test]
+fn n1_storage_off_is_bit_identical_to_the_oracle() {
+    for (i, base) in random_jobs(6).iter().enumerate() {
+        let want = reference_run(base);
+        for mode in [
+            DualPathMode::AlwaysReload,
+            DualPathMode::AlwaysRecompute,
+            DualPathMode::DualPath,
+        ] {
+            let mut job = base.clone();
+            job.engine.storage_tier = cranked_dormant();
+            job.engine.dual_path = mode;
+            let got = run_job(&job).unwrap();
+            assert_bit_identical(&got, &want, &format!("job {i} dormant storage {mode:?}"));
+            assert_eq!(
+                got.breakdown.get(Phase::StorageReload),
+                Micros::ZERO,
+                "job {i}: no storage-reload time without a storage tier"
+            );
+        }
+    }
+}
+
+fn n4_job() -> JobConfig {
+    let mut job = common::small_cluster_job(24, 4, RouterKind::CacheAffinity);
+    job.engine.eviction = EvictionMode::Offload;
+    job
+}
+
+/// PROPERTY (differential, N=4): same invisibility through the sharded
+/// cluster loop — a dormant storage tier on every replica changes
+/// nothing about a 4-replica run.
+#[test]
+fn n4_storage_off_machinery_is_invisible() {
+    let plain = n4_job();
+    let want = run_job(&plain).unwrap();
+    let mut dormant = plain.clone();
+    dormant.engine.storage_tier = cranked_dormant();
+    dormant.engine.dual_path = DualPathMode::DualPath;
+    let got = run_job(&dormant).unwrap();
+    assert_bit_identical(&got, &want, "N=4 dormant storage");
+    assert_eq!(got.breakdown.get(Phase::StorageReload), Micros::ZERO);
+    assert_eq!(got.counters.storage_demoted_tokens, 0);
+    assert_eq!(got.counters.storage_reloaded_tokens, 0);
+    assert_eq!(got.counters.storage_recomputed_tokens, 0);
+    assert_eq!(got.counters.storage_evicted_tokens, 0);
+}
+
+/// PROPERTY (replay): a storage-on run — demotions, reloads and the
+/// per-request decision included — replays bit-identically, and the
+/// tier genuinely engages (the identity is not vacuous).
+#[test]
+fn storage_on_runs_replay_bit_identically() {
+    let job = base_job(DualPathMode::DualPath, 3.0, 12);
+    let a = run_job(&job).unwrap();
+    let b = run_job(&job).unwrap();
+    assert_bit_identical(&a, &b, "storage-on replay");
+    assert!(
+        a.counters.storage_demoted_tokens > 0,
+        "the replay cell must actually demote to storage"
+    );
+}
+
+/// ACCEPTANCE (tentpole, scaled down from `concur repro storage`): on a
+/// pressured mini-grid — two storage-link bandwidths bracketing the
+/// reload/recompute break-even, one fleet size against one TP2 pool
+/// with a squeezed CPU tier — the per-request dual-path policy strictly
+/// beats BOTH pure policies on batch latency in at least one cell.
+/// Within a cell the fleets are identical across policies, so any
+/// latency gap is the reload decision's doing.
+#[test]
+fn dual_path_strictly_beats_both_pure_policies_somewhere() {
+    const BANDWIDTHS: [f64; 3] = [0.8, 3.0, 6.0];
+    const N_AGENTS: usize = 24;
+
+    let mut labels = Vec::new();
+    let mut jobs = Vec::new();
+    for &gbps in &BANDWIDTHS {
+        for &policy in &POLICIES {
+            labels.push((gbps, policy));
+            jobs.push(base_job(policy, gbps, N_AGENTS));
+        }
+    }
+    let results = run_systems(jobs).unwrap();
+    fn cell<'a>(
+        labels: &[(f64, DualPathMode)],
+        results: &'a [RunResult],
+        gbps: f64,
+        policy: DualPathMode,
+    ) -> &'a RunResult {
+        let i = labels
+            .iter()
+            .position(|&(g, p)| g == gbps && p == policy)
+            .expect("complete grid");
+        &results[i]
+    }
+
+    let mut strict_wins = 0;
+    let mut dual_reloaded = 0u64;
+    let mut dual_recomputed = 0u64;
+    for &gbps in &BANDWIDTHS {
+        let rl = cell(&labels, &results, gbps, DualPathMode::AlwaysReload);
+        let rc = cell(&labels, &results, gbps, DualPathMode::AlwaysRecompute);
+        let dp = cell(&labels, &results, gbps, DualPathMode::DualPath);
+        for (name, r) in [("always-reload", rl), ("always-recompute", rc), ("dual-path", dp)] {
+            assert_eq!(
+                r.agents_finished, N_AGENTS,
+                "{gbps} GB/s {name}: every policy must finish the fleet"
+            );
+            assert!(
+                r.counters.storage_demoted_tokens > 0,
+                "{gbps} GB/s {name}: the cell must demote to storage — \
+                 without demotions there is no decision to compare"
+            );
+        }
+        // The pure policies genuinely take their path.
+        assert_eq!(rl.counters.storage_recomputed_tokens, 0, "{gbps}: reload never recomputes");
+        assert_eq!(rc.counters.storage_reloaded_tokens, 0, "{gbps}: recompute never reloads");
+        dual_reloaded += dp.counters.storage_reloaded_tokens;
+        dual_recomputed += dp.counters.storage_recomputed_tokens;
+        if dp.total_time < rl.total_time && dp.total_time < rc.total_time {
+            strict_wins += 1;
+        }
+    }
+    // Across the bracket the decision rule must actually mix paths —
+    // if it collapses to one pure policy everywhere, the strict win
+    // below would be luck, not policy.
+    assert!(
+        dual_reloaded > 0 && dual_recomputed > 0,
+        "dual-path never mixed (reloaded {dual_reloaded}, recomputed {dual_recomputed})"
+    );
+    assert!(
+        strict_wins > 0,
+        "dual-path beat both pure policies in no cell: {:?}",
+        labels
+            .iter()
+            .zip(&results)
+            .map(|(&(g, p), r)| format!("{g}/{}={}", p.name(), r.total_time))
+            .collect::<Vec<_>>()
+    );
+}
