@@ -243,6 +243,31 @@ fn main() {
         assert!(rs.iter().all(|r| r.is_ok()));
     });
 
+    // --- self-profiler derived metrics -------------------------------------
+    // Dedicated profiled runs: the profiler is process-global and
+    // wall-clock, so these run alone (nothing in parallel), bracketed by
+    // reset/snapshot.  The three derived metrics are the ones the perf
+    // gate tracks: radix match throughput (floor), admission latency and
+    // clock-stop cost (ceilings).
+    {
+        use concur::metrics::profiler::{self, Section};
+        profiler::reset();
+        profiler::set_enabled(true);
+        let r = run_job(&table1_job()).unwrap();
+        assert_eq!(r.agents_finished, g.job_agents);
+        // A 4-replica run of the same job so the cluster clock-advance
+        // section sees real boundary/heap churn, not the 1-replica
+        // degenerate case.
+        let mut cj = table1_job();
+        cj.topology.replicas = 4;
+        run_job(&cj).unwrap();
+        profiler::set_enabled(false);
+        let snap = profiler::snapshot();
+        rec.record("radix/match_tokens_per_s", snap.get(Section::RadixMatch).units_per_s());
+        rec.record("engine/admit_ns", snap.get(Section::Admit).ns_per_call());
+        rec.record("cluster/clock_stop_ns", snap.get(Section::ClockAdvance).ns_per_call());
+    }
+
     let json_path = std::env::var("BENCH_JSON_PATH")
         .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     let json_path = std::path::PathBuf::from(json_path);

@@ -1,0 +1,223 @@
+//! Event-heap clock-stop index for the fleet loop.
+//!
+//! Step 5 of `run_sharded_with_workers` advances the simulated clock to
+//! the earliest pending event.  The candidates — per-replica iteration
+//! boundaries, the scripted fault cursor, the stochastic fault sampler,
+//! the arrival cursor, and the transport — used to be rebuilt by linear
+//! scans at every stop (`O(replicas)` per stop, dominated by the
+//! `inflight.iter().min()` boundary scan).  [`ClockStops`] replaces the
+//! scans with a lazy-deletion [`BinaryHeap`]: each candidate *slot* pushes
+//! a heap entry when its instant changes, stale entries are dropped on
+//! pop, and the earliest stop is an `O(log n)` peek.
+//!
+//! Entries are keyed `(Micros, source-rank, generation)`.  The rank
+//! orders ties fault-source-first, then the fixed candidate order the old
+//! array literal had — tie order among equal instants can never change
+//! the *minimum value*, so the heap's answer is bit-identical to the
+//! replaced `[..].into_iter().flatten().min()`; the rank exists so the
+//! heap's internal ordering (and therefore its behaviour under the
+//! differential fuzz test below) is fully deterministic.
+//!
+//! Slot layout: rank 0 = scripted faults, 1 = stochastic sampler,
+//! 2 = arrivals, 3 = transport, `4 + r` = replica `r`'s iteration
+//! boundary.  Singleton slots are re-synced once per stop (`set` no-ops
+//! when the instant is unchanged); boundary slots are maintained at their
+//! three mutation sites (iteration start, landing, replica kill).
+
+use crate::core::Micros;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Fixed singleton slots (see module docs for the full layout).
+pub const SLOT_FAULT: usize = 0;
+pub const SLOT_SAMPLER: usize = 1;
+pub const SLOT_ARRIVAL: usize = 2;
+pub const SLOT_TRANSPORT: usize = 3;
+const SINGLETON_SLOTS: usize = 4;
+
+#[derive(Clone, Copy, Default)]
+struct Slot {
+    at: Option<Micros>,
+    /// Bumped on every change; heap entries carrying an older generation
+    /// (or a cleared slot's instant) are stale and dropped on pop.
+    gen: u64,
+}
+
+/// Lazy-deletion min-heap over clock-stop candidate slots.
+pub struct ClockStops {
+    heap: BinaryHeap<Reverse<(Micros, usize, u64)>>,
+    slots: Vec<Slot>,
+    /// Boundary slots currently set — `O(1)` "is the fleet idle?".
+    live_boundaries: usize,
+}
+
+impl ClockStops {
+    /// Index for `replicas` boundary slots plus the four singletons.
+    pub fn new(replicas: usize) -> ClockStops {
+        ClockStops {
+            heap: BinaryHeap::with_capacity(SINGLETON_SLOTS + replicas),
+            slots: vec![Slot::default(); SINGLETON_SLOTS + replicas],
+            live_boundaries: 0,
+        }
+    }
+
+    /// Set or clear a singleton slot (`SLOT_FAULT` … `SLOT_TRANSPORT`).
+    /// No-ops when the instant is unchanged, so per-stop re-syncs of slow-
+    /// moving sources cost one compare.
+    pub fn set(&mut self, slot: usize, at: Option<Micros>) {
+        debug_assert!(slot < SINGLETON_SLOTS, "boundary slots use set_boundary");
+        self.update(slot, at);
+    }
+
+    /// Set replica `r`'s iteration boundary.
+    pub fn set_boundary(&mut self, r: usize, at: Micros) {
+        let slot = SINGLETON_SLOTS + r;
+        if self.slots[slot].at.is_none() {
+            self.live_boundaries += 1;
+        }
+        self.update(slot, Some(at));
+    }
+
+    /// Clear replica `r`'s iteration boundary (landing or kill).  No-ops
+    /// when already clear (a kill of an idle replica).
+    pub fn clear_boundary(&mut self, r: usize) {
+        let slot = SINGLETON_SLOTS + r;
+        if self.slots[slot].at.is_some() {
+            self.live_boundaries -= 1;
+            self.update(slot, None);
+        }
+    }
+
+    /// Any replica iteration in flight?  (The old loop's
+    /// `inflight.iter().flatten().min().is_none()` idleness test.)
+    pub fn has_boundary(&self) -> bool {
+        self.live_boundaries > 0
+    }
+
+    fn update(&mut self, slot: usize, at: Option<Micros>) {
+        let s = &mut self.slots[slot];
+        if s.at == at {
+            return;
+        }
+        s.at = at;
+        s.gen += 1;
+        if let Some(t) = at {
+            self.heap.push(Reverse((t, slot, s.gen)));
+        }
+    }
+
+    /// Earliest live candidate instant, or `None` when every slot is
+    /// clear.  Amortised `O(log n)`: each pushed entry is popped at most
+    /// once, lazily, when it has gone stale.
+    pub fn earliest(&mut self) -> Option<Micros> {
+        while let Some(&Reverse((at, slot, gen))) = self.heap.peek() {
+            let s = self.slots[slot];
+            if s.gen == gen && s.at == Some(at) {
+                return Some(at);
+            }
+            self.heap.pop();
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Rng;
+
+    #[test]
+    fn empty_has_no_stop() {
+        let mut c = ClockStops::new(4);
+        assert_eq!(c.earliest(), None);
+        assert!(!c.has_boundary());
+    }
+
+    #[test]
+    fn singleton_set_update_clear() {
+        let mut c = ClockStops::new(0);
+        c.set(SLOT_FAULT, Some(Micros(50)));
+        c.set(SLOT_ARRIVAL, Some(Micros(30)));
+        assert_eq!(c.earliest(), Some(Micros(30)));
+        // Move the arrival cursor later: the stale entry must not win.
+        c.set(SLOT_ARRIVAL, Some(Micros(90)));
+        assert_eq!(c.earliest(), Some(Micros(50)));
+        c.set(SLOT_FAULT, None);
+        assert_eq!(c.earliest(), Some(Micros(90)));
+        c.set(SLOT_ARRIVAL, None);
+        assert_eq!(c.earliest(), None);
+    }
+
+    #[test]
+    fn unchanged_set_is_a_noop() {
+        let mut c = ClockStops::new(0);
+        c.set(SLOT_TRANSPORT, Some(Micros(7)));
+        let gen_before = c.slots[SLOT_TRANSPORT].gen;
+        for _ in 0..100 {
+            c.set(SLOT_TRANSPORT, Some(Micros(7)));
+        }
+        assert_eq!(c.slots[SLOT_TRANSPORT].gen, gen_before);
+        assert_eq!(c.heap.len(), 1);
+    }
+
+    #[test]
+    fn boundaries_track_idleness() {
+        let mut c = ClockStops::new(3);
+        assert!(!c.has_boundary());
+        c.set_boundary(1, Micros(100));
+        c.set_boundary(2, Micros(40));
+        assert!(c.has_boundary());
+        assert_eq!(c.earliest(), Some(Micros(40)));
+        c.clear_boundary(2);
+        assert_eq!(c.earliest(), Some(Micros(100)));
+        // Kill of an already-idle replica: clearing twice is safe.
+        c.clear_boundary(2);
+        c.clear_boundary(1);
+        assert!(!c.has_boundary());
+        assert_eq!(c.earliest(), None);
+    }
+
+    #[test]
+    fn rescheduling_same_slot_repeatedly() {
+        let mut c = ClockStops::new(1);
+        for t in (1..=200u64).rev() {
+            c.set_boundary(0, Micros(t));
+        }
+        assert_eq!(c.earliest(), Some(Micros(1)));
+        c.set_boundary(0, Micros(500));
+        assert_eq!(c.earliest(), Some(Micros(500)));
+    }
+
+    /// Differential fuzz: random set/clear traffic against a naive
+    /// min-over-slots model, checking `earliest`/`has_boundary` after
+    /// every op.  Seeded via the crate RNG — deterministic in CI.
+    #[test]
+    fn differential_fuzz_vs_naive_min() {
+        let replicas = 6;
+        let slots = SINGLETON_SLOTS + replicas;
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(0xc10c + seed);
+            let mut c = ClockStops::new(replicas);
+            let mut model: Vec<Option<Micros>> = vec![None; slots];
+            for _ in 0..4000 {
+                let slot = rng.gen_range(0, slots as u64) as usize;
+                let clear = rng.gen_range(0, 4) == 0;
+                let at = if clear { None } else { Some(Micros(rng.gen_range(0, 1000))) };
+                if slot < SINGLETON_SLOTS {
+                    c.set(slot, at);
+                } else {
+                    match at {
+                        Some(t) => c.set_boundary(slot - SINGLETON_SLOTS, t),
+                        None => c.clear_boundary(slot - SINGLETON_SLOTS),
+                    }
+                }
+                model[slot] = at;
+                assert_eq!(c.earliest(), model.iter().flatten().min().copied());
+                assert_eq!(
+                    c.has_boundary(),
+                    model[SINGLETON_SLOTS..].iter().any(|s| s.is_some())
+                );
+            }
+        }
+    }
+}

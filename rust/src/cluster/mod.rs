@@ -104,6 +104,7 @@
 //! is untouched.  [`run_sharded_with_workers`] takes the worker count
 //! explicitly (tests use it to avoid racing on the environment).
 
+pub mod clock;
 pub mod prefix;
 pub mod router;
 pub mod transport;
@@ -128,7 +129,7 @@ use crate::core::{AgentId, ConcurError, Micros, RequestId, Result, Rng};
 use crate::costmodel::CostModel;
 use crate::driver::{AgentOutcome, RunResult};
 use crate::engine::{EngineCounters, EngineSignals, FinishedReq, KvLifetimePolicy, SimEngine};
-use crate::metrics::{Breakdown, Histogram, LifetimeRatio, Phase, TimeSeries};
+use crate::metrics::{profiler, Breakdown, Histogram, LifetimeRatio, Phase, TimeSeries};
 use crate::sim::{EventQueue, SimClock};
 
 /// Fault/drain/migration telemetry for one run (all zero when the fleet
@@ -228,6 +229,12 @@ struct FaultSampler {
     mttr_s: f64,
     drain_share: f64,
     per: Vec<SampledReplica>,
+    /// Cached `min` over the per-replica pending instants, rebuilt lazily
+    /// after [`next_due`](FaultSampler::next_due) advances any stream —
+    /// [`next_event_at`](FaultSampler::next_event_at) sits on the
+    /// clock-stop hot path and must not rescan every stream per stop.
+    earliest: Option<Micros>,
+    dirty: bool,
 }
 
 struct SampledReplica {
@@ -252,13 +259,20 @@ impl FaultSampler {
             mttr_s: cfg.mttr_s,
             drain_share: cfg.drain_share,
             per,
+            earliest: None,
+            dirty: true,
         }
     }
 
     /// Earliest pending instant across all replica streams (for the
-    /// clock-advance candidates).
-    fn next_event_at(&self) -> Option<Micros> {
-        self.per.iter().map(|p| p.next_at).min()
+    /// clock-advance candidates).  O(1) unless a stream advanced since
+    /// the last call.
+    fn next_event_at(&mut self) -> Option<Micros> {
+        if self.dirty {
+            self.earliest = self.per.iter().map(|p| p.next_at).min();
+            self.dirty = false;
+        }
+        self.earliest
     }
 
     /// Pop replica `r`'s next applicable event at or before `now`, or
@@ -272,6 +286,11 @@ impl FaultSampler {
         state: &[ReplicaState],
         fstats: &mut FaultStats,
     ) -> Option<FaultKind> {
+        if self.per[r].next_at > now {
+            return None;
+        }
+        // Every path below advances this stream's pending instant.
+        self.dirty = true;
         loop {
             let p = &mut self.per[r];
             if p.next_at > now {
@@ -532,6 +551,7 @@ fn apply_fault_event(
     footprint: &mut [u64],
     slots: &mut SlotManager,
     inflight: &mut [Option<InFlight>],
+    stops: &mut clock::ClockStops,
     stagnant: &mut [u32],
     tier: &mut Option<SharedPrefixTier>,
     transport: &mut Option<Transport>,
@@ -543,6 +563,7 @@ fn apply_fault_event(
         FaultKind::Kill => {
             // The iteration in flight dies with the replica.
             inflight[r] = None;
+            stops.clear_boundary(r);
             stagnant[r] = 0;
             for (i, slot) in assignment.iter_mut().enumerate() {
                 if *slot != Some(r) {
@@ -824,6 +845,9 @@ pub fn run_sharded_with_workers(
     step_workers: usize,
 ) -> Result<RunResult> {
     assert!(!engines.is_empty(), "cluster needs at least one replica");
+    // Baseline for the run's profile delta (all-zero while the profiler
+    // is disabled, so the subtraction is free in the common case).
+    let prof_start = profiler::snapshot();
     let n = engines.len();
     faults.validate(n)?;
     open_loop.validate()?;
@@ -931,6 +955,10 @@ pub fn run_sharded_with_workers(
     let mut engine_steps = 0u64;
     let mut stagnant: Vec<u32> = vec![0; n];
     let mut inflight: Vec<Option<InFlight>> = (0..n).map(|_| None).collect();
+    // Event-heap index over the clock-stop candidates (see `clock`):
+    // boundary slots maintained at the three inflight mutation sites
+    // below, singleton slots re-synced once per stop in step 5.
+    let mut stops = clock::ClockStops::new(n);
     // Scratch for per-decision load snapshots (reused, never reallocated).
     let mut loads: Vec<ReplicaLoad> = Vec::with_capacity(n);
 
@@ -999,25 +1027,33 @@ pub fn run_sharded_with_workers(
             next_fault += 1;
             apply_fault_event(
                 ev.kind, ev.replica, now, engines, router, &mut state, &mut fleet,
-                &mut assignment, &mut footprint, &mut slots, &mut inflight, &mut stagnant,
-                &mut tier, &mut transport, &mut loads, &mut fstats, &mut handoff_time,
+                &mut assignment, &mut footprint, &mut slots, &mut inflight, &mut stops,
+                &mut stagnant, &mut tier, &mut transport, &mut loads, &mut fstats,
+                &mut handoff_time,
             );
             alive_series.record(now, admissible_count(&state) as f64);
         }
 
         // 0b. Stochastic faults due now, replicas in index order (after
         //     the script: scripted events win same-instant ties, and the
-        //     sampler's viability check sees their outcome).
+        //     sampler's viability check sees their outcome).  Gated on the
+        //     cached earliest instant: when nothing is due, every
+        //     `next_due` call would be a pure no-op, so the whole
+        //     per-replica sweep is skipped — replica order is only
+        //     load-bearing among *due* events, which still process in
+        //     index order.
         if let Some(fs) = sampler.as_mut() {
-            for r in 0..n {
-                while let Some(kind) = fs.next_due(r, now, &state, &mut fstats) {
-                    apply_fault_event(
-                        kind, r, now, engines, router, &mut state, &mut fleet,
-                        &mut assignment, &mut footprint, &mut slots, &mut inflight,
-                        &mut stagnant, &mut tier, &mut transport, &mut loads, &mut fstats,
-                        &mut handoff_time,
-                    );
-                    alive_series.record(now, admissible_count(&state) as f64);
+            if fs.next_event_at().is_some_and(|t| t <= now) {
+                for r in 0..n {
+                    while let Some(kind) = fs.next_due(r, now, &state, &mut fstats) {
+                        apply_fault_event(
+                            kind, r, now, engines, router, &mut state, &mut fleet,
+                            &mut assignment, &mut footprint, &mut slots, &mut inflight,
+                            &mut stops, &mut stagnant, &mut tier, &mut transport, &mut loads,
+                            &mut fstats, &mut handoff_time,
+                        );
+                        alive_series.record(now, admissible_count(&state) as f64);
+                    }
                 }
             }
         }
@@ -1025,11 +1061,12 @@ pub fn run_sharded_with_workers(
         // 1. Land replica iterations completing now: apply finished
         //    requests, then give the controller one observation per
         //    completed iteration.
-        for slot in inflight.iter_mut() {
+        for (r, slot) in inflight.iter_mut().enumerate() {
             if !slot.as_ref().is_some_and(|f| f.done_at <= now) {
                 continue;
             }
             let fin = slot.take().expect("checked above");
+            stops.clear_boundary(r);
             debug_assert_eq!(fin.done_at, now, "completion skipped by the clock");
             for f in fin.finished {
                 let i = f.agent.0 as usize;
@@ -1336,10 +1373,9 @@ pub fn run_sharded_with_workers(
                     )));
                 }
             }
-            inflight[r] = Some(InFlight {
-                done_at: now + Micros(out.duration.0.max(1)),
-                finished: out.finished,
-            });
+            let done_at = now + Micros(out.duration.0.max(1));
+            inflight[r] = Some(InFlight { done_at, finished: out.finished });
+            stops.set_boundary(r, done_at);
         }
 
         // 5. Advance to the earliest of: an iteration boundary, a
@@ -1349,16 +1385,19 @@ pub fn run_sharded_with_workers(
         if finished_agents + terminated_early == agents_total {
             break; // done; trailing fault events and transfers are moot
         }
-        let next_boundary = inflight.iter().flatten().map(|f| f.done_at).min();
-        let next_fault_t = faults.events().get(next_fault).map(|e| e.at);
-        let next_stoch = sampler.as_ref().and_then(|s| s.next_event_at());
-        let next_arr = arrivals.get(next_arrival).map(|e| e.0);
-        let next_xfer = transport.as_ref().and_then(|t| t.next_completion());
-        let idle = next_boundary.is_none();
-        let mut target = [next_boundary, next_fault_t, next_stoch, next_arr, next_xfer]
-            .into_iter()
-            .flatten()
-            .min();
+        // Boundary slots are already current (maintained at their
+        // mutation sites); re-sync the four slow-moving singleton
+        // candidates — each an O(1) compare that no-ops while its cursor
+        // has not moved — then pop the earliest stop off the heap.  The
+        // heap's answer equals the old candidate-array `min` exactly: tie
+        // order among equal instants never changes the minimum value.
+        let _prof = profiler::scope(profiler::Section::ClockAdvance);
+        stops.set(clock::SLOT_FAULT, faults.events().get(next_fault).map(|e| e.at));
+        stops.set(clock::SLOT_SAMPLER, sampler.as_mut().and_then(|s| s.next_event_at()));
+        stops.set(clock::SLOT_ARRIVAL, arrivals.get(next_arrival).map(|e| e.0));
+        stops.set(clock::SLOT_TRANSPORT, transport.as_ref().and_then(|t| t.next_completion()));
+        let idle = !stops.has_boundary();
+        let mut target = stops.earliest();
         if idle {
             if let Some(t) = events.peek_time() {
                 target = Some(target.map_or(t, |x| x.min(t)));
@@ -1445,6 +1484,7 @@ pub fn run_sharded_with_workers(
         ttft,
         step_latency,
         open_loop: olstats,
+        profile: profiler::snapshot().since(&prof_start),
     })
 }
 

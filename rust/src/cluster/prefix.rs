@@ -62,7 +62,7 @@
 
 use crate::cluster::transport::{Transfer, TransferKind, Transport};
 use crate::config::PrefixTierConfig;
-use crate::core::{AgentId, Micros, Token};
+use crate::core::{simd, AgentId, Micros, Token};
 use crate::engine::radix::NodeId;
 use crate::engine::SimEngine;
 
@@ -176,7 +176,7 @@ struct HotPrefix {
 }
 
 fn lcp(a: &[Token], b: &[Token]) -> usize {
-    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+    simd::common_prefix_len(a, b)
 }
 
 /// Is `h` installed — transfer landed, pin live — on every replica that
@@ -357,7 +357,7 @@ impl SharedPrefixTier {
             off += w;
             match self.chunks.iter_mut().find(|c| c.hash == hash) {
                 Some(c) => {
-                    if c.run[c.run.len() - w..] != *chunk {
+                    if simd::common_prefix_len(&c.run[c.run.len() - w..], chunk) != w {
                         continue; // hash collision: not the same content
                     }
                     c.last_seen = now;

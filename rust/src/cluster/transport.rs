@@ -125,6 +125,10 @@ pub struct Transport {
     kv_bytes_per_token: u64,
     /// In-flight delayed transfers, in issue order (ids ascend).
     inflight: Vec<Transfer>,
+    /// Cached `min` over `inflight[..].done` — `next_completion` sits on
+    /// the cluster clock-stop hot path and must not rescan per stop.
+    /// Min-updated on issue, recomputed after removals.
+    earliest_done: Option<Micros>,
     next_id: u64,
     stats: TransportStats,
 }
@@ -136,6 +140,7 @@ impl Transport {
             fabric: PcieLink::new(cfg.fabric_gbps),
             kv_bytes_per_token,
             inflight: Vec::new(),
+            earliest_done: None,
             next_id: 0,
             stats: TransportStats::default(),
             cfg,
@@ -249,18 +254,26 @@ impl Transport {
         let id = self.next_id;
         self.next_id += 1;
         self.inflight.push(Transfer { id, src, dst, tokens, issued: now, done, payload });
+        self.earliest_done = Some(self.earliest_done.map_or(done, |e| e.min(done)));
         (id, done)
     }
 
     /// Earliest in-flight completion (the cluster clock's next transport
-    /// stop), if any.
+    /// stop), if any.  O(1) — maintained across issue/pop/cancel.
     pub fn next_completion(&self) -> Option<Micros> {
-        self.inflight.iter().map(|t| t.done).min()
+        self.earliest_done
+    }
+
+    fn recompute_earliest(&mut self) {
+        self.earliest_done = self.inflight.iter().map(|t| t.done).min();
     }
 
     /// Remove and return every transfer due at `now`, in `(done, id)`
     /// order — the deterministic delivery order.
     pub fn pop_due(&mut self, now: Micros) -> Vec<Transfer> {
+        if !self.earliest_done.is_some_and(|e| e <= now) {
+            return Vec::new();
+        }
         let mut due: Vec<Transfer> = Vec::new();
         let mut i = 0;
         while i < self.inflight.len() {
@@ -271,6 +284,7 @@ impl Transport {
             }
         }
         due.sort_by_key(|t| (t.done, t.id));
+        self.recompute_earliest();
         due
     }
 
@@ -280,6 +294,9 @@ impl Transport {
     pub fn cancel_dst(&mut self, replica: usize) {
         let before = self.inflight.len();
         self.inflight.retain(|t| t.dst != replica);
+        if self.inflight.len() != before {
+            self.recompute_earliest();
+        }
         self.stats.cancelled += (before - self.inflight.len()) as u64;
     }
 
@@ -296,6 +313,9 @@ impl Transport {
         self.inflight.retain(|t| {
             !(t.src == replica && t.kind() == TransferKind::Handoff)
         });
+        if self.inflight.len() != before {
+            self.recompute_earliest();
+        }
         self.stats.cancelled += (before - self.inflight.len()) as u64;
     }
 }

@@ -5,6 +5,7 @@ pub mod error;
 pub mod fxhash;
 pub mod json;
 pub mod rng;
+pub mod simd;
 
 pub use error::{ConcurError, Result};
 pub use fxhash::FxHashMap;

@@ -1,0 +1,123 @@
+//! Word-wise token-slice comparison for the radix hot paths.
+//!
+//! Every radix descent, split probe, and content-hash confirm reduces to
+//! "how long is the common prefix of two `&[Token]`?".  The scalar
+//! `iter().zip().take_while()` form compares one `u32` per iteration;
+//! this module packs four tokens into a `u128` per iteration instead,
+//! locating the diverging lane with a single XOR + `trailing_zeros`.
+//!
+//! The chunking is safe Rust over slice indexing — no pointers, no
+//! alignment assumptions, no `unsafe` — so it vectorises or at least
+//! unrolls on every target the crate builds for, and a scalar tail
+//! handles the last `len % 4` tokens.  Laning is endianness-independent:
+//! token `i` occupies bits `32·i..32·(i+1)` of the packed word by
+//! construction, so lower bit positions always correspond to earlier
+//! slice indices.
+//!
+//! Callers (and the proptest in `tests/proptests.rs`) rely on this being
+//! *exactly* equivalent to
+//! `a.iter().zip(b).take_while(|(x, y)| x == y).count()`.
+
+use super::Token;
+
+/// Tokens packed per comparison word.
+const LANES: usize = 4;
+
+#[inline]
+fn pack(s: &[Token], at: usize) -> u128 {
+    // Four independent indexed loads; bounds checks are hoisted by the
+    // `at + LANES <= len` loop guard.
+    (s[at] as u128)
+        | ((s[at + 1] as u128) << 32)
+        | ((s[at + 2] as u128) << 64)
+        | ((s[at + 3] as u128) << 96)
+}
+
+/// Length of the longest common prefix of `a` and `b`.
+///
+/// Equivalent to `a.iter().zip(b).take_while(|(x, y)| x == y).count()`,
+/// computed four tokens at a time.
+#[inline]
+pub fn common_prefix_len(a: &[Token], b: &[Token]) -> usize {
+    let n = a.len().min(b.len());
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let wa = pack(a, i);
+        let wb = pack(b, i);
+        if wa != wb {
+            // The first differing token is the lowest differing 32-bit
+            // lane of the XOR.
+            return i + (wa ^ wb).trailing_zeros() as usize / 32;
+        }
+        i += LANES;
+    }
+    while i < n && a[i] == b[i] {
+        i += 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar(a: &[Token], b: &[Token]) -> usize {
+        a.iter().zip(b).take_while(|(x, y)| x == y).count()
+    }
+
+    #[test]
+    fn empty_and_trivial() {
+        assert_eq!(common_prefix_len(&[], &[]), 0);
+        assert_eq!(common_prefix_len(&[1], &[]), 0);
+        assert_eq!(common_prefix_len(&[], &[1]), 0);
+        assert_eq!(common_prefix_len(&[1], &[2]), 0);
+        assert_eq!(common_prefix_len(&[7], &[7]), 1);
+    }
+
+    #[test]
+    fn divergence_at_every_offset() {
+        // For every length up to a couple of whole words plus a ragged
+        // tail, diverge at every position (including "no divergence").
+        for len in 0..=19usize {
+            let a: Vec<Token> = (0..len as Token).collect();
+            for d in 0..=len {
+                let mut b = a.clone();
+                if d < len {
+                    b[d] ^= 0x8000_0001; // flip high and low bits
+                }
+                assert_eq!(common_prefix_len(&a, &b), scalar(&a, &b), "len={len} d={d}");
+                assert_eq!(common_prefix_len(&b, &a), scalar(&b, &a), "len={len} d={d} swapped");
+            }
+        }
+    }
+
+    #[test]
+    fn unequal_lengths_cap_at_shorter() {
+        let a: Vec<Token> = (0..100).collect();
+        for cut in 0..=100usize {
+            assert_eq!(common_prefix_len(&a, &a[..cut]), cut);
+            assert_eq!(common_prefix_len(&a[..cut], &a), cut);
+        }
+    }
+
+    #[test]
+    fn divergence_within_each_lane_of_a_word() {
+        // Place the diverging token in each of the four lanes of the
+        // second packed word, with equal earlier words.
+        let a: Vec<Token> = (100..116).collect();
+        for lane in 0..LANES {
+            let mut b = a.clone();
+            b[LANES + lane] = 0;
+            assert_eq!(common_prefix_len(&a, &b), LANES + lane);
+        }
+    }
+
+    #[test]
+    fn extreme_token_values() {
+        let a = [Token::MAX, 0, Token::MAX, 0, Token::MAX, 0, 1];
+        let mut b = a;
+        assert_eq!(common_prefix_len(&a, &b), a.len());
+        b[5] = Token::MAX;
+        assert_eq!(common_prefix_len(&a, &b), 5);
+    }
+}

@@ -26,7 +26,7 @@ use crate::config::{
 use crate::coordinator::{make_controller, Controller};
 use crate::core::{AgentId, Micros, Result};
 use crate::engine::{EngineCounters, SimEngine};
-use crate::metrics::{Breakdown, Histogram, Phase, TimeSeries};
+use crate::metrics::{Breakdown, Histogram, Phase, ProfileSnapshot, TimeSeries};
 
 mod numa;
 
@@ -95,6 +95,11 @@ pub struct RunResult {
     pub step_latency: Histogram,
     /// Open-loop traffic telemetry (all zero for closed-batch runs).
     pub open_loop: OpenLoopStats,
+    /// Self-profiler section totals covering this run (empty unless the
+    /// profiler was enabled — see [`crate::metrics::profiler`]).  Wall-
+    /// clock derived, so deliberately excluded from every determinism
+    /// comparison and repro JSON dump.
+    pub profile: ProfileSnapshot,
 }
 
 impl RunResult {

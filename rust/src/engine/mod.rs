@@ -32,7 +32,7 @@ use std::collections::VecDeque;
 use crate::config::{EngineConfig, EvictionMode, KvLifetimeMode};
 use crate::core::{AgentId, Bytes, FxHashMap, Micros, RequestId, Token};
 use crate::costmodel::{CostModel, PcieLink, StepWork};
-use crate::metrics::{Breakdown, LifetimeRatio, Phase, WindowedRatio};
+use crate::metrics::{profiler, Breakdown, LifetimeRatio, Phase, WindowedRatio};
 
 /// A request that completed this step.
 #[derive(Debug, Clone)]
@@ -167,19 +167,22 @@ pub struct EngineSignals {
     pub waiting: usize,
 }
 
-/// Snapshot of everything that decided a failed head-of-line admission.
-/// While none of it moves, re-matching the head every step is pure waste
-/// (the verdict cannot change), so `admit` skips it and only replays the
-/// re-match's one side effect — refreshing the matched path's recency.
+/// Memoized admission match for a waiting request.  The radix tree's
+/// mutation [`epoch`](RadixTree::epoch) guarantees that while it is
+/// unchanged, re-matching the same prompt returns the same totals over the
+/// same node path with no splits — so `admit` caches the match per request
+/// and walks the tree once per tree mutation instead of once per step per
+/// request.  The feasibility *verdict* is recomputed every step from the
+/// cached sizes against the live pool (free/evictable move every step; the
+/// match does not), and the re-match's one side effect — refreshing the
+/// matched path's recency — is replayed from the cached path, so LRU aging
+/// is indistinguishable from the full re-match.
 #[derive(Debug, Clone)]
-struct AdmitBlock {
-    req: RequestId,
+struct AdmitMemo {
+    /// Tree epoch the match was computed at; stale entries re-match.
     tree_epoch: u64,
-    pool_free: u64,
-    evictable: u64,
-    /// Matched path at the failed attempt; re-touched on skipped steps so
-    /// LRU recency evolves exactly as if the full re-match had run.
-    path: Vec<radix::NodeId>,
+    /// The cached match (path + gpu/cpu/broadcast token totals).
+    m: MatchResult,
 }
 
 /// The simulated serving engine for one TP replica.
@@ -204,8 +207,12 @@ pub struct SimEngine {
     /// Set when the over-admission deadlock breaker fires; suppresses new
     /// admissions until a sequence completes (drain-to-fit).
     congested: bool,
-    /// Last failed head-of-line admission attempt (see [`AdmitBlock`]).
-    admit_block: Option<AdmitBlock>,
+    /// Per-request memoized admission matches (see [`AdmitMemo`]).
+    /// Entries are written when a request blocks at the head of the line,
+    /// consumed on admission, and dropped wholesale by `clear_state`; a
+    /// stale epoch makes an entry inert, so the map never poisons
+    /// correctness, only saves tree walks.
+    admit_memo: FxHashMap<RequestId, AdmitMemo>,
     /// Per-agent cache heat: when each agent last completed a generation
     /// step here (stamped in `collect_finished`, one O(1) insert per
     /// finished request).  Exported via [`SimEngine::agent_heat`] for the
@@ -271,7 +278,7 @@ impl SimEngine {
             counters: EngineCounters::default(),
             policy,
             congested: false,
-            admit_block: None,
+            admit_memo: FxHashMap::default(),
             heat: FxHashMap::default(),
             broadcast_reserved: 0,
             lifetime_hints: FxHashMap::default(),
@@ -403,7 +410,7 @@ impl SimEngine {
         self.waiting.clear();
         self.hit_window = WindowedRatio::new(self.cfg.hit_window);
         self.congested = false;
-        self.admit_block = None;
+        self.admit_memo.clear();
         self.heat.clear();
         // In-flight reservations died with the pool; the transport
         // cancels the transfers themselves (`Transport::cancel_dst`).
@@ -526,8 +533,7 @@ impl SimEngine {
         if tokens.is_empty() {
             return None;
         }
-        let needed = self.free_for_prefix(tokens, now)?;
-        let (_, cpu) = self.tree.peek_prefix(tokens);
+        let (needed, cpu) = self.free_for_prefix_peeked(tokens, now, 0)?;
         if needed > 0 {
             self.pool.alloc(needed).expect("reserve sized by peek");
         }
@@ -639,15 +645,33 @@ impl SimEngine {
     /// [`free_for_prefix`](SimEngine::free_for_prefix) with `held` slots
     /// already allocated to this operation (a commit's reservation).
     fn free_for_prefix_with(&mut self, tokens: &[Token], now: Micros, held: u64) -> Option<u64> {
-        // Size the allocation by a read-only peek; eviction inside
-        // `ensure_free` may drop part of the matched prefix, so re-derive
-        // until the estimate is stable (GPU coverage only shrinks).
+        self.free_for_prefix_peeked(tokens, now, held).map(|(needed, _)| needed)
+    }
+
+    /// Core of [`free_for_prefix_with`]: a single sized walk.  Eviction
+    /// inside `ensure_free` may drop part of the matched prefix, so the
+    /// estimate is re-derived until stable (GPU coverage only shrinks) —
+    /// but each retry peeks the tree exactly once: the stability peek
+    /// after `ensure_free` *is* the next iteration's sizing, since
+    /// nothing mutates between them.  Returns `(needed, cpu)`, the stable
+    /// allocation size and the CPU-tier coverage from the final peek, so
+    /// callers that need the post-free residency split
+    /// ([`reserve_broadcast_prefix`]) do not re-walk the tree for it.
+    ///
+    /// [`free_for_prefix_with`]: SimEngine::free_for_prefix_with
+    /// [`reserve_broadcast_prefix`]: SimEngine::reserve_broadcast_prefix
+    fn free_for_prefix_peeked(
+        &mut self,
+        tokens: &[Token],
+        now: Micros,
+        held: u64,
+    ) -> Option<(u64, u64)> {
+        let (gpu, mut cpu) = self.tree.peek_prefix(tokens);
+        let mut needed = tokens.len() as u64 - gpu;
         loop {
-            let (gpu, _) = self.tree.peek_prefix(tokens);
-            let needed = tokens.len() as u64 - gpu;
             let shortfall = needed.saturating_sub(held);
             if self.pool.can_alloc(shortfall) {
-                return Some(needed);
+                return Some((needed, cpu));
             }
             // Feasibility precheck, mirroring admission's free+evictable
             // guard: never evict for an install that cannot fit anyway.
@@ -661,10 +685,13 @@ impl SimEngine {
             if !self.ensure_free(shortfall, now) {
                 return None;
             }
-            let (gpu_after, _) = self.tree.peek_prefix(tokens);
-            if tokens.len() as u64 - gpu_after == needed {
-                return Some(needed); // estimate stable and ensure_free succeeded
+            let (gpu_after, cpu_after) = self.tree.peek_prefix(tokens);
+            let still_needed = tokens.len() as u64 - gpu_after;
+            cpu = cpu_after;
+            if still_needed == needed {
+                return Some((needed, cpu)); // estimate stable; ensure_free succeeded
             }
+            needed = still_needed;
         }
     }
 
@@ -726,6 +753,7 @@ impl SimEngine {
 
     /// One continuous-batching iteration at simulated time `now`.
     pub fn step(&mut self, now: Micros) -> StepOutcome {
+        let _prof = profiler::scope(profiler::Section::Step);
         let mut out = StepOutcome::default();
 
         out.reload_time = self.admit(now, &mut out);
@@ -803,33 +831,44 @@ impl SimEngine {
         out
     }
 
+    /// Drop every memoized admission match, forcing the next `admit` pass
+    /// to fully re-match the waiting head against the tree.  Differential
+    /// oracle hook: `tests/proptests.rs` steps a twin engine that clears
+    /// the memo before every iteration (the pre-memo behaviour) and
+    /// asserts bit-identical outcomes against a memoized engine.  Hidden
+    /// because production code has no reason to defeat the memo — it is
+    /// always exact (see [`AdmitMemo`]).
+    #[doc(hidden)]
+    pub fn clear_admit_memo(&mut self) {
+        self.admit_memo.clear();
+    }
+
     /// FIFO admission from the waiting queue into the running batch.
     /// Returns accumulated host-link reload latency for this step.
     fn admit(&mut self, now: Micros, out: &mut StepOutcome) -> Micros {
+        let _prof = profiler::scope(profiler::Section::Admit);
         let mut reload_time = Micros::ZERO;
         while self.running.len() < self.cfg.max_running && !self.congested {
-            // Head-of-line fast path: the head failed to fit before, and
-            // neither the tree epoch nor the free/evictable balance moved
-            // since — the full re-match would reach the same verdict, so
-            // skip it.  (Every structural or content mutation — insert,
-            // split, evict, reload, trim — bumps the epoch, so an
-            // unchanged epoch guarantees the same totals over the same
-            // node path.)  The re-match's only side effect — touching the
-            // matched path's recency — is replayed from the cached path,
-            // so LRU aging is indistinguishable from the full re-match.
-            if let Some(block) = &self.admit_block {
-                if self.waiting.front().is_some_and(|head| head.id == block.req)
-                    && block.tree_epoch == self.tree.epoch()
-                    && block.pool_free == self.pool.free()
-                    && block.evictable == self.tree.evictable_gpu_tokens()
-                {
-                    self.tree.touch_path(&block.path, now);
-                    break;
-                }
-            }
             let Some(req) = self.waiting.pop_front() else { break };
 
-            let m = self.tree.match_prefix(&req.prompt, now);
+            // Memoized match: while the tree epoch is unchanged since this
+            // request's last match, a full re-match would return the same
+            // totals over the same node path with no splits (every
+            // match-visible mutation — insert, split, evict, reload, trim,
+            // broadcast pin transition — bumps the epoch), so the tree is
+            // walked once per mutation instead of once per step.  The
+            // re-match's only side effect — touching the matched path's
+            // recency — is replayed from the cached path, so LRU aging is
+            // indistinguishable from the full re-match.  The feasibility
+            // verdict below is recomputed every step regardless: it reads
+            // the live pool, which moves even when the tree does not.
+            let m = match self.admit_memo.get(&req.id) {
+                Some(memo) if memo.tree_epoch == self.tree.epoch() => {
+                    self.tree.touch_path(&memo.m.path, now);
+                    memo.m.clone()
+                }
+                _ => self.tree.match_prefix(&req.prompt, now),
+            };
             let prompt_len = req.prompt.len() as u64;
             let gen_len = req.gen.len() as u64;
             let uncached = prompt_len - m.total();
@@ -840,18 +879,13 @@ impl SimEngine {
             let needed = uncached + gen_len + m.cpu_tokens + headroom;
             let evictable = self.tree.evictable_gpu_tokens();
             if self.pool.free() + evictable < needed {
-                // FIFO head-of-line: wait for memory.
-                self.admit_block = Some(AdmitBlock {
-                    req: req.id,
-                    tree_epoch: self.tree.epoch(),
-                    pool_free: self.pool.free(),
-                    evictable,
-                    path: m.path,
-                });
+                // FIFO head-of-line: wait for memory, keeping the match.
+                self.admit_memo
+                    .insert(req.id, AdmitMemo { tree_epoch: self.tree.epoch(), m });
                 self.waiting.push_front(req);
                 break;
             }
-            self.admit_block = None;
+            self.admit_memo.remove(&req.id);
 
             // Reload the CPU-tier prefix over the contended host link.
             let mut cached = m.gpu_tokens;

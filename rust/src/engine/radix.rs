@@ -41,7 +41,8 @@
 //!   count (`is_gpu_leaf`) are maintained on every mutation instead of
 //!   being recomputed by scans.
 
-use crate::core::{FxHashMap, Micros, Token};
+use crate::core::{simd, FxHashMap, Micros, Token};
+use crate::metrics::profiler;
 use std::collections::BTreeSet;
 
 pub type NodeId = usize;
@@ -136,8 +137,9 @@ impl<'a> Probe<'a> {
     }
 
     /// Length of the common run between `key` and `self[pos..]`, capped at
-    /// `key.len()`.  Whole-segment slice equality compiles to memcmp, which
-    /// dominates on full-edge matches (agent-history reuse).
+    /// `key.len()`.  Word-wise comparison (`core::simd`) dominates on
+    /// full-edge matches (agent-history reuse); at most two segment hops
+    /// because the probe is two slices.
     fn common_with(&self, key: &[Token], pos: usize) -> usize {
         let maxcmp = key.len().min(self.len() - pos);
         let mut done = 0usize;
@@ -149,12 +151,9 @@ impl<'a> Probe<'a> {
                 (self.b, p - self.a.len())
             };
             let n = (seg.len() - seg_off).min(maxcmp - done);
-            let k = &key[done..done + n];
-            let s = &seg[seg_off..seg_off + n];
-            if k == s {
-                done += n;
-            } else {
-                done += k.iter().zip(s).take_while(|(x, y)| x == y).count();
+            let c = simd::common_prefix_len(&key[done..done + n], &seg[seg_off..seg_off + n]);
+            done += c;
+            if c < n {
                 break;
             }
         }
@@ -357,9 +356,12 @@ impl RadixTree {
         self.live_nodes
     }
 
-    /// Mutation epoch: unchanged epoch (plus unchanged pool state) means a
-    /// repeated `match_prefix` of the same probe returns the same totals
-    /// over the same node path.
+    /// Mutation epoch: unchanged epoch means a repeated `match_prefix` of
+    /// the same probe returns the same totals (`gpu`/`cpu`/`broadcast`)
+    /// over the same node path with no splits.  Every match-visible
+    /// mutation bumps it — insert, split, evict, reload, CPU-tier trim,
+    /// and broadcast pin 0↔1 transitions; recency touches and arena
+    /// compaction do not.  The engine's admission memo keys on this.
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
@@ -411,13 +413,7 @@ impl RadixTree {
             };
             let n = &self.nodes[child];
             let key = &self.arena[n.off..n.off + n.len];
-            let maxcmp = key.len().min(tokens.len() - pos);
-            let probe = &tokens[pos..pos + maxcmp];
-            let same = if key[..maxcmp] == *probe {
-                maxcmp
-            } else {
-                key.iter().zip(probe).take_while(|(a, b)| a == b).count()
-            };
+            let same = simd::common_prefix_len(key, &tokens[pos..]);
             if same == 0 {
                 break;
             }
@@ -602,6 +598,7 @@ impl RadixTree {
     }
 
     fn match_probe(&mut self, p: Probe<'_>, now: Micros) -> MatchResult {
+        let mut prof = profiler::scope(profiler::Section::RadixMatch);
         let mut result = MatchResult::default();
         let mut cur = ROOT;
         let mut pos = 0usize;
@@ -640,6 +637,7 @@ impl RadixTree {
                 break; // diverged inside the edge
             }
         }
+        prof.add_units(pos as u64);
         result
     }
 
@@ -815,6 +813,7 @@ impl RadixTree {
         self.lock_path(path);
         if let Some(&last) = path.last() {
             let mut id = last;
+            let mut newly_pinned = false;
             while id != ROOT {
                 if self.nodes[id].in_lru {
                     self.lru_remove(id);
@@ -823,8 +822,16 @@ impl RadixTree {
                 n.broadcast_pins += 1;
                 if n.broadcast_pins == 1 {
                     self.broadcast_tokens += n.len as u64;
+                    newly_pinned = true;
                 }
                 id = n.parent;
+            }
+            // A 0→1 pin transition changes future matches'
+            // `broadcast_tokens`, which is part of the epoch contract
+            // ("unchanged epoch ⇒ identical match totals") that the
+            // engine's admission memo relies on.
+            if newly_pinned {
+                self.epoch += 1;
             }
         }
     }
@@ -838,14 +845,21 @@ impl RadixTree {
     pub fn demote_broadcast(&mut self, path: &[NodeId]) {
         if let Some(&last) = path.last() {
             let mut id = last;
+            let mut unpinned = false;
             while id != ROOT {
                 let n = &mut self.nodes[id];
                 debug_assert!(n.broadcast_pins > 0, "demote of non-broadcast node");
                 n.broadcast_pins -= 1;
                 if n.broadcast_pins == 0 {
                     self.broadcast_tokens -= n.len as u64;
+                    unpinned = true;
                 }
                 id = n.parent;
+            }
+            // Mirror of `pin_broadcast`: a 1→0 transition changes match
+            // `broadcast_tokens`, so cached matches must invalidate.
+            if unpinned {
+                self.epoch += 1;
             }
         }
         self.unlock_path(path);
@@ -915,6 +929,7 @@ impl RadixTree {
     /// the order, never feasibility, so admission cannot deadlock on a
     /// fully-pinned cache.
     pub fn evict_at(&mut self, want: u64, policy: EvictPolicy, now: Micros) -> EvictResult {
+        let _prof = profiler::scope(profiler::Section::Evict);
         let mut out = EvictResult::default();
         while out.freed_gpu_tokens < want {
             let Some(&(life, _, _, id)) = self.lru.first() else {
@@ -1022,6 +1037,7 @@ impl RadixTree {
     /// are bit-identical with compaction on or off (pinned by the
     /// non-compacting-oracle differential test in `proptests.rs`).
     pub fn compact_arena(&mut self) {
+        let _prof = profiler::scope(profiler::Section::Compact);
         let live_tokens = (self.gpu_tokens + self.cpu_tokens) as usize;
         let mut fresh: Vec<Token> = Vec::with_capacity(live_tokens);
         for id in 0..self.nodes.len() {

@@ -2,13 +2,32 @@
 //! style but minimal).
 
 use crate::core::Micros;
+use std::sync::OnceLock;
 
-/// Log-bucketed histogram over microsecond latencies, 5% bucket growth.
+/// The shared default bucket ladder: 1us to ~2h growing 8% per bucket
+/// (~220 entries).  Computed once per process — `Histogram::new` used to
+/// rebuild (and heap-allocate) this identical ladder on every
+/// construction, which showed up in cluster runs that make a histogram
+/// per shard per run.
+fn default_bounds() -> &'static [u64] {
+    static BOUNDS: OnceLock<Vec<u64>> = OnceLock::new();
+    BOUNDS.get_or_init(|| {
+        let mut bounds = Vec::new();
+        let mut b = 1.0f64;
+        while b < 8.0e9 {
+            bounds.push(b as u64);
+            b *= 1.08;
+        }
+        bounds
+    })
+}
+
+/// Log-bucketed histogram over microsecond latencies, 8% bucket growth.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     pub name: String,
     buckets: Vec<u64>,
-    bounds: Vec<u64>,
+    bounds: &'static [u64],
     count: u64,
     sum: u64,
     max: u64,
@@ -17,13 +36,7 @@ pub struct Histogram {
 
 impl Histogram {
     pub fn new(name: impl Into<String>) -> Histogram {
-        // Bounds from 1us to ~2h growing 8% per bucket (~220 buckets).
-        let mut bounds = Vec::new();
-        let mut b = 1.0f64;
-        while b < 8.0e9 {
-            bounds.push(b as u64);
-            b *= 1.08;
-        }
+        let bounds = default_bounds();
         Histogram {
             name: name.into(),
             buckets: vec![0; bounds.len() + 1],
@@ -136,7 +149,8 @@ impl Histogram {
         Histogram {
             name: name.into(),
             buckets: vec![0; bounds.len() + 1],
-            bounds,
+            // Leaked on purpose: test-only, a handful of ladders per run.
+            bounds: Box::leak(bounds.into_boxed_slice()),
             count: 0,
             sum: 0,
             max: 0,
@@ -250,6 +264,33 @@ mod tests {
         let mut b = Histogram::with_growth("b", 1.25);
         b.record(Micros(100));
         a.merge(&b);
+    }
+
+    /// REGRESSION: the process-wide shared bounds must be exactly the
+    /// 8%-growth ladder every `new` previously derived locally — bucket
+    /// indices (and with them merged percentiles and bench JSON) are
+    /// pinned to that layout.  Recomputes the ladder here and checks both
+    /// the bounds and where 500 random samples land.
+    #[test]
+    fn shared_bounds_match_local_derivation() {
+        let mut expect = Vec::new();
+        let mut b = 1.0f64;
+        while b < 8.0e9 {
+            expect.push(b as u64);
+            b *= 1.08;
+        }
+        let mut h = Histogram::new("pin");
+        assert_eq!(h.bounds, expect.as_slice());
+        let mut buckets = vec![0u64; expect.len() + 1];
+        let mut rng = crate::core::Rng::new(7);
+        for _ in 0..500 {
+            let v = 1 + rng.gen_range(0, 1u64 << rng.gen_range(1, 40));
+            h.record(Micros(v));
+            buckets[expect.partition_point(|&x| x <= v)] += 1;
+        }
+        assert_eq!(h.buckets, buckets);
+        // Two fresh histograms share the very same static ladder.
+        assert!(std::ptr::eq(Histogram::new("a").bounds, Histogram::new("b").bounds));
     }
 
     #[test]

@@ -12,11 +12,13 @@
 
 pub mod breakdown;
 pub mod histogram;
+pub mod profiler;
 pub mod table;
 pub mod timeseries;
 
 pub use breakdown::{Breakdown, Phase, ALL_PHASES};
 pub use histogram::Histogram;
+pub use profiler::ProfileSnapshot;
 pub use table::Table;
 pub use timeseries::TimeSeries;
 

@@ -1,0 +1,292 @@
+//! Self-profiler: wall-clock scoped timers over named hot sections.
+//!
+//! The perf gate can tell *that* a nightly regressed but not *where*; this
+//! module answers the second question without pulling in a profiling crate.
+//! Each hot section ([`Section`]) owns three process-global relaxed
+//! atomics — call count, accumulated wall nanoseconds, and an optional
+//! work-unit count (tokens for the radix match) — written by an RAII
+//! [`ScopedTimer`] on drop.
+//!
+//! **Default off.**  When disabled (the default), [`scope`] costs one
+//! relaxed atomic load and never reads the clock, so instrumenting a hot
+//! path is free in production runs — the acceptance bar is that the perf
+//! gate cannot measure the disabled overhead.  Enable with the
+//! `CONCUR_PROFILE=1` environment variable (read once, lazily) or
+//! programmatically with [`set_enabled`] (benches do this around dedicated
+//! measurement runs).
+//!
+//! **Wall clock, not simulated time.**  The profiler never touches
+//! simulation state, so enabling it cannot perturb results; conversely its
+//! numbers are host-load-dependent and — being process-global — blend all
+//! concurrently running engines.  Benches therefore profile dedicated
+//! single runs ([`reset`] + run + [`snapshot`]); the per-run delta folded
+//! into `RunResult` is meaningful only when nothing else runs in parallel.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The instrumented hot sections, in display order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Section {
+    /// Radix-tree prefix match (`RadixTree::match_probe`); units = tokens
+    /// matched, so `units / seconds` is the match throughput the gate
+    /// floors as `radix/match_tokens_per_s`.
+    RadixMatch,
+    /// LRU eviction sweeps (`RadixTree::evict_at`).
+    Evict,
+    /// Token-arena compaction (`RadixTree::compact_arena`).
+    Compact,
+    /// Engine admission pass (`SimEngine::admit`).
+    Admit,
+    /// Whole engine iteration (`SimEngine::step`; contains Admit and
+    /// RadixMatch — sections nest, times are inclusive).
+    Step,
+    /// Cluster clock-stop computation (candidate sync + heap pop).
+    ClockAdvance,
+}
+
+/// All sections, for iteration (order matches [`Section`]).
+pub const ALL_SECTIONS: [Section; 6] = [
+    Section::RadixMatch,
+    Section::Evict,
+    Section::Compact,
+    Section::Admit,
+    Section::Step,
+    Section::ClockAdvance,
+];
+
+const N: usize = ALL_SECTIONS.len();
+
+impl Section {
+    /// Stable snake-case name (bench metric keys derive from these).
+    pub fn name(self) -> &'static str {
+        match self {
+            Section::RadixMatch => "radix_match",
+            Section::Evict => "evict",
+            Section::Compact => "compact",
+            Section::Admit => "admit",
+            Section::Step => "step",
+            Section::ClockAdvance => "clock_advance",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+struct Counters {
+    calls: [AtomicU64; N],
+    nanos: [AtomicU64; N],
+    units: [AtomicU64; N],
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: OnceLock<()> = OnceLock::new();
+
+fn counters() -> &'static Counters {
+    static C: OnceLock<Counters> = OnceLock::new();
+    C.get_or_init(|| Counters {
+        calls: std::array::from_fn(|_| AtomicU64::new(0)),
+        nanos: std::array::from_fn(|_| AtomicU64::new(0)),
+        units: std::array::from_fn(|_| AtomicU64::new(0)),
+    })
+}
+
+/// Is profiling currently on?  One relaxed load — this is the entire
+/// disabled-path cost of an instrumented section.
+#[inline]
+pub fn enabled() -> bool {
+    ENV_INIT.get_or_init(|| {
+        if std::env::var("CONCUR_PROFILE").is_ok_and(|v| v != "0" && !v.is_empty()) {
+            ENABLED.store(true, Ordering::Relaxed);
+        }
+    });
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn profiling on or off programmatically (benches; overrides the env).
+pub fn set_enabled(on: bool) {
+    ENV_INIT.get_or_init(|| ());
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Zero all accumulators (start of a dedicated measurement run).
+pub fn reset() {
+    let c = counters();
+    for i in 0..N {
+        c.calls[i].store(0, Ordering::Relaxed);
+        c.nanos[i].store(0, Ordering::Relaxed);
+        c.units[i].store(0, Ordering::Relaxed);
+    }
+}
+
+/// Accumulated totals for one section.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SectionTotals {
+    pub calls: u64,
+    pub nanos: u64,
+    pub units: u64,
+}
+
+impl SectionTotals {
+    /// Mean wall nanoseconds per call (0 when never entered).
+    pub fn ns_per_call(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.nanos as f64 / self.calls as f64
+        }
+    }
+
+    /// Work units per wall second (0 when no time accumulated).
+    pub fn units_per_s(&self) -> f64 {
+        if self.nanos == 0 {
+            0.0
+        } else {
+            self.units as f64 * 1e9 / self.nanos as f64
+        }
+    }
+}
+
+/// Point-in-time copy of every section's totals.  `sub` of two snapshots
+/// brackets a region; all-zero when the profiler was off throughout.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProfileSnapshot {
+    totals: [SectionTotals; N],
+}
+
+impl ProfileSnapshot {
+    pub fn get(&self, s: Section) -> SectionTotals {
+        self.totals[s.idx()]
+    }
+
+    /// Totals accumulated since `earlier` (saturating; a `reset` between
+    /// the two snapshots yields zeros, not wraparound).
+    pub fn since(&self, earlier: &ProfileSnapshot) -> ProfileSnapshot {
+        let mut out = ProfileSnapshot::default();
+        for i in 0..N {
+            out.totals[i] = SectionTotals {
+                calls: self.totals[i].calls.saturating_sub(earlier.totals[i].calls),
+                nanos: self.totals[i].nanos.saturating_sub(earlier.totals[i].nanos),
+                units: self.totals[i].units.saturating_sub(earlier.totals[i].units),
+            };
+        }
+        out
+    }
+
+    /// True when nothing was recorded (profiler off, or no sections hit).
+    pub fn is_empty(&self) -> bool {
+        self.totals.iter().all(|t| t.calls == 0)
+    }
+}
+
+/// Read the current accumulated totals.
+pub fn snapshot() -> ProfileSnapshot {
+    let c = counters();
+    let mut out = ProfileSnapshot::default();
+    for i in 0..N {
+        out.totals[i] = SectionTotals {
+            calls: c.calls[i].load(Ordering::Relaxed),
+            nanos: c.nanos[i].load(Ordering::Relaxed),
+            units: c.units[i].load(Ordering::Relaxed),
+        };
+    }
+    out
+}
+
+/// RAII timer for one section entry; records on drop.  Obtain via
+/// [`scope`].
+pub struct ScopedTimer {
+    section: Section,
+    start: Option<Instant>,
+    units: u64,
+}
+
+impl ScopedTimer {
+    /// Attribute `n` work units (e.g. matched tokens) to this entry.
+    #[inline]
+    pub fn add_units(&mut self, n: u64) {
+        if self.start.is_some() {
+            self.units += n;
+        }
+    }
+}
+
+impl Drop for ScopedTimer {
+    #[inline]
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let ns = start.elapsed().as_nanos() as u64;
+        let i = self.section.idx();
+        let c = counters();
+        c.calls[i].fetch_add(1, Ordering::Relaxed);
+        c.nanos[i].fetch_add(ns, Ordering::Relaxed);
+        if self.units > 0 {
+            c.units[i].fetch_add(self.units, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Enter `section`: returns a timer that records the section's wall time
+/// when dropped.  When profiling is disabled this neither reads the clock
+/// nor writes any counter.
+#[inline]
+pub fn scope(section: Section) -> ScopedTimer {
+    let start = if enabled() { Some(Instant::now()) } else { None };
+    ScopedTimer { section, start, units: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The accumulators are process-global and `cargo test` runs tests in
+    // parallel, so everything that asserts on totals lives in this one
+    // test (tests within a binary that need exclusivity must share a
+    // serial section; a single test is the degenerate form).
+    #[test]
+    fn scoped_recording_end_to_end() {
+        set_enabled(false);
+        reset();
+        {
+            let mut t = scope(Section::RadixMatch);
+            t.add_units(100);
+        }
+        assert!(snapshot().is_empty(), "disabled scope must record nothing");
+
+        set_enabled(true);
+        let before = snapshot();
+        {
+            let mut t = scope(Section::RadixMatch);
+            t.add_units(64);
+            std::hint::black_box(());
+        }
+        {
+            let _t = scope(Section::Evict);
+        }
+        let delta = snapshot().since(&before);
+        set_enabled(false);
+
+        let m = delta.get(Section::RadixMatch);
+        assert_eq!(m.calls, 1);
+        assert_eq!(m.units, 64);
+        assert_eq!(delta.get(Section::Evict).calls, 1);
+        assert_eq!(delta.get(Section::Admit).calls, 0);
+        assert!(m.ns_per_call() >= 0.0);
+        // units_per_s is finite even for ~0ns sections.
+        assert!(m.units_per_s().is_finite());
+    }
+
+    #[test]
+    fn section_names_are_stable() {
+        // Bench metric keys are built from these; renaming breaks the
+        // perf-gate threshold file.
+        let names: Vec<&str> = ALL_SECTIONS.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            ["radix_match", "evict", "compact", "admit", "step", "clock_advance"]
+        );
+    }
+}

@@ -49,18 +49,19 @@ impl TimeSeries {
         self.points.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Mean restricted to a time window (for phase analysis).
+    /// Mean restricted to a time window (for phase analysis).  Single
+    /// alloc-free pass; the left-to-right summation order matches the old
+    /// collect-then-sum exactly, so reported means are bit-identical.
     pub fn mean_in(&self, from: Micros, to: Micros) -> f64 {
-        let vals: Vec<f64> = self
+        let (sum, n) = self
             .points
             .iter()
             .filter(|(t, _)| *t >= from && *t < to)
-            .map(|(_, v)| *v)
-            .collect();
-        if vals.is_empty() {
+            .fold((0.0f64, 0u64), |(s, n), (_, v)| (s + v, n + 1));
+        if n == 0 {
             0.0
         } else {
-            vals.iter().sum::<f64>() / vals.len() as f64
+            sum / n as f64
         }
     }
 

@@ -38,7 +38,7 @@ pub mod reference {
     use concur::core::{AgentId, Micros, RequestId};
     use concur::driver::{AgentOutcome, RunResult};
     use concur::engine::SimEngine;
-    use concur::metrics::{Histogram, Phase, TimeSeries};
+    use concur::metrics::{Histogram, Phase, ProfileSnapshot, TimeSeries};
     use concur::sim::{EventQueue, SimClock};
 
     pub fn run_with(
@@ -198,6 +198,7 @@ pub mod reference {
             ttft: Histogram::new("ttft"),
             step_latency: Histogram::new("step_latency"),
             open_loop: OpenLoopStats::default(),
+            profile: ProfileSnapshot::default(),
         }
     }
 }

@@ -1358,3 +1358,153 @@ fn json_roundtrip_random_documents() {
         assert_eq!(Value::parse(&pretty).unwrap(), v, "seed {seed}");
     }
 }
+
+/// PROPERTY (tentpole): the word-wise prefix comparator is exactly the
+/// scalar `take_while` scan it replaced — over every length 0..=96 with a
+/// divergence planted at every offset (covering each lane of the 4-token
+/// word and every tail residue), and over randomized pairs up to 1024
+/// tokens with unequal lengths and extreme token values.
+#[test]
+fn word_wise_comparator_equals_scalar_take_while() {
+    use concur::core::simd::common_prefix_len;
+
+    fn scalar(a: &[Token], b: &[Token]) -> usize {
+        a.iter().zip(b).take_while(|(x, y)| x == y).count()
+    }
+
+    // Exhaustive small lengths: identical pair, then a divergence at
+    // every offset.
+    for len in 0..=96usize {
+        let a: Vec<Token> =
+            (0..len as u32).map(|i| i.wrapping_mul(0x9E37_79B9)).collect();
+        assert_eq!(common_prefix_len(&a, &a), len, "identical len {len}");
+        for off in 0..len {
+            let mut b = a.clone();
+            b[off] ^= 0x8000_0001;
+            assert_eq!(common_prefix_len(&a, &b), off, "len {len} off {off}");
+            assert_eq!(common_prefix_len(&a, &b), scalar(&a, &b), "len {len} off {off}");
+        }
+    }
+
+    // Randomized lengths to 1024 (every alignment of the scalar tail),
+    // shared prefix of random length, optional divergence inside it.
+    let mut rng = Rng::new(0x51D_0001);
+    for case in 0..2_000u32 {
+        let la = rng.gen_range(0, 1025) as usize;
+        let lb = rng.gen_range(0, 1025) as usize;
+        let shared = la.min(lb);
+        let a: Vec<Token> =
+            (0..la).map(|_| rng.gen_range(0, 1 << 32) as u32).collect();
+        let mut b: Vec<Token> = a[..shared].to_vec();
+        b.extend((shared..lb).map(|_| rng.gen_range(0, 1 << 32) as u32));
+        if shared > 0 && rng.chance(0.7) {
+            let off = rng.gen_range(0, shared as u64) as usize;
+            // Nonzero wrapping delta: guaranteed to actually diverge.
+            b[off] = b[off].wrapping_add(1 + rng.gen_range(0, u32::MAX as u64) as u32);
+        }
+        assert_eq!(common_prefix_len(&a, &b), scalar(&a, &b), "case {case}");
+        assert_eq!(common_prefix_len(&b, &a), scalar(&b, &a), "case {case} swapped");
+    }
+}
+
+/// PROPERTY (tentpole): the epoch-memoized admission path is bit-identical
+/// to re-matching the waiting queue's head every step.  Two engines run
+/// the same randomized request stream in lockstep — one normal, one with
+/// its memo cleared before every step (the pre-memo behaviour, via the
+/// hidden oracle hook) — under pools small enough that admission
+/// genuinely blocks, and every step's outcome, finished set, signals and
+/// cumulative counters must match exactly.
+#[test]
+fn memoized_admission_equals_rematch_every_step() {
+    use concur::config::{EngineConfig, EvictionMode};
+    use concur::core::{AgentId, RequestId};
+    use concur::costmodel::{ClusterSpec, CostModel, GpuSpec, ModelSpec};
+    use concur::engine::{Request, SimEngine};
+
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(9100 + seed);
+        let pool = rng.gen_range(3_000, 30_000);
+        let eviction = if rng.chance(0.5) {
+            EvictionMode::Discard
+        } else {
+            EvictionMode::Offload
+        };
+        let mk = || {
+            let cluster = ClusterSpec::new(GpuSpec::h100(), ModelSpec::qwen3_32b(), 4, 4);
+            SimEngine::new(
+                EngineConfig { eviction, hit_window: 8, ..EngineConfig::default() },
+                CostModel::new(cluster),
+            )
+        };
+        let mut memo = mk();
+        let mut oracle = mk();
+        memo.shrink_pool_for_tests(pool);
+        oracle.shrink_pool_for_tests(pool);
+
+        let mut rid = 0u64;
+        let mut now = Micros::ZERO;
+        for round in 0..4 {
+            let n = rng.gen_range(2, 12) as usize;
+            for _ in 0..n {
+                let plen = rng.gen_range(16, 3_000);
+                let glen = rng.gen_range(1, 100) as u32;
+                // Family-shared prefixes so cached matches are non-trivial.
+                let family = rng.gen_range(0, 3) as u32;
+                let shared = rng.gen_range(0, plen.min(512)) as u32;
+                let base = rng.gen_range(1 << 22, 1 << 24) as u32;
+                let mut prompt: Vec<Token> =
+                    (0..shared).map(|i| (1 << 28) + family * 4096 + i).collect();
+                prompt.extend((0..plen as u32 - shared).map(|i| base + i));
+                let gen: Vec<Token> =
+                    (0..glen).map(|k| (1 << 26) + rid as u32 * 128 + k).collect();
+                for engine in [&mut memo, &mut oracle] {
+                    engine.submit(Request {
+                        id: RequestId(rid),
+                        agent: AgentId(rid % 5),
+                        prompt: prompt.clone(),
+                        gen: gen.clone(),
+                        prev_ctx: 0,
+                        submitted_at: now,
+                    });
+                }
+                rid += 1;
+            }
+            for _ in 0..20_000 {
+                assert_eq!(memo.has_work(), oracle.has_work(), "seed {seed}");
+                if !memo.has_work() {
+                    break;
+                }
+                oracle.clear_admit_memo();
+                let a = memo.step(now);
+                let b = oracle.step(now);
+                let ctx = format!("seed {seed} round {round} t={now}");
+                assert_eq!(a.duration, b.duration, "{ctx}: duration");
+                assert_eq!(a.admitted, b.admitted, "{ctx}: admitted");
+                assert_eq!(a.preempted, b.preempted, "{ctx}: preempted");
+                assert_eq!(a.recompute_tokens, b.recompute_tokens, "{ctx}: recompute");
+                assert_eq!(a.reload_time, b.reload_time, "{ctx}: reload");
+                assert_eq!(a.finished.len(), b.finished.len(), "{ctx}: finished n");
+                for (fa, fb) in a.finished.iter().zip(&b.finished) {
+                    assert_eq!(fa.id, fb.id, "{ctx}: finished id");
+                    assert_eq!(fa.agent, fb.agent, "{ctx}: finished agent");
+                    assert_eq!(fa.output, fb.output, "{ctx}: finished output");
+                    assert_eq!(fa.context_len, fb.context_len, "{ctx}: finished ctx");
+                    assert_eq!(fa.admitted_at, fb.admitted_at, "{ctx}: admitted_at");
+                }
+                let (sa, sb) = (memo.signals(), oracle.signals());
+                assert_eq!(sa.kv_usage.to_bits(), sb.kv_usage.to_bits(), "{ctx}: U");
+                assert_eq!(sa.pool_usage.to_bits(), sb.pool_usage.to_bits(), "{ctx}: pool");
+                assert_eq!(sa.hit_rate.to_bits(), sb.hit_rate.to_bits(), "{ctx}: H");
+                assert_eq!(sa.running, sb.running, "{ctx}: running");
+                assert_eq!(sa.waiting, sb.waiting, "{ctx}: waiting");
+                now += a.duration + Micros(1);
+                memo.check_invariants()
+                    .unwrap_or_else(|e| panic!("{ctx}: memo engine: {e}"));
+            }
+            assert!(!memo.has_work(), "seed {seed}: engine stuck");
+            assert_eq!(memo.counters, oracle.counters, "seed {seed}: counters");
+            assert_eq!(memo.lifetime_hits.num, oracle.lifetime_hits.num, "seed {seed}");
+            assert_eq!(memo.lifetime_hits.den, oracle.lifetime_hits.den, "seed {seed}");
+        }
+    }
+}
